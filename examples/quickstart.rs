@@ -1,0 +1,76 @@
+//! Quickstart: the 60-second tour of the whole stack.
+//!
+//! Loads the `quickstart` artifacts (built once by `make artifacts`),
+//! trains the tiny Routing Transformer for a few dozen steps on the
+//! needle corpus, evaluates held-out perplexity, saves/loads a
+//! checkpoint, and samples a continuation — all from Rust via PJRT,
+//! with no Python on the path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use routing_transformer::coordinator::{
+    eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions, Trainer,
+};
+use routing_transformer::runtime::{Artifacts, ModelState, Runtime};
+use routing_transformer::sampler::{Generator, SamplerConfig};
+
+fn main() -> Result<()> {
+    let root = routing_transformer::bench::artifacts_root();
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. load artifacts + seeded initial state
+    let art = Artifacts::load(&root, "quickstart")?;
+    let manifest = art.manifest.clone();
+    println!(
+        "model: {} params, T={}, {} routing heads in top layer",
+        manifest.n_params_total, manifest.config.seq_len, manifest.config.plan[1].routing
+    );
+
+    // 2. train for 48 steps on the needle (long-range retrieval) corpus
+    let mut trainer = Trainer::new(&rt, &art)?;
+    let mut batcher = train_batcher(&manifest, "needle", 0)?;
+    let opts = TrainOptions {
+        steps: 48,
+        schedule: LrSchedule::InverseSqrt { scale: 0.05, warmup: 12 },
+        log_every: 8,
+        ..Default::default()
+    };
+    let report = trainer.train(&mut batcher, &manifest, &opts)?;
+    println!(
+        "trained {} steps: loss {:.3} -> {:.3} ({:.1} steps/s)",
+        report.steps, report.losses[0], report.mean_last10_loss, report.steps_per_sec
+    );
+    assert!(report.mean_last10_loss < report.losses[0] as f64, "loss should decrease");
+
+    // 3. evaluate held-out data
+    let evaluator = Evaluator::new(&rt, &art)?;
+    let mut eval = eval_batcher(&manifest, "needle", 7)?;
+    let eval_report = evaluator.eval(&trainer.state, &mut eval, 4)?;
+    println!(
+        "eval: nll {:.4} nats, ppl {:.1}, bits/dim {:.3}",
+        eval_report.mean_nll, eval_report.ppl(), eval_report.bits_per_dim()
+    );
+
+    // 4. checkpoint round-trip
+    let ckpt = std::env::temp_dir().join("rtx_quickstart_ckpt");
+    trainer.save(&manifest, &ckpt)?;
+    let restored = ModelState::load(&manifest, &ckpt)?;
+    println!("checkpoint round-trip ok (step {})", restored.step);
+
+    // 5. sample a continuation
+    let exe = art.executable(&rt, "logits")?;
+    let mut generator = Generator::new(
+        &exe,
+        &restored,
+        manifest.config.seq_len,
+        manifest.config.vocab_size,
+        SamplerConfig::default(),
+        42,
+    );
+    let out = generator.generate(&[1, 17, 23], 16)?;
+    println!("sampled continuation: {:?}", &out[3..]);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,322 @@
+"""AOT lowering: jax model -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Each *variant* is a (ModelConfig, batch, scan_steps, artifact-set) preset;
+`python -m compile.aot --out-dir ../artifacts` writes, per variant:
+
+    artifacts/<variant>/train_block.hlo.txt   S fused train steps (hot path)
+    artifacts/<variant>/train_step.hlo.txt    single step (quickstart only)
+    artifacts/<variant>/eval_loss.hlo.txt     mean + per-position NLL
+    artifacts/<variant>/logits.hlo.txt        forward logits (sampling)
+    artifacts/<variant>/attn_probs.hlo.txt    dense attention dists (analysis)
+    artifacts/<variant>/init_params.npz       seeded initial parameters
+    artifacts/<variant>/manifest.json         shapes/dtypes/order contract
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+`make artifacts`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    HeadPlan,
+    ModelConfig,
+    init_params,
+    param_specs,
+    uniform_plan,
+)
+from .train import (
+    make_attn_probs,
+    make_eval_loss,
+    make_logits,
+    make_train_block,
+    make_train_step,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT preset: a model config plus execution shapes."""
+
+    name: str
+    cfg: ModelConfig
+    batch: int
+    scan_steps: int
+    artifacts: Tuple[str, ...] = ("train_block", "eval_loss", "logits")
+    group: str = "core"
+
+
+def _image_cfg(routing_heads: int, routing_layers: int, window: int,
+               kind: str = "routing", full: bool = False) -> ModelConfig:
+    """Table 1 CIFAR stand-in: 16x16 grayscale raster => T=256, V=256.
+
+    Paper grid: 12 layers / 8 heads / windows {512,1024} on T=3072.
+    Scaled grid: 2 layers / 4 heads / windows {32,64} on T=256 (same sweep
+    axes, same head-allocation rule: routing layers at the top)."""
+    n_layers, n_heads = 2, 4
+    if full:
+        plan = tuple(HeadPlan(full=n_heads) for _ in range(n_layers))
+    else:
+        plan = uniform_plan(n_layers, n_heads, routing_heads, routing_layers, kind)
+    return ModelConfig(
+        vocab_size=256, d_model=64, n_layers=n_layers, n_heads=n_heads,
+        seq_len=256, plan=plan, window=window, n_clusters=8,
+        routing_window=window, strided_stride=16, seed=0,
+    )
+
+
+def build_variants() -> Dict[str, Variant]:
+    v: Dict[str, Variant] = {}
+
+    def add(var: Variant):
+        assert var.name not in v, var.name
+        v[var.name] = var
+
+    # ---------------------------------------------------------- quickstart
+    add(Variant(
+        name="quickstart",
+        cfg=ModelConfig(
+            vocab_size=256, d_model=64, n_layers=2, n_heads=4, seq_len=128,
+            plan=uniform_plan(2, 4, 2, 1), window=32, n_clusters=4,
+            routing_window=32, seed=0,
+        ),
+        batch=8, scan_steps=4,
+        artifacts=("train_block", "train_step", "eval_loss", "logits"),
+    ))
+
+    # --------------------------------------- Table 2 (Wikitext-103 stand-in)
+    # word-level needle corpus; routing vs local vs full
+    needle = dict(vocab_size=512, d_model=128, n_layers=3, n_heads=8,
+                  seq_len=256, window=32, n_clusters=8, routing_window=32, seed=1)
+    add(Variant("needle_routing",
+                ModelConfig(plan=uniform_plan(3, 8, 4, 2), **needle),
+                batch=8, scan_steps=4, group="table2"))
+    add(Variant("needle_local",
+                ModelConfig(plan=uniform_plan(3, 8, 0, 0), **needle),
+                batch=8, scan_steps=4, group="table2"))
+    add(Variant("needle_full",
+                ModelConfig(plan=tuple(HeadPlan(full=8) for _ in range(3)), **needle),
+                batch=8, scan_steps=4, group="table2"))
+
+    # --------------------------------------------- Table 3 (enwik-8 stand-in)
+    byte = dict(vocab_size=256, d_model=128, n_layers=3, n_heads=8,
+                seq_len=512, window=64, n_clusters=16, routing_window=32, seed=2)
+    add(Variant("byte_routing",
+                ModelConfig(plan=uniform_plan(3, 8, 4, 2), **byte),
+                batch=4, scan_steps=4, group="table3"))
+    add(Variant("byte_local",
+                ModelConfig(plan=uniform_plan(3, 8, 0, 0), **byte),
+                batch=4, scan_steps=4, group="table3"))
+
+    # ------------------------------------ Table 1 ablation grid + Table 4
+    for w in (32, 64):
+        add(Variant(f"image_local_w{w}", _image_cfg(0, 0, w),
+                    batch=4, scan_steps=4, group="table1"))
+    add(Variant("image_full", _image_cfg(0, 0, 64, full=True),
+                batch=4, scan_steps=4, group="table1"))
+    add(Variant("image_random_w32", _image_cfg(2, 2, 32, kind="random"),
+                batch=4, scan_steps=4, group="table1"))
+    for rh in (2, 4):
+        for rl in (1, 2):
+            for w in (32, 64):
+                add(Variant(f"image_r{rh}l{rl}w{w}", _image_cfg(rh, rl, w),
+                            batch=4, scan_steps=4, group="table1"))
+    # Table 4 (ImageNet-64 stand-in): strided baseline on the image domain
+    add(Variant("image_strided",
+                ModelConfig(
+                    vocab_size=256, d_model=64, n_layers=2, n_heads=4,
+                    seq_len=256,
+                    plan=tuple(HeadPlan(local=2, strided=2) for _ in range(2)),
+                    window=64, n_clusters=8, routing_window=64,
+                    strided_stride=16, seed=0),
+                batch=4, scan_steps=4, group="table4"))
+
+    # ------------------------------------------------ Table 5/7 (PG-19)
+    pg = dict(vocab_size=1024, d_model=128, n_layers=4, n_heads=8,
+              seq_len=1024, window=128, n_clusters=32, routing_window=32, seed=3)
+    # paper's PG-19 plan: 2 routing heads, last 2 layers only
+    add(Variant("pg19_routing",
+                ModelConfig(plan=uniform_plan(4, 8, 2, 2), **pg),
+                batch=2, scan_steps=2, group="table5"))
+    add(Variant("pg19_local",
+                ModelConfig(plan=uniform_plan(4, 8, 0, 0), **pg),
+                batch=2, scan_steps=2, group="table5"))
+
+    # ------------------------------------------------ Table 6 (JSD analysis)
+    add(Variant("analysis",
+                ModelConfig(plan=uniform_plan(3, 8, 4, 3),
+                            **{**needle, "seed": 4}),
+                batch=2, scan_steps=4,
+                artifacts=("train_block", "eval_loss", "logits", "attn_probs"),
+                group="table6"))
+
+    return v
+
+
+VARIANTS = build_variants()
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_shape_structs(cfg: ModelConfig):
+    return [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape, _ in param_specs(cfg)]
+
+
+def lower_variant(var: Variant, out_dir: Path, force: bool = False) -> None:
+    cfg = var.cfg
+    vdir = out_dir / var.name
+    manifest_path = vdir / "manifest.json"
+    if manifest_path.exists() and not force:
+        print(f"  [skip] {var.name} (exists)")
+        return
+    vdir.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+
+    pstructs = _param_shape_structs(cfg)
+    P = len(pstructs)
+    step_s = jax.ShapeDtypeStruct((), jnp.int32)
+    lr_s = jax.ShapeDtypeStruct((), jnp.float32)
+    tok_s = jax.ShapeDtypeStruct((var.batch, cfg.seq_len), jnp.int32)
+    tok_blk_s = jax.ShapeDtypeStruct((var.scan_steps, var.batch, cfg.seq_len), jnp.int32)
+
+    arts: Dict[str, Dict] = {}
+
+    def lower(name: str, fn, args):
+        # keep_unused=True: jax would otherwise prune parameters an
+        # artifact doesn't read (e.g. attn_probs never touches w_out),
+        # breaking the uniform "P params first" calling convention the
+        # Rust runtime relies on.
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+        fname = f"{name}.hlo.txt"
+        (vdir / fname).write_text(text)
+        return fname
+
+    if "train_block" in var.artifacts:
+        f = lower("train_block", make_train_block(cfg, var.scan_steps),
+                  pstructs * 3 + [step_s, lr_s, tok_blk_s])
+        arts["train_block"] = {
+            "file": f, "scan_steps": var.scan_steps,
+            "inputs": f"{P} params, {P} m, {P} v, step i32[], lr f32[], tokens i32[{var.scan_steps},{var.batch},{cfg.seq_len}]",
+            "outputs": f"{P} params, {P} m, {P} v, losses f32[{var.scan_steps}]",
+        }
+    if "train_step" in var.artifacts:
+        f = lower("train_step", make_train_step(cfg),
+                  pstructs * 3 + [step_s, lr_s, tok_s])
+        arts["train_step"] = {
+            "file": f,
+            "inputs": f"{P} params, {P} m, {P} v, step i32[], lr f32[], tokens i32[{var.batch},{cfg.seq_len}]",
+            "outputs": f"{P} params, {P} m, {P} v, loss f32[]",
+        }
+    if "eval_loss" in var.artifacts:
+        f = lower("eval_loss", make_eval_loss(cfg), pstructs + [tok_s])
+        arts["eval_loss"] = {
+            "file": f,
+            "inputs": f"{P} params, tokens i32[{var.batch},{cfg.seq_len}]",
+            "outputs": f"mean nll f32[], nll f32[{var.batch},{cfg.seq_len - 1}]",
+        }
+    if "logits" in var.artifacts:
+        # logits artifact uses batch=1 (sampling path)
+        tok1_s = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32)
+        f = lower("logits", make_logits(cfg), pstructs + [tok1_s])
+        arts["logits"] = {
+            "file": f, "batch": 1,
+            "inputs": f"{P} params, tokens i32[1,{cfg.seq_len}]",
+            "outputs": f"logits f32[1,{cfg.seq_len},{cfg.vocab_size}]",
+        }
+    if "attn_probs" in var.artifacts:
+        tok1_s = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32)
+        f = lower("attn_probs", make_attn_probs(cfg), pstructs + [tok1_s])
+        arts["attn_probs"] = {
+            "file": f, "batch": 1,
+            "inputs": f"{P} params, tokens i32[1,{cfg.seq_len}]",
+            "outputs": f"probs f32[{cfg.n_layers},{cfg.n_heads},{cfg.seq_len},{cfg.seq_len}]",
+        }
+
+    # seeded initial parameters -> npz (names match param_specs order)
+    params = init_params(cfg)
+    np.savez(vdir / "init_params.npz",
+             **{name: np.asarray(params[name]) for name, _, _ in param_specs(cfg)})
+
+    manifest = {
+        "variant": var.name,
+        "group": var.group,
+        "config": cfg.to_json(),
+        "batch": var.batch,
+        "scan_steps": var.scan_steps,
+        "n_params": cfg.n_params(),
+        "head_kind_order": ["local", "routing", "full", "random", "strided"],
+        "params": [
+            {"name": n, "shape": list(s), "dtype": d} for n, s, d in param_specs(cfg)
+        ],
+        "artifacts": arts,
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    print(f"  [ok]   {var.name}: {len(arts)} artifacts, "
+          f"{cfg.n_params():,} params, {time.time() - t0:.1f}s")
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="all",
+                    help="comma-separated variant names, a group name "
+                         "(core/table1/..), or 'all'")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, var in VARIANTS.items():
+            print(f"{name:24s} group={var.group:8s} T={var.cfg.seq_len:5d} "
+                  f"params={var.cfg.n_params():,}")
+        return
+
+    if args.variants == "all":
+        selected = list(VARIANTS.values())
+    else:
+        sel = set(args.variants.split(","))
+        selected = [v for v in VARIANTS.values() if v.name in sel or v.group in sel]
+        unknown = sel - {v.name for v in selected} - {v.group for v in selected}
+        if unknown:
+            sys.exit(f"unknown variants/groups: {unknown}")
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    print(f"lowering {len(selected)} variants -> {out}")
+    t0 = time.time()
+    for var in selected:
+        lower_variant(var, out, force=args.force)
+    (out / ".stamp").write_text(str(time.time()))
+    print(f"done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the Routing Transformer reproduction.
+
+All kernels run under interpret=True (see module docstrings) so they lower
+to plain HLO for the CPU PJRT runtime; real-TPU execution would compile the
+same BlockSpec schedule via Mosaic.
+"""
+
+from .cluster_attention import cluster_attention
+from .full_attention import full_attention
+from .local_attention import local_attention
+
+__all__ = ["cluster_attention", "local_attention", "full_attention"]

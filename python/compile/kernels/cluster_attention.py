@@ -1,0 +1,105 @@
+"""Pallas kernel: within-cluster masked softmax attention.
+
+This is the flop hot-spot of Routing Transformer's Algorithm 1 (lines
+22-26).  After the L2 graph has routed tokens to clusters (centroid
+dot-products, per-cluster top-w, sorted gather), each cluster is a dense
+[w, d] tile of queries/keys/values plus the members' original sequence
+positions.  The kernel computes, per (batch · head · cluster) grid cell:
+
+    A   = (Q K^T) / sqrt(d)         # w x w,   MXU matmul
+    A   = mask(A, pos_q >= pos_k)   # causality over ORIGINAL positions
+    P   = softmax(A)                # masked, numerically stable
+    out = P V                       # w x d,   MXU matmul
+
+TPU mapping (see DESIGN.md §5): the grid dimension iterates clusters; each
+program's working set is 3·w·d + w² floats, VMEM-resident via BlockSpec, so
+the HBM→VMEM streaming of consecutive clusters double-buffers naturally.
+The gather/scatter stays in XLA (memory-bound, no MXU benefit).
+
+Runs under interpret=True — the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode traces to plain HLO ops so the kernel lowers
+into the same AOT artifact as the surrounding jax graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e9
+
+
+def _cluster_attention_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    q = q_ref[0].astype(jnp.float32)  # [w, d]
+    k = k_ref[0].astype(jnp.float32)  # [w, d]
+    v = v_ref[0].astype(jnp.float32)  # [w, d]
+    pos = pos_ref[0]  # [w] int32
+
+    d = q.shape[-1]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(d))  # [w, w]
+    mask = pos[:, None] >= pos[None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores) * mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(unnorm, axis=-1, keepdims=True), 1e-20)
+    probs = unnorm / denom
+    o_ref[0] = jnp.dot(probs, v).astype(o_ref.dtype)
+
+
+def _cluster_attention_pallas(q, k, v, pos, interpret):
+    g, w, d = q.shape
+    assert k.shape == (g, w, d) and v.shape == (g, w, d) and pos.shape == (g, w)
+    return pl.pallas_call(
+        _cluster_attention_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, w, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, pos)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def cluster_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    pos: jnp.ndarray,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched within-cluster attention.
+
+    q, k, v: [G, w, d] (G = batch*heads*clusters flattened), pos: [G, w]
+    int32 original positions.  Returns [G, w, d].
+
+    Differentiable: the forward pass is the Pallas kernel; the backward
+    pass is jax-autodiff of the jnp reference (identical math), compiled
+    into the same HLO artifact.  Kernelizing the backward pass is tracked
+    in DESIGN.md §Perf.
+    """
+    return _cluster_attention_pallas(q, k, v, pos, interpret)
+
+
+def _ca_fwd(q, k, v, pos, interpret):
+    return _cluster_attention_pallas(q, k, v, pos, interpret), (q, k, v, pos)
+
+
+def _ca_bwd(interpret, res, g):
+    q, k, v, pos = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.cluster_attention_ref(q_, k_, v_, pos), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, np.zeros(pos.shape, jax.dtypes.float0)
+
+
+cluster_attention.defvjp(_ca_fwd, _ca_bwd)

@@ -1,0 +1,87 @@
+"""Pallas kernel: dense causal attention (the Transformer baseline).
+
+Used by the Table 1 "Transformer" row (full attention over the whole
+sequence) and by the `full` head kind.  Grid iterates (batch·heads,
+T/blk_q) query blocks; each program streams the *whole* key/value tensor
+for its row — a deliberate O(T²) baseline, kept blocked so the query tile
+stays VMEM-resident.  For very long sequences the paper's point is exactly
+that this kernel is infeasible; it exists to anchor the comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e9
+
+
+def _full_attention_kernel(blk_q, q_ref, k_ref, v_ref, o_ref):
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # [blk_q, d]
+    k = k_ref[0].astype(jnp.float32)  # [T, d]
+    v = v_ref[0].astype(jnp.float32)  # [T, d]
+
+    d = q.shape[-1]
+    t = k.shape[0]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(d))  # [blk_q, T]
+    qpos = i * blk_q + jax.lax.iota(jnp.int32, blk_q)
+    kpos = jax.lax.iota(jnp.int32, t)
+    mask = kpos[None, :] <= qpos[:, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores) * mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(unnorm, axis=-1, keepdims=True), 1e-20)
+    probs = unnorm / denom
+    o_ref[0] = jnp.dot(probs, v).astype(o_ref.dtype)
+
+
+def _full_attention_pallas(q, k, v, blk_q, interpret):
+    n, t, d = q.shape
+    blk_q = min(blk_q, t)
+    assert t % blk_q == 0, (t, blk_q)
+    return pl.pallas_call(
+        functools.partial(_full_attention_kernel, blk_q),
+        grid=(n, t // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    blk_q: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Dense causal attention.  q, k, v: [N, T, D] -> [N, T, D].
+
+    Forward = Pallas kernel; backward = autodiff of the jnp reference.
+    """
+    return _full_attention_pallas(q, k, v, blk_q, interpret)
+
+
+def _fa_fwd(q, k, v, blk_q, interpret):
+    return _full_attention_pallas(q, k, v, blk_q, interpret), (q, k, v)
+
+
+def _fa_bwd(blk_q, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.full_causal_attention_ref(q_, k_, v_), q, k, v)
+    return vjp(g)
+
+
+full_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,221 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here with
+identical semantics (including masking, scaling and degenerate-row
+handling).  pytest/hypothesis compares kernel output against these over
+swept shapes and dtypes.  These functions are *never* part of the AOT
+artifacts; they exist only for correctness checking.
+"""
+
+from __future__ import annotations
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def _masked_softmax(scores: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Numerically stable softmax over the last axis with a boolean mask.
+
+    Rows where every entry is masked produce all-zero probabilities
+    (instead of NaN), matching the kernel behaviour.
+    """
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores) * mask.astype(scores.dtype)
+    denom = jnp.sum(unnorm, axis=-1, keepdims=True)
+    return unnorm / jnp.maximum(denom, 1e-20)
+
+
+def full_causal_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Dense causal attention.  q, k, v: [..., T, D] -> [..., T, D]."""
+    dtype = q.dtype
+    q, k, v = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    d = q.shape[-1]
+    t = q.shape[-2]
+    scores = jnp.einsum("...td,...sd->...ts", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    probs = _masked_softmax(scores, mask)
+    return jnp.einsum("...ts,...sd->...td", probs, v).astype(dtype)
+
+
+def full_causal_probs_ref(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Dense causal attention *distributions* [..., T, T] (for JSD analysis)."""
+    q, k = q.astype(jnp.float32), k.astype(jnp.float32)
+    d = q.shape[-1]
+    t = q.shape[-2]
+    scores = jnp.einsum("...td,...sd->...ts", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    return _masked_softmax(scores, mask)
+
+
+def local_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, window: int
+) -> jnp.ndarray:
+    """Blocked sliding-window causal attention.
+
+    q, k, v: [..., T, D] with T % window == 0.  Query block i attends to key
+    blocks i-1 and i (causally within block i), i.e. an effective context of
+    [window, 2*window) past positions — the standard "blocked local
+    attention" used by ImageTransformer/Sparse Transformer style models.
+    """
+    dtype = q.dtype
+    q, k, v = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    t, d = q.shape[-2], q.shape[-1]
+    assert t % window == 0, (t, window)
+    scores = jnp.einsum("...td,...sd->...ts", q, k) / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = (kpos <= qpos) & (qpos // window - kpos // window <= 1)
+    probs = _masked_softmax(scores, mask)
+    return jnp.einsum("...ts,...sd->...td", probs, v).astype(dtype)
+
+
+def local_probs_ref(q: jnp.ndarray, k: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Attention distributions of blocked local attention, [..., T, T]."""
+    q, k = q.astype(jnp.float32), k.astype(jnp.float32)
+    t, d = q.shape[-2], q.shape[-1]
+    scores = jnp.einsum("...td,...sd->...ts", q, k) / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = (kpos <= qpos) & (qpos // window - kpos // window <= 1)
+    return _masked_softmax(scores, mask)
+
+
+def cluster_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> jnp.ndarray:
+    """Within-cluster masked attention (Algorithm 1, lines 22-26).
+
+    q, k, v: [..., W, D] gathered cluster members; pos: [..., W] int32
+    original sequence positions of the members.  Member a attends to member
+    b iff pos[b] <= pos[a] (causal over *original* positions; the diagonal
+    — the token itself — is always visible).
+    """
+    dtype = q.dtype
+    q, k, v = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    d = q.shape[-1]
+    scores = jnp.einsum("...td,...sd->...ts", q, k) / jnp.sqrt(jnp.float32(d))
+    mask = pos[..., :, None] >= pos[..., None, :]
+    probs = _masked_softmax(scores, mask)
+    return jnp.einsum("...ts,...sd->...td", probs, v).astype(dtype)
+
+
+def layernorm_nsb_ref(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """LayerNorm with scale and bias disabled (the paper's unit-ball proxy)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) / jnp.sqrt(var + eps)).astype(x.dtype)
+
+
+def _gather_members(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """x: [B,H,T,D], idx: [B,H,K,w] -> [B,H,K,w,D]."""
+    b, h, _, _ = x.shape
+    bidx = jnp.arange(b)[:, None, None, None]
+    hidx = jnp.arange(h)[None, :, None, None]
+    return x[bidx, hidx, idx]
+
+
+def routing_attention_ref(
+    qk: jnp.ndarray,
+    v: jnp.ndarray,
+    mu: jnp.ndarray,
+    window: int,
+):
+    """Full Algorithm 1 (shared-QK causal variant) in pure jnp.
+
+    qk : [B, H, T, D]  layer-normalized shared query/keys (unit-ball)
+    v  : [B, H, T, D]  values
+    mu : [H, K, D]     centroids (unit-normalized)
+    window : w, members per cluster (top-w by centroid dot product)
+
+    Returns (out [B,H,T,D], cluster_sum [H,K,D], cluster_cnt [H,K]) where
+    the sums/counts are the per-centroid assignment statistics used for the
+    EMA update (argmax assignment, matching Algorithm 1 lines 28-31).
+
+    Tokens selected by several clusters contribute to each; their outputs
+    are averaged (count-normalized scatter-add).  Tokens selected by no
+    cluster produce zeros.
+    """
+    b, h, t, d = qk.shape
+    qk32 = qk.astype(jnp.float32)
+    # [B, H, K, T] routing scores
+    scores = jnp.einsum("hkd,bhtd->bhkt", mu.astype(jnp.float32), qk32)
+    # top-w per cluster, sorted ascending to preserve temporal order
+    _, idx = lax.top_k(scores, window)  # [B,H,K,w]
+    idx = jnp.sort(idx, axis=-1)
+    gq = _gather_members(qk, idx)
+    gv = _gather_members(v, idx)
+    out_g = cluster_attention_ref(gq, gq, gv, idx)
+    # scatter-add back with count normalization
+    out = jnp.zeros((b, h, t, d), jnp.float32)
+    cnt = jnp.zeros((b, h, t), jnp.float32)
+    bidx = jnp.arange(b)[:, None, None, None]
+    hidx = jnp.arange(h)[None, :, None, None]
+    out = out.at[bidx, hidx, idx].add(out_g.astype(jnp.float32))
+    cnt = cnt.at[bidx, hidx, idx].add(1.0)
+    out = out / jnp.maximum(cnt, 1.0)[..., None]
+    # EMA statistics: hard argmax assignment over clusters per token
+    assign = jnp.argmax(scores, axis=2)  # [B,H,T]
+    onehot = (assign[..., None] == jnp.arange(mu.shape[1])).astype(jnp.float32)
+    cluster_sum = jnp.einsum("bhtk,bhtd->hkd", onehot, qk32)
+    cluster_cnt = jnp.sum(onehot, axis=(0, 2))  # [H,K]
+    return out.astype(qk.dtype), cluster_sum, cluster_cnt
+
+
+def routing_probs_ref(qk: jnp.ndarray, mu: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Dense [B,H,T,T] attention distributions induced by routing attention.
+
+    Used for the Table 6 JSD study: reconstruct the full (sparse) attention
+    distribution each query implicitly has over the sequence.  A query's
+    row is the count-normalized average of its within-cluster softmax rows
+    across all clusters that selected it; unselected queries get an empty
+    (all-zero) row.
+    """
+    b, h, t, d = qk.shape
+    qk32 = qk.astype(jnp.float32)
+    scores = jnp.einsum("hkd,bhtd->bhkt", mu.astype(jnp.float32), qk32)
+    _, idx = lax.top_k(scores, window)
+    idx = jnp.sort(idx, axis=-1)  # [B,H,K,w]
+    gq = _gather_members(qk, idx)
+    att = jnp.einsum("bhkwd,bhkxd->bhkwx", gq.astype(jnp.float32), gq.astype(jnp.float32))
+    att = att / jnp.sqrt(jnp.float32(d))
+    mask = idx[..., :, None] >= idx[..., None, :]
+    probs = _masked_softmax(att, mask)  # [B,H,K,w,w]
+    dense = jnp.zeros((b, h, t, t), jnp.float32)
+    cnt = jnp.zeros((b, h, t), jnp.float32)
+    bidx = jnp.arange(b)[:, None, None, None, None]
+    hidx = jnp.arange(h)[None, :, None, None, None]
+    qidx = idx[..., :, None]  # [B,H,K,w,1]
+    kidx = idx[..., None, :]  # [B,H,K,1,w]
+    dense = dense.at[bidx, hidx, qidx, kidx].add(probs)
+    cnt = cnt.at[
+        jnp.arange(b)[:, None, None, None],
+        jnp.arange(h)[None, :, None, None],
+        idx,
+    ].add(1.0)
+    dense = dense / jnp.maximum(cnt, 1.0)[..., None]
+    return dense
+
+
+def centroid_ema_ref(
+    mu: jnp.ndarray, cluster_sum: jnp.ndarray, cluster_cnt: jnp.ndarray, decay: float
+) -> jnp.ndarray:
+    """Online spherical k-means EMA update (Algorithm 1 line 31).
+
+    mu: [H,K,D]; cluster_sum: [H,K,D]; cluster_cnt: [H,K].
+    We use the count-normalized mean of assigned vectors and re-project the
+    centroid to the unit sphere after the EMA (spherical k-means; scale
+    inside the EMA washes out after normalization — see DESIGN.md §3).
+    Clusters with zero assigned tokens keep their centroid unchanged.
+    """
+    mean = cluster_sum / jnp.maximum(cluster_cnt[..., None], 1.0)
+    new = decay * mu + (1.0 - decay) * mean
+    new = jnp.where(cluster_cnt[..., None] > 0, new, mu)
+    norm = jnp.sqrt(jnp.sum(jnp.square(new), axis=-1, keepdims=True))
+    return new / jnp.maximum(norm, 1e-6)

@@ -1,0 +1,487 @@
+"""Layer-2 JAX model: decoder-only Routing Transformer language model.
+
+Build-time only — this module is traced and AOT-lowered by `aot.py` into
+HLO text artifacts that the Rust coordinator executes via PJRT.  It never
+runs at serving/training time.
+
+The model implements the paper's architecture (Section 3-4):
+  * token + learned absolute position embeddings (substitution for Shaw
+    relative encodings — DESIGN.md §3),
+  * pre-LayerNorm transformer blocks with per-layer *head plans* mixing
+    attention kinds: `local`, `routing`, `full`, `random`, `strided`,
+  * routing heads follow Algorithm 1: shared QK projected to the unit
+    ball with scale/bias-free LayerNorm, online spherical k-means
+    centroids, per-cluster balanced top-w membership, within-cluster
+    attention (the L1 Pallas kernel), count-normalized scatter,
+  * centroid EMA statistics surfaced as auxiliary outputs so the train
+    step can apply the (non-gradient) k-means update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import cluster_attention, full_attention, local_attention
+
+NEG_INF = -1e9
+# Fixed head-kind ordering inside a layer: the slice of the head axis each
+# kind owns is determined by this order (manifest records it for L3).
+HEAD_KINDS = ("local", "routing", "full", "random", "strided")
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadPlan:
+    """Number of heads of each kind within one layer."""
+
+    local: int = 0
+    routing: int = 0
+    full: int = 0
+    random: int = 0
+    strided: int = 0
+
+    def total(self) -> int:
+        return self.local + self.routing + self.full + self.random + self.strided
+
+    def counts(self) -> List[Tuple[str, int]]:
+        return [(kind, getattr(self, kind)) for kind in HEAD_KINDS]
+
+    def to_json(self) -> Dict[str, int]:
+        return {k: getattr(self, k) for k in HEAD_KINDS if getattr(self, k) > 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + routing hyper-parameters.
+
+    `plan` has one HeadPlan per layer; every plan must sum to `n_heads`.
+    `window` is the local-attention block size; `routing_window` is w
+    (members per cluster); `n_clusters` is k.  The paper's optimal choice
+    is k = sqrt(T), w = T/k (Section 4.1).
+    """
+
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    plan: Tuple[HeadPlan, ...]
+    window: int = 64
+    n_clusters: int = 8
+    routing_window: int = 64
+    strided_stride: int = 16
+    centroid_decay: float = 0.999
+    ffw_mult: int = 4
+    init_scale: float = 0.02
+    seed: int = 0
+
+    def __post_init__(self):
+        assert len(self.plan) == self.n_layers, "one HeadPlan per layer"
+        for p in self.plan:
+            assert p.total() == self.n_heads, f"plan {p} != n_heads {self.n_heads}"
+        assert self.d_model % self.n_heads == 0
+        assert self.seq_len % self.window == 0
+        assert self.routing_window <= self.seq_len
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for _, s, _ in param_specs(self))
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["plan"] = [p.to_json() for p in self.plan]
+        return d
+
+
+def uniform_plan(n_layers: int, n_heads: int, routing_heads: int, routing_layers: int,
+                 kind: str = "routing") -> Tuple[HeadPlan, ...]:
+    """Paper-style plan: the *top* `routing_layers` layers get
+    `routing_heads` heads of `kind` (rest local); lower layers all-local.
+
+    "Routing layers when present are always added at the top of the model"
+    (Table 1 caption);  PG-19 uses routing heads only in the last 2 layers.
+    """
+    plans = []
+    for layer in range(n_layers):
+        if layer >= n_layers - routing_layers and routing_heads > 0:
+            plans.append(HeadPlan(local=n_heads - routing_heads, **{kind: routing_heads}))
+        else:
+            plans.append(HeadPlan(local=n_heads))
+    return tuple(plans)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """(name, shape, dtype) for every parameter, in FLATTEN ORDER (sorted
+    by name).  This order is the contract with the Rust runtime: manifests
+    list it, npz checkpoints use the names, and the lowered HLO takes the
+    arrays in exactly this order."""
+    d, dh = cfg.d_model, cfg.d_head
+    specs: Dict[str, Tuple[int, ...]] = {
+        "tok_emb": (cfg.vocab_size, d),
+        "pos_emb": (cfg.seq_len, d),
+        "ln_f.scale": (d,),
+        "ln_f.bias": (d,),
+        "w_out": (d, cfg.vocab_size),
+    }
+    for layer in range(cfg.n_layers):
+        p = cfg.plan[layer]
+        pre = f"layer{layer:02d}."
+        specs[pre + "ln1.scale"] = (d,)
+        specs[pre + "ln1.bias"] = (d,)
+        specs[pre + "attn.wq"] = (d, d)
+        specs[pre + "attn.wk"] = (d, d)
+        specs[pre + "attn.wv"] = (d, d)
+        specs[pre + "attn.wo"] = (d, d)
+        if p.routing > 0:
+            specs[pre + "attn.centroids"] = (p.routing, cfg.n_clusters, dh)
+        specs[pre + "ln2.scale"] = (d,)
+        specs[pre + "ln2.bias"] = (d,)
+        specs[pre + "mlp.w1"] = (d, cfg.ffw_mult * d)
+        specs[pre + "mlp.b1"] = (cfg.ffw_mult * d,)
+        specs[pre + "mlp.w2"] = (cfg.ffw_mult * d, d)
+        specs[pre + "mlp.b2"] = (d,)
+    return [(name, specs[name], "f32") for name in sorted(specs)]
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Seeded initialization.  Centroids start as random unit vectors."""
+    rng = np.random.default_rng(cfg.seed)
+    params: Dict[str, jnp.ndarray] = {}
+    for name, shape, _ in param_specs(cfg):
+        if name.endswith(".scale"):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith((".bias", ".b1", ".b2")):
+            arr = np.zeros(shape, np.float32)
+        elif name.endswith("centroids"):
+            arr = rng.normal(size=shape).astype(np.float32)
+            arr /= np.maximum(np.linalg.norm(arr, axis=-1, keepdims=True), 1e-6)
+        else:
+            arr = (rng.normal(size=shape) * cfg.init_scale).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[name] for name, _, _ in param_specs(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> Dict[str, jnp.ndarray]:
+    return {name: arr for (name, _, _), arr in zip(param_specs(cfg), flat)}
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def layernorm_nsb(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Scale/bias-free LayerNorm: the paper's projection onto the d-ball
+    (Section 4.1) that makes MIPS equivalent to nearest-neighbor search."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def _masked_softmax(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores) * mask.astype(scores.dtype)
+    return unnorm / jnp.maximum(jnp.sum(unnorm, axis=-1, keepdims=True), 1e-20)
+
+
+def _gather_members(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """x: [B,Hr,T,D], idx: [B,Hr,K,w] -> [B,Hr,K,w,D]."""
+    b, h = x.shape[0], x.shape[1]
+    bidx = jnp.arange(b)[:, None, None, None]
+    hidx = jnp.arange(h)[None, :, None, None]
+    return x[bidx, hidx, idx]
+
+
+def _route_and_attend(qk: jnp.ndarray, v: jnp.ndarray, scores: jnp.ndarray, w: int):
+    """Shared machinery of routing/random heads: given routing scores
+    [B,Hr,K,T], select balanced top-w members per cluster, run the L1
+    cluster-attention kernel, and scatter back with count normalization."""
+    b, h, t, dh = qk.shape
+    kk = scores.shape[2]
+    # top-w per cluster via a full descending sort.  NOTE: lax.top_k
+    # lowers to the `topk` HLO instruction, which xla_extension 0.5.1's
+    # parser rejects, and jnp.argsort's gather path trips an incompat in
+    # this jaxlib; lax.sort_key_val lowers to the classic `sort` op.
+    # stop_gradient: the router only selects indices; differentiating
+    # through the sort trips the jaxlib gather-transpose incompat anyway.
+    scores_sg = lax.stop_gradient(scores)
+    iota = lax.broadcasted_iota(jnp.int32, scores_sg.shape, len(scores_sg.shape) - 1)
+    _, idx_sorted = lax.sort_key_val(-scores_sg, iota, dimension=-1)
+    idx = idx_sorted[..., :w]  # [B,Hr,K,w]
+    idx = jnp.sort(idx, axis=-1)  # preserve temporal order (Alg.1 line 14)
+    gq = _gather_members(qk, idx)
+    gv = _gather_members(v, idx)
+    g = b * h * kk
+    out_g = cluster_attention(
+        gq.reshape(g, w, dh), gq.reshape(g, w, dh), gv.reshape(g, w, dh),
+        idx.reshape(g, w).astype(jnp.int32),
+    ).reshape(b, h, kk, w, dh)
+    out = jnp.zeros((b, h, t, dh), jnp.float32)
+    cnt = jnp.zeros((b, h, t), jnp.float32)
+    bidx = jnp.arange(b)[:, None, None, None]
+    hidx = jnp.arange(h)[None, :, None, None]
+    out = out.at[bidx, hidx, idx].add(out_g)
+    cnt = cnt.at[bidx, hidx, idx].add(1.0)
+    return out / jnp.maximum(cnt, 1.0)[..., None], idx
+
+
+def routing_heads_attention(cfg: ModelConfig, qh: jnp.ndarray, vh: jnp.ndarray,
+                            centroids: jnp.ndarray):
+    """Algorithm 1 for the routing head group (shared QK, causal).
+
+    qh: [B,Hr,T,dh] raw query projections; vh values; centroids [Hr,K,dh].
+    Returns (out, cluster_sum, cluster_cnt).
+    """
+    qk = layernorm_nsb(qh)
+    # centroid routing scores; stop_gradient: the router picks indices only,
+    # no gradient flows into (or out of) the clustering decision.
+    scores = jnp.einsum("hkd,bhtd->bhkt", centroids, lax.stop_gradient(qk))
+    out, _ = _route_and_attend(qk, vh, scores, cfg.routing_window)
+    # EMA statistics (Alg.1 lines 28-31) with hard argmax assignment
+    qk_sg = lax.stop_gradient(qk)
+    assign = jnp.argmax(scores, axis=2)  # [B,Hr,T]
+    onehot = (assign[..., None] == jnp.arange(cfg.n_clusters)).astype(jnp.float32)
+    cluster_sum = jnp.einsum("bhtk,bhtd->hkd", onehot, qk_sg)
+    cluster_cnt = jnp.sum(onehot, axis=(0, 2))
+    return out, cluster_sum, cluster_cnt
+
+
+def random_heads_attention(cfg: ModelConfig, layer: int, qh: jnp.ndarray, vh: jnp.ndarray):
+    """Table 1's Random Transformer control: K_idx drawn at random instead
+    of by nearest-neighbor search.  Same balanced-window machinery, but the
+    routing scores are a fixed random constant (baked at trace time)."""
+    b, h, t, dh = qh.shape
+    rng = np.random.default_rng(cfg.seed * 1000 + layer + 17)
+    const_scores = jnp.asarray(
+        rng.normal(size=(1, h, cfg.n_clusters, t)).astype(np.float32)
+    )
+    scores = jnp.broadcast_to(const_scores, (b, h, cfg.n_clusters, t))
+    qk = layernorm_nsb(qh)
+    out, _ = _route_and_attend(qk, vh, scores, cfg.routing_window)
+    return out
+
+
+def strided_heads_attention(cfg: ModelConfig, qh, kh, vh):
+    """Child et al. strided attention: attend to j <= i with (i-j) % s == 0.
+    Dense-masked implementation — a baseline, deliberately O(T^2)."""
+    b, h, t, dh = qh.shape
+    scores = jnp.einsum("bhtd,bhsd->bhts", qh, kh) / jnp.sqrt(jnp.float32(dh))
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = (kpos <= qpos) & ((qpos - kpos) % cfg.strided_stride == 0)
+    probs = _masked_softmax(scores, mask)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, vh)
+
+
+# --------------------------------------------------------------------------
+# Transformer forward
+# --------------------------------------------------------------------------
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def attention_layer(cfg: ModelConfig, params: Dict[str, jnp.ndarray], layer: int,
+                    x: jnp.ndarray):
+    """One attention module with a mixed head plan.
+
+    Returns (out [B,T,d], aux) where aux is (cluster_sum, cluster_cnt) if
+    the layer has routing heads else None.
+    """
+    pre = f"layer{layer:02d}."
+    plan = cfg.plan[layer]
+    q = _split_heads(x @ params[pre + "attn.wq"], cfg.n_heads)
+    k = _split_heads(x @ params[pre + "attn.wk"], cfg.n_heads)
+    v = _split_heads(x @ params[pre + "attn.wv"], cfg.n_heads)
+    b, _, t, dh = q.shape
+
+    outs: List[jnp.ndarray] = []
+    aux = None
+    h0 = 0
+    for kind, cnt in plan.counts():
+        if cnt == 0:
+            continue
+        sl = slice(h0, h0 + cnt)
+        h0 += cnt
+        qs, ks, vs = q[:, sl], k[:, sl], v[:, sl]
+        if kind == "local":
+            o = local_attention(
+                qs.reshape(b * cnt, t, dh), ks.reshape(b * cnt, t, dh),
+                vs.reshape(b * cnt, t, dh), cfg.window,
+            ).reshape(b, cnt, t, dh)
+        elif kind == "routing":
+            o, cs, cc = routing_heads_attention(cfg, qs, vs, params[pre + "attn.centroids"])
+            aux = (cs, cc)
+        elif kind == "full":
+            o = full_attention(
+                qs.reshape(b * cnt, t, dh), ks.reshape(b * cnt, t, dh),
+                vs.reshape(b * cnt, t, dh), blk_q=min(128, t),
+            ).reshape(b, cnt, t, dh)
+        elif kind == "random":
+            o = random_heads_attention(cfg, layer, qs, vs)
+        elif kind == "strided":
+            o = strided_heads_attention(cfg, qs, ks, vs)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        outs.append(o)
+
+    merged = _merge_heads(jnp.concatenate(outs, axis=1))
+    return merged @ params[pre + "attn.wo"], aux
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray):
+    """tokens: [B,T] int32 -> (logits [B,T,V], aux {layer: (sum,cnt)})."""
+    b, t = tokens.shape
+    assert t == cfg.seq_len, (t, cfg.seq_len)
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    auxes: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+    for layer in range(cfg.n_layers):
+        pre = f"layer{layer:02d}."
+        a_in = layernorm(h, params[pre + "ln1.scale"], params[pre + "ln1.bias"])
+        a_out, aux = attention_layer(cfg, params, layer, a_in)
+        if aux is not None:
+            auxes[layer] = aux
+        h = h + a_out
+        m_in = layernorm(h, params[pre + "ln2.scale"], params[pre + "ln2.bias"])
+        m = jax.nn.relu(m_in @ params[pre + "mlp.w1"] + params[pre + "mlp.b1"])
+        h = h + m @ params[pre + "mlp.w2"] + params[pre + "mlp.b2"]
+    h = layernorm(h, params["ln_f.scale"], params["ln_f.bias"])
+    logits = h @ params["w_out"]
+    return logits, auxes
+
+
+def loss_fn(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray):
+    """Mean next-token cross-entropy (nats).  Returns (loss, aux)."""
+    logits, auxes = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll), auxes
+
+
+# --------------------------------------------------------------------------
+# Analysis: dense attention distributions for the Table 6 JSD study
+# --------------------------------------------------------------------------
+
+
+def attention_probs(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray):
+    """Dense per-head attention distributions [L, H, T, T] (batch element 0).
+
+    Local and full heads get their exact distributions; routing heads get
+    the count-normalized distribution induced by their cluster assignments
+    (ref.routing_probs semantics); random/strided heads return zeros (not
+    used by the Table 6 study)."""
+    b, t = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    all_probs: List[jnp.ndarray] = []
+    for layer in range(cfg.n_layers):
+        pre = f"layer{layer:02d}."
+        plan = cfg.plan[layer]
+        a_in = layernorm(h, params[pre + "ln1.scale"], params[pre + "ln1.bias"])
+        q = _split_heads(a_in @ params[pre + "attn.wq"], cfg.n_heads)
+        k = _split_heads(a_in @ params[pre + "attn.wk"], cfg.n_heads)
+        layer_probs: List[jnp.ndarray] = []
+        h0 = 0
+        for kind, cnt in plan.counts():
+            if cnt == 0:
+                continue
+            sl = slice(h0, h0 + cnt)
+            h0 += cnt
+            qs, ks = q[:1, sl], k[:1, sl]
+            dh = qs.shape[-1]
+            if kind == "local":
+                scores = jnp.einsum("bhtd,bhsd->bhts", qs, ks) / jnp.sqrt(jnp.float32(dh))
+                qpos = jnp.arange(t)[:, None]
+                kpos = jnp.arange(t)[None, :]
+                mask = (kpos <= qpos) & (qpos // cfg.window - kpos // cfg.window <= 1)
+                layer_probs.append(_masked_softmax(scores, mask)[0])
+            elif kind == "full":
+                scores = jnp.einsum("bhtd,bhsd->bhts", qs, ks) / jnp.sqrt(jnp.float32(dh))
+                mask = jnp.tril(jnp.ones((t, t), bool))
+                layer_probs.append(_masked_softmax(scores, mask)[0])
+            elif kind == "routing":
+                qk = layernorm_nsb(qs)
+                mu = params[pre + "attn.centroids"]
+                layer_probs.append(_routing_probs(cfg, qk, mu)[0])
+            else:
+                layer_probs.append(jnp.zeros((cnt, t, t), jnp.float32))
+        all_probs.append(jnp.concatenate(layer_probs, axis=0))
+        # advance the residual stream with the *real* layer
+        a_out, _ = attention_layer(cfg, params, layer, a_in)
+        h = h + a_out
+        m_in = layernorm(h, params[pre + "ln2.scale"], params[pre + "ln2.bias"])
+        m = jax.nn.relu(m_in @ params[pre + "mlp.w1"] + params[pre + "mlp.b1"])
+        h = h + m @ params[pre + "mlp.w2"] + params[pre + "mlp.b2"]
+    return jnp.stack(all_probs)  # [L, H, T, T]
+
+
+def _routing_probs(cfg: ModelConfig, qk: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Dense [B,Hr,T,T] distribution induced by routing attention."""
+    b, h, t, d = qk.shape
+    w = cfg.routing_window
+    scores = jnp.einsum("hkd,bhtd->bhkt", mu, qk)
+    scores_sg = lax.stop_gradient(scores)
+    iota = lax.broadcasted_iota(jnp.int32, scores_sg.shape, len(scores_sg.shape) - 1)
+    _, idx_sorted = lax.sort_key_val(-scores_sg, iota, dimension=-1)
+    idx = idx_sorted[..., :w]  # see _route_and_attend re topk/argsort
+    idx = jnp.sort(idx, axis=-1)
+    gq = _gather_members(qk, idx)
+    att = jnp.einsum("bhkwd,bhkxd->bhkwx", gq, gq) / jnp.sqrt(jnp.float32(d))
+    mask = idx[..., :, None] >= idx[..., None, :]
+    probs = _masked_softmax(att, mask)
+    dense = jnp.zeros((b, h, t, t), jnp.float32)
+    cnt = jnp.zeros((b, h, t), jnp.float32)
+    bidx = jnp.arange(b)[:, None, None, None, None]
+    hidx = jnp.arange(h)[None, :, None, None, None]
+    dense = dense.at[bidx, hidx, idx[..., :, None], idx[..., None, :]].add(probs)
+    cnt = cnt.at[
+        jnp.arange(b)[:, None, None, None], jnp.arange(h)[None, :, None, None], idx
+    ].add(1.0)
+    return dense / jnp.maximum(cnt, 1.0)[..., None]
+
+
+# --------------------------------------------------------------------------
+# Config (de)serialization for manifests
+# --------------------------------------------------------------------------
+
+
+def config_from_json(d: Dict[str, Any]) -> ModelConfig:
+    plan = tuple(HeadPlan(**p) for p in d["plan"])
+    kwargs = {k: v for k, v in d.items() if k != "plan"}
+    return ModelConfig(plan=plan, **kwargs)
+
+
+def config_to_json_str(cfg: ModelConfig) -> str:
+    return json.dumps(cfg.to_json(), indent=2, sort_keys=True)

@@ -1,0 +1,169 @@
+"""Layer-2 training graph: Adam + centroid EMA, single-step and scanned.
+
+The scanned `train_block` is the hot-path artifact: PJRT (via the published
+`xla` crate) returns multi-result executions as ONE tuple-shaped buffer, so
+chaining state on-device buffer-to-buffer is impossible; instead we amortize
+the host round-trip over S fused steps inside one executable (a
+`lax.scan`), the same trick MaxText-style trainers use to amortize dispatch.
+See EXPERIMENTS.md §Perf for the measured effect.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, loss_fn, param_specs
+
+
+def centroid_ema(mu: jnp.ndarray, cluster_sum: jnp.ndarray, cluster_cnt: jnp.ndarray,
+                 decay: float) -> jnp.ndarray:
+    """Online spherical k-means update (Algorithm 1 line 31).
+
+    Count-normalized mean + EMA + re-projection to the unit sphere; empty
+    clusters keep their centroid (see kernels/ref.py for rationale)."""
+    mean = cluster_sum / jnp.maximum(cluster_cnt[..., None], 1.0)
+    new = decay * mu + (1.0 - decay) * mean
+    new = jnp.where(cluster_cnt[..., None] > 0, new, mu)
+    norm = jnp.sqrt(jnp.sum(jnp.square(new), axis=-1, keepdims=True))
+    return new / jnp.maximum(norm, 1e-6)
+
+
+def adam_update(p, g, m, v, step, lr, b1=0.9, b2=0.98, eps=1e-9):
+    """Adam with the paper's betas (Section 5: b1=0.9, b2=0.98)."""
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1.0 - jnp.power(b1, t))
+    vhat = v / (1.0 - jnp.power(b2, t))
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def _train_step_tree(cfg: ModelConfig, params: Dict[str, jnp.ndarray],
+                     m: Dict[str, jnp.ndarray], v: Dict[str, jnp.ndarray],
+                     step: jnp.ndarray, lr: jnp.ndarray, tokens: jnp.ndarray):
+    """One optimization step over dict-structured state."""
+    (loss, auxes), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens), has_aux=True
+    )(params)
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        if name.endswith("centroids"):
+            # k-means EMA instead of a gradient step (no gradient reaches
+            # centroids anyway: they only select indices).
+            layer = int(name[len("layer"):len("layer") + 2])
+            cs, cc = auxes[layer]
+            new_p[name] = centroid_ema(params[name], cs, cc, cfg.centroid_decay)
+            new_m[name] = m[name]
+            new_v[name] = v[name]
+        else:
+            new_p[name], new_m[name], new_v[name] = adam_update(
+                params[name], grads[name], m[name], v[name], step, lr
+            )
+    return new_p, new_m, new_v, loss
+
+
+def make_train_step(cfg: ModelConfig):
+    """Flat-argument single train step, the shape the HLO artifact exposes:
+
+        (P params, P m, P v, step i32[], lr f32[], tokens i32[B,T])
+            -> (P params', P m', P v', loss f32[])
+    """
+    names = [n for n, _, _ in param_specs(cfg)]
+    P = len(names)
+
+    def train_step(*args):
+        params = dict(zip(names, args[:P]))
+        m = dict(zip(names, args[P : 2 * P]))
+        v = dict(zip(names, args[2 * P : 3 * P]))
+        step, lr, tokens = args[3 * P], args[3 * P + 1], args[3 * P + 2]
+        new_p, new_m, new_v, loss = _train_step_tree(cfg, params, m, v, step, lr, tokens)
+        return tuple(
+            [new_p[n] for n in names] + [new_m[n] for n in names] + [new_v[n] for n in names]
+            + [loss]
+        )
+
+    return train_step
+
+
+def make_train_block(cfg: ModelConfig, scan_steps: int):
+    """S fused train steps via lax.scan — the hot-path artifact:
+
+        (P params, P m, P v, step i32[], lr f32[], tokens i32[S,B,T])
+            -> (P params', P m', P v', losses f32[S])
+    """
+    names = [n for n, _, _ in param_specs(cfg)]
+    P = len(names)
+
+    def train_block(*args):
+        params = dict(zip(names, args[:P]))
+        m = dict(zip(names, args[P : 2 * P]))
+        v = dict(zip(names, args[2 * P : 3 * P]))
+        step, lr, tokens = args[3 * P], args[3 * P + 1], args[3 * P + 2]
+
+        def body(carry, batch):
+            params, m, v, step = carry
+            new_p, new_m, new_v, loss = _train_step_tree(cfg, params, m, v, step, lr, batch)
+            return (new_p, new_m, new_v, step + 1), loss
+
+        (params, m, v, _), losses = jax.lax.scan(
+            body, (params, m, v, step), tokens, length=scan_steps
+        )
+        return tuple(
+            [params[n] for n in names] + [m[n] for n in names] + [v[n] for n in names]
+            + [losses]
+        )
+
+    return train_block
+
+
+def make_logits(cfg: ModelConfig):
+    """(P params, tokens i32[B,T]) -> logits f32[B,T,V]."""
+    from .model import forward
+
+    names = [n for n, _, _ in param_specs(cfg)]
+    P = len(names)
+
+    def logits_fn(*args):
+        params = dict(zip(names, args[:P]))
+        tokens = args[P]
+        logits, _ = forward(cfg, params, tokens)
+        return (logits,)
+
+    return logits_fn
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(P params, tokens i32[B,T]) -> (mean nll f32[], per-position nll f32[B,T-1])."""
+    from .model import forward
+
+    names = [n for n, _, _ in param_specs(cfg)]
+    P = len(names)
+
+    def eval_fn(*args):
+        params = dict(zip(names, args[:P]))
+        tokens = args[P]
+        logits, _ = forward(cfg, params, tokens)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return (jnp.mean(nll), nll)
+
+    return eval_fn
+
+
+def make_attn_probs(cfg: ModelConfig):
+    """(P params, tokens i32[B,T]) -> probs f32[L,H,T,T]  (analysis only)."""
+    from .model import attention_probs
+
+    names = [n for n, _, _ in param_specs(cfg)]
+    P = len(names)
+
+    def probs_fn(*args):
+        params = dict(zip(names, args[:P]))
+        tokens = args[P]
+        return (attention_probs(cfg, params, tokens),)
+
+    return probs_fn

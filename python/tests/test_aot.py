@@ -1,0 +1,86 @@
+"""AOT contract tests: variant presets, HLO text lowering, manifest.
+
+Checks that every preset is internally consistent, that lowering produces
+parseable HLO text with the *full* parameter signature (keep_unused), and
+that no variant emits the `topk` HLO instruction xla_extension 0.5.1
+cannot parse.
+"""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import VARIANTS, lower_variant, to_hlo_text
+from compile.model import param_specs
+from compile.train import make_eval_loss
+
+
+def test_variant_presets_consistent():
+    assert "quickstart" in VARIANTS
+    groups = {v.group for v in VARIANTS.values()}
+    # every paper table with a dedicated workload has variants
+    for g in ["table1", "table2", "table3", "table4", "table5", "table6"]:
+        assert g in groups, f"missing variants for {g}"
+    for var in VARIANTS.values():
+        cfg = var.cfg
+        assert cfg.seq_len % cfg.window == 0
+        assert cfg.routing_window <= cfg.seq_len
+        for plan in cfg.plan:
+            assert plan.total() == cfg.n_heads
+    # the PG-19 preset follows the paper: 2 routing heads, last 2 layers
+    pg = VARIANTS["pg19_routing"].cfg
+    assert pg.plan[-1].routing == 2 and pg.plan[-2].routing == 2
+    assert pg.plan[0].routing == 0
+
+
+def test_lowering_keeps_full_signature_and_no_topk(tmp_path):
+    var = VARIANTS["quickstart"]
+    cfg = var.cfg
+    P = len(param_specs(cfg))
+    pstructs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in param_specs(cfg)]
+    tok = jax.ShapeDtypeStruct((var.batch, cfg.seq_len), jnp.int32)
+    text = to_hlo_text(
+        jax.jit(make_eval_loss(cfg), keep_unused=True).lower(*pstructs, tok)
+    )
+    assert text.startswith("HloModule")
+    assert " topk(" not in text, "topk breaks xla_extension 0.5.1's parser"
+    # entry layout mentions P+1 parameters
+    header = text.splitlines()[0]
+    assert header.count("f32[") + header.count("s32[") >= P + 1
+
+
+def test_lower_variant_writes_complete_artifact(tmp_path):
+    lower_variant(VARIANTS["quickstart"], tmp_path, force=True)
+    vdir = tmp_path / "quickstart"
+    manifest = json.loads((vdir / "manifest.json").read_text())
+    for art in manifest["artifacts"].values():
+        assert (vdir / art["file"]).exists()
+    assert (vdir / "init_params.npz").exists()
+    # manifest params match the model's specs exactly (names + shapes)
+    cfg = VARIANTS["quickstart"].cfg
+    specs = [(n, list(s)) for n, s, _ in param_specs(cfg)]
+    got = [(p["name"], p["shape"]) for p in manifest["params"]]
+    assert specs == got
+    # idempotence: second call without --force skips
+    lower_variant(VARIANTS["quickstart"], tmp_path, force=False)
+
+
+def test_init_params_npz_matches_manifest(tmp_path):
+    import numpy as np
+
+    lower_variant(VARIANTS["quickstart"], tmp_path, force=True)
+    vdir = tmp_path / "quickstart"
+    manifest = json.loads((vdir / "manifest.json").read_text())
+    npz = np.load(vdir / "init_params.npz")
+    for p in manifest["params"]:
+        assert p["name"] in npz.files
+        assert list(npz[p["name"]].shape) == p["shape"]
+    # centroids are unit-norm at init
+    cents = [f for f in npz.files if f.endswith("centroids")]
+    assert cents
+    for c in cents:
+        norms = np.linalg.norm(npz[c], axis=-1)
+        np.testing.assert_allclose(norms, 1.0, rtol=1e-5)

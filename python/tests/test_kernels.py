@@ -1,0 +1,291 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the core
+correctness signal for everything that ends up inside the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cluster_attention, full_attention, local_attention
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------- cluster
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    g=st.integers(1, 8),
+    w=st.sampled_from([1, 2, 4, 8, 16]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cluster_attention_matches_ref(g, w, d, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (g, w, d))
+    k = rand(rng, (g, w, d))
+    v = rand(rng, (g, w, d))
+    pos = jnp.asarray(rng.integers(0, 4 * w, size=(g, w)), jnp.int32)
+    pos = jnp.sort(pos, axis=-1)
+    out = cluster_attention(q, k, v, pos)
+    expect = ref.cluster_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.array(out), np.array(expect), **TOL)
+
+
+def test_cluster_attention_bf16():
+    rng = np.random.default_rng(7)
+    g, w, d = 4, 8, 16
+    q = rand(rng, (g, w, d), jnp.bfloat16)
+    v = rand(rng, (g, w, d), jnp.bfloat16)
+    pos = jnp.sort(jnp.asarray(rng.integers(0, 64, size=(g, w)), jnp.int32), axis=-1)
+    out = cluster_attention(q, q, v, pos)
+    expect = ref.cluster_attention_ref(q, q, v, pos)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.array(out, np.float32), np.array(expect, np.float32), **BF16_TOL
+    )
+
+
+def test_cluster_attention_causality():
+    """Perturbing a member never changes outputs of earlier positions."""
+    rng = np.random.default_rng(3)
+    g, w, d = 1, 8, 8
+    q = rand(rng, (g, w, d))
+    v = rand(rng, (g, w, d))
+    pos = jnp.asarray(np.arange(w)[None, :], jnp.int32)
+    base = np.array(cluster_attention(q, q, v, pos))
+    v2 = v.at[0, -1].add(100.0)
+    pert = np.array(cluster_attention(q, q, v2, pos))
+    np.testing.assert_allclose(base[0, :-1], pert[0, :-1], **TOL)
+    assert not np.allclose(base[0, -1], pert[0, -1])
+
+
+def test_cluster_attention_duplicate_positions_see_each_other():
+    """Members with equal positions attend to one another (>= mask)."""
+    rng = np.random.default_rng(4)
+    g, w, d = 1, 4, 8
+    q = rand(rng, (g, w, d))
+    v = rand(rng, (g, w, d))
+    pos = jnp.asarray([[5, 5, 5, 5]], jnp.int32)
+    out = np.array(cluster_attention(q, q, v, pos))
+    expect = np.array(ref.cluster_attention_ref(q, q, v, pos))
+    np.testing.assert_allclose(out, expect, **TOL)
+    # every row is a full softmax over all four members -> rows differ from v
+    assert np.isfinite(out).all()
+
+
+# ------------------------------------------------------------------ local
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    nblk=st.integers(1, 6),
+    window=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_local_attention_matches_ref(n, nblk, window, d, seed):
+    rng = np.random.default_rng(seed)
+    t = nblk * window
+    q = rand(rng, (n, t, d))
+    k = rand(rng, (n, t, d))
+    v = rand(rng, (n, t, d))
+    out = local_attention(q, k, v, window)
+    expect = ref.local_attention_ref(q, k, v, window)
+    np.testing.assert_allclose(np.array(out), np.array(expect), **TOL)
+
+
+def test_local_attention_first_block_is_strictly_causal():
+    """Block 0 has no previous block; token 0 attends only to itself."""
+    rng = np.random.default_rng(11)
+    n, t, d, w = 1, 32, 8, 8
+    q = rand(rng, (n, t, d))
+    k = rand(rng, (n, t, d))
+    v = rand(rng, (n, t, d))
+    out = np.array(local_attention(q, k, v, w))
+    np.testing.assert_allclose(out[0, 0], np.array(v[0, 0]), **TOL)
+
+
+def test_local_attention_window_bound():
+    """Keys further than 2*window-1 in the past never influence a query."""
+    rng = np.random.default_rng(12)
+    n, t, d, w = 1, 64, 8, 8
+    q = rand(rng, (n, t, d))
+    k = rand(rng, (n, t, d))
+    v = rand(rng, (n, t, d))
+    base = np.array(local_attention(q, k, v, w))
+    # perturb position 0; queries at positions >= 2w must not change
+    v2 = v.at[0, 0].add(1000.0)
+    k2 = k.at[0, 0].add(1000.0)
+    pert = np.array(local_attention(q, k2, v2, w))
+    np.testing.assert_allclose(base[0, 2 * w :], pert[0, 2 * w :], **TOL)
+
+
+def test_local_attention_bf16():
+    rng = np.random.default_rng(13)
+    n, t, d, w = 2, 32, 16, 8
+    q = rand(rng, (n, t, d), jnp.bfloat16)
+    k = rand(rng, (n, t, d), jnp.bfloat16)
+    v = rand(rng, (n, t, d), jnp.bfloat16)
+    out = local_attention(q, k, v, w)
+    expect = ref.local_attention_ref(q, k, v, w)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.array(out, np.float32), np.array(expect, np.float32), **BF16_TOL
+    )
+
+
+# ------------------------------------------------------------------- full
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    t=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([4, 16]),
+    blk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_full_attention_matches_ref(n, t, d, blk, seed):
+    if t % blk != 0:
+        blk = t
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (n, t, d))
+    k = rand(rng, (n, t, d))
+    v = rand(rng, (n, t, d))
+    out = full_attention(q, k, v, blk_q=blk)
+    expect = ref.full_causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.array(out), np.array(expect), **TOL)
+
+
+def test_full_attention_rows_are_distributions():
+    rng = np.random.default_rng(21)
+    n, t = 1, 16
+    q = rand(rng, (n, t, t))
+    k = rand(rng, (n, t, t))
+    # v = identity basis: output row i == attention distribution over keys
+    v = jnp.eye(t)[None].astype(jnp.float32)
+    out = np.array(full_attention(q, k, v, blk_q=16))
+    sums = out.sum(-1)
+    np.testing.assert_allclose(sums, np.ones_like(sums), rtol=1e-5, atol=1e-5)
+    # causal: strictly-future entries are zero
+    assert abs(out[0][np.triu_indices(t, 1)]).max() < 1e-6
+
+
+# ---------------------------------------------------------------- routing
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    t=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16]),
+    k=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_routing_ref_invariants(b, h, t, d, k, seed):
+    """Paper invariants of Algorithm 1 on the reference implementation."""
+    rng = np.random.default_rng(seed)
+    w = t // k
+    qk = ref.layernorm_nsb_ref(rand(rng, (b, h, t, d)))
+    v = rand(rng, (b, h, t, d))
+    mu = rand(rng, (h, k, d))
+    mu = mu / jnp.linalg.norm(mu, axis=-1, keepdims=True)
+    out, cs, cc = ref.routing_attention_ref(qk, v, mu, w)
+    assert out.shape == (b, h, t, d)
+    assert np.isfinite(np.array(out)).all()
+    # every token is argmax-assigned to exactly one cluster
+    assert float(np.array(cc).sum()) == pytest.approx(b * h * t)
+    # balanced top-w membership: each cluster gathers exactly w members
+    scores = jnp.einsum("hkd,bhtd->bhkt", mu, qk)
+    import jax.lax as lax
+
+    _, idx = lax.top_k(scores, w)
+    assert idx.shape == (b, h, k, w)
+
+
+def test_routing_prefers_high_dot_product_keys():
+    """MIPS property: a query's cluster contains its highest-dot keys when
+    centroids are well separated."""
+    rng = np.random.default_rng(5)
+    d = 16
+    # two well-separated directions
+    mu = np.zeros((1, 2, d), np.float32)
+    mu[0, 0, 0] = 1.0
+    mu[0, 1, 1] = 1.0
+    t = 16
+    x = np.zeros((1, 1, t, d), np.float32)
+    half = t // 2
+    x[0, 0, :half, 0] = 1.0  # first half aligned with centroid 0
+    x[0, 0, half:, 1] = 1.0  # second half aligned with centroid 1
+    x += rng.normal(size=x.shape).astype(np.float32) * 0.05
+    qk = ref.layernorm_nsb_ref(jnp.asarray(x))
+    scores = jnp.einsum("hkd,bhtd->bhkt", jnp.asarray(mu), qk)
+    import jax.lax as lax
+
+    _, idx = lax.top_k(scores, half)
+    idx = np.array(jnp.sort(idx, axis=-1))
+    np.testing.assert_array_equal(idx[0, 0, 0], np.arange(half))
+    np.testing.assert_array_equal(idx[0, 0, 1], np.arange(half, t))
+
+
+def test_centroid_ema_moves_toward_assigned_mean():
+    rng = np.random.default_rng(6)
+    h, k, d = 1, 2, 8
+    mu = rng.normal(size=(h, k, d)).astype(np.float32)
+    mu /= np.linalg.norm(mu, axis=-1, keepdims=True)
+    target = rng.normal(size=(h, k, d)).astype(np.float32)
+    cnt = np.full((h, k), 4.0, np.float32)
+    new = np.array(ref.centroid_ema_ref(jnp.asarray(mu), jnp.asarray(target * 4), jnp.asarray(cnt), 0.5))
+    # unit norm preserved
+    np.testing.assert_allclose(np.linalg.norm(new, axis=-1), 1.0, rtol=1e-5)
+    # moved toward target direction
+    tn = target / np.linalg.norm(target, axis=-1, keepdims=True)
+    assert (np.sum(new * tn, -1) > np.sum(mu * tn, -1) - 1e-6).all()
+
+
+def test_centroid_ema_empty_cluster_unchanged():
+    mu = np.array([[[1.0, 0.0], [0.0, 1.0]]], np.float32)
+    cs = np.zeros((1, 2, 2), np.float32)
+    cc = np.array([[0.0, 3.0]], np.float32)
+    cs[0, 1] = [3.0, 0.0]
+    new = np.array(ref.centroid_ema_ref(jnp.asarray(mu), jnp.asarray(cs), jnp.asarray(cc), 0.9))
+    np.testing.assert_allclose(new[0, 0], mu[0, 0], rtol=1e-6)
+    assert new[0, 1, 0] > 0.0  # moved toward the assigned mass
+
+
+def test_layernorm_nsb_unit_ball():
+    """LN without scale/bias gives (approx) constant-norm vectors: the
+    paper's projection to the d-ball making MIPS ≡ NNS."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(4, 32), scale=10.0), jnp.float32)
+    y = np.array(ref.layernorm_nsb_ref(x))
+    norms = np.linalg.norm(y, axis=-1)
+    np.testing.assert_allclose(norms, np.sqrt(32.0), rtol=1e-3)
+
+
+def test_routing_probs_rows_sum_to_one_or_zero():
+    rng = np.random.default_rng(9)
+    b, h, t, d, k = 1, 1, 32, 8, 4
+    w = t // k
+    qk = ref.layernorm_nsb_ref(rand(rng, (b, h, t, d)))
+    mu = rand(rng, (h, k, d))
+    mu = mu / jnp.linalg.norm(mu, axis=-1, keepdims=True)
+    dense = np.array(ref.routing_probs_ref(qk, mu, w))
+    sums = dense.sum(-1)
+    ok = np.isclose(sums, 1.0, atol=1e-4) | np.isclose(sums, 0.0, atol=1e-6)
+    assert ok.all()
+    # causality over original positions
+    assert abs(dense[0, 0][np.triu_indices(t, 1)]).max() < 1e-6

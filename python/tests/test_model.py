@@ -1,0 +1,166 @@
+"""L2 model tests: shapes, head plans, routing semantics, analysis probs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    HeadPlan,
+    ModelConfig,
+    attention_probs,
+    config_from_json,
+    forward,
+    init_params,
+    layernorm_nsb,
+    loss_fn,
+    param_specs,
+    routing_heads_attention,
+    uniform_plan,
+)
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        vocab_size=64, d_model=32, n_layers=2, n_heads=4, seq_len=64,
+        plan=uniform_plan(2, 4, 2, 1), window=16, n_clusters=4,
+        routing_window=16, seed=0,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def toks(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, cfg.seq_len)), jnp.int32)
+
+
+def test_param_specs_sorted_and_complete():
+    cfg = tiny_cfg()
+    names = [n for n, _, _ in param_specs(cfg)]
+    assert names == sorted(names), "flatten order must be sorted by name"
+    assert "layer01.attn.centroids" in names
+    assert "layer00.attn.centroids" not in names  # layer 0 is all-local
+    assert "tok_emb" in names and "w_out" in names
+
+
+def test_n_params_counts_scalars():
+    cfg = tiny_cfg()
+    params = init_params(cfg)
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == cfg.n_params()
+
+
+def test_forward_shapes_and_finite():
+    cfg = tiny_cfg()
+    params = init_params(cfg)
+    logits, aux = forward(cfg, params, toks(cfg))
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab_size)
+    assert np.isfinite(np.array(logits)).all()
+    assert list(aux) == [1]  # only layer 1 has routing heads
+    cs, cc = aux[1]
+    assert cs.shape == (2, cfg.n_clusters, cfg.d_head)
+    assert cc.shape == (2, cfg.n_clusters)
+
+
+def test_forward_causality_local_only():
+    """Perturbing a future token must not change earlier logits for
+    local/full attention models (strict value causality)."""
+    cfg = tiny_cfg(plan=uniform_plan(2, 4, 0, 0))
+    params = init_params(cfg)
+    t1 = toks(cfg, b=1, seed=1)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab_size)
+    l1, _ = forward(cfg, params, t1)
+    l2, _ = forward(cfg, params, t2)
+    np.testing.assert_allclose(
+        np.array(l1[0, :-1]), np.array(l2[0, :-1]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_routing_membership_is_full_sequence():
+    """Algorithm 1 caveat (shared with the paper's implementation): the
+    balanced top-w cluster membership is computed over the FULL sequence,
+    so a future token can change which *past* tokens share a cluster (the
+    causal mask applies within clusters, to attention values only).  This
+    test documents that property: attention VALUES remain causal (past
+    keys only), but earlier logits may shift when membership changes."""
+    cfg = tiny_cfg()
+    params = init_params(cfg)
+    t1 = toks(cfg, b=1, seed=1)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab_size)
+    l1, _ = forward(cfg, params, t1)
+    l2, _ = forward(cfg, params, t2)
+    # the perturbation reaches earlier positions only through membership:
+    # the shift must be bounded (no direct value flow from the future)
+    delta = np.abs(np.array(l1[0, :-1]) - np.array(l2[0, :-1])).max()
+    base = np.abs(np.array(l1[0, :-1])).max()
+    assert delta < 0.5 * base, f"membership-only effect expected, delta={delta}"
+
+
+@pytest.mark.parametrize("kind", ["full", "random", "strided"])
+def test_alternative_head_kinds_forward(kind):
+    plan = (
+        HeadPlan(local=4),
+        HeadPlan(**{"local": 2, kind: 2}),
+    )
+    cfg = tiny_cfg(plan=plan)
+    params = init_params(cfg)
+    logits, _ = forward(cfg, params, toks(cfg))
+    assert np.isfinite(np.array(logits)).all()
+
+
+def test_loss_near_uniform_at_init():
+    cfg = tiny_cfg()
+    params = init_params(cfg)
+    loss, _ = loss_fn(cfg, params, toks(cfg))
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 0.5
+
+
+def test_routing_heads_attention_matches_ref():
+    """Model routing (Pallas inner kernel) vs the pure-jnp oracle."""
+    from compile.kernels import ref
+
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(3)
+    b, h, t, dh = 2, 2, cfg.seq_len, cfg.d_head
+    q = jnp.asarray(rng.normal(size=(b, h, t, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, dh)), jnp.float32)
+    mu = jnp.asarray(rng.normal(size=(h, cfg.n_clusters, dh)), jnp.float32)
+    mu = mu / jnp.linalg.norm(mu, axis=-1, keepdims=True)
+
+    out, cs, cc = routing_heads_attention(cfg, q, v, mu)
+    qk = layernorm_nsb(q)
+    out_ref, cs_ref, cc_ref = ref.routing_attention_ref(qk, v, mu, cfg.routing_window)
+    np.testing.assert_allclose(np.array(out), np.array(out_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(cs), np.array(cs_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(cc), np.array(cc_ref), rtol=1e-6, atol=0)
+
+
+def test_centroids_receive_no_gradient():
+    cfg = tiny_cfg()
+    params = init_params(cfg)
+    grads = jax.grad(lambda p: loss_fn(cfg, p, toks(cfg))[0])(params)
+    g = np.array(grads["layer01.attn.centroids"])
+    assert np.abs(g).max() == 0.0, "no gradient may reach the centroids"
+    # while e.g. wq of the same layer does get gradient
+    assert np.abs(np.array(grads["layer01.attn.wq"])).max() > 0.0
+
+
+def test_attention_probs_rows_are_distributions():
+    cfg = tiny_cfg()
+    params = init_params(cfg)
+    probs = attention_probs(cfg, params, toks(cfg, b=1))
+    p = np.array(probs)
+    assert p.shape == (cfg.n_layers, cfg.n_heads, cfg.seq_len, cfg.seq_len)
+    sums = p.sum(-1)
+    ok = np.isclose(sums, 1.0, atol=1e-4) | np.isclose(sums, 0.0, atol=1e-5)
+    assert ok.all()
+    # strictly-causal: no mass above the diagonal
+    triu = np.triu_indices(cfg.seq_len, 1)
+    assert abs(p[..., triu[0], triu[1]]).max() < 1e-6
+
+
+def test_config_json_roundtrip():
+    cfg = tiny_cfg()
+    back = config_from_json(cfg.to_json())
+    assert back == cfg

@@ -1,0 +1,122 @@
+"""L2 training-graph tests: Adam, centroid EMA, scan block semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ModelConfig, init_params, param_specs, uniform_plan
+from compile.train import (
+    adam_update,
+    centroid_ema,
+    make_eval_loss,
+    make_logits,
+    make_train_block,
+    make_train_step,
+)
+
+
+def tiny_cfg():
+    return ModelConfig(
+        vocab_size=64, d_model=32, n_layers=2, n_heads=4, seq_len=64,
+        plan=uniform_plan(2, 4, 2, 1), window=16, n_clusters=4,
+        routing_window=16, seed=0,
+    )
+
+
+def flat_state(cfg):
+    params = init_params(cfg)
+    names = [n for n, _, _ in param_specs(cfg)]
+    flat = [params[n] for n in names]
+    zeros = [jnp.zeros_like(p) for p in flat]
+    return names, flat, zeros
+
+
+def toks(cfg, shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, size=shape), jnp.int32)
+
+
+def test_adam_moves_against_gradient():
+    p = jnp.ones((4,))
+    g = jnp.ones((4,))
+    m = jnp.zeros((4,))
+    v = jnp.zeros((4,))
+    newp, newm, newv = adam_update(p, g, m, v, jnp.int32(0), jnp.float32(0.1))
+    assert (np.array(newp) < 1.0).all()
+    assert (np.array(newm) > 0).all()
+    assert (np.array(newv) > 0).all()
+
+
+def test_adam_bias_correction_first_step_size():
+    # at step 0 with eps small, |update| ~ lr regardless of gradient scale
+    for scale in [0.01, 1.0, 100.0]:
+        p = jnp.zeros((1,))
+        g = jnp.full((1,), scale)
+        newp, _, _ = adam_update(p, g, jnp.zeros((1,)), jnp.zeros((1,)),
+                                 jnp.int32(0), jnp.float32(0.1))
+        assert abs(abs(float(newp[0])) - 0.1) < 1e-3
+
+
+def test_centroid_ema_unit_norm_and_empty_freeze():
+    mu = jnp.asarray([[[1.0, 0.0], [0.0, 1.0]]], jnp.float32)
+    cs = jnp.asarray([[[0.0, 4.0], [0.0, 0.0]]], jnp.float32)
+    cc = jnp.asarray([[4.0, 0.0]], jnp.float32)
+    new = np.array(centroid_ema(mu, cs, cc, 0.5))
+    np.testing.assert_allclose(np.linalg.norm(new, axis=-1), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(new[0, 1], [0.0, 1.0], atol=1e-7)  # empty frozen
+    assert new[0, 0, 1] > 0.0  # moved toward assigned mean
+
+
+def test_train_step_loss_decreases_on_repeated_batch():
+    cfg = tiny_cfg()
+    names, flat, zeros = flat_state(cfg)
+    step_fn = jax.jit(make_train_step(cfg))
+    batch = toks(cfg, (4, cfg.seq_len))
+    p, m, v = flat, zeros, [jnp.zeros_like(x) for x in flat]
+    losses = []
+    for i in range(6):
+        out = step_fn(*p, *m, *v, jnp.int32(i), jnp.float32(2e-3), batch)
+        P = len(flat)
+        p, m, v = list(out[:P]), list(out[P:2*P]), list(out[2*P:3*P])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0]
+
+
+def test_train_block_equals_repeated_train_step():
+    cfg = tiny_cfg()
+    names, flat, zeros = flat_state(cfg)
+    P = len(flat)
+    S = 3
+    batch = toks(cfg, (S, 2, cfg.seq_len), seed=5)
+
+    block_fn = jax.jit(make_train_block(cfg, S))
+    out_block = block_fn(*flat, *zeros, *zeros, jnp.int32(0), jnp.float32(1e-3), batch)
+    losses_block = np.array(out_block[-1])
+
+    step_fn = jax.jit(make_train_step(cfg))
+    p, m, v = flat, zeros, zeros
+    losses_step = []
+    for s in range(S):
+        out = step_fn(*p, *m, *v, jnp.int32(s), jnp.float32(1e-3), batch[s])
+        p, m, v = list(out[:P]), list(out[P:2*P]), list(out[2*P:3*P])
+        losses_step.append(float(out[-1]))
+    np.testing.assert_allclose(losses_block, losses_step, rtol=1e-5, atol=1e-6)
+    # final params agree too
+    for a, b in zip(out_block[:P], p):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-5)
+
+
+def test_eval_loss_and_logits_consistent():
+    cfg = tiny_cfg()
+    names, flat, _ = flat_state(cfg)
+    batch = toks(cfg, (2, cfg.seq_len), seed=9)
+    mean_nll, nll = jax.jit(make_eval_loss(cfg))(*flat, batch)
+    assert nll.shape == (2, cfg.seq_len - 1)
+    np.testing.assert_allclose(float(mean_nll), float(np.array(nll).mean()), rtol=1e-6)
+
+    (logits,) = jax.jit(make_logits(cfg))(*flat, batch[:1])
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    manual = -np.take_along_axis(
+        np.array(logp), np.array(batch[:1, 1:])[..., None], axis=-1
+    )[..., 0]
+    np.testing.assert_allclose(manual, np.array(nll)[:1], rtol=1e-4, atol=1e-5)

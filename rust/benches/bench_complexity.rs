@@ -1,0 +1,63 @@
+//! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
+//!
+//! Two parts: (1) the analytic cost model swept over sequence length,
+//! showing the full/local/routing crossovers and that k* = √n minimizes
+//! routing cost; (2) measured host-side routing cost (k-means assign +
+//! top-w membership, the part the model adds over plain attention) vs n.
+
+use routing_transformer::attention::{attention_flops, optimal_clusters, AttentionKind};
+use routing_transformer::kmeans::SphericalKMeans;
+use routing_transformer::util::rng::Rng;
+use routing_transformer::util::timing::{time_fn, Table};
+
+fn main() {
+    println!("Section 4.1 — complexity model sweep (d = 64)\n");
+    let d = 64;
+    let mut table = Table::new(&[
+        "n", "k*=sqrt(2n)", "full MACs", "local(w=256)", "routing(k*)", "routing/full",
+    ]);
+    for &n in &[1024usize, 2048, 4096, 8192, 16384, 32768] {
+        let k = optimal_clusters(n);
+        let full = attention_flops(AttentionKind::Full, n, d);
+        let local = attention_flops(AttentionKind::Local { window: 256 }, n, d);
+        let routing = attention_flops(AttentionKind::Routing { clusters: k }, n, d);
+        table.row(&[
+            n.to_string(),
+            k.to_string(),
+            format!("{:.2e}", full as f64),
+            format!("{:.2e}", local as f64),
+            format!("{:.2e}", routing as f64),
+            format!("{:.3}", routing as f64 / full as f64),
+        ]);
+    }
+    table.print();
+
+    // n^1.5 scaling check: routing cost ratio for 4x n should be ~8x
+    let c1 = attention_flops(
+        AttentionKind::Routing { clusters: optimal_clusters(4096) }, 4096, d);
+    let c2 = attention_flops(
+        AttentionKind::Routing { clusters: optimal_clusters(16384) }, 16384, d);
+    println!("\nscaling: cost(4n)/cost(n) = {:.2} (n^1.5 predicts 8.0)\n", c2 as f64 / c1 as f64);
+
+    // measured host-side routing overhead (assignment + top-w) vs n
+    println!("measured routing overhead (k-means assign + balanced top-w), d = 64:");
+    let mut table = Table::new(&["n", "k", "mean ms", "ms/n (µs)"]);
+    for &n in &[256usize, 1024, 4096] {
+        let k = optimal_clusters(n);
+        let mut rng = Rng::new(7);
+        let xs: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let km = SphericalKMeans::new(k, d, 0.5, 1);
+        let stats = time_fn(1, 5, || {
+            let members = km.top_w_members(&xs, n, n / k);
+            std::hint::black_box(members);
+        });
+        table.row(&[
+            n.to_string(),
+            k.to_string(),
+            format!("{:.3}", stats.mean * 1e3),
+            format!("{:.2}", stats.mean * 1e6 / n as f64),
+        ]);
+    }
+    table.print();
+    println!("\nbench_complexity OK");
+}

@@ -1,0 +1,117 @@
+//! Micro-benchmarks of the L3 hot-path substrates (the §Perf L3 profile):
+//! data generation, batch packing, k-means routing, sampler math, JSON
+//! manifest parsing, JSD.  These are the host-side costs that must stay
+//! negligible next to the PJRT execute call.
+
+use routing_transformer::analysis::jsd;
+use routing_transformer::data;
+use routing_transformer::kmeans::SphericalKMeans;
+use routing_transformer::sampler::{nucleus_probs, SamplerConfig};
+use routing_transformer::util::json::Json;
+use routing_transformer::util::rng::Rng;
+use routing_transformer::util::timing::{time_fn, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("L3 hot-path micro-benchmarks\n");
+    let mut table = Table::new(&["bench", "mean", "per-unit"]);
+
+    // needle data generation: tokens/sec
+    {
+        let mut src = data::source_by_name("needle", 512, 256, 32, 1)?;
+        let mut buf = vec![0i32; 8 * 256];
+        let stats = time_fn(2, 20, || src.fill(&mut buf));
+        table.row(&[
+            "needle gen (2048 tok)".into(),
+            format!("{:.1} µs", stats.mean * 1e6),
+            format!("{:.1} Mtok/s", buf.len() as f64 / stats.mean / 1e6),
+        ]);
+    }
+
+    // image generation
+    {
+        let mut src = data::source_by_name("images", 256, 256, 32, 1)?;
+        let mut buf = vec![0i32; 4 * 256];
+        let stats = time_fn(2, 20, || src.fill(&mut buf));
+        table.row(&[
+            "image gen (1024 tok)".into(),
+            format!("{:.1} µs", stats.mean * 1e6),
+            format!("{:.1} Mtok/s", buf.len() as f64 / stats.mean / 1e6),
+        ]);
+    }
+
+    // k-means assignment (routing decision cost per token)
+    {
+        let d = 64;
+        let k = 32;
+        let km = SphericalKMeans::new(k, d, 0.5, 1);
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..1024 * d).map(|_| rng.normal() as f32).collect();
+        let stats = time_fn(2, 20, || {
+            let mut acc = 0usize;
+            for i in 0..1024 {
+                acc += km.assign(&xs[i * d..(i + 1) * d]);
+            }
+            std::hint::black_box(acc);
+        });
+        table.row(&[
+            "kmeans assign (1024 x k=32)".into(),
+            format!("{:.1} µs", stats.mean * 1e6),
+            format!("{:.0} ns/tok", stats.mean * 1e9 / 1024.0),
+        ]);
+    }
+
+    // nucleus sampling over a 1024-way vocab
+    {
+        let mut rng = Rng::new(3);
+        let logits: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        let cfg = SamplerConfig::default();
+        let stats = time_fn(2, 50, || {
+            std::hint::black_box(nucleus_probs(&logits, cfg));
+        });
+        table.row(&[
+            "nucleus probs (V=1024)".into(),
+            format!("{:.1} µs", stats.mean * 1e6),
+            String::new(),
+        ]);
+    }
+
+    // JSON manifest parse
+    {
+        let text = std::fs::read_to_string("artifacts/quickstart/manifest.json")
+            .unwrap_or_else(|_| r#"{"variant":"x","params":[]}"#.to_string());
+        let stats = time_fn(2, 50, || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        });
+        table.row(&[
+            format!("manifest parse ({} B)", text.len()),
+            format!("{:.1} µs", stats.mean * 1e6),
+            String::new(),
+        ]);
+    }
+
+    // JSD over T=256 rows
+    {
+        let t = 256;
+        let mut rng = Rng::new(4);
+        let mk = |rng: &mut Rng| -> Vec<f64> {
+            let mut v: Vec<f64> = (0..t).map(|_| rng.f64()).collect();
+            let s: f64 = v.iter().sum();
+            v.iter_mut().for_each(|x| *x /= s);
+            v
+        };
+        let p = mk(&mut rng);
+        let q = mk(&mut rng);
+        let stats = time_fn(2, 100, || {
+            std::hint::black_box(jsd(&p, &q));
+        });
+        table.row(&[
+            "jsd (T=256)".into(),
+            format!("{:.2} µs", stats.mean * 1e6),
+            String::new(),
+        ]);
+    }
+
+    table.print();
+    println!("\nmicrobench OK");
+    Ok(())
+}

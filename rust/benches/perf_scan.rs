@@ -1,0 +1,121 @@
+//! §Perf probe — the L3 hot-path optimization experiment.
+//!
+//! The published `xla` crate returns multi-result executions as ONE
+//! tuple-shaped buffer, so train state must round-trip through host
+//! literals every execute.  The optimization (DESIGN.md §Perf) is the
+//! scanned train-block artifact: S optimizer steps fused into one
+//! executable, amortizing the host round-trip + dispatch 1/S.
+//!
+//! This bench measures the before (single-step artifact driven S times)
+//! vs after (scanned block) on the quickstart variant, plus the host-side
+//! cost breakdown (literal building vs execute).
+
+use std::time::Instant;
+
+use routing_transformer::bench::artifacts_root;
+use routing_transformer::coordinator::train_batcher;
+use routing_transformer::runtime::{
+    execute_tuple, i32_literal, scalar_f32, scalar_i32, Artifacts, Runtime,
+};
+use routing_transformer::util::timing::Table;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+    let art = Artifacts::load(&root, "quickstart")?;
+    let manifest = art.manifest.clone();
+    let s = manifest.scan_steps;
+    let reps = std::env::var("RTX_PERF_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(6);
+
+    println!("§Perf — scan-block amortization (variant quickstart, S = {s})\n");
+
+    let mut batcher = train_batcher(&manifest, "needle", 0)?;
+    let block = batcher.next_block();
+    let state = art.init_state()?;
+    let p = state.params.len();
+
+    // ---------------- single-step path (the "before") ----------------
+    let exe1 = art.executable(&rt, "train_step")?;
+    let tokens0 = i32_literal(
+        &block.tokens[..manifest.batch * manifest.config.seq_len],
+        &[manifest.batch, manifest.config.seq_len],
+    )?;
+    let step_lit = scalar_i32(0);
+    let lr_lit = scalar_f32(1e-3);
+
+    let run_single = |state_params: &Vec<xla::Literal>,
+                      m: &Vec<xla::Literal>,
+                      v: &Vec<xla::Literal>|
+     -> anyhow::Result<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * p + 3);
+        inputs.extend(state_params.iter());
+        inputs.extend(m.iter());
+        inputs.extend(v.iter());
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+        inputs.push(&tokens0);
+        let mut outs = execute_tuple(&exe1, &inputs)?;
+        outs.pop();
+        let v2 = outs.split_off(2 * p);
+        let m2 = outs.split_off(p);
+        Ok((outs, m2, v2))
+    };
+
+    // warmup + measure S sequential single steps, `reps` times
+    let (mut sp, mut sm, mut sv) = (state.params, state.m, state.v);
+    (sp, sm, sv) = run_single(&sp, &sm, &sv)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for _ in 0..s {
+            (sp, sm, sv) = run_single(&sp, &sm, &sv)?;
+        }
+    }
+    let single_per_step = t0.elapsed().as_secs_f64() / (reps * s) as f64;
+
+    // ---------------- scanned block path (the "after") ----------------
+    let exe_s = art.executable(&rt, "train_block")?;
+    let state = art.init_state()?;
+    let tok_blk = i32_literal(&block.tokens, &block.dims())?;
+    let run_block = |sp: &Vec<xla::Literal>, sm: &Vec<xla::Literal>, sv: &Vec<xla::Literal>|
+     -> anyhow::Result<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * p + 3);
+        inputs.extend(sp.iter());
+        inputs.extend(sm.iter());
+        inputs.extend(sv.iter());
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+        inputs.push(&tok_blk);
+        let mut outs = execute_tuple(&exe_s, &inputs)?;
+        outs.pop();
+        let v2 = outs.split_off(2 * p);
+        let m2 = outs.split_off(p);
+        Ok((outs, m2, v2))
+    };
+    let (mut bp, mut bm, mut bv) = (state.params, state.m, state.v);
+    (bp, bm, bv) = run_block(&bp, &bm, &bv)?;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        (bp, bm, bv) = run_block(&bp, &bm, &bv)?;
+    }
+    let block_per_step = t0.elapsed().as_secs_f64() / (reps * s) as f64;
+
+    // ---------------- host-side overhead breakdown -------------------
+    // literal construction cost for one block's tokens
+    let t0 = Instant::now();
+    for _ in 0..100 {
+        std::hint::black_box(i32_literal(&block.tokens, &block.dims())?);
+    }
+    let lit_build = t0.elapsed().as_secs_f64() / 100.0;
+
+    let mut table = Table::new(&["path", "ms/step", "speedup"]);
+    table.row(&["single-step artifact (before)".into(),
+                format!("{:.2}", single_per_step * 1e3), "1.00x".into()]);
+    table.row(&[format!("scanned block S={s} (after)"),
+                format!("{:.2}", block_per_step * 1e3),
+                format!("{:.2}x", single_per_step / block_per_step)]);
+    table.print();
+    println!("\ntoken literal build: {:.3} ms/block ({:.1}% of block step)",
+             lit_build * 1e3, 100.0 * lit_build / (block_per_step * s as f64));
+    println!("perf_scan OK");
+    Ok(())
+}

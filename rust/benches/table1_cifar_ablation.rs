@@ -1,0 +1,91 @@
+//! Table 1 — CIFAR-10 ablation grid, reproduced at reduction scale.
+//!
+//! Paper: 12-layer/8-head models on 32x32x3 rasters (T=3072), sweeping
+//! routing heads {2,4,8} x routing layers {2,4,8,12} x window {512,1024},
+//! plus Transformer (full), Local and Random controls; reports bits/dim
+//! and steps/sec on TPUv3.
+//!
+//! Here: 2-layer/4-head models on 16x16 synthetic rasters (T=256),
+//! sweeping routing heads {2,4} x routing layers {1,2} x window {32,64}
+//! plus the same three controls, on CPU PJRT.  Shape claims that should
+//! hold: (a) local is the fastest, full the slowest per step;
+//! (b) adding a few routing heads/layers improves bits/dim over local;
+//! (c) random routing is worse than learned routing.
+
+use routing_transformer::bench::{
+    artifacts_root, bench_eval_batches, bench_steps, header, train_and_eval,
+};
+use routing_transformer::runtime::Runtime;
+use routing_transformer::util::timing::Table;
+
+/// (variant, paper row it mirrors, paper bits/dim, paper steps/sec)
+const ROWS: &[(&str, &str, f64, f64)] = &[
+    ("image_full", "Transformer (full, w=3072)", 2.983, 5.608),
+    ("image_local_w32", "Local Transformer (w=512)", 3.009, 9.023),
+    ("image_local_w64", "Local Transformer (w=1024)", 3.009, 9.023),
+    ("image_random_w32", "Random Transformer (4h/8l, w=512)", 3.076, 5.448),
+    ("image_r2l1w32", "Routing 2h 2l w=512", 3.005, 7.968),
+    ("image_r4l1w32", "Routing 4h 2l w=512", 2.986, 7.409),
+    ("image_r2l2w32", "Routing 2h 4l w=512", 2.995, 7.379),
+    ("image_r4l2w32", "Routing 4h 4l w=512", 2.975, 6.492),
+    ("image_r2l1w64", "Routing 2h 2l w=1024", 2.975, 7.344),
+    ("image_r4l1w64", "Routing 4h 2l w=1024", 2.950, 6.440),
+    ("image_r2l2w64", "Routing 2h 4l w=1024", 2.990, 6.389),
+    ("image_r4l2w64", "Routing 4h 4l w=1024", 2.958, 5.112),
+];
+
+fn main() -> anyhow::Result<()> {
+    header(
+        "Table 1 — CIFAR-10 ablations (synthetic 16x16 rasters, scaled grid)",
+        "paper numbers: TPUv3 bits/dim + steps/sec at full scale; \
+         measured: CPU PJRT at reproduction scale",
+    );
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+    let steps = bench_steps();
+
+    let mut table = Table::new(&[
+        "variant", "mirrors paper row", "paper b/d", "meas b/d", "paper st/s", "meas st/s",
+    ]);
+    let mut results = Vec::new();
+    for (variant, paper_row, paper_bits, paper_sps) in ROWS {
+        let r = train_and_eval(&rt, &root, variant, "images", steps, bench_eval_batches())?;
+        table.row(&[
+            variant.to_string(),
+            paper_row.to_string(),
+            format!("{paper_bits:.3}"),
+            format!("{:.3}", r.bits_per_dim()),
+            format!("{paper_sps:.3}"),
+            format!("{:.3}", r.steps_per_sec),
+        ]);
+        println!("  done {variant}: {:.3} bits/dim, {:.2} steps/s", r.bits_per_dim(), r.steps_per_sec);
+        results.push((variant.to_string(), r));
+    }
+    println!();
+    table.print();
+
+    // shape checks
+    let get = |name: &str| results.iter().find(|(v, _)| v == name).map(|(_, r)| r).unwrap();
+    let local = get("image_local_w32");
+    let full = get("image_full");
+    let random = get("image_random_w32");
+    let best_routing = results
+        .iter()
+        .filter(|(v, _)| v.starts_with("image_r") && !v.contains("random"))
+        .map(|(_, r)| r.bits_per_dim())
+        .fold(f64::INFINITY, f64::min);
+    println!("\nshape checks:");
+    println!(
+        "  local faster than full:         {} ({:.2} vs {:.2} steps/s)",
+        local.steps_per_sec > full.steps_per_sec, local.steps_per_sec, full.steps_per_sec
+    );
+    println!(
+        "  best routing <= local bits/dim: {} ({:.3} vs {:.3})",
+        best_routing <= local.bits_per_dim() + 0.02, best_routing, local.bits_per_dim()
+    );
+    println!(
+        "  random worse than best routing: {} ({:.3} vs {:.3})",
+        random.bits_per_dim() > best_routing, random.bits_per_dim(), best_routing
+    );
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Attention-distribution analysis: the Table 6 Jensen–Shannon divergence
+//! study.
+//!
+//! The paper measures JSD between the attention distributions of random
+//! pairs of heads per layer — local‖local, local‖routing and
+//! routing‖routing — over the full sequence, reporting mean ± std over 10
+//! runs (natural log, so JSD <= ln 2 ≈ 0.6931).  The `attn_probs` AOT
+//! artifact returns dense per-head distributions `[L, H, T, T]`; this
+//! module owns the divergence math and the sampling of head pairs.
+
+use crate::util::rng::Rng;
+
+/// ln 2 — the JSD upper bound under the natural log.
+pub const JSD_MAX: f64 = std::f64::consts::LN_2;
+
+/// KL(p ‖ m) with the convention 0·ln(0/x) = 0.
+fn kl(p: &[f64], m: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (&pi, &mi) in p.iter().zip(m) {
+        if pi > 0.0 && mi > 0.0 {
+            s += pi * (pi / mi).ln();
+        }
+    }
+    s
+}
+
+/// Jensen–Shannon divergence (natural log) between two distributions.
+pub fn jsd(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let m: Vec<f64> = p.iter().zip(q).map(|(&a, &b)| 0.5 * (a + b)).collect();
+    0.5 * kl(p, &m) + 0.5 * kl(q, &m)
+}
+
+/// Mean JSD between two heads' attention matrices ([T, T] row-major,
+/// rows = queries).  Rows where either head has no mass (routing heads
+/// leave unselected queries with empty distributions) are skipped, as are
+/// the first rows where distributions are trivially degenerate.
+pub fn mean_head_jsd(a: &[f32], b: &[f32], t: usize) -> f64 {
+    debug_assert_eq!(a.len(), t * t);
+    debug_assert_eq!(b.len(), t * t);
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for q in 1..t {
+        let ra: Vec<f64> = a[q * t..(q + 1) * t].iter().map(|&x| x as f64).collect();
+        let rb: Vec<f64> = b[q * t..(q + 1) * t].iter().map(|&x| x as f64).collect();
+        let sa: f64 = ra.iter().sum();
+        let sb: f64 = rb.iter().sum();
+        if sa < 0.5 || sb < 0.5 {
+            continue; // unattended query under a routing head
+        }
+        total += jsd(&ra, &rb);
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        total / n as f64
+    }
+}
+
+/// Mean ± std helper.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// One JSD measurement row: a random pair of heads of the given kinds.
+///
+/// `probs` is the `[L, H, T, T]` tensor from the `attn_probs` artifact
+/// (flattened row-major); `heads_a` / `heads_b` are the head indices of
+/// the two kinds within layer `layer`.
+pub fn sample_pair_jsd(
+    probs: &[f32],
+    n_heads: usize,
+    t: usize,
+    layer: usize,
+    heads_a: &[usize],
+    heads_b: &[usize],
+    rng: &mut Rng,
+) -> Option<f64> {
+    if heads_a.is_empty() || heads_b.is_empty() {
+        return None;
+    }
+    let (ha, hb) = {
+        let a = heads_a[rng.below(heads_a.len())];
+        // resample b != a when drawing from the same kind
+        let mut b = heads_b[rng.below(heads_b.len())];
+        if std::ptr::eq(heads_a.as_ptr(), heads_b.as_ptr()) && heads_b.len() > 1 {
+            while b == a {
+                b = heads_b[rng.below(heads_b.len())];
+            }
+        }
+        (a, b)
+    };
+    if ha == hb {
+        return None;
+    }
+    let head_sz = t * t;
+    let layer_sz = n_heads * head_sz;
+    let off_a = layer * layer_sz + ha * head_sz;
+    let off_b = layer * layer_sz + hb * head_sz;
+    Some(mean_head_jsd(&probs[off_a..off_a + head_sz], &probs[off_b..off_b + head_sz], t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsd_identical_is_zero() {
+        let p = vec![0.25; 4];
+        assert!(jsd(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jsd_disjoint_is_ln2() {
+        let p = vec![1.0, 0.0];
+        let q = vec![0.0, 1.0];
+        assert!((jsd(&p, &q) - JSD_MAX).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jsd_symmetric_and_bounded() {
+        let p = vec![0.7, 0.2, 0.1];
+        let q = vec![0.1, 0.3, 0.6];
+        let d1 = jsd(&p, &q);
+        let d2 = jsd(&q, &p);
+        assert!((d1 - d2).abs() < 1e-12);
+        assert!(d1 > 0.0 && d1 < JSD_MAX);
+    }
+
+    #[test]
+    fn head_jsd_skips_empty_rows() {
+        let t = 4;
+        // head a: uniform causal rows; head b: empty rows except row 1
+        let mut a = vec![0f32; t * t];
+        let mut b = vec![0f32; t * t];
+        for q in 0..t {
+            for k in 0..=q {
+                a[q * t + k] = 1.0 / (q + 1) as f32;
+            }
+        }
+        b[1 * t + 0] = 1.0;
+        let d = mean_head_jsd(&a, &b, t);
+        assert!(d >= 0.0 && d <= JSD_MAX);
+    }
+
+    #[test]
+    fn identical_heads_zero_divergence() {
+        let t = 8;
+        let mut a = vec![0f32; t * t];
+        for q in 0..t {
+            for k in 0..=q {
+                a[q * t + k] = 1.0 / (q + 1) as f32;
+            }
+        }
+        assert!(mean_head_jsd(&a, &a, t) < 1e-9);
+    }
+
+    #[test]
+    fn mean_std_math() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Attention sparsity-pattern library (host-side).
+//!
+//! Pure-Rust models of the sparsity patterns the paper discusses: causal
+//! full attention, (blocked) local attention, strided attention (Child et
+//! al. 2019) and cluster-routed attention (Algorithm 1).  These power the
+//! Figure-1 renderer, the complexity model of Section 4.1
+//! (`O(nkd + n²d/k)`), and the property-test suite that pins the semantics
+//! shared with the L2 graph.
+
+pub mod complexity;
+pub mod patterns;
+
+pub use complexity::{attention_flops, optimal_clusters, AttentionKind};
+pub use patterns::{Pattern, PatternKind};

@@ -1,0 +1,232 @@
+//! Sparsity patterns + the Figure 1 renderer.
+//!
+//! A [`Pattern`] answers "which key positions may query `i` attend to?"
+//! for every attention kind in the paper, and renders the 2-D attention
+//! scheme figures (rows = outputs, columns = inputs) as ASCII or CSV.
+
+use crate::kmeans::SphericalKMeans;
+
+/// Which sparse-attention scheme a pattern models.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PatternKind {
+    /// Causal full attention: S_i = { j | j <= i }.
+    Full,
+    /// Sliding-window local attention: S_i = { j | i-w < j <= i }.
+    Local { window: usize },
+    /// Blocked local attention (the L1 kernel's semantics): query block b
+    /// attends to blocks b-1 and b, causally.
+    BlockLocal { window: usize },
+    /// Strided attention (Child et al.): S_i = { j <= i | (i-j) % s == 0 }.
+    Strided { stride: usize },
+    /// Cluster routing (Algorithm 1): token i attends to j <= i iff some
+    /// cluster selected both i and j.
+    Routing { clusters: Vec<Vec<usize>> },
+}
+
+/// A sparsity pattern over a sequence of length `n`.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    pub n: usize,
+    pub kind: PatternKind,
+}
+
+impl Pattern {
+    pub fn full(n: usize) -> Pattern {
+        Pattern { n, kind: PatternKind::Full }
+    }
+
+    pub fn local(n: usize, window: usize) -> Pattern {
+        Pattern { n, kind: PatternKind::Local { window } }
+    }
+
+    pub fn block_local(n: usize, window: usize) -> Pattern {
+        Pattern { n, kind: PatternKind::BlockLocal { window } }
+    }
+
+    pub fn strided(n: usize, stride: usize) -> Pattern {
+        Pattern { n, kind: PatternKind::Strided { stride } }
+    }
+
+    /// Routing pattern from balanced top-w cluster membership over the
+    /// given routing vectors (row-major [n, dim]).
+    pub fn routing_from_vectors(
+        n: usize,
+        xs: &[f32],
+        km: &SphericalKMeans,
+        w: usize,
+    ) -> Pattern {
+        Pattern { n, kind: PatternKind::Routing { clusters: km.top_w_members(xs, n, w) } }
+    }
+
+    /// Routing pattern from explicit cluster membership lists.
+    pub fn routing(n: usize, clusters: Vec<Vec<usize>>) -> Pattern {
+        Pattern { n, kind: PatternKind::Routing { clusters } }
+    }
+
+    /// May query `i` attend to key `j`?  Always causal (j <= i).
+    pub fn allowed(&self, i: usize, j: usize) -> bool {
+        if j > i || i >= self.n || j >= self.n {
+            return false;
+        }
+        match &self.kind {
+            PatternKind::Full => true,
+            PatternKind::Local { window } => i - j < *window,
+            PatternKind::BlockLocal { window } => i / window - j / window <= 1,
+            PatternKind::Strided { stride } => (i - j) % stride == 0,
+            PatternKind::Routing { clusters } => clusters
+                .iter()
+                .any(|members| members.contains(&i) && members.contains(&j)),
+        }
+    }
+
+    /// The set S_i of key positions query `i` attends to.
+    pub fn attend_set(&self, i: usize) -> Vec<usize> {
+        (0..=i.min(self.n - 1)).filter(|&j| self.allowed(i, j)).collect()
+    }
+
+    /// Total non-zero entries of the attention matrix.
+    pub fn nnz(&self) -> usize {
+        (0..self.n).map(|i| self.attend_set(i).len()).sum()
+    }
+
+    /// ASCII rendering of the attention scheme, Figure-1 style: rows are
+    /// outputs, columns inputs; routing membership is drawn with one
+    /// letter per cluster.
+    pub fn render_ascii(&self) -> String {
+        let mut out = String::with_capacity(self.n * (self.n + 1));
+        for i in 0..self.n {
+            for j in 0..self.n {
+                let ch = if !self.allowed(i, j) {
+                    if j <= i {
+                        '·'
+                    } else {
+                        ' '
+                    }
+                } else {
+                    match &self.kind {
+                        PatternKind::Routing { clusters } => {
+                            let c = clusters
+                                .iter()
+                                .position(|m| m.contains(&i) && m.contains(&j))
+                                .unwrap_or(0);
+                            (b'A' + (c % 26) as u8) as char
+                        }
+                        _ => '#',
+                    }
+                };
+                out.push(ch);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering: `query,key,cluster` rows for every non-zero entry.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from("query,key,cluster\n");
+        for i in 0..self.n {
+            for j in self.attend_set(i) {
+                let c = match &self.kind {
+                    PatternKind::Routing { clusters } => clusters
+                        .iter()
+                        .position(|m| m.contains(&i) && m.contains(&j))
+                        .map(|c| c.to_string())
+                        .unwrap_or_default(),
+                    _ => String::new(),
+                };
+                out.push_str(&format!("{i},{j},{c}\n"));
+            }
+        }
+        out
+    }
+
+    /// Sparsity fraction (nnz / full causal nnz).
+    pub fn density(&self) -> f64 {
+        let full = self.n * (self.n + 1) / 2;
+        self.nnz() as f64 / full as f64
+    }
+
+    /// Self-check: a valid causal pattern in which every token can attend
+    /// at least to itself or is unattended (routing may drop tokens).
+    pub fn is_causal(&self) -> bool {
+        (0..self.n).all(|i| ((i + 1)..self.n).all(|j| !self.allowed(i, j)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_attends_everything_causal() {
+        let p = Pattern::full(8);
+        assert_eq!(p.attend_set(5), vec![0, 1, 2, 3, 4, 5]);
+        assert!(p.is_causal());
+        assert_eq!(p.nnz(), 36);
+    }
+
+    #[test]
+    fn local_window_bound() {
+        let p = Pattern::local(16, 4);
+        assert_eq!(p.attend_set(10), vec![7, 8, 9, 10]);
+        assert_eq!(p.attend_set(1), vec![0, 1]);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn block_local_two_blocks() {
+        let p = Pattern::block_local(16, 4);
+        // query 9 (block 2) sees blocks 1 and 2, causally
+        assert_eq!(p.attend_set(9), vec![4, 5, 6, 7, 8, 9]);
+        // block 0 sees only itself
+        assert_eq!(p.attend_set(2), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn strided_pattern() {
+        let p = Pattern::strided(16, 4);
+        assert_eq!(p.attend_set(9), vec![1, 5, 9]);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn routing_same_cluster_only() {
+        let p = Pattern::routing(8, vec![vec![0, 2, 5], vec![1, 3, 4, 6, 7]]);
+        assert!(p.allowed(5, 2));
+        assert!(p.allowed(5, 0));
+        assert!(!p.allowed(5, 3)); // different cluster
+        assert!(!p.allowed(2, 5)); // causality
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn density_ordering_matches_paper() {
+        // local(w) and routing(k=sqrt n) are sparse; full is dense
+        let n = 64;
+        let full = Pattern::full(n);
+        let local = Pattern::local(n, 8);
+        let clusters: Vec<Vec<usize>> = (0..8).map(|c| (0..8).map(|i| c * 8 + i).collect()).collect();
+        let routing = Pattern::routing(n, clusters);
+        assert!(local.density() < full.density());
+        assert!(routing.density() < full.density());
+        assert!((full.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_render_shapes() {
+        let p = Pattern::block_local(8, 2);
+        let art = p.render_ascii();
+        assert_eq!(art.lines().count(), 8);
+        assert!(art.lines().all(|l| l.chars().count() == 8));
+        // first char of first row is '#': token 0 attends to itself
+        assert_eq!(art.lines().next().unwrap().chars().next().unwrap(), '#');
+    }
+
+    #[test]
+    fn csv_render_contains_entries() {
+        let p = Pattern::routing(4, vec![vec![0, 1, 2, 3]]);
+        let csv = p.render_csv();
+        assert!(csv.contains("3,0,0"));
+        assert_eq!(csv.lines().count(), 1 + p.nnz());
+    }
+}

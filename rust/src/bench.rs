@@ -1,0 +1,123 @@
+//! Shared harness for the per-table benchmark binaries (`rust/benches/`).
+//!
+//! Each paper table gets one binary that (1) briefly trains the relevant
+//! variants on the matching synthetic workload, (2) evaluates them, and
+//! (3) prints the paper's rows next to the measured ones.  Absolute
+//! numbers differ by construction (synthetic data, tiny models, CPU
+//! PJRT); the *shape* — who wins, roughly by how much — is asserted in
+//! the integration tests and discussed in EXPERIMENTS.md.
+//!
+//! Environment knobs so `cargo bench` stays bounded:
+//!   RTX_BENCH_STEPS   train steps per variant   (default 48)
+//!   RTX_BENCH_EVAL    eval batches per variant  (default 4)
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions, Trainer,
+};
+use crate::runtime::{Artifacts, Runtime};
+
+/// Per-variant measurement.
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    pub variant: String,
+    pub steps: usize,
+    pub final_train_loss: f64,
+    pub eval_nll: f64,
+    pub steps_per_sec: f64,
+}
+
+impl VariantResult {
+    pub fn bits_per_dim(&self) -> f64 {
+        crate::coordinator::bits_per_dim(self.eval_nll)
+    }
+
+    pub fn ppl(&self) -> f64 {
+        crate::coordinator::ppl(self.eval_nll)
+    }
+}
+
+pub fn bench_steps() -> usize {
+    std::env::var("RTX_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(48)
+}
+
+pub fn bench_eval_batches() -> usize {
+    std::env::var("RTX_BENCH_EVAL").ok().and_then(|s| s.parse().ok()).unwrap_or(4)
+}
+
+/// Train `variant` for `steps` on `data`, then eval.  One seeded run.
+pub fn train_and_eval(
+    rt: &Runtime,
+    root: &std::path::Path,
+    variant: &str,
+    data: &str,
+    steps: usize,
+    eval_batches: usize,
+) -> Result<VariantResult> {
+    let art = Artifacts::load(root, variant)?;
+    let manifest = art.manifest.clone();
+    let mut trainer = Trainer::new(rt, &art)?;
+    let mut batcher = train_batcher(&manifest, data, 0)?;
+    let opts = TrainOptions {
+        steps,
+        schedule: LrSchedule::InverseSqrt { scale: 0.05, warmup: steps.max(4) as u32 / 4 },
+        log_every: 0,
+        ckpt_every: 0,
+        ckpt_path: None,
+        log_csv: None,
+    };
+    let report = trainer.train(&mut batcher, &manifest, &opts)?;
+
+    let evaluator = Evaluator::new(rt, &art)?;
+    let mut eval = eval_batcher(&manifest, data, 1)?;
+    let eval_report = evaluator.eval(&trainer.state, &mut eval, eval_batches)?;
+    Ok(VariantResult {
+        variant: variant.to_string(),
+        steps: report.steps,
+        final_train_loss: report.mean_last10_loss,
+        eval_nll: eval_report.mean_nll,
+        steps_per_sec: report.steps_per_sec,
+    })
+}
+
+/// Measure raw train-block step time (no eval) — Table 7.
+pub fn measure_steps_per_sec(
+    rt: &Runtime,
+    root: &std::path::Path,
+    variant: &str,
+    data: &str,
+    blocks: usize,
+) -> Result<f64> {
+    let art = Artifacts::load(root, variant)?;
+    let manifest = art.manifest.clone();
+    let mut trainer = Trainer::new(rt, &art)?;
+    let mut batcher = train_batcher(&manifest, data, 0)?;
+    // warmup (compile + first run)
+    let block = batcher.next_block();
+    trainer.step_block(&block, 1e-4)?;
+    let t0 = std::time::Instant::now();
+    let mut steps = 0usize;
+    for _ in 0..blocks {
+        let block = batcher.next_block();
+        let losses = trainer.step_block(&block, 1e-4)?;
+        steps += losses.len();
+    }
+    Ok(steps as f64 / t0.elapsed().as_secs_f64())
+}
+
+/// Default artifacts root for benches (repo root relative).
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("RTX_ARTIFACTS").map(std::path::PathBuf::from).unwrap_or_else(|_| {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    })
+}
+
+/// Print the standard bench header.
+pub fn header(table: &str, note: &str) {
+    println!("================================================================");
+    println!("{table}");
+    println!("{note}");
+    println!("steps/variant: {}, eval batches: {}", bench_steps(), bench_eval_batches());
+    println!("================================================================");
+}

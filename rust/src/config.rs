@@ -1,0 +1,309 @@
+//! Run-configuration system: a TOML-subset parser plus typed run configs.
+//!
+//! The offline environment ships no `toml` crate, so this implements the
+//! subset the run configs need: `[section]` headers, `key = value` with
+//! string / integer / float / boolean values, comments (`#`), and blank
+//! lines.  `rtx train --config configs/<name>.toml` maps a file onto
+//! [`RunConfig`]; CLI flags still override individual fields.
+//!
+//! ```toml
+//! # configs/byte_routing.toml
+//! [run]
+//! variant = "byte_routing"
+//! data = "bytes"
+//! steps = 300
+//! seed = 0
+//!
+//! [schedule]
+//! kind = "inv_sqrt"      # constant | inv_sqrt | rsqrt
+//! lr = 0.05              # scale for inv_sqrt
+//! warmup = 50
+//!
+//! [output]
+//! checkpoint = "runs/byte_routing/ck"
+//! loss_csv = "runs/byte_routing/loss.csv"
+//! log_every = 20
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{LrSchedule, TrainOptions};
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map of one parsed document.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse the TOML subset (sections, scalar `key = value`, comments).
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full_key, parse_value(value.trim(), lineno + 1)?);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<String> {
+        self.get(key).and_then(|v| v.as_str()).map(str::to_string)
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(TomlValue::as_i64).map(|v| v as usize)
+    }
+
+    pub fn f32(&self, key: &str) -> Option<f32> {
+        self.get(key).and_then(TomlValue::as_f64).map(|v| v as f32)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside a quoted string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("line {lineno}: unterminated string"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{s}'")
+}
+
+/// A full training-run configuration (what `rtx train --config` loads).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub variant: String,
+    pub data: Option<String>,
+    pub steps: usize,
+    pub seed: u64,
+    pub schedule: LrSchedule,
+    pub checkpoint: Option<PathBuf>,
+    pub loss_csv: Option<PathBuf>,
+    pub log_every: usize,
+    pub ckpt_every: usize,
+}
+
+impl RunConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        let variant = doc
+            .str("run.variant")
+            .ok_or_else(|| anyhow!("config missing run.variant"))?;
+        let kind = doc.str("schedule.kind").unwrap_or_else(|| "inv_sqrt".into());
+        let lr = doc.f32("schedule.lr").unwrap_or(0.05);
+        let warmup = doc.usize("schedule.warmup").unwrap_or(100) as u32;
+        let schedule = match kind.as_str() {
+            "constant" => LrSchedule::Constant { lr },
+            "inv_sqrt" => LrSchedule::InverseSqrt { scale: lr, warmup },
+            "rsqrt" => LrSchedule::RsqrtDecay { lr, warmup },
+            other => bail!("unknown schedule.kind '{other}'"),
+        };
+        Ok(RunConfig {
+            variant,
+            data: doc.str("run.data"),
+            steps: doc.usize("run.steps").unwrap_or(100),
+            seed: doc.usize("run.seed").unwrap_or(0) as u64,
+            schedule,
+            checkpoint: doc.str("output.checkpoint").map(PathBuf::from),
+            loss_csv: doc.str("output.loss_csv").map(PathBuf::from),
+            log_every: doc.usize("output.log_every").unwrap_or(20),
+            ckpt_every: doc.usize("output.ckpt_every").unwrap_or(0),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        Self::from_doc(&TomlDoc::load(path)?)
+    }
+
+    pub fn train_options(&self) -> TrainOptions {
+        TrainOptions {
+            steps: self.steps,
+            schedule: self.schedule,
+            log_every: self.log_every,
+            ckpt_every: self.ckpt_every,
+            ckpt_path: self.checkpoint.clone(),
+            log_csv: self.loss_csv.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a run config
+[run]
+variant = "byte_routing"
+data = "bytes"
+steps = 300
+seed = 7
+
+[schedule]
+kind = "inv_sqrt"
+lr = 0.05
+warmup = 50
+
+[output]
+checkpoint = "runs/x/ck"   # with a comment
+log_every = 10
+"#;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str("run.variant").unwrap(), "byte_routing");
+        assert_eq!(doc.usize("run.steps").unwrap(), 300);
+        assert_eq!(doc.f32("schedule.lr").unwrap(), 0.05);
+        assert_eq!(doc.str("output.checkpoint").unwrap(), "runs/x/ck");
+    }
+
+    #[test]
+    fn run_config_maps_to_train_options() {
+        let cfg = RunConfig::from_doc(&TomlDoc::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.variant, "byte_routing");
+        assert_eq!(cfg.seed, 7);
+        let opts = cfg.train_options();
+        assert_eq!(opts.steps, 300);
+        assert_eq!(opts.log_every, 10);
+        assert_eq!(
+            opts.schedule,
+            LrSchedule::InverseSqrt { scale: 0.05, warmup: 50 }
+        );
+        assert_eq!(opts.ckpt_path.unwrap(), PathBuf::from("runs/x/ck"));
+    }
+
+    #[test]
+    fn value_types() {
+        let doc = TomlDoc::parse("a = 1\nb = 1.5\nc = true\nd = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Float(1.5)));
+        assert_eq!(doc.get("c"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.str("d").unwrap(), "x # y");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = @@@").is_err());
+        assert!(RunConfig::from_doc(&TomlDoc::parse("[run]\nsteps = 1").unwrap()).is_err());
+    }
+
+    #[test]
+    fn schedule_kinds() {
+        for (kind, expect) in [
+            ("constant", LrSchedule::Constant { lr: 0.1 }),
+            ("rsqrt", LrSchedule::RsqrtDecay { lr: 0.1, warmup: 5 }),
+        ] {
+            let text = format!(
+                "[run]\nvariant = \"q\"\n[schedule]\nkind = \"{kind}\"\nlr = 0.1\nwarmup = 5\n"
+            );
+            let cfg = RunConfig::from_doc(&TomlDoc::parse(&text).unwrap()).unwrap();
+            assert_eq!(cfg.schedule, expect);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Evaluation loop: held-out NLL via the `eval_loss` artifact, with
+//! per-position losses for the needle-retrieval metric.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::data::BlockBatcher;
+use crate::runtime::{execute_tuple, i32_literal, to_f32_vec, Artifacts, ModelState, Runtime};
+
+/// Evaluation results.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    /// Mean next-token NLL (nats) over all evaluated positions.
+    pub mean_nll: f64,
+    /// Number of [B, T] batches evaluated.
+    pub batches: usize,
+    /// Per-position NLLs of the last batch (for diagnostics), row-major
+    /// [B, T-1].
+    pub last_batch_nll: Vec<f32>,
+}
+
+impl EvalReport {
+    pub fn ppl(&self) -> f64 {
+        super::metrics::ppl(self.mean_nll)
+    }
+
+    pub fn bits_per_dim(&self) -> f64 {
+        super::metrics::bits_per_dim(self.mean_nll)
+    }
+}
+
+/// Evaluator over one variant's `eval_loss` artifact.
+pub struct Evaluator {
+    exe: Arc<PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, art: &Artifacts) -> Result<Evaluator> {
+        Ok(Evaluator {
+            exe: art.executable(rt, "eval_loss")?,
+            batch: art.manifest.batch,
+            seq_len: art.manifest.config.seq_len,
+        })
+    }
+
+    /// Mean NLL + per-position NLLs over one [B, T] token batch.
+    pub fn eval_batch(&self, state: &ModelState, tokens: &[i32]) -> Result<(f64, Vec<f32>)> {
+        let lit = i32_literal(tokens, &[self.batch, self.seq_len])?;
+        let mut inputs: Vec<&Literal> = state.params.iter().collect();
+        inputs.push(&lit);
+        let outs = execute_tuple(&self.exe, &inputs)?;
+        let mean = crate::runtime::scalar_f32_value(&outs[0])? as f64;
+        let nll = to_f32_vec(&outs[1])?;
+        Ok((mean, nll))
+    }
+
+    /// Evaluate `n_batches` held-out batches from a batcher.
+    pub fn eval(
+        &self,
+        state: &ModelState,
+        batcher: &mut BlockBatcher,
+        n_batches: usize,
+    ) -> Result<EvalReport> {
+        let mut total = 0.0;
+        let mut last = Vec::new();
+        for _ in 0..n_batches {
+            let tokens = batcher.next_eval_batch();
+            let (mean, nll) = self.eval_batch(state, &tokens)?;
+            total += mean;
+            last = nll;
+        }
+        Ok(EvalReport {
+            mean_nll: total / n_batches.max(1) as f64,
+            batches: n_batches,
+            last_batch_nll: last,
+        })
+    }
+
+    /// Needle-retrieval metric: mean NLL restricted to copy-target
+    /// positions (second payload occurrences) vs all positions.  The gap
+    /// between the two is the long-range-retrieval signal that separates
+    /// routing from local attention on the needle corpus.
+    pub fn eval_retrieval(
+        &self,
+        state: &ModelState,
+        batcher: &mut BlockBatcher,
+        n_batches: usize,
+        payload_len: usize,
+    ) -> Result<(f64, f64)> {
+        use crate::data::needle::NeedleSource;
+        let mut copy_nll = 0.0;
+        let mut copy_n = 0usize;
+        let mut all_nll = 0.0;
+        let mut all_n = 0usize;
+        for _ in 0..n_batches {
+            let tokens = batcher.next_eval_batch();
+            let (_, nll) = self.eval_batch(state, &tokens)?;
+            let t = self.seq_len;
+            for b in 0..self.batch {
+                let seq = &tokens[b * t..(b + 1) * t];
+                let mask = NeedleSource::copy_target_mask(seq, payload_len);
+                for pos in 1..t {
+                    // nll[pos-1] scores the prediction of tokens[pos]
+                    let x = nll[b * (t - 1) + (pos - 1)] as f64;
+                    all_nll += x;
+                    all_n += 1;
+                    if mask[pos] {
+                        copy_nll += x;
+                        copy_n += 1;
+                    }
+                }
+            }
+        }
+        Ok((
+            copy_nll / copy_n.max(1) as f64,
+            all_nll / all_n.max(1) as f64,
+        ))
+    }
+}

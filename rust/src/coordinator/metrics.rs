@@ -1,0 +1,169 @@
+//! Training/eval metrics: loss meters, unit conversions (the paper reports
+//! perplexity for word/subword models and bits-per-dim / bits-per-byte for
+//! image/byte models), steps/sec timing, and a CSV run logger.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Natural-log loss -> perplexity (Tables 2, 5).
+pub fn ppl(nll_nats: f64) -> f64 {
+    nll_nats.exp()
+}
+
+/// Natural-log loss -> bits per symbol (Tables 1, 3, 4: bits/dim, bpb).
+pub fn bits_per_dim(nll_nats: f64) -> f64 {
+    nll_nats / std::f64::consts::LN_2
+}
+
+/// Streaming mean.
+#[derive(Debug, Default, Clone)]
+pub struct Meter {
+    sum: f64,
+    n: usize,
+}
+
+impl Meter {
+    pub fn add(&mut self, x: f64) {
+        self.sum += x;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn reset(&mut self) {
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+/// Exponential moving average (for smoothed loss display).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    pub decay: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(decay: f64) -> Self {
+        Ema { decay, value: None }
+    }
+
+    pub fn add(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.decay * prev + (1.0 - self.decay) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Steps-per-second timer (Tables 1, 7 report steps/sec).
+pub struct Throughput {
+    start: Instant,
+    steps: usize,
+}
+
+impl Throughput {
+    pub fn start() -> Self {
+        Throughput { start: Instant::now(), steps: 0 }
+    }
+
+    pub fn add_steps(&mut self, n: usize) {
+        self.steps += n;
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.steps as f64 / dt
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// CSV logger for loss curves (EXPERIMENTS.md plots read these files).
+pub struct CsvLogger {
+    file: std::fs::File,
+}
+
+impl CsvLogger {
+    pub fn create(path: &Path, header: &str) -> anyhow::Result<CsvLogger> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{header}")?;
+        Ok(CsvLogger { file })
+    }
+
+    pub fn log(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        // uniform over 256 symbols: nll = ln 256, bits = 8
+        let nll = (256f64).ln();
+        assert!((bits_per_dim(nll) - 8.0).abs() < 1e-12);
+        assert!((ppl(nll) - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn meter_mean() {
+        let mut m = Meter::default();
+        m.add(1.0);
+        m.add(3.0);
+        assert_eq!(m.mean(), 2.0);
+        assert_eq!(m.count(), 2);
+        m.reset();
+        assert_eq!(m.mean(), 0.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..200 {
+            e.add(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_logger_writes() {
+        let dir = std::env::temp_dir().join("rtx_metrics_test");
+        let path = dir.join("loss.csv");
+        let mut log = CsvLogger::create(&path, "step,loss").unwrap();
+        log.log(&["1".into(), "2.5".into()]).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,2.5\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

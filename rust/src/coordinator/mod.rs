@@ -1,0 +1,67 @@
+//! Layer-3 coordinator: the training/eval/analysis driver over the AOT
+//! artifacts.
+//!
+//! The Routing Transformer's *system* contribution lives at L1/L2 (the
+//! clustering attention kernel and model); per DESIGN.md the coordinator
+//! is therefore a full but conventional LM-training stack: config, data
+//! pipeline, scanned train loop, evaluation, LR schedules, metrics,
+//! checkpoints, plus the paper-specific analysis drivers (JSD study,
+//! pattern renderer, step-time benches).
+
+pub mod evaluator;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use evaluator::{EvalReport, Evaluator};
+pub use metrics::{bits_per_dim, ppl, CsvLogger, Ema, Meter, Throughput};
+pub use schedule::LrSchedule;
+pub use trainer::{TrainOptions, TrainReport, Trainer};
+
+use anyhow::Result;
+
+use crate::data::{self, BlockBatcher};
+use crate::runtime::Manifest;
+
+/// Build a train batcher for a manifest + data source name: one forked
+/// source per batch lane.
+pub fn train_batcher(manifest: &Manifest, data_name: &str, seed: u64) -> Result<BlockBatcher> {
+    batcher_with(manifest, data_name, seed, manifest.scan_steps)
+}
+
+/// Build an eval batcher (disjoint seeds from training).
+pub fn eval_batcher(manifest: &Manifest, data_name: &str, seed: u64) -> Result<BlockBatcher> {
+    batcher_with(manifest, data_name, seed ^ 0xE7A1_0000_0000_0000, 1)
+}
+
+fn batcher_with(
+    manifest: &Manifest,
+    data_name: &str,
+    seed: u64,
+    scan_steps: usize,
+) -> Result<BlockBatcher> {
+    let cfg = &manifest.config;
+    let lanes: Result<Vec<_>> = (0..manifest.batch)
+        .map(|lane| {
+            data::source_by_name(
+                data_name,
+                cfg.vocab_size,
+                cfg.seq_len,
+                cfg.window,
+                seed.wrapping_add(lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            )
+        })
+        .collect();
+    Ok(BlockBatcher::new(lanes?, scan_steps, cfg.seq_len))
+}
+
+/// Default data source per variant group (matches DESIGN.md's table).
+pub fn default_data_for(manifest: &Manifest) -> &'static str {
+    match manifest.group.as_str() {
+        "table1" | "table4" => "images",
+        "table3" => "bytes",
+        "table5" => "bytes",
+        "table2" | "table6" => "needle",
+        _ => "needle",
+    }
+}

@@ -1,0 +1,115 @@
+//! Learning-rate schedules.
+//!
+//! The paper uses the Transformer inverse-sqrt schedule (Vaswani et al.,
+//! Section 5) for everything except PG-19, which uses a constant 0.01
+//! with 10k linear warmup followed by rsqrt_normalized_decay (Section
+//! 5.5).  The schedule is computed host-side and fed to the train
+//! artifact as a scalar input, so switching schedules needs no
+//! re-lowering.
+
+/// A learning-rate schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant rate.
+    Constant { lr: f32 },
+    /// Vaswani et al.: lr = scale * min(step^-0.5, step * warmup^-1.5).
+    InverseSqrt { scale: f32, warmup: u32 },
+    /// PG-19 setup: linear warmup to `lr`, then lr * sqrt(warmup/step).
+    RsqrtDecay { lr: f32, warmup: u32 },
+}
+
+impl LrSchedule {
+    /// Learning rate at 1-based step `step`.
+    pub fn lr(&self, step: u32) -> f32 {
+        let s = step.max(1) as f32;
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::InverseSqrt { scale, warmup } => {
+                let w = warmup.max(1) as f32;
+                scale * (1.0 / s.sqrt()).min(s * w.powf(-1.5))
+            }
+            LrSchedule::RsqrtDecay { lr, warmup } => {
+                let w = warmup.max(1) as f32;
+                if s < w {
+                    lr * s / w
+                } else {
+                    lr * (w / s).sqrt()
+                }
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `constant:LR`, `inv_sqrt:SCALE:WARMUP`,
+    /// `rsqrt:LR:WARMUP`.
+    pub fn parse(spec: &str) -> anyhow::Result<LrSchedule> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            ["constant", lr] => Ok(LrSchedule::Constant { lr: lr.parse()? }),
+            ["inv_sqrt", scale, warmup] => Ok(LrSchedule::InverseSqrt {
+                scale: scale.parse()?,
+                warmup: warmup.parse()?,
+            }),
+            ["rsqrt", lr, warmup] => {
+                Ok(LrSchedule::RsqrtDecay { lr: lr.parse()?, warmup: warmup.parse()? })
+            }
+            _ => anyhow::bail!(
+                "bad schedule '{spec}' (constant:LR | inv_sqrt:SCALE:WARMUP | rsqrt:LR:WARMUP)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.01 };
+        assert_eq!(s.lr(1), 0.01);
+        assert_eq!(s.lr(100_000), 0.01);
+    }
+
+    #[test]
+    fn inverse_sqrt_warms_up_then_decays() {
+        let s = LrSchedule::InverseSqrt { scale: 1.0, warmup: 100 };
+        assert!(s.lr(10) < s.lr(50)); // warming up
+        assert!(s.lr(50) < s.lr(100));
+        assert!(s.lr(400) < s.lr(100)); // decaying
+        // peak at warmup: step^-0.5 branch
+        assert!((s.lr(100) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rsqrt_linear_warmup() {
+        let s = LrSchedule::RsqrtDecay { lr: 0.01, warmup: 1000 };
+        assert!((s.lr(500) - 0.005).abs() < 1e-7);
+        assert!((s.lr(1000) - 0.01).abs() < 1e-7);
+        assert!((s.lr(4000) - 0.005).abs() < 1e-7); // sqrt(1/4)
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(LrSchedule::parse("constant:0.5").unwrap(),
+                   LrSchedule::Constant { lr: 0.5 });
+        assert_eq!(LrSchedule::parse("inv_sqrt:2.0:4000").unwrap(),
+                   LrSchedule::InverseSqrt { scale: 2.0, warmup: 4000 });
+        assert_eq!(LrSchedule::parse("rsqrt:0.01:10000").unwrap(),
+                   LrSchedule::RsqrtDecay { lr: 0.01, warmup: 10000 });
+        assert!(LrSchedule::parse("nope").is_err());
+    }
+
+    #[test]
+    fn never_nan_or_negative() {
+        for sched in [
+            LrSchedule::Constant { lr: 0.1 },
+            LrSchedule::InverseSqrt { scale: 1.0, warmup: 0 },
+            LrSchedule::RsqrtDecay { lr: 0.1, warmup: 0 },
+        ] {
+            for step in [0u32, 1, 7, 1_000_000] {
+                let lr = sched.lr(step);
+                assert!(lr.is_finite() && lr >= 0.0, "{sched:?} step {step} -> {lr}");
+            }
+        }
+    }
+}

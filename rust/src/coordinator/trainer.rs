@@ -1,0 +1,193 @@
+//! The training loop: drives the scanned `train_block` artifact.
+//!
+//! Each call feeds `[S, B, T]` tokens plus the full optimizer state and
+//! receives the updated state and the per-step losses.  The Adam update
+//! and the centroid k-means EMA both live *inside* the artifact — this
+//! loop owns only scheduling, data, metrics and checkpoints (Python never
+//! runs here).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use super::metrics::{Ema, Throughput};
+use super::schedule::LrSchedule;
+use crate::data::{BlockBatcher, TokenBlock};
+use crate::runtime::{
+    execute_tuple, i32_literal, scalar_f32, scalar_i32, to_f32_vec, Artifacts, ModelState,
+    Runtime,
+};
+
+/// Training-loop options.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub schedule: LrSchedule,
+    pub log_every: usize,
+    /// Save a checkpoint every N steps (0 = only at the end).
+    pub ckpt_every: usize,
+    pub ckpt_path: Option<std::path::PathBuf>,
+    /// Optional CSV loss-curve path.
+    pub log_csv: Option<std::path::PathBuf>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            schedule: LrSchedule::InverseSqrt { scale: 0.05, warmup: 100 },
+            log_every: 20,
+            ckpt_every: 0,
+            ckpt_path: None,
+            log_csv: None,
+        }
+    }
+}
+
+/// Summary of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub final_loss: f32,
+    pub mean_last10_loss: f64,
+    pub steps_per_sec: f64,
+    pub losses: Vec<f32>,
+}
+
+/// Trainer over one variant's `train_block` artifact.
+pub struct Trainer {
+    exe: Arc<PjRtLoadedExecutable>,
+    pub state: ModelState,
+    pub scan_steps: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    variant: String,
+}
+
+impl Trainer {
+    /// Build from artifacts with the seeded initial state.
+    pub fn new(rt: &Runtime, art: &Artifacts) -> Result<Trainer> {
+        let state = art.init_state()?;
+        Self::with_state(rt, art, state)
+    }
+
+    /// Build from artifacts resuming from an existing state.
+    pub fn with_state(rt: &Runtime, art: &Artifacts, state: ModelState) -> Result<Trainer> {
+        let m = &art.manifest;
+        let exe = art.executable(rt, "train_block")?;
+        Ok(Trainer {
+            exe,
+            state,
+            scan_steps: m.scan_steps,
+            batch: m.batch,
+            seq_len: m.config.seq_len,
+            variant: m.variant.clone(),
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// Execute one scanned block of `scan_steps` optimizer steps.
+    pub fn step_block(&mut self, block: &TokenBlock, lr: f32) -> Result<Vec<f32>> {
+        if block.dims() != [self.scan_steps, self.batch, self.seq_len] {
+            return Err(anyhow!(
+                "block dims {:?} != artifact dims [{}, {}, {}]",
+                block.dims(), self.scan_steps, self.batch, self.seq_len
+            ));
+        }
+        let tokens = i32_literal(&block.tokens, &block.dims())?;
+        let step_lit = scalar_i32(self.state.step as i32);
+        let lr_lit = scalar_f32(lr);
+
+        let p = self.state.params.len();
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * p + 3);
+        inputs.extend(self.state.params.iter());
+        inputs.extend(self.state.m.iter());
+        inputs.extend(self.state.v.iter());
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+        inputs.push(&tokens);
+
+        let mut outs = execute_tuple(&self.exe, &inputs)?;
+        if outs.len() != 3 * p + 1 {
+            return Err(anyhow!("expected {} outputs, got {}", 3 * p + 1, outs.len()));
+        }
+        let losses_lit = outs.pop().unwrap();
+        let v = outs.split_off(2 * p);
+        let m = outs.split_off(p);
+        self.state.params = outs;
+        self.state.m = m;
+        self.state.v = v;
+        self.state.step += self.scan_steps as i64;
+        Ok(to_f32_vec(&losses_lit)?)
+    }
+
+    /// Run the full training loop from a batcher.
+    pub fn train(
+        &mut self,
+        batcher: &mut BlockBatcher,
+        manifest: &crate::runtime::Manifest,
+        opts: &TrainOptions,
+    ) -> Result<TrainReport> {
+        let mut losses: Vec<f32> = Vec::with_capacity(opts.steps);
+        let mut ema = Ema::new(0.95);
+        let mut throughput = Throughput::start();
+        let mut csv = match &opts.log_csv {
+            Some(path) => Some(super::metrics::CsvLogger::create(path, "step,loss,lr")?),
+            None => None,
+        };
+
+        while losses.len() < opts.steps {
+            let lr = opts.schedule.lr(self.state.step as u32 + 1);
+            let block = batcher.next_block();
+            let block_losses = self.step_block(&block, lr)?;
+            throughput.add_steps(block_losses.len());
+            for loss in block_losses {
+                losses.push(loss);
+                let smooth = ema.add(loss as f64);
+                let step = losses.len();
+                if let Some(csv) = &mut csv {
+                    csv.log(&[step.to_string(), loss.to_string(), lr.to_string()])?;
+                }
+                if opts.log_every > 0 && step % opts.log_every == 0 {
+                    println!(
+                        "[{}] step {:>6}  loss {:.4}  (ema {:.4})  lr {:.2e}  {:.2} steps/s",
+                        self.variant, step, loss, smooth, lr,
+                        throughput.steps_per_sec()
+                    );
+                }
+                if let (Some(path), true) = (
+                    &opts.ckpt_path,
+                    opts.ckpt_every > 0 && step % opts.ckpt_every == 0,
+                ) {
+                    self.state.save(manifest, path)?;
+                }
+                if step >= opts.steps {
+                    break;
+                }
+            }
+        }
+
+        if let Some(path) = &opts.ckpt_path {
+            self.state.save(manifest, path)?;
+        }
+        let last10 = &losses[losses.len().saturating_sub(10)..];
+        Ok(TrainReport {
+            steps: losses.len(),
+            final_loss: *losses.last().unwrap_or(&f32::NAN),
+            mean_last10_loss: last10.iter().map(|&x| x as f64).sum::<f64>()
+                / last10.len().max(1) as f64,
+            steps_per_sec: throughput.steps_per_sec(),
+            losses,
+        })
+    }
+
+    /// Save current state to `<path>.npz/.json`.
+    pub fn save(&self, manifest: &crate::runtime::Manifest, path: &Path) -> Result<()> {
+        self.state.save(manifest, path)
+    }
+}

@@ -1,0 +1,136 @@
+//! Token batching: pack endless token streams into the `[S, B, T]` blocks
+//! the scanned train artifact consumes, and `[B, T]` eval batches.
+//!
+//! Each batch lane (row b) is an independent contiguous stream (its own
+//! forked generator seed), matching how LM training shards a corpus into
+//! parallel readers: no token is lost or duplicated within a lane, and
+//! lanes never interleave.
+
+use super::TokenSource;
+
+/// One `[S, B, T]` block of tokens, flattened row-major.
+#[derive(Debug, Clone)]
+pub struct TokenBlock {
+    pub tokens: Vec<i32>,
+    pub scan_steps: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl TokenBlock {
+    pub fn dims(&self) -> [usize; 3] {
+        [self.scan_steps, self.batch, self.seq_len]
+    }
+}
+
+/// Packs per-lane token sources into train blocks.
+pub struct BlockBatcher {
+    lanes: Vec<Box<dyn TokenSource>>,
+    pub scan_steps: usize,
+    pub seq_len: usize,
+}
+
+impl BlockBatcher {
+    pub fn new(lanes: Vec<Box<dyn TokenSource>>, scan_steps: usize, seq_len: usize) -> Self {
+        assert!(!lanes.is_empty());
+        BlockBatcher { lanes, scan_steps, seq_len }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Next `[S, B, T]` block: lane b contributes S consecutive sequences.
+    pub fn next_block(&mut self) -> TokenBlock {
+        let (s, b, t) = (self.scan_steps, self.lanes.len(), self.seq_len);
+        let mut tokens = vec![0i32; s * b * t];
+        for (bi, lane) in self.lanes.iter_mut().enumerate() {
+            for si in 0..s {
+                let off = (si * b + bi) * t;
+                lane.fill(&mut tokens[off..off + t]);
+            }
+        }
+        TokenBlock { tokens, scan_steps: s, batch: b, seq_len: t }
+    }
+
+    /// Next `[B, T]` eval batch (one sequence per lane).
+    pub fn next_eval_batch(&mut self) -> Vec<i32> {
+        let (b, t) = (self.lanes.len(), self.seq_len);
+        let mut tokens = vec![0i32; b * t];
+        for (bi, lane) in self.lanes.iter_mut().enumerate() {
+            lane.fill(&mut tokens[bi * t..(bi + 1) * t]);
+        }
+        tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TokenSource;
+
+    /// Counting source: emits 0,1,2,... (per-lane offset by `base`).
+    struct Counter {
+        next: i32,
+    }
+
+    impl TokenSource for Counter {
+        fn vocab(&self) -> usize {
+            1 << 30
+        }
+        fn fill(&mut self, out: &mut [i32]) {
+            for t in out.iter_mut() {
+                *t = self.next;
+                self.next += 1;
+            }
+        }
+    }
+
+    fn batcher(b: usize, s: usize, t: usize) -> BlockBatcher {
+        let lanes: Vec<Box<dyn TokenSource>> = (0..b)
+            .map(|i| Box::new(Counter { next: (i as i32) * 1_000_000 }) as Box<dyn TokenSource>)
+            .collect();
+        BlockBatcher::new(lanes, s, t)
+    }
+
+    #[test]
+    fn block_dims_and_layout() {
+        let mut bt = batcher(2, 3, 4);
+        let blk = bt.next_block();
+        assert_eq!(blk.dims(), [3, 2, 4]);
+        assert_eq!(blk.tokens.len(), 24);
+        // lane 0, step 0 = [0,1,2,3]; lane 0, step 1 = [4,5,6,7]
+        assert_eq!(&blk.tokens[0..4], &[0, 1, 2, 3]);
+        assert_eq!(&blk.tokens[(1 * 2 + 0) * 4..(1 * 2 + 0) * 4 + 4], &[4, 5, 6, 7]);
+        // lane 1, step 0 starts at its own stream
+        assert_eq!(&blk.tokens[4..8], &[1_000_000, 1_000_001, 1_000_002, 1_000_003]);
+    }
+
+    #[test]
+    fn lanes_are_continuous_across_blocks() {
+        let mut bt = batcher(1, 2, 4);
+        let a = bt.next_block();
+        let b = bt.next_block();
+        // last token of block a, lane 0 is 7; block b starts at 8
+        assert_eq!(a.tokens[7], 7);
+        assert_eq!(b.tokens[0], 8);
+    }
+
+    #[test]
+    fn no_token_lost_or_duplicated() {
+        let mut bt = batcher(1, 4, 8);
+        let blk = bt.next_block();
+        let mut toks = blk.tokens.clone();
+        toks.sort();
+        assert_eq!(toks, (0..32).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn eval_batch_shape() {
+        let mut bt = batcher(3, 2, 5);
+        let batch = bt.next_eval_batch();
+        assert_eq!(batch.len(), 15);
+        assert_eq!(&batch[0..5], &[0, 1, 2, 3, 4]);
+        assert_eq!(batch[5], 1_000_000);
+    }
+}

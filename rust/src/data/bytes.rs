@@ -1,0 +1,159 @@
+//! Synthetic byte-level text — the enwik-8 / PG-19 stand-in (Tables 3, 5).
+//!
+//! Documents are built from a seeded synthetic lexicon (Zipf-weighted
+//! "words" of ASCII letters) assembled into sentences and paragraphs.
+//! Each document carries a handful of *named entities* (capitalized rare
+//! words) re-mentioned throughout — the long-range regularity the paper's
+//! Section 6.1 argues routing attention exploits ("gender, nouns, dates
+//! and names of places ... consistent throughout the entire sequence").
+
+use super::TokenSource;
+use crate::util::rng::{Rng, Zipf};
+
+pub struct ByteTextSource {
+    vocab: usize,
+    lexicon: Vec<String>,
+    zipf: Zipf,
+    rng: Rng,
+    buf: Vec<i32>,
+    pos: usize,
+}
+
+impl ByteTextSource {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 256, "byte source needs vocab >= 256");
+        let mut rng = Rng::new(seed);
+        let lexicon = build_lexicon(&mut rng, 2000);
+        ByteTextSource {
+            vocab,
+            lexicon,
+            zipf: Zipf::new(2000, 1.05),
+            rng,
+            buf: Vec::new(),
+            pos: 0,
+        }
+    }
+
+    /// Generate one document (~2-6 KB of text).
+    fn gen_document(&mut self) -> Vec<i32> {
+        let mut text = String::new();
+        // document-level entities: 3-6 capitalized rare words, reused often
+        let n_entities = self.rng.range(3, 7);
+        let entities: Vec<String> = (0..n_entities)
+            .map(|_| {
+                let w = &self.lexicon[self.rng.range(1000, 2000)];
+                let mut c = w.clone();
+                c[..1].make_ascii_uppercase();
+                c
+            })
+            .collect();
+        let n_paragraphs = self.rng.range(3, 8);
+        for _ in 0..n_paragraphs {
+            let n_sentences = self.rng.range(2, 6);
+            for _ in 0..n_sentences {
+                let n_words = self.rng.range(5, 14);
+                for w in 0..n_words {
+                    if w > 0 {
+                        text.push(' ');
+                    }
+                    if self.rng.chance(0.12) {
+                        // entity mention — the long-range signal
+                        text.push_str(&entities[self.rng.below(entities.len())]);
+                    } else {
+                        text.push_str(&self.lexicon[self.zipf.sample(&mut self.rng)]);
+                    }
+                }
+                text.push_str(". ");
+            }
+            text.push('\n');
+        }
+        text.bytes().map(|b| b as i32).collect()
+    }
+}
+
+fn build_lexicon(rng: &mut Rng, n: usize) -> Vec<String> {
+    const CONSONANTS: &[u8] = b"bcdfghjklmnprstvwz";
+    const VOWELS: &[u8] = b"aeiou";
+    let mut words = Vec::with_capacity(n);
+    for _ in 0..n {
+        let syllables = rng.range(1, 4);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push(CONSONANTS[rng.below(CONSONANTS.len())] as char);
+            w.push(VOWELS[rng.below(VOWELS.len())] as char);
+            if rng.chance(0.3) {
+                w.push(CONSONANTS[rng.below(CONSONANTS.len())] as char);
+            }
+        }
+        words.push(w);
+    }
+    words
+}
+
+impl TokenSource for ByteTextSource {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn fill(&mut self, out: &mut [i32]) {
+        for t in out.iter_mut() {
+            if self.pos >= self.buf.len() {
+                self.buf = self.gen_document();
+                self.pos = 0;
+            }
+            *t = self.buf[self.pos];
+            self.pos += 1;
+        }
+    }
+}
+
+/// Materialize a corpus of documents as raw bytes (for the BPE tokenizer
+/// training path, PG-19 style).
+pub fn corpus_bytes(seed: u64, n_docs: usize) -> Vec<u8> {
+    let mut src = ByteTextSource::new(256, seed);
+    let mut out = Vec::new();
+    for _ in 0..n_docs {
+        let doc = src.gen_document();
+        out.extend(doc.iter().map(|&t| t as u8));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::take;
+
+    #[test]
+    fn produces_ascii_text() {
+        let mut src = ByteTextSource::new(256, 1);
+        let toks = take(&mut src, 8192);
+        assert!(toks.iter().all(|&t| (0..256).contains(&t)));
+        let text: String = toks.iter().map(|&t| t as u8 as char).collect();
+        assert!(text.contains(". "));
+        assert!(text.split_whitespace().count() > 100);
+    }
+
+    #[test]
+    fn entities_recur() {
+        let mut src = ByteTextSource::new(256, 2);
+        let doc: Vec<u8> = src.gen_document().iter().map(|&t| t as u8).collect();
+        let text = String::from_utf8(doc).unwrap();
+        // capitalized words should appear multiple times
+        let caps: Vec<&str> = text
+            .split(|c: char| !c.is_ascii_alphabetic())
+            .filter(|w| w.len() > 2 && w.chars().next().unwrap().is_ascii_uppercase())
+            .collect();
+        assert!(!caps.is_empty());
+        let first = caps[0];
+        let count = caps.iter().filter(|&&w| w == first).count();
+        assert!(count >= 2, "entity '{first}' appears {count} time(s)");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = take(&mut ByteTextSource::new(256, 9), 2048);
+        let b = take(&mut ByteTextSource::new(256, 9), 2048);
+        assert_eq!(a, b);
+    }
+}

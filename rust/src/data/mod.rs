@@ -1,0 +1,61 @@
+//! Workload substrates: synthetic corpora standing in for the paper's
+//! datasets (DESIGN.md §3 documents each substitution).
+//!
+//! | paper dataset | substrate | long-range signal |
+//! |---|---|---|
+//! | Wikitext-103  | [`needle`] word-level corpus | payload copy beyond the local window |
+//! | enwik-8       | [`bytes`] synthetic byte text | repeated named entities |
+//! | CIFAR-10 / ImageNet-64 | [`images`] raster-scan images | mirrored halves + global prototypes |
+//! | PG-19         | [`bytes`]+BPE long documents | entity recurrence over 1k+ tokens |
+//!
+//! All generators are deterministic from a `u64` seed and stream tokens;
+//! [`batcher`] packs streams into the `[S, B, T]` blocks the scanned
+//! train artifact consumes.
+
+pub mod batcher;
+pub mod bytes;
+pub mod images;
+pub mod needle;
+pub mod zipf;
+
+pub use batcher::{BlockBatcher, TokenBlock};
+
+/// A deterministic, endless token source.
+pub trait TokenSource {
+    /// Vocabulary size the tokens are drawn from.
+    fn vocab(&self) -> usize;
+    /// Fill `out` with the next tokens of the stream.
+    fn fill(&mut self, out: &mut [i32]);
+}
+
+/// Convenience: materialize `n` tokens from a source.
+pub fn take(src: &mut dyn TokenSource, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; n];
+    src.fill(&mut out);
+    out
+}
+
+/// Build the source matching a CLI `--data` name for a given vocab/seed.
+pub fn source_by_name(
+    name: &str,
+    vocab: usize,
+    seq_len: usize,
+    window: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn TokenSource>> {
+    match name {
+        "zipf" => Ok(Box::new(zipf::ZipfSource::new(vocab, 1.1, seed))),
+        "needle" => Ok(Box::new(needle::NeedleSource::new(
+            needle::NeedleConfig::for_model(vocab, seq_len, window),
+            seed,
+        ))),
+        "bytes" => Ok(Box::new(bytes::ByteTextSource::new(vocab, seed))),
+        "images" => Ok(Box::new(images::ImageSource::new(
+            images::ImageConfig::for_seq_len(seq_len),
+            seed,
+        ))),
+        other => anyhow::bail!(
+            "unknown data source '{other}' (expected zipf|needle|bytes|images)"
+        ),
+    }
+}

@@ -1,0 +1,213 @@
+//! Needle/copy corpus — the long-range retrieval workload (Wikitext-103
+//! stand-in for Table 2).
+//!
+//! Each sequence embeds `n_pairs` *needles*: a marker token followed by a
+//! random payload appears once, then re-appears verbatim later at a gap
+//! strictly larger than twice the local-attention window.  Predicting the
+//! second payload requires content-based retrieval of the first — exactly
+//! the capability routing attention adds over local attention, and the
+//! reason the paper's MIPS argument (Section 6.1: "entities ... consistent
+//! throughout the entire sequence") translates into lower perplexity.
+//! Filler tokens are Zipf-distributed like natural text.
+
+use super::TokenSource;
+use crate::util::rng::{Rng, Zipf};
+
+/// Reserved token ids (must stay below `filler_base`).
+pub const MARKER: i32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct NeedleConfig {
+    pub vocab: usize,
+    /// Sequence period of the generator (needle pairs are placed within
+    /// each period; generators stream periods back to back).
+    pub period: usize,
+    /// Payload length in tokens.
+    pub payload_len: usize,
+    /// Needle pairs per period.
+    pub n_pairs: usize,
+    /// Minimum gap (tokens) between a pair's two occurrences.
+    pub min_gap: usize,
+    /// First token id used for filler/payload (below are reserved).
+    pub filler_base: usize,
+}
+
+impl NeedleConfig {
+    /// Sensible defaults for a model with the given vocab / seq_len /
+    /// local window: the gap is forced beyond the reach of *blocked* local
+    /// attention (2·window).
+    pub fn for_model(vocab: usize, seq_len: usize, window: usize) -> NeedleConfig {
+        let payload_len = 4.min(seq_len / 16).max(2);
+        NeedleConfig {
+            vocab,
+            period: seq_len,
+            payload_len,
+            n_pairs: (seq_len / 64).max(1),
+            min_gap: (2 * window + payload_len + 2).min(seq_len / 2),
+            filler_base: 16.min(vocab / 4),
+        }
+    }
+}
+
+pub struct NeedleSource {
+    cfg: NeedleConfig,
+    rng: Rng,
+    buf: Vec<i32>,
+    pos: usize,
+    zipf: Zipf,
+}
+
+impl NeedleSource {
+    pub fn new(cfg: NeedleConfig, seed: u64) -> Self {
+        assert!(cfg.filler_base < cfg.vocab);
+        assert!(cfg.period > 2 * (cfg.payload_len + 1) + cfg.min_gap,
+                "period too short for a needle pair: {:?}", cfg);
+        let zipf = Zipf::new(cfg.vocab - cfg.filler_base, 1.1);
+        NeedleSource { cfg, rng: Rng::new(seed), buf: Vec::new(), pos: 0, zipf }
+    }
+
+    /// Generate one period of tokens with embedded needle pairs.
+    fn gen_period(&mut self) -> Vec<i32> {
+        let c = &self.cfg;
+        let n = c.period;
+        let mut toks: Vec<i32> = (0..n)
+            .map(|_| (c.filler_base + self.zipf.sample(&mut self.rng)) as i32)
+            .collect();
+        let item = c.payload_len + 1; // marker + payload
+        for _ in 0..c.n_pairs {
+            // choose first occurrence start and second start with min gap
+            let max_first = n.saturating_sub(2 * item + c.min_gap);
+            if max_first == 0 {
+                break;
+            }
+            let p1 = self.rng.below(max_first);
+            let lo = p1 + item + c.min_gap;
+            let hi = n - item;
+            if lo >= hi {
+                continue;
+            }
+            let p2 = self.rng.range(lo, hi);
+            let payload: Vec<i32> = (0..c.payload_len)
+                .map(|_| (c.filler_base + self.zipf.sample(&mut self.rng)) as i32)
+                .collect();
+            toks[p1] = MARKER;
+            toks[p2] = MARKER;
+            for (o, &p) in payload.iter().enumerate() {
+                toks[p1 + 1 + o] = p;
+                toks[p2 + 1 + o] = p;
+            }
+        }
+        toks
+    }
+
+    /// Positions within a generated period that are payload-copy targets
+    /// (second occurrences) — used by evaluation to score retrieval.
+    pub fn copy_target_mask(period: &[i32], payload_len: usize) -> Vec<bool> {
+        // second occurrence of MARKER-initiated runs: mark positions of the
+        // *second* payload of each repeated payload string.
+        let n = period.len();
+        let mut mask = vec![false; n];
+        let mut seen: Vec<(usize, &[i32])> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            if period[i] == MARKER && i + payload_len < n {
+                let payload = &period[i + 1..i + 1 + payload_len];
+                if let Some(_) = seen.iter().find(|(_, p)| *p == payload) {
+                    for o in 0..payload_len {
+                        mask[i + 1 + o] = true;
+                    }
+                } else {
+                    seen.push((i, payload));
+                }
+                i += payload_len + 1;
+            } else {
+                i += 1;
+            }
+        }
+        mask
+    }
+}
+
+impl TokenSource for NeedleSource {
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn fill(&mut self, out: &mut [i32]) {
+        for t in out.iter_mut() {
+            if self.pos >= self.buf.len() {
+                self.buf = self.gen_period();
+                self.pos = 0;
+            }
+            *t = self.buf[self.pos];
+            self.pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::take;
+
+    fn cfg() -> NeedleConfig {
+        NeedleConfig::for_model(512, 256, 32)
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut src = NeedleSource::new(cfg(), 1);
+        let toks = take(&mut src, 4096);
+        assert!(toks.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn contains_repeated_payloads_beyond_window() {
+        let c = cfg();
+        let mut src = NeedleSource::new(c.clone(), 2);
+        let period = src.gen_period();
+        // find marker positions
+        let marks: Vec<usize> =
+            (0..period.len()).filter(|&i| period[i] == MARKER).collect();
+        assert!(marks.len() >= 2, "expected at least one needle pair");
+        // at least one pair repeats its payload at distance > 2*window
+        let mut found = false;
+        for (a_i, &a) in marks.iter().enumerate() {
+            for &b in &marks[a_i + 1..] {
+                if b + c.payload_len >= period.len() {
+                    continue;
+                }
+                let pa = &period[a + 1..a + 1 + c.payload_len];
+                let pb = &period[b + 1..b + 1 + c.payload_len];
+                if pa == pb && b - a >= c.min_gap {
+                    found = true;
+                }
+            }
+        }
+        assert!(found, "no repeated payload at long range");
+    }
+
+    #[test]
+    fn copy_target_mask_marks_second_occurrence_only() {
+        let payload_len = 2;
+        let seq = vec![9, MARKER, 7, 8, 9, 9, MARKER, 7, 8, 9];
+        let mask = NeedleSource::copy_target_mask(&seq, payload_len);
+        assert_eq!(mask[2], false); // first occurrence
+        assert_eq!(mask[7], true); // second occurrence payload
+        assert_eq!(mask[8], true);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = take(&mut NeedleSource::new(cfg(), 5), 1024);
+        let b = take(&mut NeedleSource::new(cfg(), 5), 1024);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = take(&mut NeedleSource::new(cfg(), 5), 1024);
+        let b = take(&mut NeedleSource::new(cfg(), 6), 1024);
+        assert_ne!(a, b);
+    }
+}

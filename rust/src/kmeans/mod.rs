@@ -1,0 +1,240 @@
+//! Host-side online spherical k-means — a faithful mirror of the in-graph
+//! centroid machinery (Algorithm 1, lines 28-31).
+//!
+//! Used by the Figure-1 pattern generator (cluster real vectors to draw
+//! routing sparsity patterns), the complexity model, and property tests
+//! that pin down the EMA/assignment semantics shared with the L2 graph.
+
+use crate::util::rng::Rng;
+
+/// Online spherical k-means with EMA centroid updates.
+#[derive(Debug, Clone)]
+pub struct SphericalKMeans {
+    pub k: usize,
+    pub dim: usize,
+    pub decay: f32,
+    /// Row-major [k, dim], unit-normalized.
+    pub centroids: Vec<f32>,
+}
+
+impl SphericalKMeans {
+    /// Random unit-vector initialization (seeded).
+    pub fn new(k: usize, dim: usize, decay: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut centroids = vec![0f32; k * dim];
+        for c in 0..k {
+            for d in 0..dim {
+                centroids[c * dim + d] = rng.normal() as f32;
+            }
+        }
+        let mut s = SphericalKMeans { k, dim, decay, centroids };
+        s.normalize_all();
+        s
+    }
+
+    fn normalize_all(&mut self) {
+        for c in 0..self.k {
+            normalize(&mut self.centroids[c * self.dim..(c + 1) * self.dim]);
+        }
+    }
+
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    /// Argmax-dot-product assignment (MIPS on the unit sphere ≡ NNS).
+    pub fn assign(&self, x: &[f32]) -> usize {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut best = 0;
+        let mut best_dot = f32::NEG_INFINITY;
+        for c in 0..self.k {
+            let d = dot(self.centroid(c), x);
+            if d > best_dot {
+                best_dot = d;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Routing scores of one vector against every centroid.
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        (0..self.k).map(|c| dot(self.centroid(c), x)).collect()
+    }
+
+    /// Balanced top-w membership (Algorithm 1 lines 12-15): for every
+    /// centroid, the `w` highest-scoring vectors, indices sorted ascending
+    /// to preserve temporal order.  `xs` is row-major [n, dim].
+    pub fn top_w_members(&self, xs: &[f32], n: usize, w: usize) -> Vec<Vec<usize>> {
+        assert_eq!(xs.len(), n * self.dim);
+        let w = w.min(n);
+        (0..self.k)
+            .map(|c| {
+                let mu = self.centroid(c);
+                let mut scored: Vec<(f32, usize)> = (0..n)
+                    .map(|i| (dot(mu, &xs[i * self.dim..(i + 1) * self.dim]), i))
+                    .collect();
+                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+                let mut idx: Vec<usize> = scored[..w].iter().map(|&(_, i)| i).collect();
+                idx.sort_unstable();
+                idx
+            })
+            .collect()
+    }
+
+    /// One EMA update from a mini-batch of vectors (xs row-major [n, dim]):
+    /// hard-assign each vector, average per cluster, EMA, re-project to the
+    /// unit sphere.  Empty clusters keep their centroid.  Returns counts.
+    pub fn update(&mut self, xs: &[f32], n: usize) -> Vec<usize> {
+        assert_eq!(xs.len(), n * self.dim);
+        let mut sums = vec![0f32; self.k * self.dim];
+        let mut counts = vec![0usize; self.k];
+        for i in 0..n {
+            let x = &xs[i * self.dim..(i + 1) * self.dim];
+            let c = self.assign(x);
+            counts[c] += 1;
+            for d in 0..self.dim {
+                sums[c * self.dim + d] += x[d];
+            }
+        }
+        for c in 0..self.k {
+            if counts[c] == 0 {
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f32;
+            for d in 0..self.dim {
+                let mean = sums[c * self.dim + d] * inv;
+                let mu = &mut self.centroids[c * self.dim + d];
+                *mu = self.decay * *mu + (1.0 - self.decay) * mean;
+            }
+            normalize(&mut self.centroids[c * self.dim..(c + 1) * self.dim]);
+        }
+        counts
+    }
+
+    /// Mean within-cluster dot product (clustering quality metric).
+    pub fn cohesion(&self, xs: &[f32], n: usize) -> f32 {
+        let mut total = 0.0;
+        for i in 0..n {
+            let x = &xs[i * self.dim..(i + 1) * self.dim];
+            let c = self.assign(x);
+            total += dot(self.centroid(c), x);
+        }
+        total / n.max(1) as f32
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+pub fn normalize(a: &mut [f32]) {
+    let n = norm(a).max(1e-6);
+    for x in a.iter_mut() {
+        *x /= n;
+    }
+}
+
+/// LayerNorm without scale/bias — the paper's unit-ball projection,
+/// mirrored for host-side analysis (norm of the output ≈ sqrt(dim)).
+pub fn layernorm_nsb(x: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    x.iter().map(|v| (v - mean) * inv).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn clustered_data(n: usize, dim: usize, k: usize, seed: u64) -> Vec<f32> {
+        // k well-separated directions + small noise, unit-normalized
+        let mut rng = Rng::new(seed);
+        let mut xs = vec![0f32; n * dim];
+        for i in 0..n {
+            let c = i % k;
+            for d in 0..dim {
+                let base = if d == c { 4.0 } else { 0.0 };
+                xs[i * dim + d] = base + rng.normal() as f32 * 0.2;
+            }
+            normalize(&mut xs[i * dim..(i + 1) * dim]);
+        }
+        xs
+    }
+
+    #[test]
+    fn centroids_stay_unit_norm() {
+        let mut km = SphericalKMeans::new(4, 8, 0.5, 1);
+        let xs = clustered_data(64, 8, 4, 2);
+        for _ in 0..10 {
+            km.update(&xs, 64);
+        }
+        for c in 0..4 {
+            assert!((norm(km.centroid(c)) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut km = SphericalKMeans::new(4, 8, 0.2, 3);
+        let xs = clustered_data(256, 8, 4, 4);
+        for _ in 0..50 {
+            km.update(&xs, 256);
+        }
+        assert!(km.cohesion(&xs, 256) > 0.8, "cohesion {}", km.cohesion(&xs, 256));
+    }
+
+    #[test]
+    fn update_improves_cohesion() {
+        let mut km = SphericalKMeans::new(4, 8, 0.2, 5);
+        let xs = clustered_data(256, 8, 4, 6);
+        let before = km.cohesion(&xs, 256);
+        for _ in 0..30 {
+            km.update(&xs, 256);
+        }
+        assert!(km.cohesion(&xs, 256) > before);
+    }
+
+    #[test]
+    fn top_w_balanced_and_sorted() {
+        let km = SphericalKMeans::new(3, 8, 0.5, 7);
+        let xs = clustered_data(30, 8, 3, 8);
+        let members = km.top_w_members(&xs, 30, 10);
+        assert_eq!(members.len(), 3);
+        for m in &members {
+            assert_eq!(m.len(), 10);
+            assert!(m.windows(2).all(|p| p[0] < p[1]), "sorted unique");
+        }
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let mut km = SphericalKMeans::new(2, 4, 0.5, 9);
+        // all mass on direction 0 -> one cluster may starve
+        let mut xs = vec![0f32; 16 * 4];
+        for i in 0..16 {
+            xs[i * 4] = 1.0;
+        }
+        let before: Vec<f32> = km.centroids.clone();
+        let counts = km.update(&xs, 16);
+        for c in 0..2 {
+            if counts[c] == 0 {
+                assert_eq!(km.centroid(c), &before[c * 4..(c + 1) * 4]);
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_nsb_norm() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.3 - 7.0).collect();
+        let y = layernorm_nsb(&x);
+        assert!((norm(&y) - (64f32).sqrt()).abs() < 1e-2);
+    }
+}

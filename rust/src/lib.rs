@@ -1,0 +1,33 @@
+//! # Routing Transformer — Rust + JAX + Pallas reproduction
+//!
+//! Reproduction of *"Efficient Content-Based Sparse Attention with Routing
+//! Transformers"* (Roy, Saffar, Vaswani, Grangier — TACL 2020) as a
+//! three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the
+//!   within-cluster attention hot-spot of Algorithm 1, blocked local
+//!   attention, dense causal attention.
+//! * **L2** — JAX model (`python/compile/model.py`): the decoder-only LM
+//!   with mixed local/routing/full/random/strided head plans, online
+//!   spherical k-means routing, Adam + centroid-EMA train step; AOT-lowered
+//!   to HLO text by `python/compile/aot.py`.
+//! * **L3** — this crate: the coordinator that loads the HLO artifacts via
+//!   PJRT ([`runtime`]), generates workloads ([`data`], [`tokenizer`]),
+//!   drives training/eval ([`coordinator`]), samples ([`sampler`]),
+//!   and reproduces every table and figure of the paper ([`analysis`],
+//!   [`attention`], `rust/benches/`).
+//!
+//! Python runs once at build time (`make artifacts`); the `rtx` binary is
+//! self-contained afterwards.
+
+pub mod analysis;
+pub mod bench;
+pub mod attention;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod kmeans;
+pub mod runtime;
+pub mod sampler;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,367 @@
+//! `rtx` — the Routing Transformer coordinator CLI.
+//!
+//! Self-contained after `make artifacts`; Python never runs here.
+//!
+//! ```text
+//! rtx info     [--artifacts DIR] [--variant NAME]     artifact inventory
+//! rtx train    --variant NAME [--steps N] [--data D] [--out CKPT] ...
+//! rtx eval     --variant NAME [--ckpt CKPT] [--data D] [--batches N]
+//! rtx sample   --variant NAME [--ckpt CKPT] [--tokens N] [--top-p P]
+//! rtx analyze  [--variant analysis] [--ckpt CKPT] [--runs N]   Table 6 JSD
+//! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8]
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+use routing_transformer::analysis;
+use routing_transformer::attention::Pattern;
+use routing_transformer::coordinator::{
+    default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
+    Trainer,
+};
+use routing_transformer::data;
+use routing_transformer::kmeans::SphericalKMeans;
+use routing_transformer::runtime::{Artifacts, ModelState, Runtime};
+use routing_transformer::sampler::{Generator, SamplerConfig};
+use routing_transformer::tokenizer::{ByteTokenizer, Tokenizer};
+use routing_transformer::util::cli::Args;
+use routing_transformer::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => cmd_info(args),
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "sample" => cmd_sample(args),
+        "analyze" => cmd_analyze(args),
+        "figure1" => cmd_figure1(args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+rtx — Routing Transformer coordinator (paper: Roy et al., TACL 2020)
+
+commands:
+  info      list artifact variants (--artifacts DIR, --variant NAME for detail)
+  train     train a variant: --variant NAME | --config configs/FILE.toml
+            [--steps N] [--data zipf|needle|bytes|images]
+            [--schedule constant:LR|inv_sqrt:SCALE:WARMUP|rsqrt:LR:WARMUP]
+            [--out CKPT] [--log-csv FILE] [--seed S] [--log-every N]
+  eval      evaluate: --variant NAME [--ckpt CKPT] [--data D] [--batches N] [--unit ppl|bits]
+  sample    generate: --variant NAME [--ckpt CKPT] [--tokens N] [--top-p P] [--temp T] [--seed S]
+  analyze   Table-6 JSD study: [--variant analysis] [--ckpt CKPT] [--runs 10] [--data needle]
+  figure1   render Figure-1 attention patterns: [--n 64] [--window 8] [--stride 8] [--clusters 8]
+";
+
+fn artifacts_root(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+fn load_artifacts(args: &Args) -> Result<(Runtime, Artifacts)> {
+    let rt = Runtime::cpu()?;
+    let variant = args.str_req("variant")?;
+    let art = Artifacts::load(&artifacts_root(args), &variant)?;
+    Ok((rt, art))
+}
+
+fn load_state(art: &Artifacts, args: &Args) -> Result<ModelState> {
+    match args.flags.get("ckpt") {
+        Some(path) => ModelState::load(&art.manifest, Path::new(path)),
+        None => art.init_state(),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = artifacts_root(args);
+    if let Some(variant) = args.flags.get("variant") {
+        let art = Artifacts::load(&root, variant)?;
+        let m = &art.manifest;
+        println!("variant:     {}", m.variant);
+        println!("group:       {}", m.group);
+        println!("params:      {} arrays, {} scalars", m.params.len(), m.n_params_total);
+        let c = &m.config;
+        println!(
+            "model:       d={} L={} H={} T={} V={}",
+            c.d_model, c.n_layers, c.n_heads, c.seq_len, c.vocab_size
+        );
+        println!(
+            "routing:     k={} w={} local window={} decay={}",
+            c.n_clusters, c.routing_window, c.window, c.centroid_decay
+        );
+        for (l, plan) in c.plan.iter().enumerate() {
+            println!(
+                "layer {l:>2}:    local={} routing={} full={} random={} strided={}",
+                plan.local, plan.routing, plan.full, plan.random, plan.strided
+            );
+        }
+        println!("batch:       {} (scan_steps {})", m.batch, m.scan_steps);
+        for (name, a) in &m.artifacts {
+            println!("artifact:    {name:<12} {} -> {}", a.inputs, a.outputs);
+        }
+    } else {
+        println!("artifact variants under {}:", root.display());
+        for name in Artifacts::list(&root)? {
+            let art = Artifacts::load(&root, &name)?;
+            let m = &art.manifest;
+            println!(
+                "  {:<18} group={:<8} T={:<5} params={:<9} artifacts={}",
+                m.variant,
+                m.group,
+                m.config.seq_len,
+                m.n_params_total,
+                m.artifacts.keys().cloned().collect::<Vec<_>>().join(",")
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // --config FILE loads a RunConfig; individual CLI flags override it.
+    let file_cfg = match args.flags.get("config") {
+        Some(path) => Some(routing_transformer::config::RunConfig::load(Path::new(path))?),
+        None => None,
+    };
+    let rt = Runtime::cpu()?;
+    let variant = match (&file_cfg, args.flags.get("variant")) {
+        (_, Some(v)) => v.clone(),
+        (Some(c), None) => c.variant.clone(),
+        (None, None) => anyhow::bail!("missing --variant (or --config)"),
+    };
+    let art = Artifacts::load(&artifacts_root(args), &variant)?;
+    let manifest = art.manifest.clone();
+    let default_data = file_cfg
+        .as_ref()
+        .and_then(|c| c.data.clone())
+        .unwrap_or_else(|| default_data_for(&manifest).to_string());
+    let data_name = args.str("data", &default_data);
+    let seed = args.u64("seed", file_cfg.as_ref().map(|c| c.seed).unwrap_or(0))?;
+    let state = load_state(&art, args)?;
+
+    let mut trainer = Trainer::with_state(&rt, &art, state)?;
+    let mut batcher = train_batcher(&manifest, &data_name, seed)?;
+    let base = file_cfg.as_ref().map(|c| c.train_options()).unwrap_or_default();
+    let opts = TrainOptions {
+        steps: args.usize("steps", base.steps)?,
+        schedule: match args.flags.get("schedule") {
+            Some(spec) => LrSchedule::parse(spec)?,
+            None => base.schedule,
+        },
+        log_every: args.usize("log-every", base.log_every)?,
+        ckpt_every: args.usize("ckpt-every", base.ckpt_every)?,
+        ckpt_path: args.flags.get("out").map(PathBuf::from).or(base.ckpt_path),
+        log_csv: args.flags.get("log-csv").map(PathBuf::from).or(base.log_csv),
+    };
+    println!(
+        "training variant '{}' on '{}' data for {} steps (platform: {})",
+        manifest.variant, data_name, opts.steps, rt.platform()
+    );
+    let report = trainer.train(&mut batcher, &manifest, &opts)?;
+    println!(
+        "done: {} steps, final loss {:.4}, mean(last 10) {:.4}, {:.2} steps/s",
+        report.steps, report.final_loss, report.mean_last10_loss, report.steps_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (rt, art) = load_artifacts(args)?;
+    let manifest = &art.manifest;
+    let data_name = args.str("data", default_data_for(manifest));
+    let state = load_state(&art, args)?;
+    let evaluator = Evaluator::new(&rt, &art)?;
+    let mut batcher = eval_batcher(manifest, &data_name, args.u64("seed", 1)?)?;
+    let n = args.usize("batches", 8)?;
+    let report = evaluator.eval(&state, &mut batcher, n)?;
+    println!(
+        "eval[{}] on '{}': nll {:.4} nats | ppl {:.2} | bits/dim {:.4}  ({} batches)",
+        manifest.variant, data_name, report.mean_nll, report.ppl(), report.bits_per_dim(), n
+    );
+    if data_name == "needle" {
+        let mut batcher = eval_batcher(manifest, &data_name, args.u64("seed", 1)? + 7)?;
+        let payload = 4.min(manifest.config.seq_len / 16).max(2);
+        let (copy, all) = evaluator.eval_retrieval(&state, &mut batcher, n, payload)?;
+        println!(
+            "retrieval: copy-target nll {:.4} vs overall {:.4} (gap {:+.4})",
+            copy, all, copy - all
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let (rt, art) = load_artifacts(args)?;
+    let manifest = &art.manifest;
+    let state = load_state(&art, args)?;
+    let exe = art.executable(&rt, "logits")?;
+    let cfg = SamplerConfig {
+        temperature: args.f32("temp", 1.0)?,
+        top_p: args.f32("top-p", 0.8)?,
+    };
+    let mut generator = Generator::new(
+        &exe,
+        &state,
+        manifest.config.seq_len,
+        manifest.config.vocab_size,
+        cfg,
+        args.u64("seed", 0)?,
+    );
+    let n = args.usize("tokens", 64)?;
+    let prompt_text = args.str("prompt", "");
+    let tok = ByteTokenizer;
+    let prompt: Vec<i32> = if prompt_text.is_empty() {
+        vec![0]
+    } else {
+        tok.encode(&prompt_text)
+            .into_iter()
+            .map(|t| t.min(manifest.config.vocab_size as i32 - 1))
+            .collect()
+    };
+    let out = generator.generate(&prompt, n)?;
+    println!("token ids: {:?}", &out);
+    if manifest.config.vocab_size == 256 {
+        println!("as bytes:  {:?}", tok.decode(&out));
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let variant = args.str("variant", "analysis");
+    let art = Artifacts::load(&artifacts_root(args), &variant)?;
+    let manifest = &art.manifest;
+    let cfg = &manifest.config;
+    if !manifest.artifacts.contains_key("attn_probs") {
+        bail!("variant '{}' has no attn_probs artifact (use --variant analysis)", variant);
+    }
+    let state = load_state(&art, args)?;
+    let exe = art.executable(&rt, "attn_probs")?;
+    let data_name = args.str("data", default_data_for(manifest));
+    let runs = args.usize("runs", 10)?;
+    let t = cfg.seq_len;
+
+    // per layer, collect JSD samples across runs
+    let mut rng = Rng::new(args.u64("seed", 0)?);
+    let mut rows = Vec::new();
+    let mut jsd_ll: Vec<Vec<f64>> = vec![Vec::new(); cfg.n_layers];
+    let mut jsd_lr: Vec<Vec<f64>> = vec![Vec::new(); cfg.n_layers];
+    let mut jsd_rr: Vec<Vec<f64>> = vec![Vec::new(); cfg.n_layers];
+
+    for run in 0..runs {
+        // a fresh eval sequence per run
+        let mut src = data::source_by_name(
+            &data_name, cfg.vocab_size, cfg.seq_len, cfg.window, 1000 + run as u64,
+        )?;
+        let tokens = data::take(src.as_mut(), t);
+        let lit = routing_transformer::runtime::i32_literal(&tokens, &[1, t])?;
+        let mut inputs: Vec<&xla::Literal> = state.params.iter().collect();
+        inputs.push(&lit);
+        let outs = routing_transformer::runtime::execute_tuple(&exe, &inputs)?;
+        let probs = routing_transformer::runtime::to_f32_vec(&outs[0])?;
+
+        for layer in 0..cfg.n_layers {
+            let plan = &cfg.plan[layer];
+            let local = plan.heads_of("local");
+            let routing = plan.heads_of("routing");
+            if let Some(d) = analysis::sample_pair_jsd(
+                &probs, cfg.n_heads, t, layer, &local, &local, &mut rng) {
+                jsd_ll[layer].push(d);
+            }
+            if let Some(d) = analysis::sample_pair_jsd(
+                &probs, cfg.n_heads, t, layer, &local, &routing, &mut rng) {
+                jsd_lr[layer].push(d);
+            }
+            if let Some(d) = analysis::sample_pair_jsd(
+                &probs, cfg.n_heads, t, layer, &routing, &routing, &mut rng) {
+                jsd_rr[layer].push(d);
+            }
+        }
+    }
+
+    println!("Table 6 — Jensen-Shannon divergence between attention heads");
+    println!("(natural log; upper bound {:.4}; {} runs)", analysis::JSD_MAX, runs);
+    let mut table = routing_transformer::util::timing::Table::new(&[
+        "layer", "JSD(local‖local)", "JSD(local‖routing)", "JSD(routing‖routing)",
+    ]);
+    for layer in 0..cfg.n_layers {
+        let cell = |xs: &[f64]| -> String {
+            if xs.is_empty() {
+                "-".to_string()
+            } else {
+                let (m, s) = analysis::mean_std(xs);
+                format!("{m:.4} ± {s:.4}")
+            }
+        };
+        table.row(&[
+            format!("layer {layer}"),
+            cell(&jsd_ll[layer]),
+            cell(&jsd_lr[layer]),
+            cell(&jsd_rr[layer]),
+        ]);
+        rows.push(layer);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_figure1(args: &Args) -> Result<()> {
+    let n = args.usize("n", 64)?;
+    let window = args.usize("window", 8)?;
+    let stride = args.usize("stride", 8)?;
+    let k = args.usize("clusters", 8)?;
+    let seed = args.u64("seed", 0)?;
+
+    println!("Figure 1 — 2-D attention schemes (rows = outputs, cols = inputs)\n");
+    println!("local attention (window {window}):");
+    println!("{}", Pattern::local(n, window).render_ascii());
+    println!("strided attention (stride {stride}):");
+    println!("{}", Pattern::strided(n, stride).render_ascii());
+
+    // routing pattern from clustered synthetic routing vectors
+    let dim = 16;
+    let mut rng = Rng::new(seed);
+    let mut xs = vec![0f32; n * dim];
+    for i in 0..n {
+        let c = i % k;
+        for d in 0..dim {
+            let base = if d == c % dim { 3.0 } else { 0.0 };
+            xs[i * dim + d] = base + rng.normal() as f32 * 0.5;
+        }
+    }
+    let mut km = SphericalKMeans::new(k, dim, 0.5, seed);
+    for _ in 0..30 {
+        km.update(&xs, n);
+    }
+    let pattern = Pattern::routing_from_vectors(n, &xs, &km, n / k);
+    println!("routing attention (k = {k} clusters, letters = clusters):");
+    println!("{}", pattern.render_ascii());
+    println!(
+        "densities: local {:.3}, strided {:.3}, routing {:.3} (full = 1.0)",
+        Pattern::local(n, window).density(),
+        Pattern::strided(n, stride).density(),
+        pattern.density()
+    );
+    if let Some(path) = args.flags.get("csv") {
+        std::fs::write(path, pattern.render_csv())?;
+        println!("routing pattern CSV written to {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Helpers around `xla::Literal`: typed host<->literal conversion, zeros,
+//! scalars, and tuple splitting for the train-state round-trip.
+
+use anyhow::{anyhow, Result};
+use xla::{ArrayShape, ElementType, Literal, PrimitiveType};
+
+/// Create an f32 literal of the given shape from a flat host vector.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {:?} wants {} elements, got {}", dims, n, data.len()));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Create an i32 literal of the given shape from a flat host vector.
+pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {:?} wants {} elements, got {}", dims, n, data.len()));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Zero-filled f32 literal (optimizer-state init).
+pub fn zeros_f32(dims: &[usize]) -> Literal {
+    Literal::create_from_shape(PrimitiveType::F32, dims)
+}
+
+/// Scalar literals for the step counter / learning rate inputs.
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract a literal's dims.
+pub fn dims_of(lit: &Literal) -> Result<Vec<usize>> {
+    let shape: ArrayShape = lit.array_shape()?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+/// Host copy as f32 vec.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    match lit.ty()? {
+        ElementType::F32 => Ok(lit.to_vec::<f32>()?),
+        other => Err(anyhow!("expected f32 literal, got {:?}", other)),
+    }
+}
+
+/// Host copy as i32 vec.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    match lit.ty()? {
+        ElementType::S32 => Ok(lit.to_vec::<i32>()?),
+        other => Err(anyhow!("expected s32 literal, got {:?}", other)),
+    }
+}
+
+/// Scalar f32 from a rank-0 literal.
+pub fn scalar_f32_value(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(dims_of(&lit).unwrap(), vec![2, 3]);
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = i32_literal(&[7, -3], &[2]).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), vec![7, -3]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn zeros_are_zero() {
+        let z = zeros_f32(&[4, 4]);
+        assert_eq!(to_f32_vec(&z).unwrap(), vec![0.0; 16]);
+        assert_eq!(dims_of(&z).unwrap(), vec![4, 4]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(scalar_f32_value(&scalar_f32(2.5)).unwrap(), 2.5);
+        let s = scalar_i32(42);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 42);
+    }
+}

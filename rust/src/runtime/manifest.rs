@@ -1,0 +1,284 @@
+//! Manifest: the contract between `python/compile/aot.py` and this runtime.
+//!
+//! Each artifact directory contains a `manifest.json` describing the model
+//! configuration, the parameter list in flatten order (the order the
+//! lowered HLO takes its arguments in), and the artifact files.  Parsed
+//! with the in-repo JSON substrate (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter array: name + shape + dtype, in flatten order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-layer head allocation (mirrors python `HeadPlan`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HeadPlan {
+    pub local: usize,
+    pub routing: usize,
+    pub full: usize,
+    pub random: usize,
+    pub strided: usize,
+}
+
+impl HeadPlan {
+    pub fn total(&self) -> usize {
+        self.local + self.routing + self.full + self.random + self.strided
+    }
+
+    /// Head-kind of head index `h` under the fixed kind ordering.
+    pub fn kind_of(&self, h: usize) -> &'static str {
+        let bounds = [
+            ("local", self.local),
+            ("routing", self.routing),
+            ("full", self.full),
+            ("random", self.random),
+            ("strided", self.strided),
+        ];
+        let mut acc = 0;
+        for (kind, cnt) in bounds {
+            acc += cnt;
+            if h < acc {
+                return kind;
+            }
+        }
+        "none"
+    }
+
+    /// Head indices of a given kind.
+    pub fn heads_of(&self, kind: &str) -> Vec<usize> {
+        (0..self.total()).filter(|&h| self.kind_of(h) == kind).collect()
+    }
+}
+
+/// Echo of the python `ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub window: usize,
+    pub n_clusters: usize,
+    pub routing_window: usize,
+    pub strided_stride: usize,
+    pub centroid_decay: f64,
+    pub plan: Vec<HeadPlan>,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Description of one lowered artifact (an HLO text file).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub scan_steps: Option<usize>,
+    pub batch: Option<usize>,
+    pub inputs: String,
+    pub outputs: String,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub group: String,
+    pub batch: usize,
+    pub scan_steps: usize,
+    pub n_params_total: usize,
+    pub params: Vec<ParamSpec>,
+    pub config: ModelConfig,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&root, dir)
+    }
+
+    pub fn from_json(root: &Json, dir: &Path) -> Result<Manifest> {
+        let s = |j: Option<&Json>, what: &str| -> Result<String> {
+            Ok(j.and_then(Json::as_str).ok_or_else(|| anyhow!("missing {what}"))?.to_string())
+        };
+        let u = |j: Option<&Json>, what: &str| -> Result<usize> {
+            j.and_then(Json::as_usize).ok_or_else(|| anyhow!("missing {what}"))
+        };
+
+        let mut params = Vec::new();
+        for p in root
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+        {
+            params.push(ParamSpec {
+                name: s(p.get("name"), "param name")?,
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: s(p.get("dtype"), "param dtype")?,
+            });
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+
+        let cj = root.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let mut plan = Vec::new();
+        for pj in cj.get("plan").and_then(Json::as_arr).ok_or_else(|| anyhow!("plan"))? {
+            let g = |k: &str| pj.get(k).and_then(Json::as_usize).unwrap_or(0);
+            plan.push(HeadPlan {
+                local: g("local"),
+                routing: g("routing"),
+                full: g("full"),
+                random: g("random"),
+                strided: g("strided"),
+            });
+        }
+        let config = ModelConfig {
+            vocab_size: u(cj.get("vocab_size"), "vocab_size")?,
+            d_model: u(cj.get("d_model"), "d_model")?,
+            n_layers: u(cj.get("n_layers"), "n_layers")?,
+            n_heads: u(cj.get("n_heads"), "n_heads")?,
+            seq_len: u(cj.get("seq_len"), "seq_len")?,
+            window: u(cj.get("window"), "window")?,
+            n_clusters: u(cj.get("n_clusters"), "n_clusters")?,
+            routing_window: u(cj.get("routing_window"), "routing_window")?,
+            strided_stride: cj.get("strided_stride").and_then(Json::as_usize).unwrap_or(1),
+            centroid_decay: cj.get("centroid_decay").and_then(Json::as_f64).unwrap_or(0.999),
+            plan,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(fields) = root.get("artifacts").and_then(Json::fields) {
+            for (name, a) in fields {
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactInfo {
+                        file: s(a.get("file"), "artifact file")?,
+                        scan_steps: a.get("scan_steps").and_then(Json::as_usize),
+                        batch: a.get("batch").and_then(Json::as_usize),
+                        inputs: a.get("inputs").and_then(Json::as_str).unwrap_or("").to_string(),
+                        outputs: a.get("outputs").and_then(Json::as_str).unwrap_or("").to_string(),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            variant: s(root.get("variant"), "variant")?,
+            group: root.get("group").and_then(Json::as_str).unwrap_or("core").to_string(),
+            batch: u(root.get("batch"), "batch")?,
+            scan_steps: u(root.get("scan_steps"), "scan_steps")?,
+            n_params_total: u(root.get("n_params"), "n_params")?,
+            params,
+            config,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Number of parameter arrays (P): the lowered train artifacts take
+    /// 3P + 3 inputs (params, m, v, step, lr, tokens).
+    pub fn n_param_arrays(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let info = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {} has no artifact '{name}'", self.variant))?;
+        Ok(self.dir.join(&info.file))
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Layers that have routing heads, with their centroid param index.
+    pub fn routing_layers(&self) -> Vec<(usize, usize)> {
+        (0..self.config.n_layers)
+            .filter_map(|l| {
+                let name = format!("layer{l:02}.attn.centroids");
+                self.param_index(&name).map(|i| (l, i))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+          "variant": "t", "group": "core", "batch": 4, "scan_steps": 2,
+          "n_params": 100,
+          "config": {"vocab_size": 256, "d_model": 64, "n_layers": 2,
+                     "n_heads": 4, "seq_len": 128, "window": 32,
+                     "n_clusters": 4, "routing_window": 32,
+                     "strided_stride": 16, "centroid_decay": 0.999,
+                     "plan": [{"local": 4}, {"local": 2, "routing": 2}]},
+          "params": [{"name": "layer01.attn.centroids", "shape": [2,4,16], "dtype": "f32"},
+                     {"name": "tok_emb", "shape": [256,64], "dtype": "f32"}],
+          "artifacts": {"train_block": {"file": "train_block.hlo.txt",
+                                        "scan_steps": 2,
+                                        "inputs": "x", "outputs": "y"}}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&sample_json(), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.variant, "t");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.config.plan[1].routing, 2);
+        assert_eq!(m.routing_layers(), vec![(1, 0)]);
+        assert_eq!(m.artifact_path("train_block").unwrap(),
+                   Path::new("/tmp/x/train_block.hlo.txt"));
+        assert!(m.artifact_path("nope").is_err());
+    }
+
+    #[test]
+    fn head_plan_kinds() {
+        let p = HeadPlan { local: 2, routing: 1, full: 0, random: 1, strided: 0 };
+        assert_eq!(p.kind_of(0), "local");
+        assert_eq!(p.kind_of(1), "local");
+        assert_eq!(p.kind_of(2), "routing");
+        assert_eq!(p.kind_of(3), "random");
+        assert_eq!(p.heads_of("routing"), vec![2]);
+        assert_eq!(p.total(), 4);
+    }
+}

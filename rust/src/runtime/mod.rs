@@ -1,0 +1,115 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute from
+//! the Rust hot path.  Python never runs here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format because xla_extension 0.5.1
+//! rejects jax≥0.5's 64-bit-id serialized protos.
+
+pub mod literal_util;
+pub mod manifest;
+pub mod state;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub use literal_util::*;
+pub use manifest::{ArtifactInfo, HeadPlan, Manifest, ModelConfig, ParamSpec};
+pub use state::{load_params_npz, ModelState};
+
+/// A PJRT client plus a compile cache keyed by HLO file path: each artifact
+/// is compiled exactly once per process, then reused by trainers, eval
+/// loops, samplers and benches.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: Mutex<BTreeMap<PathBuf, std::sync::Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text file (cached).
+    pub fn compile(&self, path: &Path) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// One variant's artifact directory + manifest.
+pub struct Artifacts {
+    pub manifest: Manifest,
+}
+
+impl Artifacts {
+    /// Load `<root>/<variant>/manifest.json`.
+    pub fn load(root: &Path, variant: &str) -> Result<Artifacts> {
+        let dir = root.join(variant);
+        if !dir.join("manifest.json").exists() {
+            return Err(anyhow!(
+                "no artifacts for variant '{variant}' under {} — run `make artifacts`",
+                root.display()
+            ));
+        }
+        Ok(Artifacts { manifest: Manifest::load(&dir)? })
+    }
+
+    /// All variants available under an artifact root.
+    pub fn list(root: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(root).with_context(|| format!("{}", root.display()))? {
+            let entry = entry?;
+            if entry.path().join("manifest.json").exists() {
+                names.push(entry.file_name().to_string_lossy().to_string());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Compile one of this variant's artifacts.
+    pub fn executable(
+        &self,
+        rt: &Runtime,
+        name: &str,
+    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        rt.compile(&self.manifest.artifact_path(name)?)
+    }
+
+    /// Seeded initial state.
+    pub fn init_state(&self) -> Result<ModelState> {
+        ModelState::init(&self.manifest)
+    }
+}
+
+/// Execute an executable whose result is a tuple, returning the tuple
+/// elements as host literals.  (PJRT under this crate returns one
+/// tuple-shaped buffer; we untuple on the host.)
+pub fn execute_tuple(exe: &PjRtLoadedExecutable, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    let outs = exe.execute::<&Literal>(inputs).context("executing artifact")?;
+    let lit = outs
+        .first()
+        .and_then(|replica| replica.first())
+        .ok_or_else(|| anyhow!("execution produced no outputs"))?
+        .to_literal_sync()?;
+    Ok(lit.to_tuple()?)
+}

@@ -1,0 +1,154 @@
+//! Model training state: parameters + Adam moments + step counter.
+//!
+//! Parameters live as host literals between executions (the published
+//! `xla` crate returns multi-result executions as one tuple buffer, so
+//! on-device chaining is impossible; the scanned train-block artifact
+//! amortizes the host round-trip — see DESIGN.md).  Checkpoints are npz
+//! (numpy-compatible) plus a JSON sidecar with the step counter, readable
+//! by both numpy and this runtime.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal};
+
+use super::literal_util::{dims_of, zeros_f32};
+use super::manifest::Manifest;
+use crate::util::json::Json;
+
+/// Full optimizer state for one model variant.
+pub struct ModelState {
+    pub params: Vec<Literal>,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    pub step: i64,
+}
+
+impl ModelState {
+    /// Load the seeded initial parameters written by `aot.py` and zero
+    /// Adam moments.
+    pub fn init(manifest: &Manifest) -> Result<ModelState> {
+        let npz = manifest.dir.join("init_params.npz");
+        let params = load_params_npz(manifest, &npz)?;
+        let (m, v) = zero_moments(manifest);
+        Ok(ModelState { params, m, v, step: 0 })
+    }
+
+    /// Fresh zero moments matching the manifest's parameter shapes.
+    pub fn with_params(manifest: &Manifest, params: Vec<Literal>) -> Result<ModelState> {
+        validate_params(manifest, &params)?;
+        let (m, v) = zero_moments(manifest);
+        Ok(ModelState { params, m, v, step: 0 })
+    }
+
+    /// Save a checkpoint: `<path>.npz` (params + moments) and
+    /// `<path>.json` (step counter, variant echo).
+    pub fn save(&self, manifest: &Manifest, path: &Path) -> Result<()> {
+        let mut entries: Vec<(String, &Literal)> = Vec::new();
+        for (spec, lit) in manifest.params.iter().zip(&self.params) {
+            entries.push((format!("p/{}", spec.name), lit));
+        }
+        for (spec, lit) in manifest.params.iter().zip(&self.m) {
+            entries.push((format!("m/{}", spec.name), lit));
+        }
+        for (spec, lit) in manifest.params.iter().zip(&self.v) {
+            entries.push((format!("v/{}", spec.name), lit));
+        }
+        // NOTE: the crate's Literal::write_npz is broken for f32 (type
+        // check in its u8 copy path) — use the in-repo npz substrate.
+        crate::util::npz::write_npz(&entries, path.with_extension("npz"))?;
+        let side = Json::Obj(vec![
+            ("variant".into(), Json::Str(manifest.variant.clone())),
+            ("step".into(), Json::Num(self.step as f64)),
+        ]);
+        std::fs::write(path.with_extension("json"), side.to_string())?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by `save`.
+    pub fn load(manifest: &Manifest, path: &Path) -> Result<ModelState> {
+        let npz = path.with_extension("npz");
+        let all = Literal::read_npz(&npz, &())
+            .with_context(|| format!("reading {}", npz.display()))?;
+        let mut by_name: std::collections::HashMap<String, Literal> =
+            all.into_iter().collect();
+        let mut take = |prefix: &str| -> Result<Vec<Literal>> {
+            manifest
+                .params
+                .iter()
+                .map(|spec| {
+                    by_name
+                        .remove(&format!("{prefix}/{}", spec.name))
+                        .ok_or_else(|| anyhow!("checkpoint missing {prefix}/{}", spec.name))
+                })
+                .collect()
+        };
+        let params = take("p")?;
+        let m = take("m")?;
+        let v = take("v")?;
+        validate_params(manifest, &params)?;
+
+        let side_path = path.with_extension("json");
+        let step = match std::fs::read_to_string(&side_path) {
+            Ok(text) => Json::parse(&text)?
+                .get("step")
+                .and_then(Json::as_i64)
+                .unwrap_or(0),
+            Err(_) => 0,
+        };
+        Ok(ModelState { params, m, v, step })
+    }
+
+    /// Parameters only (for eval / sampling executables).
+    pub fn param_refs(&self) -> Vec<&Literal> {
+        self.params.iter().collect()
+    }
+
+    /// Total number of scalar parameters.
+    pub fn numel(&self) -> usize {
+        self.params
+            .iter()
+            .map(|l| l.element_count())
+            .sum()
+    }
+}
+
+fn zero_moments(manifest: &Manifest) -> (Vec<Literal>, Vec<Literal>) {
+    let zeros = |m: &Manifest| -> Vec<Literal> {
+        m.params.iter().map(|spec| zeros_f32(&spec.shape)).collect()
+    };
+    (zeros(manifest), zeros(manifest))
+}
+
+fn validate_params(manifest: &Manifest, params: &[Literal]) -> Result<()> {
+    if params.len() != manifest.params.len() {
+        bail!("expected {} param arrays, got {}", manifest.params.len(), params.len());
+    }
+    for (spec, lit) in manifest.params.iter().zip(params) {
+        let dims = dims_of(lit)?;
+        if dims != spec.shape {
+            bail!("param {}: manifest shape {:?} != literal shape {:?}",
+                  spec.name, spec.shape, dims);
+        }
+    }
+    Ok(())
+}
+
+/// Read `init_params.npz` (or any flat npz of `name -> array`) in manifest
+/// order.
+pub fn load_params_npz(manifest: &Manifest, path: &Path) -> Result<Vec<Literal>> {
+    let all = Literal::read_npz(path, &())
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut by_name: std::collections::HashMap<String, Literal> = all.into_iter().collect();
+    let params: Vec<Literal> = manifest
+        .params
+        .iter()
+        .map(|spec| {
+            by_name
+                .remove(&spec.name)
+                .ok_or_else(|| anyhow!("npz missing param {}", spec.name))
+        })
+        .collect::<Result<_>>()?;
+    validate_params(manifest, &params)?;
+    Ok(params)
+}

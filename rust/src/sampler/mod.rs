@@ -1,0 +1,182 @@
+//! Autoregressive sampling: temperature + nucleus (top-p) — the decoding
+//! setup of Appendix A (nucleus sampling with p = 0.8, temperature 1.0).
+//!
+//! The model forward runs through the AOT `logits` artifact; this module
+//! owns the host-side categorical sampling and the generation loop
+//! plumbing (prompt, max tokens, stop condition).
+
+use anyhow::{anyhow, Result};
+use xla::PjRtLoadedExecutable;
+
+use crate::runtime::{execute_tuple, i32_literal, to_f32_vec, ModelState};
+use crate::util::rng::Rng;
+
+/// Sampler hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    pub temperature: f32,
+    /// Nucleus mass; 1.0 disables the top-p filter.
+    pub top_p: f32,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        // Appendix A: nucleus sampling with p=0.8, temperature 1.0
+        SamplerConfig { temperature: 1.0, top_p: 0.8 }
+    }
+}
+
+/// Sample one token id from raw logits.
+pub fn sample_logits(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize {
+    let probs = nucleus_probs(logits, cfg);
+    rng.weighted(&probs)
+}
+
+/// Temperature + top-p filtered probability vector (f64 for the sampler).
+pub fn nucleus_probs(logits: &[f32], cfg: SamplerConfig) -> Vec<f64> {
+    let t = cfg.temperature.max(1e-4) as f64;
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut probs: Vec<f64> =
+        logits.iter().map(|&l| ((l as f64 - max) / t).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= z;
+    }
+    if cfg.top_p < 1.0 {
+        // keep the smallest prefix of sorted probs with mass >= top_p
+        let mut order: Vec<usize> = (0..probs.len()).collect();
+        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut mass = 0.0;
+        let mut keep = vec![false; probs.len()];
+        for &i in &order {
+            keep[i] = true;
+            mass += probs[i];
+            if mass >= cfg.top_p as f64 {
+                break;
+            }
+        }
+        for (i, p) in probs.iter_mut().enumerate() {
+            if !keep[i] {
+                *p = 0.0;
+            }
+        }
+    }
+    probs
+}
+
+/// Autoregressive generator over a fixed-context `logits` artifact.
+///
+/// The artifact's signature is `(params, tokens i32[1, T]) -> logits
+/// f32[1, T, V]`.  The context is a sliding window of the last T tokens;
+/// generation re-runs the forward per token (O(T²) per token — the
+/// honest cost of sampling without a KV-cache artifact; see DESIGN.md
+/// §Perf for the planned incremental-decode artifact).
+pub struct Generator<'a> {
+    exe: &'a PjRtLoadedExecutable,
+    state: &'a ModelState,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub cfg: SamplerConfig,
+    rng: Rng,
+}
+
+impl<'a> Generator<'a> {
+    pub fn new(
+        exe: &'a PjRtLoadedExecutable,
+        state: &'a ModelState,
+        seq_len: usize,
+        vocab: usize,
+        cfg: SamplerConfig,
+        seed: u64,
+    ) -> Self {
+        Generator { exe, state, seq_len, vocab, cfg, rng: Rng::new(seed) }
+    }
+
+    /// Logits for the next token after `context` (last position that holds
+    /// a real token).  Context is right-padded with zeros to T.
+    pub fn next_logits(&self, context: &[i32]) -> Result<Vec<f32>> {
+        if context.is_empty() || context.len() > self.seq_len {
+            return Err(anyhow!("context length {} not in [1, {}]", context.len(), self.seq_len));
+        }
+        let mut padded = vec![0i32; self.seq_len];
+        padded[..context.len()].copy_from_slice(context);
+        let tokens = i32_literal(&padded, &[1, self.seq_len])?;
+        let mut inputs: Vec<&xla::Literal> = self.state.params.iter().collect();
+        inputs.push(&tokens);
+        let outs = execute_tuple(self.exe, &inputs)?;
+        let logits = to_f32_vec(&outs[0])?;
+        let pos = context.len() - 1;
+        Ok(logits[pos * self.vocab..(pos + 1) * self.vocab].to_vec())
+    }
+
+    /// Generate `n` tokens continuing `prompt`.
+    pub fn generate(&mut self, prompt: &[i32], n: usize) -> Result<Vec<i32>> {
+        let mut out: Vec<i32> = prompt.to_vec();
+        if out.is_empty() {
+            out.push(0);
+        }
+        for _ in 0..n {
+            let start = out.len().saturating_sub(self.seq_len);
+            let logits = self.next_logits(&out[start..])?;
+            let tok = sample_logits(&logits, self.cfg, &mut self.rng);
+            out.push(tok as i32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nucleus_keeps_top_mass() {
+        // peaked distribution: top-p=0.5 keeps only the argmax
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let probs = nucleus_probs(&logits, SamplerConfig { temperature: 1.0, top_p: 0.5 });
+        assert!(probs[0] > 0.99);
+        assert!(probs[1] == 0.0 && probs[2] == 0.0 && probs[3] == 0.0);
+    }
+
+    #[test]
+    fn top_p_one_keeps_everything() {
+        let logits = vec![1.0, 0.5, 0.0];
+        let probs = nucleus_probs(&logits, SamplerConfig { temperature: 1.0, top_p: 1.0 });
+        assert!(probs.iter().all(|&p| p > 0.0));
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let logits = vec![1.0, 0.9];
+        let hot = nucleus_probs(&logits, SamplerConfig { temperature: 2.0, top_p: 1.0 });
+        let cold = nucleus_probs(&logits, SamplerConfig { temperature: 0.1, top_p: 1.0 });
+        assert!(cold[0] > hot[0]);
+    }
+
+    #[test]
+    fn sampling_respects_support() {
+        let mut rng = Rng::new(3);
+        let logits = vec![5.0, f32::NEG_INFINITY + 1e30, 5.0, -100.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_p: 0.95 };
+        for _ in 0..100 {
+            let t = sample_logits(&logits, cfg, &mut rng);
+            assert!(t == 0 || t == 2, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SamplerConfig::default();
+        let a: Vec<usize> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| sample_logits(&logits, cfg, &mut rng)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| sample_logits(&logits, cfg, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,162 @@
+//! Greedy byte-pair encoding (PG-19 subword setting).
+//!
+//! Trained on corpus bytes: iteratively merge the most frequent adjacent
+//! token pair until the target vocabulary size is reached (ties broken by
+//! pair id for determinism).  Encoding applies merges in training order —
+//! the standard BPE inference rule.  Stands in for PG-19's ~98k
+//! sentencepiece vocabulary at reproduction scale.
+
+use std::collections::HashMap;
+
+use super::Tokenizer;
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// Merge rules in training order: (left, right) -> new id.
+    merges: Vec<(i32, i32)>,
+    /// id -> byte string.
+    vocab: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train on raw bytes up to `vocab_size` tokens (>= 256).
+    pub fn train(corpus: &[u8], vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= 256);
+        let mut vocab: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        let mut merges: Vec<(i32, i32)> = Vec::new();
+        let mut seq: Vec<i32> = corpus.iter().map(|&b| b as i32).collect();
+
+        while vocab.len() < vocab_size {
+            // count adjacent pairs
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = vocab.len() as i32;
+            let mut merged = vocab[pair.0 as usize].clone();
+            merged.extend_from_slice(&vocab[pair.1 as usize]);
+            vocab.push(merged);
+            merges.push(pair);
+            seq = merge_once(&seq, pair, new_id);
+        }
+        Bpe { merges, vocab }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    pub fn encode_bytes(&self, bytes: &[u8]) -> Vec<i32> {
+        let mut seq: Vec<i32> = bytes.iter().map(|&b| b as i32).collect();
+        for (rule_idx, &pair) in self.merges.iter().enumerate() {
+            let new_id = 256 + rule_idx as i32;
+            if seq.len() < 2 {
+                break;
+            }
+            seq = merge_once(&seq, pair, new_id);
+        }
+        seq
+    }
+
+    pub fn decode_bytes(&self, tokens: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            if let Some(bytes) = self.vocab.get(t as usize) {
+                out.extend_from_slice(bytes);
+            }
+        }
+        out
+    }
+
+    /// Mean bytes per token on a sample (compression ratio; > 1 once
+    /// merges exist).
+    pub fn bytes_per_token(&self, sample: &[u8]) -> f64 {
+        let toks = self.encode_bytes(sample);
+        if toks.is_empty() {
+            return 0.0;
+        }
+        sample.len() as f64 / toks.len() as f64
+    }
+}
+
+fn merge_once(seq: &[i32], pair: (i32, i32), new_id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(seq.len());
+    let mut i = 0;
+    while i < seq.len() {
+        if i + 1 < seq.len() && seq[i] == pair.0 && seq[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(seq[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+impl Tokenizer for Bpe {
+    fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        self.encode_bytes(text.as_bytes())
+    }
+
+    fn decode(&self, tokens: &[i32]) -> String {
+        String::from_utf8_lossy(&self.decode_bytes(tokens)).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact() {
+        let corpus = b"abab ababab abab cdcd cdcdcd".repeat(10);
+        let bpe = Bpe::train(&corpus, 270);
+        let text = "abab cdcd abab";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let corpus = b"the quick the quick the quick brown fox ".repeat(20);
+        let bpe = Bpe::train(&corpus, 300);
+        assert!(bpe.n_merges() > 0);
+        assert!(bpe.bytes_per_token(&corpus) > 1.5, "bpt {}", bpe.bytes_per_token(&corpus));
+    }
+
+    #[test]
+    fn vocab_capped() {
+        let corpus = b"aaaabbbbccccdddd".repeat(50);
+        let bpe = Bpe::train(&corpus, 260);
+        assert!(bpe.vocab_size() <= 260);
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let corpus = b"hello world hello world hello".repeat(8);
+        let a = Bpe::train(&corpus, 280);
+        let b = Bpe::train(&corpus, 280);
+        assert_eq!(a.encode("hello world"), b.encode("hello world"));
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let corpus = b"xyzxyzxyz".repeat(30);
+        let bpe = Bpe::train(&corpus, 280);
+        let toks = bpe.encode("xyzxyz");
+        assert!(toks.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    }
+}

@@ -1,0 +1,46 @@
+//! Byte-level tokenizer (enwik-8 setting): token id == byte value.
+
+use super::Tokenizer;
+
+#[derive(Debug, Default, Clone)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "The Council of Basle, 1487.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "naïve — ✓";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.encode(s).len(), s.len()); // bytes, not chars
+    }
+
+    #[test]
+    fn vocab_is_256() {
+        assert_eq!(ByteTokenizer.vocab_size(), 256);
+    }
+}

@@ -1,0 +1,21 @@
+//! Tokenization substrates.
+//!
+//! The paper's benchmarks span three granularities — bytes (enwik-8),
+//! words (Wikitext-103) and subwords (PG-19's ~98k sentencepiece vocab).
+//! This module provides all three: a byte tokenizer, a frequency-capped
+//! word vocabulary, and a greedy-merge BPE trained on corpus bytes.
+
+pub mod bpe;
+pub mod byte;
+pub mod words;
+
+pub use bpe::Bpe;
+pub use byte::ByteTokenizer;
+pub use words::WordVocab;
+
+/// Common tokenizer interface.
+pub trait Tokenizer {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, tokens: &[i32]) -> String;
+}

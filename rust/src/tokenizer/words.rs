@@ -1,0 +1,122 @@
+//! Word-level vocabulary (Wikitext-103 setting): whitespace/punctuation
+//! word split, frequency-ranked vocab with `<unk>`, exact round-trip for
+//! in-vocabulary text via space joining.
+
+use std::collections::HashMap;
+
+use super::Tokenizer;
+
+pub const UNK: i32 = 0;
+
+#[derive(Debug, Clone)]
+pub struct WordVocab {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+}
+
+impl WordVocab {
+    /// Build from a corpus: the `max_vocab - 1` most frequent words (id 0
+    /// is `<unk>`), ties broken lexicographically for determinism.
+    pub fn build(corpus: &str, max_vocab: usize) -> WordVocab {
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for w in corpus.split_whitespace() {
+            *freq.entry(w).or_insert(0) += 1;
+        }
+        let mut by_freq: Vec<(&str, usize)> = freq.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut id_to_word = vec!["<unk>".to_string()];
+        for (w, _) in by_freq.into_iter().take(max_vocab.saturating_sub(1)) {
+            id_to_word.push(w.to_string());
+        }
+        let word_to_id =
+            id_to_word.iter().enumerate().map(|(i, w)| (w.clone(), i as i32)).collect();
+        WordVocab { word_to_id, id_to_word }
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        self.word_to_id.get(word).copied().unwrap_or(UNK)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.id_to_word.get(id as usize).map(String::as_str).unwrap_or("<unk>")
+    }
+
+    /// Fraction of corpus tokens covered (non-unk).
+    pub fn coverage(&self, corpus: &str) -> f64 {
+        let mut total = 0usize;
+        let mut known = 0usize;
+        for w in corpus.split_whitespace() {
+            total += 1;
+            if self.word_to_id.contains_key(w) {
+                known += 1;
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            known as f64 / total as f64
+        }
+    }
+}
+
+impl Tokenizer for WordVocab {
+    fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    fn decode(&self, tokens: &[i32]) -> String {
+        tokens.iter().map(|&t| self.word(t)).collect::<Vec<_>>().join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequent_words_in_vocab() {
+        let corpus = "the cat sat on the mat the cat";
+        let v = WordVocab::build(corpus, 100);
+        assert_ne!(v.id("the"), UNK);
+        assert_ne!(v.id("cat"), UNK);
+        assert_eq!(v.id("zebra"), UNK);
+    }
+
+    #[test]
+    fn capped_vocab_keeps_most_frequent() {
+        let corpus = "a a a a b b b c c d";
+        let v = WordVocab::build(corpus, 3); // <unk> + 2 words
+        assert_eq!(v.vocab_size(), 3);
+        assert_ne!(v.id("a"), UNK);
+        assert_ne!(v.id("b"), UNK);
+        assert_eq!(v.id("c"), UNK);
+    }
+
+    #[test]
+    fn roundtrip_known_text() {
+        let corpus = "alpha beta gamma alpha beta";
+        let v = WordVocab::build(corpus, 100);
+        let text = "alpha gamma beta";
+        assert_eq!(v.decode(&v.encode(text)), text);
+    }
+
+    #[test]
+    fn coverage_metric() {
+        let corpus = "x x y";
+        let v = WordVocab::build(corpus, 2); // only <unk> + "x"
+        assert!((v.coverage(corpus) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_ids() {
+        let corpus = "b a b a c";
+        let v1 = WordVocab::build(corpus, 10);
+        let v2 = WordVocab::build(corpus, 10);
+        assert_eq!(v1.id("a"), v2.id("a"));
+        assert_eq!(v1.id("c"), v2.id("c"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Dependency-free substrates: JSON, PRNG, CLI parsing, bench timing.
+
+pub mod cli;
+pub mod json;
+pub mod npz;
+pub mod rng;
+pub mod timing;

@@ -1,0 +1,210 @@
+//! Minimal numpy-compatible `.npz` writer.
+//!
+//! The published `xla` crate's `Literal::write_npz` is unusable for f32
+//! tensors (its `write()` copies through a `Vec<u8>` and trips its own
+//! element-type check), so checkpoints are written with this hand-rolled
+//! implementation: a STORED (uncompressed) ZIP of npy-v1.0 members, the
+//! exact layout `numpy.savez` produces.  Readable by `numpy.load` and by
+//! the crate's (working) `read_npz`.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// CRC-32 (IEEE 802.3), table-driven.
+fn crc32(data: &[u8]) -> u32 {
+    static mut TABLE: [u32; 256] = [0; 256];
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        for i in 0..256u32 {
+            let mut c = i;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            unsafe { TABLE[i as usize] = c };
+        }
+    });
+    let table = unsafe { &*std::ptr::addr_of!(TABLE) };
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Serialize one literal as npy v1.0 bytes.
+fn npy_bytes(lit: &Literal) -> Result<Vec<u8>> {
+    let shape = lit.array_shape()?;
+    let descr = match shape.ty() {
+        ElementType::F32 => "<f4",
+        ElementType::F64 => "<f8",
+        ElementType::S32 => "<i4",
+        ElementType::S64 => "<i8",
+        ElementType::U8 => "|u1",
+        other => return Err(anyhow!("npz writer: unsupported element type {other:?}")),
+    };
+    let dims: Vec<String> = shape.dims().iter().map(|d| d.to_string()).collect();
+    let shape_str = match dims.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", dims[0]),
+        _ => format!("({})", dims.join(", ")),
+    };
+    let mut header =
+        format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}");
+    // pad so that magic(6)+version(2)+len(2)+header is a multiple of 64
+    let unpadded = 6 + 2 + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut out = Vec::new();
+    out.extend_from_slice(b"\x93NUMPY");
+    out.extend_from_slice(&[1u8, 0u8]);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+
+    // payload: raw little-endian element bytes via the typed copy path
+    let n = lit.element_count();
+    match shape.ty() {
+        ElementType::F32 => {
+            let v = lit.to_vec::<f32>()?;
+            out.extend(v.iter().flat_map(|x| x.to_le_bytes()));
+        }
+        ElementType::F64 => {
+            let v = lit.to_vec::<f64>()?;
+            out.extend(v.iter().flat_map(|x| x.to_le_bytes()));
+        }
+        ElementType::S32 => {
+            let v = lit.to_vec::<i32>()?;
+            out.extend(v.iter().flat_map(|x| x.to_le_bytes()));
+        }
+        ElementType::S64 => {
+            let v = lit.to_vec::<i64>()?;
+            out.extend(v.iter().flat_map(|x| x.to_le_bytes()));
+        }
+        ElementType::U8 => {
+            let v = lit.to_vec::<u8>()?;
+            out.extend_from_slice(&v);
+        }
+        _ => unreachable!(),
+    }
+    debug_assert!(out.len() > n);
+    Ok(out)
+}
+
+/// Write `name -> literal` entries as an uncompressed npz.
+pub fn write_npz<P: AsRef<Path>>(entries: &[(String, &Literal)], path: P) -> Result<()> {
+    let mut file = std::fs::File::create(path.as_ref())?;
+    let mut central: Vec<u8> = Vec::new();
+    let mut offset = 0u32;
+    let mut n_entries = 0u16;
+
+    for (name, lit) in entries {
+        let fname = format!("{name}.npy");
+        let data = npy_bytes(lit)?;
+        let crc = crc32(&data);
+        let (flen, dlen) = (fname.len() as u16, data.len() as u32);
+
+        // local file header
+        let mut local: Vec<u8> = Vec::with_capacity(30 + fname.len());
+        local.extend_from_slice(&0x04034b50u32.to_le_bytes());
+        local.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        local.extend_from_slice(&0u16.to_le_bytes()); // flags
+        local.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+        local.extend_from_slice(&0u16.to_le_bytes()); // mod time
+        local.extend_from_slice(&0u16.to_le_bytes()); // mod date
+        local.extend_from_slice(&crc.to_le_bytes());
+        local.extend_from_slice(&dlen.to_le_bytes()); // compressed
+        local.extend_from_slice(&dlen.to_le_bytes()); // uncompressed
+        local.extend_from_slice(&flen.to_le_bytes());
+        local.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        local.extend_from_slice(fname.as_bytes());
+        file.write_all(&local)?;
+        file.write_all(&data)?;
+
+        // central directory record
+        central.extend_from_slice(&0x02014b50u32.to_le_bytes());
+        central.extend_from_slice(&20u16.to_le_bytes()); // version made by
+        central.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes());
+        central.extend_from_slice(&crc.to_le_bytes());
+        central.extend_from_slice(&dlen.to_le_bytes());
+        central.extend_from_slice(&dlen.to_le_bytes());
+        central.extend_from_slice(&flen.to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes()); // extra
+        central.extend_from_slice(&0u16.to_le_bytes()); // comment
+        central.extend_from_slice(&0u16.to_le_bytes()); // disk
+        central.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+        central.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+        central.extend_from_slice(&offset.to_le_bytes());
+        central.extend_from_slice(fname.as_bytes());
+
+        offset = offset
+            .checked_add(local.len() as u32)
+            .and_then(|o| o.checked_add(dlen))
+            .ok_or_else(|| anyhow!("npz too large for zip32"))?;
+        n_entries += 1;
+    }
+
+    // end of central directory
+    file.write_all(&central)?;
+    let mut eocd: Vec<u8> = Vec::with_capacity(22);
+    eocd.extend_from_slice(&0x06054b50u32.to_le_bytes());
+    eocd.extend_from_slice(&0u16.to_le_bytes()); // disk
+    eocd.extend_from_slice(&0u16.to_le_bytes()); // cd disk
+    eocd.extend_from_slice(&n_entries.to_le_bytes());
+    eocd.extend_from_slice(&n_entries.to_le_bytes());
+    eocd.extend_from_slice(&(central.len() as u32).to_le_bytes());
+    eocd.extend_from_slice(&offset.to_le_bytes());
+    eocd.extend_from_slice(&0u16.to_le_bytes()); // comment len
+    file.write_all(&eocd)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal_util::{f32_literal, i32_literal, to_f32_vec, to_i32_vec};
+    use xla::FromRawBytes;
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"hello"), 0x3610_A686);
+    }
+
+    #[test]
+    fn roundtrip_via_crate_reader() {
+        let dir = std::env::temp_dir().join("rtx_npz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.npz");
+        let a = f32_literal(&[1.5, -2.0, 3.25, 0.0, 7.0, -1.0], &[2, 3]).unwrap();
+        let b = i32_literal(&[7, -3, 0], &[3]).unwrap();
+        write_npz(&[("x/a".to_string(), &a), ("b".to_string(), &b)], &path).unwrap();
+
+        let back = Literal::read_npz(&path, &()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "x/a");
+        assert_eq!(to_f32_vec(&back[0].1).unwrap(), vec![1.5, -2.0, 3.25, 0.0, 7.0, -1.0]);
+        assert_eq!(to_i32_vec(&back[1].1).unwrap(), vec![7, -3, 0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scalar_shape_header() {
+        let dir = std::env::temp_dir().join("rtx_npz_scalar");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.npz");
+        let s = xla::Literal::scalar(2.5f32);
+        write_npz(&[("s".to_string(), &s)], &path).unwrap();
+        let back = Literal::read_npz(&path, &()).unwrap();
+        assert_eq!(back[0].1.get_first_element::<f32>().unwrap(), 2.5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

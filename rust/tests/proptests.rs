@@ -1,0 +1,377 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! The offline environment ships no `proptest`, so this file includes a
+//! small hand-rolled property harness (`props!`): each property runs over
+//! hundreds of seeded random cases and reports the failing seed for
+//! shrink-by-hand reproduction.  Invariants covered: routing patterns
+//! (balance, causality, membership), batcher (no loss/dup), k-means
+//! (norms, assignment optimality), tokenizers (round-trips), sampler
+//! (support/normalization), schedules (finiteness/monotonicity), JSON
+//! (round-trip).
+
+use routing_transformer::analysis::{jsd, JSD_MAX};
+use routing_transformer::attention::{attention_flops, optimal_clusters, AttentionKind, Pattern};
+use routing_transformer::coordinator::LrSchedule;
+use routing_transformer::data::{self, TokenSource};
+use routing_transformer::kmeans::{dot, norm, SphericalKMeans};
+use routing_transformer::sampler::{nucleus_probs, sample_logits, SamplerConfig};
+use routing_transformer::tokenizer::{Bpe, ByteTokenizer, Tokenizer, WordVocab};
+use routing_transformer::util::json::Json;
+use routing_transformer::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases; panic with the failing seed.
+fn check<F: Fn(&mut Rng)>(name: &str, n: usize, f: F) {
+    for case in 0..n {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- routing
+
+#[test]
+fn prop_top_w_members_balanced_sorted_unique() {
+    check("top_w_balanced", 200, |rng| {
+        let k = rng.range(1, 6);
+        let dim = rng.range(2, 17);
+        let n = rng.range(k, 65);
+        let w = rng.range(1, n + 1);
+        let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let km = SphericalKMeans::new(k, dim, 0.5, rng.next_u64());
+        let members = km.top_w_members(&xs, n, w);
+        assert_eq!(members.len(), k);
+        for m in &members {
+            assert_eq!(m.len(), w.min(n), "balanced clusters (Alg.1)");
+            assert!(m.windows(2).all(|p| p[0] < p[1]), "sorted + unique");
+            assert!(m.iter().all(|&i| i < n));
+        }
+    });
+}
+
+#[test]
+fn prop_top_w_contains_argmax_member() {
+    // each cluster's top-w must contain the single highest-dot vector
+    check("top_w_argmax", 100, |rng| {
+        let k = rng.range(1, 5);
+        let dim = rng.range(2, 9);
+        let n = rng.range(4, 33);
+        let w = rng.range(1, n);
+        let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let km = SphericalKMeans::new(k, dim, 0.5, rng.next_u64());
+        let members = km.top_w_members(&xs, n, w);
+        for (c, m) in members.iter().enumerate() {
+            let mu = km.centroid(c);
+            let best = (0..n)
+                .max_by(|&a, &b| {
+                    dot(mu, &xs[a * dim..(a + 1) * dim])
+                        .partial_cmp(&dot(mu, &xs[b * dim..(b + 1) * dim]))
+                        .unwrap()
+                })
+                .unwrap();
+            let best_score = dot(mu, &xs[best * dim..(best + 1) * dim]);
+            // some member must score >= best (ties allowed)
+            assert!(
+                m.iter().any(|&i| dot(mu, &xs[i * dim..(i + 1) * dim]) >= best_score - 1e-6),
+                "top-w missing the argmax member"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_routing_pattern_causal_and_symmetric_membership() {
+    check("routing_pattern", 100, |rng| {
+        let n = rng.range(4, 48);
+        let k = rng.range(1, 5);
+        let clusters: Vec<Vec<usize>> = (0..k)
+            .map(|_| {
+                let mut m: Vec<usize> = (0..n).filter(|_| rng.chance(0.3)).collect();
+                m.dedup();
+                m
+            })
+            .collect();
+        let p = Pattern::routing(n, clusters.clone());
+        assert!(p.is_causal());
+        for i in 0..n {
+            for j in 0..=i {
+                let expect = clusters.iter().any(|m| m.contains(&i) && m.contains(&j));
+                assert_eq!(p.allowed(i, j), expect);
+                // membership symmetry modulo causality
+                if p.allowed(i, j) && j < i {
+                    assert!(!p.allowed(j, i), "causality");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pattern_nnz_matches_attend_sets() {
+    check("pattern_nnz", 60, |rng| {
+        let n = rng.range(2, 40);
+        let p = match rng.below(3) {
+            0 => Pattern::local(n, rng.range(1, n + 1)),
+            1 => Pattern::strided(n, rng.range(1, n + 1)),
+            _ => Pattern::block_local(n, rng.range(1, n + 1)),
+        };
+        let total: usize = (0..n).map(|i| p.attend_set(i).len()).sum();
+        assert_eq!(p.nnz(), total);
+        assert!(p.density() <= 1.0 + 1e-12);
+        // every token attends at least to itself for positional kinds
+        for i in 0..n {
+            assert!(p.allowed(i, i));
+        }
+    });
+}
+
+#[test]
+fn prop_complexity_routing_optimum_near_sqrt() {
+    check("complexity_opt", 30, |rng| {
+        let n = 1 << rng.range(8, 15);
+        let d = 1 << rng.range(4, 8);
+        let kopt = optimal_clusters(n);
+        let copt = attention_flops(AttentionKind::Routing { clusters: kopt }, n, d);
+        // cost function is convex-ish in k: both far extremes are worse
+        let far_lo = attention_flops(AttentionKind::Routing { clusters: (kopt / 8).max(1) }, n, d);
+        let far_hi = attention_flops(AttentionKind::Routing { clusters: kopt * 8 }, n, d);
+        assert!(copt <= far_lo && copt <= far_hi);
+    });
+}
+
+// ------------------------------------------------------------- k-means
+
+#[test]
+fn prop_kmeans_update_preserves_unit_norm() {
+    check("kmeans_norm", 100, |rng| {
+        let k = rng.range(1, 6);
+        let dim = rng.range(2, 12);
+        let n = rng.range(1, 64);
+        let mut km = SphericalKMeans::new(k, dim, rng.f32().clamp(0.01, 0.99), rng.next_u64());
+        let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        km.update(&xs, n);
+        for c in 0..k {
+            let nn = norm(km.centroid(c));
+            assert!((nn - 1.0).abs() < 1e-3, "norm {nn}");
+        }
+    });
+}
+
+#[test]
+fn prop_kmeans_assign_is_argmax() {
+    check("kmeans_assign", 100, |rng| {
+        let k = rng.range(1, 8);
+        let dim = rng.range(2, 12);
+        let km = SphericalKMeans::new(k, dim, 0.5, rng.next_u64());
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let a = km.assign(&x);
+        let scores = km.scores(&x);
+        for (c, &s) in scores.iter().enumerate() {
+            assert!(s <= scores[a] + 1e-6, "cluster {c} beats assigned {a}");
+        }
+    });
+}
+
+// ------------------------------------------------------------- batcher
+
+#[test]
+fn prop_batcher_no_token_lost_or_duplicated() {
+    struct Counter {
+        next: i32,
+    }
+    impl TokenSource for Counter {
+        fn vocab(&self) -> usize {
+            1 << 30
+        }
+        fn fill(&mut self, out: &mut [i32]) {
+            for t in out.iter_mut() {
+                *t = self.next;
+                self.next += 1;
+            }
+        }
+    }
+    check("batcher_conservation", 60, |rng| {
+        let b = rng.range(1, 5);
+        let s = rng.range(1, 5);
+        let t = rng.range(1, 33);
+        let lanes: Vec<Box<dyn TokenSource>> = (0..b)
+            .map(|i| Box::new(Counter { next: (i as i32) << 20 }) as Box<dyn TokenSource>)
+            .collect();
+        let mut batcher = routing_transformer::data::BlockBatcher::new(lanes, s, t);
+        let blocks = rng.range(1, 4);
+        let mut per_lane: Vec<Vec<i32>> = vec![Vec::new(); b];
+        for _ in 0..blocks {
+            let blk = batcher.next_block();
+            for si in 0..s {
+                for bi in 0..b {
+                    let off = (si * b + bi) * t;
+                    per_lane[bi].extend_from_slice(&blk.tokens[off..off + t]);
+                }
+            }
+        }
+        for (bi, lane) in per_lane.iter().enumerate() {
+            let base = (bi as i32) << 20;
+            let expect: Vec<i32> = (0..lane.len() as i32).map(|i| base + i).collect();
+            assert_eq!(lane, &expect, "lane {bi} must be contiguous");
+        }
+    });
+}
+
+#[test]
+fn prop_data_sources_deterministic_and_in_vocab() {
+    check("data_sources", 24, |rng| {
+        let seed = rng.next_u64();
+        for name in ["zipf", "needle", "bytes", "images"] {
+            let vocab = if name == "needle" { 512 } else { 256 };
+            let mk = || data::source_by_name(name, vocab, 256, 32, seed).unwrap();
+            let mut a = mk();
+            let mut b = mk();
+            let ta = data::take(a.as_mut(), 512);
+            let tb = data::take(b.as_mut(), 512);
+            assert_eq!(ta, tb, "{name} must be deterministic");
+            assert!(ta.iter().all(|&t| (t as usize) < vocab), "{name} in vocab");
+        }
+    });
+}
+
+// ------------------------------------------------------------ sampler
+
+#[test]
+fn prop_nucleus_probs_normalized_with_correct_support() {
+    check("nucleus", 150, |rng| {
+        let v = rng.range(2, 200);
+        let logits: Vec<f32> = (0..v).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let top_p = 0.1 + rng.f32() * 0.9;
+        let cfg = SamplerConfig { temperature: 0.2 + rng.f32() * 2.0, top_p };
+        let probs = nucleus_probs(&logits, cfg);
+        let mass: f64 = probs.iter().sum();
+        // kept mass renormalizes only at sampling; here mass <= 1 + eps
+        assert!(mass <= 1.0 + 1e-6);
+        assert!(mass > 0.0);
+        // the argmax logit always stays in the nucleus
+        let argmax = (0..v).max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap()).unwrap();
+        assert!(probs[argmax] > 0.0, "argmax dropped from nucleus");
+        // sampling only returns support members
+        let mut srng = Rng::new(rng.next_u64());
+        for _ in 0..20 {
+            let t = sample_logits(&logits, cfg, &mut srng);
+            assert!(probs[t] > 0.0, "sampled outside nucleus");
+        }
+    });
+}
+
+// ---------------------------------------------------------- schedules
+
+#[test]
+fn prop_schedules_finite_positive_and_warmup_monotone() {
+    check("schedules", 100, |rng| {
+        let warmup = rng.range(1, 1000) as u32;
+        let scale = 0.001 + rng.f32() * 10.0;
+        for sched in [
+            LrSchedule::Constant { lr: scale },
+            LrSchedule::InverseSqrt { scale, warmup },
+            LrSchedule::RsqrtDecay { lr: scale, warmup },
+        ] {
+            let mut prev = 0.0f32;
+            for step in 1..=warmup {
+                let lr = sched.lr(step);
+                assert!(lr.is_finite() && lr >= 0.0);
+                if !matches!(sched, LrSchedule::Constant { .. }) {
+                    assert!(lr >= prev - 1e-9, "warmup must be non-decreasing");
+                }
+                prev = lr;
+            }
+            // decay: far beyond warmup the lr is <= peak
+            let peak = sched.lr(warmup);
+            assert!(sched.lr(warmup * 100 + 1) <= peak + 1e-9);
+        }
+    });
+}
+
+// --------------------------------------------------------- tokenizers
+
+#[test]
+fn prop_byte_tokenizer_roundtrip() {
+    check("byte_roundtrip", 100, |rng| {
+        let len = rng.range(0, 200);
+        let s: String = (0..len).map(|_| rng.range(32, 127) as u8 as char).collect();
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&t.encode(&s)), s);
+    });
+}
+
+#[test]
+fn prop_word_vocab_roundtrip_known_words() {
+    check("word_roundtrip", 60, |rng| {
+        let lexicon = ["alpha", "beta", "gamma", "delta", "eps"];
+        let n = rng.range(5, 60);
+        let corpus: Vec<&str> = (0..n).map(|_| lexicon[rng.below(lexicon.len())]).collect();
+        let text = corpus.join(" ");
+        let v = WordVocab::build(&text, 100);
+        assert_eq!(v.decode(&v.encode(&text)), text);
+        assert!((v.coverage(&text) - 1.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_on_training_domain() {
+    check("bpe_roundtrip", 20, |rng| {
+        let words = ["rout", "ing", "trans", "form", "er", " "];
+        let corpus: String = (0..400).map(|_| words[rng.below(words.len())]).collect();
+        let bpe = Bpe::train(corpus.as_bytes(), 256 + rng.range(1, 64));
+        let sample: String = (0..50).map(|_| words[rng.below(words.len())]).collect();
+        assert_eq!(bpe.decode(&bpe.encode(&sample)), sample);
+        assert!(bpe.encode(&sample).len() <= sample.len());
+    });
+}
+
+// --------------------------------------------------------------- misc
+
+#[test]
+fn prop_jsd_bounds_and_symmetry() {
+    check("jsd", 150, |rng| {
+        let n = rng.range(2, 64);
+        let mk = |rng: &mut Rng| {
+            let mut v: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s: f64 = v.iter().sum();
+            v.iter_mut().for_each(|x| *x /= s);
+            v
+        };
+        let p = mk(rng);
+        let q = mk(rng);
+        let d = jsd(&p, &q);
+        assert!((0.0..=JSD_MAX + 1e-9).contains(&d));
+        assert!((d - jsd(&q, &p)).abs() < 1e-12);
+        assert!(jsd(&p, &p) < 1e-12);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => {
+                let len = rng.range(0, 12);
+                Json::Str((0..len).map(|_| rng.range(32, 127) as u8 as char).collect())
+            }
+            4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json_roundtrip", 150, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "roundtrip failed for {text}");
+    });
+}
