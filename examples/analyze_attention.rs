@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 use routing_transformer::analysis;
-use routing_transformer::attention::Pattern;
+use routing_transformer::attention::AttentionSpec;
 use routing_transformer::coordinator::{train_batcher, LrSchedule, TrainOptions, Trainer};
 use routing_transformer::data;
 use routing_transformer::kmeans::{layernorm_nsb, SphericalKMeans};
@@ -109,13 +109,19 @@ fn main() -> Result<()> {
     for _ in 0..20 {
         km.update(&xs, n);
     }
-    let routing = Pattern::routing_from_vectors(n, &xs, &km, n / k);
+    let routing = km.routing_spec(&xs, n, n / k).compile(n);
     println!("\nFigure 1 — routing pattern over {n} needle-corpus tokens (letters = clusters):");
     println!("{}", routing.render_ascii());
+    let local = AttentionSpec::local(8)?.compile(n);
     println!(
         "densities: routing {:.3} vs local {:.3} vs full 1.0",
         routing.density(),
-        Pattern::local(n, 8).density()
+        local.density()
+    );
+    println!(
+        "analytic uniform-pattern JSD local‖routing: {:.4} (bound {:.4})",
+        analysis::mean_pattern_jsd(&local, &routing),
+        analysis::JSD_MAX
     );
     println!("analyze_attention OK");
     Ok(())

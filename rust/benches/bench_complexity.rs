@@ -1,14 +1,32 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Two parts: (1) the analytic cost model swept over sequence length,
-//! showing the full/local/routing crossovers and that k* = √n minimizes
-//! routing cost; (2) measured host-side routing cost (k-means assign +
-//! top-w membership, the part the model adds over plain attention) vs n.
+//! Three parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! swept over sequence length, showing the full/local/routing crossovers
+//! and that k* = √n minimizes routing cost; (2) measured host-side routing
+//! cost (k-means assign + top-w membership + pattern compile, the part the
+//! model adds over plain attention) vs n; (3) compiled CSR vs the old
+//! `Vec::contains`-scan pattern evaluation at n = 512, k = √n — the
+//! redesign must be >= 10x faster end to end (compile + nnz query).
 
-use routing_transformer::attention::{attention_flops, optimal_clusters, AttentionKind};
+use routing_transformer::attention::{optimal_clusters, AttentionSpec};
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
 use routing_transformer::util::timing::{time_fn, Table};
+
+/// The pre-redesign reference path: answer "may i attend to j" by scanning
+/// cluster membership lists with `Vec::contains` for every causal (i, j)
+/// pair — O(n² · k · w) for an nnz count.
+fn contains_scan_nnz(n: usize, clusters: &[Vec<usize>]) -> usize {
+    let mut nnz = 0usize;
+    for i in 0..n {
+        for j in 0..=i {
+            if clusters.iter().any(|m| m.contains(&i) && m.contains(&j)) {
+                nnz += 1;
+            }
+        }
+    }
+    nnz
+}
 
 fn main() {
     println!("Section 4.1 — complexity model sweep (d = 64)\n");
@@ -16,16 +34,17 @@ fn main() {
     let mut table = Table::new(&[
         "n", "k*=sqrt(2n)", "full MACs", "local(w=256)", "routing(k*)", "routing/full",
     ]);
+    let local = AttentionSpec::local(256).unwrap();
     for &n in &[1024usize, 2048, 4096, 8192, 16384, 32768] {
         let k = optimal_clusters(n);
-        let full = attention_flops(AttentionKind::Full, n, d);
-        let local = attention_flops(AttentionKind::Local { window: 256 }, n, d);
-        let routing = attention_flops(AttentionKind::Routing { clusters: k }, n, d);
+        let full = AttentionSpec::Full.flops_estimate(n, d);
+        let loc = local.flops_estimate(n, d);
+        let routing = AttentionSpec::routing_balanced(n, k).unwrap().flops_estimate(n, d);
         table.row(&[
             n.to_string(),
             k.to_string(),
             format!("{:.2e}", full as f64),
-            format!("{:.2e}", local as f64),
+            format!("{:.2e}", loc as f64),
             format!("{:.2e}", routing as f64),
             format!("{:.3}", routing as f64 / full as f64),
         ]);
@@ -33,31 +52,66 @@ fn main() {
     table.print();
 
     // n^1.5 scaling check: routing cost ratio for 4x n should be ~8x
-    let c1 = attention_flops(
-        AttentionKind::Routing { clusters: optimal_clusters(4096) }, 4096, d);
-    let c2 = attention_flops(
-        AttentionKind::Routing { clusters: optimal_clusters(16384) }, 16384, d);
+    let c1 = AttentionSpec::routing_balanced(4096, optimal_clusters(4096))
+        .unwrap()
+        .flops_estimate(4096, d);
+    let c2 = AttentionSpec::routing_balanced(16384, optimal_clusters(16384))
+        .unwrap()
+        .flops_estimate(16384, d);
     println!("\nscaling: cost(4n)/cost(n) = {:.2} (n^1.5 predicts 8.0)\n", c2 as f64 / c1 as f64);
 
-    // measured host-side routing overhead (assignment + top-w) vs n
-    println!("measured routing overhead (k-means assign + balanced top-w), d = 64:");
-    let mut table = Table::new(&["n", "k", "mean ms", "ms/n (µs)"]);
+    // measured host-side routing overhead (assignment + top-w + compile) vs n
+    println!("measured routing overhead (k-means assign + balanced top-w + compile), d = 64:");
+    let mut table = Table::new(&["n", "k", "mean ms", "ms/n (µs)", "nnz"]);
     for &n in &[256usize, 1024, 4096] {
         let k = optimal_clusters(n);
         let mut rng = Rng::new(7);
         let xs: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let km = SphericalKMeans::new(k, d, 0.5, 1);
+        let mut nnz = 0usize;
         let stats = time_fn(1, 5, || {
-            let members = km.top_w_members(&xs, n, n / k);
-            std::hint::black_box(members);
+            let pattern = km.routing_spec(&xs, n, n / k).compile(n);
+            nnz = pattern.nnz();
+            std::hint::black_box(&pattern);
         });
         table.row(&[
             n.to_string(),
             k.to_string(),
             format!("{:.3}", stats.mean * 1e3),
             format!("{:.2}", stats.mean * 1e6 / n as f64),
+            nnz.to_string(),
         ]);
     }
     table.print();
+
+    // compiled CSR vs the old contains-scan path: n = 512, k = √n
+    let n = 512usize;
+    let k = (n as f64).sqrt().round() as usize; // 23 ≈ √512, w = n/k
+    let mut rng = Rng::new(11);
+    let xs: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let km = SphericalKMeans::new(k, d, 0.5, 3);
+    let clusters = km.top_w_members(&xs, n, n / k);
+    let spec = AttentionSpec::routing(clusters.clone());
+
+    let mut csr_nnz = 0usize;
+    let new_path = time_fn(1, 5, || {
+        let pattern = spec.compile(n);
+        csr_nnz = std::hint::black_box(pattern.nnz());
+    });
+    let mut scan_nnz = 0usize;
+    let old_path = time_fn(0, 2, || {
+        scan_nnz = std::hint::black_box(contains_scan_nnz(n, &clusters));
+    });
+    assert_eq!(csr_nnz, scan_nnz, "CSR and contains-scan must count the same set");
+    let speedup = old_path.mean / new_path.mean;
+    println!(
+        "\ncompile+nnz vs contains-scan at n={n}, k={k}: {:.3} ms vs {:.3} ms ({speedup:.0}x)",
+        new_path.mean * 1e3,
+        old_path.mean * 1e3
+    );
+    assert!(
+        speedup >= 10.0,
+        "compiled path must be >= 10x faster than the contains-scan path (got {speedup:.1}x)"
+    );
     println!("\nbench_complexity OK");
 }

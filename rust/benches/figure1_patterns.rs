@@ -1,12 +1,13 @@
 //! Figure 1 — 2-D attention schemes: local vs strided vs routing.
 //!
-//! Renders the three sparsity patterns of the paper's Figure 1 (rows =
-//! outputs, columns = inputs; colors/letters = cluster membership for
-//! routing) and writes CSVs for external plotting.  The routing pattern
-//! is produced by actually clustering content vectors with the online
-//! spherical k-means substrate — not hand-drawn.
+//! Renders the sparsity patterns of the paper's Figure 1 (rows = outputs,
+//! columns = inputs; letters = cluster membership for routing) through the
+//! spec→compile pipeline, plus the mixed local+routing head plan of
+//! Sec. 4.2 as a `Union` spec, and writes CSVs for external plotting.
+//! The routing pattern is produced by actually clustering content vectors
+//! with the online spherical k-means substrate — not hand-drawn.
 
-use routing_transformer::attention::Pattern;
+use routing_transformer::attention::AttentionSpec;
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
 
@@ -17,11 +18,11 @@ fn main() -> anyhow::Result<()> {
     let k = 6;
     println!("Figure 1 — attention schemes over n={n} (rows=outputs, cols=inputs)\n");
 
-    let local = Pattern::local(n, window);
+    let local = AttentionSpec::local(window)?.compile(n);
     println!("(a) local attention, window {window}:");
     println!("{}", local.render_ascii());
 
-    let strided = Pattern::strided(n, stride);
+    let strided = AttentionSpec::strided(stride)?.compile(n);
     println!("(b) strided attention, stride {stride}:");
     println!("{}", strided.render_ascii());
 
@@ -41,15 +42,24 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..40 {
         km.update(&xs, n);
     }
-    let routing = Pattern::routing_from_vectors(n, &xs, &km, n / k);
+    let routing_spec = km.routing_spec(&xs, n, n / k);
+    let routing = routing_spec.compile(n);
     println!("(c) routing attention, k={k} clusters (letter = cluster):");
     println!("{}", routing.render_ascii());
 
+    // the paper's best configurations mix head types (Sec. 4.2)
+    let mixed_spec =
+        AttentionSpec::union(vec![AttentionSpec::local(window)?, routing_spec])?;
+    let mixed = mixed_spec.compile(n);
+    println!("(d) mixed local+routing head plan (union spec):");
+    println!("{}", mixed.render_ascii());
+
     println!(
-        "densities: local {:.3}, strided {:.3}, routing {:.3} (full = 1.000)",
+        "densities: local {:.3}, strided {:.3}, routing {:.3}, mixed {:.3} (full = 1.000)",
         local.density(),
         strided.density(),
-        routing.density()
+        routing.density(),
+        mixed.density()
     );
 
     let out = std::path::PathBuf::from("runs/figure1");
@@ -57,11 +67,16 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(out.join("local.csv"), local.render_csv())?;
     std::fs::write(out.join("strided.csv"), strided.render_csv())?;
     std::fs::write(out.join("routing.csv"), routing.render_csv())?;
+    std::fs::write(out.join("mixed.csv"), mixed.render_csv())?;
     println!("CSV patterns written to runs/figure1/");
 
     // figure-level shape checks
     assert!(local.is_causal() && strided.is_causal() && routing.is_causal());
+    assert!(mixed.is_causal() && mixed.rows_sorted());
     assert!(routing.density() < 1.0);
+    // the union admits exactly the keys of either part, never fewer/more
+    assert!(mixed.nnz() >= local.nnz().max(routing.nnz()));
+    assert!(mixed.nnz() <= local.nnz() + routing.nnz());
     println!("figure1 OK");
     Ok(())
 }

@@ -7,7 +7,13 @@
 //! runs (natural log, so JSD <= ln 2 ≈ 0.6931).  The `attn_probs` AOT
 //! artifact returns dense per-head distributions `[L, H, T, T]`; this
 //! module owns the divergence math and the sampling of head pairs.
+//!
+//! Next to the measured study, [`mean_pattern_jsd`] gives the *analytic*
+//! divergence between two sparsity schemes directly from their compiled
+//! CSR index sets (uniform attention over each attend-set), in
+//! O(|S_i^a| + |S_i^b|) per row instead of the O(n²) dense rows.
 
+use crate::attention::CompiledPattern;
 use crate::util::rng::Rng;
 
 /// ln 2 — the JSD upper bound under the natural log.
@@ -55,6 +61,54 @@ pub fn mean_head_jsd(a: &[f32], b: &[f32], t: usize) -> f64 {
         0.0
     } else {
         total / n as f64
+    }
+}
+
+/// Mean JSD between the uniform attention distributions induced by two
+/// compiled sparsity patterns: row i of each pattern is read as the
+/// uniform distribution over its attend-set S_i.  Rows where either
+/// pattern leaves the query unattended are skipped (routing drops
+/// tokens), matching [`mean_head_jsd`]'s convention.  Sparse closed form
+/// over the sorted CSR rows — no dense [T, T] materialization.
+pub fn mean_pattern_jsd(a: &CompiledPattern, b: &CompiledPattern) -> f64 {
+    debug_assert_eq!(a.n(), b.n());
+    let ln2 = std::f64::consts::LN_2;
+    let mut total = 0.0;
+    let mut rows = 0usize;
+    for i in 0..a.n().min(b.n()) {
+        let ra = a.row(i);
+        let rb = b.row(i);
+        if ra.is_empty() || rb.is_empty() {
+            continue;
+        }
+        let mut common = 0usize;
+        let (mut x, mut y) = (0usize, 0usize);
+        while x < ra.len() && y < rb.len() {
+            match ra[x].cmp(&rb[y]) {
+                std::cmp::Ordering::Less => x += 1,
+                std::cmp::Ordering::Greater => y += 1,
+                std::cmp::Ordering::Equal => {
+                    common += 1;
+                    x += 1;
+                    y += 1;
+                }
+            }
+        }
+        let pa = 1.0 / ra.len() as f64;
+        let pb = 1.0 / rb.len() as f64;
+        let m = 0.5 * (pa + pb);
+        // keys in exactly one set: m = p/2, so each contributes p·ln2 to
+        // its side's KL; keys in both use the mixture m directly
+        let mut d = 0.5 * (ra.len() - common) as f64 * pa * ln2;
+        d += 0.5 * (rb.len() - common) as f64 * pb * ln2;
+        d += 0.5 * common as f64 * (pa * (pa / m).ln() + pb * (pb / m).ln());
+        total += d;
+        rows += 1;
+    }
+    if rows == 0 {
+        0.0
+    } else {
+        total / rows as f64
     }
 }
 
@@ -157,6 +211,43 @@ mod tests {
             }
         }
         assert!(mean_head_jsd(&a, &a, t) < 1e-9);
+    }
+
+    #[test]
+    fn pattern_jsd_matches_dense_reference() {
+        use crate::attention::{AttentionSpec, CompiledPattern};
+        fn dense_row(p: &CompiledPattern, i: usize, n: usize) -> Vec<f64> {
+            let row = p.row(i);
+            let mut v = vec![0.0; n];
+            if !row.is_empty() {
+                let w = 1.0 / row.len() as f64;
+                for &j in row {
+                    v[j] = w;
+                }
+            }
+            v
+        }
+        let n = 24;
+        let a = AttentionSpec::local(4).unwrap().compile(n);
+        let b = AttentionSpec::routing_balanced(n, 4).unwrap().compile(n);
+        let mut total = 0.0;
+        let mut rows = 0usize;
+        for i in 0..n {
+            if a.row(i).is_empty() || b.row(i).is_empty() {
+                continue;
+            }
+            total += jsd(&dense_row(&a, i, n), &dense_row(&b, i, n));
+            rows += 1;
+        }
+        let reference = total / rows as f64;
+        let fast = mean_pattern_jsd(&a, &b);
+        assert!((fast - reference).abs() < 1e-12, "fast {fast} vs dense {reference}");
+        assert!(fast > 0.0 && fast <= JSD_MAX + 1e-12);
+        // identical patterns diverge by exactly zero
+        assert!(mean_pattern_jsd(&a, &a).abs() < 1e-15);
+        // n = 0 patterns are a no-op, not a divide-by-zero
+        let e = AttentionSpec::Full.compile(0);
+        assert_eq!(mean_pattern_jsd(&e, &e), 0.0);
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Compiled sparsity patterns — phase two of the spec→compile pipeline.
+//!
+//! A [`CompiledPattern`] is an [`AttentionSpec`](super::AttentionSpec)
+//! materialized for one sequence length as a CSR index set: row offsets
+//! plus sorted per-query key indices, with an optional cluster id per
+//! entry for routed keys.  Compiling once buys every consumer the same
+//! semantics at the right complexity: `allowed` is a binary search
+//! (O(log w) instead of the old linear `Vec::contains` scans), `nnz` and
+//! `density` read the CSR tail pointer (O(1)), and `row(i)` hands out the
+//! attend-set as a zero-allocation slice.  The Figure-1 ASCII/CSV
+//! renderers and the exact-FLOP `cost` model live here so there is exactly
+//! one source of truth for "which keys may query i attend to".
+
+/// Sentinel cluster id for entries admitted by a non-routing scheme.
+pub(crate) const NO_CLUSTER: u32 = u32::MAX;
+
+/// A compiled sparsity pattern over a sequence of length `n`, stored as
+/// CSR: `cols[row_offsets[i]..row_offsets[i+1]]` is S_i, sorted ascending.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompiledPattern {
+    n: usize,
+    /// `n + 1` offsets into `cols`/`cluster_ids`.
+    row_offsets: Vec<usize>,
+    /// Key indices, sorted ascending within each row.
+    cols: Vec<usize>,
+    /// Per-entry cluster id (`NO_CLUSTER` for non-routed entries).
+    cluster_ids: Vec<u32>,
+}
+
+/// Per-row attend-set size summary (for `rtx figure1 --stats`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowStats {
+    pub min: usize,
+    pub mean: f64,
+    pub max: usize,
+}
+
+impl CompiledPattern {
+    /// Pack sorted, deduped per-row `(key, cluster)` entries into CSR.
+    pub(crate) fn from_rows(n: usize, rows: Vec<Vec<(usize, u32)>>) -> CompiledPattern {
+        debug_assert_eq!(rows.len(), n);
+        let nnz: usize = rows.iter().map(Vec::len).sum();
+        let mut row_offsets = Vec::with_capacity(n + 1);
+        let mut cols = Vec::with_capacity(nnz);
+        let mut cluster_ids = Vec::with_capacity(nnz);
+        row_offsets.push(0);
+        for row in &rows {
+            for &(j, c) in row {
+                cols.push(j);
+                cluster_ids.push(c);
+            }
+            row_offsets.push(cols.len());
+        }
+        CompiledPattern { n, row_offsets, cols, cluster_ids }
+    }
+
+    /// Sequence length the pattern was compiled for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total non-zero entries of the attention matrix — O(1) from CSR.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// The attend-set S_i as a sorted slice; empty for out-of-range `i`
+    /// (so `n = 0` is a total no-op rather than an underflow).
+    pub fn row(&self, i: usize) -> &[usize] {
+        if i >= self.n {
+            return &[];
+        }
+        &self.cols[self.row_offsets[i]..self.row_offsets[i + 1]]
+    }
+
+    /// May query `i` attend to key `j`?  O(log |S_i|) binary search.
+    pub fn allowed(&self, i: usize, j: usize) -> bool {
+        self.row(i).binary_search(&j).is_ok()
+    }
+
+    /// Cluster id that routed key `j` into S_i, if any.
+    pub fn cluster_of(&self, i: usize, j: usize) -> Option<u32> {
+        if i >= self.n {
+            return None;
+        }
+        let lo = self.row_offsets[i];
+        match self.cols[lo..self.row_offsets[i + 1]].binary_search(&j) {
+            Ok(off) => match self.cluster_ids[lo + off] {
+                NO_CLUSTER => None,
+                c => Some(c),
+            },
+            Err(_) => None,
+        }
+    }
+
+    /// Sparsity fraction (nnz / full causal nnz); 0.0 for `n = 0`.
+    pub fn density(&self) -> f64 {
+        let full = self.n * (self.n + 1) / 2;
+        if full == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / full as f64
+        }
+    }
+
+    /// Exact multiply-accumulate count for one attention pass over this
+    /// pattern with head dimension `d`: QK^T and PV each touch every
+    /// materialized (query, key) pair once (`2 · nnz · d`).
+    pub fn cost(&self, d: usize) -> u64 {
+        2 * self.nnz() as u64 * d as u64
+    }
+
+    /// Attention-matrix entries instantiated (memory model).
+    pub fn memory(&self) -> u64 {
+        self.nnz() as u64
+    }
+
+    /// Every admitted key is causal (j <= i).  True by construction; kept
+    /// as a checkable invariant for tests.
+    pub fn is_causal(&self) -> bool {
+        (0..self.n).all(|i| self.row(i).iter().all(|&j| j <= i))
+    }
+
+    /// Rows are strictly ascending (sorted, duplicate-free).
+    pub fn rows_sorted(&self) -> bool {
+        (0..self.n).all(|i| self.row(i).windows(2).all(|w| w[0] < w[1]))
+    }
+
+    /// Min / mean / max attend-set size across rows.
+    pub fn row_stats(&self) -> RowStats {
+        if self.n == 0 {
+            return RowStats { min: 0, mean: 0.0, max: 0 };
+        }
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for i in 0..self.n {
+            let len = self.row(i).len();
+            min = min.min(len);
+            max = max.max(len);
+        }
+        RowStats { min, mean: self.nnz() as f64 / self.n as f64, max }
+    }
+
+    /// ASCII rendering of the attention scheme, Figure-1 style: rows are
+    /// outputs, columns inputs; routed entries are drawn with one letter
+    /// per cluster, unrouted admitted entries with '#'.
+    pub fn render_ascii(&self) -> String {
+        let mut out = String::with_capacity(self.n * (self.n + 1));
+        for i in 0..self.n {
+            let (lo, hi) = (self.row_offsets[i], self.row_offsets[i + 1]);
+            let mut next = lo;
+            for j in 0..self.n {
+                let ch = if next < hi && self.cols[next] == j {
+                    let c = self.cluster_ids[next];
+                    next += 1;
+                    if c == NO_CLUSTER {
+                        '#'
+                    } else {
+                        (b'A' + (c % 26) as u8) as char
+                    }
+                } else if j <= i {
+                    '·'
+                } else {
+                    ' '
+                };
+                out.push(ch);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering: `query,key,cluster` rows for every non-zero entry
+    /// (cluster field empty for unrouted entries).
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from("query,key,cluster\n");
+        for i in 0..self.n {
+            for e in self.row_offsets[i]..self.row_offsets[i + 1] {
+                let j = self.cols[e];
+                match self.cluster_ids[e] {
+                    NO_CLUSTER => out.push_str(&format!("{i},{j},\n")),
+                    c => out.push_str(&format!("{i},{j},{c}\n")),
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttentionSpec;
+
+    #[test]
+    fn full_attends_everything_causal() {
+        let p = AttentionSpec::Full.compile(8);
+        assert_eq!(p.row(5), &[0, 1, 2, 3, 4, 5]);
+        assert!(p.is_causal());
+        assert_eq!(p.nnz(), 36);
+    }
+
+    #[test]
+    fn local_window_bound() {
+        let p = AttentionSpec::local(4).unwrap().compile(16);
+        assert_eq!(p.row(10), &[7, 8, 9, 10]);
+        assert_eq!(p.row(1), &[0, 1]);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn block_local_two_blocks() {
+        let p = AttentionSpec::block_local(4).unwrap().compile(16);
+        // query 9 (block 2) sees blocks 1 and 2, causally
+        assert_eq!(p.row(9), &[4, 5, 6, 7, 8, 9]);
+        // block 0 sees only itself
+        assert_eq!(p.row(2), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn strided_pattern() {
+        let p = AttentionSpec::strided(4).unwrap().compile(16);
+        assert_eq!(p.row(9), &[1, 5, 9]);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn routing_same_cluster_only() {
+        let spec = AttentionSpec::routing(vec![vec![0, 2, 5], vec![1, 3, 4, 6, 7]]);
+        let p = spec.compile(8);
+        assert!(p.allowed(5, 2));
+        assert!(p.allowed(5, 0));
+        assert!(!p.allowed(5, 3)); // different cluster
+        assert!(!p.allowed(2, 5)); // causality
+        assert_eq!(p.cluster_of(5, 2), Some(0));
+        assert_eq!(p.cluster_of(7, 3), Some(1));
+        assert_eq!(p.cluster_of(5, 3), None);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn density_ordering_matches_paper() {
+        // local(w) and routing(k=sqrt n) are sparse; full is dense
+        let n = 64;
+        let full = AttentionSpec::Full.compile(n);
+        let local = AttentionSpec::local(8).unwrap().compile(n);
+        let routing = AttentionSpec::routing_balanced(n, 8).unwrap().compile(n);
+        assert!(local.density() < full.density());
+        assert!(routing.density() < full.density());
+        assert!((full.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_render_shapes() {
+        let p = AttentionSpec::block_local(2).unwrap().compile(8);
+        let art = p.render_ascii();
+        assert_eq!(art.lines().count(), 8);
+        assert!(art.lines().all(|l| l.chars().count() == 8));
+        // first char of first row is '#': token 0 attends to itself
+        assert_eq!(art.lines().next().unwrap().chars().next().unwrap(), '#');
+    }
+
+    #[test]
+    fn csv_render_contains_entries() {
+        let p = AttentionSpec::routing(vec![vec![0, 1, 2, 3]]).compile(4);
+        let csv = p.render_csv();
+        assert!(csv.contains("3,0,0"));
+        assert_eq!(csv.lines().count(), 1 + p.nnz());
+    }
+
+    #[test]
+    fn empty_and_singleton_sequences() {
+        // n = 0 used to underflow (attend_set evaluated n - 1) and divide
+        // by zero (density over n*(n+1)/2 = 0); now a total no-op
+        for spec in [
+            AttentionSpec::Full,
+            AttentionSpec::local(3).unwrap(),
+            AttentionSpec::block_local(2).unwrap(),
+            AttentionSpec::strided(2).unwrap(),
+            AttentionSpec::routing(vec![vec![0, 1]]),
+            AttentionSpec::union(vec![AttentionSpec::Full, AttentionSpec::local(1).unwrap()])
+                .unwrap(),
+        ] {
+            let p0 = spec.compile(0);
+            assert_eq!(p0.nnz(), 0);
+            assert_eq!(p0.density(), 0.0);
+            assert_eq!(p0.row(0), &[] as &[usize]);
+            assert!(!p0.allowed(0, 0));
+            assert_eq!(p0.render_ascii(), "");
+            assert_eq!(p0.render_csv(), "query,key,cluster\n");
+            assert_eq!(p0.row_stats(), RowStats { min: 0, mean: 0.0, max: 0 });
+
+            let p1 = spec.compile(1);
+            assert!(p1.is_causal());
+            assert!(p1.nnz() <= 1);
+            assert!(p1.density() <= 1.0);
+        }
+        // every positional kind admits the diagonal at n = 1
+        assert_eq!(AttentionSpec::local(5).unwrap().compile(1).nnz(), 1);
+    }
+
+    #[test]
+    fn union_nnz_pinned_against_parts() {
+        let n = 16;
+        let local = AttentionSpec::local(4).unwrap();
+        let routing = AttentionSpec::routing(vec![vec![0, 5, 9, 13], vec![2, 3, 11]]);
+        let pl = local.compile(n);
+        let pr = routing.compile(n);
+        let pu = AttentionSpec::union(vec![local, routing]).unwrap().compile(n);
+        let mut expect = 0usize;
+        for i in 0..n {
+            for j in 0..=i {
+                if pl.allowed(i, j) || pr.allowed(i, j) {
+                    expect += 1;
+                }
+            }
+        }
+        assert_eq!(pu.nnz(), expect, "union nnz must equal the set union of the parts");
+        assert!(pu.nnz() >= pl.nnz().max(pr.nnz()));
+        assert!(pu.nnz() <= pl.nnz() + pr.nnz());
+        assert!(pu.is_causal() && pu.rows_sorted());
+        // routed entries keep their cluster letter through the union
+        assert_eq!(pu.cluster_of(5, 0), Some(0));
+        let art = pu.render_ascii();
+        assert!(art.contains('A') && art.contains('#'));
+    }
+
+    #[test]
+    fn intersect_full_is_identity() {
+        let n = 12;
+        let local = AttentionSpec::local(3).unwrap();
+        let pi = AttentionSpec::intersect(vec![AttentionSpec::Full, local.clone()])
+            .unwrap()
+            .compile(n);
+        assert_eq!(pi, local.compile(n));
+    }
+
+    #[test]
+    fn row_stats_summary() {
+        let p = AttentionSpec::local(4).unwrap().compile(16);
+        let s = p.row_stats();
+        assert_eq!(s.min, 1); // row 0
+        assert_eq!(s.max, 4);
+        assert!((s.mean - p.nnz() as f64 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_is_exact_from_nnz() {
+        let p = AttentionSpec::local(8).unwrap().compile(64);
+        assert_eq!(p.cost(64), 2 * p.nnz() as u64 * 64);
+        assert_eq!(p.memory(), p.nnz() as u64);
+    }
+}

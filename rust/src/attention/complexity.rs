@@ -1,39 +1,76 @@
-//! Analytic complexity model of Section 4.1.
+//! Closed-form complexity estimates of Section 4.1, as methods on
+//! [`AttentionSpec`].
 //!
 //! Routing attention costs `O(nkd + n²d/k)`: the first term compares all n
 //! routing vectors with k centroids, the second performs within-cluster
 //! attention assuming balanced clusters of size n/k.  The optimum is
 //! k = √n, giving `O(n^1.5 d)` — versus `O(n² d)` for full attention and
-//! `O(n w d)` for local attention.  The `bench_complexity` harness sweeps
+//! `O(n w d)` for local attention.  These are the *asymptotic estimates*;
+//! the exact per-pattern count lives on
+//! [`CompiledPattern::cost`](super::CompiledPattern::cost), computed from
+//! the materialized CSR index set.  The `bench_complexity` harness sweeps
 //! this model against measured wall-clock to reproduce the paper's
 //! asymptotic claim (Section 6.3 discusses the constant factors).
 
-/// Attention kinds the model covers.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum AttentionKind {
-    Full,
-    Local { window: usize },
-    Strided { stride: usize },
-    Routing { clusters: usize },
-}
+use super::spec::AttentionSpec;
 
-/// Leading-order multiply-accumulate count for one attention module over a
-/// sequence of length `n` with head dimension `d`.
-pub fn attention_flops(kind: AttentionKind, n: usize, d: usize) -> u64 {
-    let n = n as u64;
-    let d = d as u64;
-    match kind {
-        // QK^T + PV over the causal half: 2 * (n^2/2) * d each
-        AttentionKind::Full => 2 * n * n * d,
-        // each query: window keys
-        AttentionKind::Local { window } => 2 * n * (window as u64) * d,
-        // each query: ~n/stride keys (causal average n/(2s), keep n/s bound)
-        AttentionKind::Strided { stride } => 2 * n * (n / stride as u64).max(1) * d,
-        // nkd routing + k * w^2 * d * 2 attention with w = n/k
-        AttentionKind::Routing { clusters } => {
-            let k = clusters as u64;
-            let w = (n / k).max(1);
-            n * k * d + 2 * k * w * w * d
+impl AttentionSpec {
+    /// Leading-order multiply-accumulate estimate for one attention module
+    /// over a sequence of length `n` with head dimension `d`.  For routing
+    /// specs this includes the n·k·d cluster-assignment term; `Union` sums
+    /// its parts (each head plan member runs), `Intersect` is bounded by
+    /// its cheapest part.
+    pub fn flops_estimate(&self, n: usize, d: usize) -> u64 {
+        let nn = n as u64;
+        let dd = d as u64;
+        match self {
+            // QK^T + PV over the causal half: 2 * (n^2/2) * d each
+            AttentionSpec::Full => 2 * nn * nn * dd,
+            // each query: window keys
+            AttentionSpec::Local { window } => 2 * nn * (*window).max(1) as u64 * dd,
+            // each query: at most two blocks of window keys
+            AttentionSpec::BlockLocal { window } => {
+                2 * nn * 2 * (*window).max(1) as u64 * dd
+            }
+            // each query: ~n/stride keys (causal average n/(2s), keep n/s bound)
+            AttentionSpec::Strided { stride } => {
+                2 * nn * (nn / (*stride).max(1) as u64).max(1) * dd
+            }
+            // nkd routing + within-cluster attention 2·|c|²·d per cluster
+            AttentionSpec::Routing { clusters } => {
+                let k = clusters.len() as u64;
+                let attend: u64 =
+                    clusters.iter().map(|m| 2 * (m.len() as u64).pow(2) * dd).sum();
+                nn * k * dd + attend
+            }
+            AttentionSpec::Union(parts) => {
+                parts.iter().map(|p| p.flops_estimate(n, d)).sum()
+            }
+            AttentionSpec::Intersect(parts) => {
+                parts.iter().map(|p| p.flops_estimate(n, d)).min().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Memory-footprint estimate (attention-matrix entries instantiated).
+    pub fn memory_estimate(&self, n: usize) -> u64 {
+        let nn = n as u64;
+        match self {
+            AttentionSpec::Full => nn * nn / 2,
+            AttentionSpec::Local { window } => nn * (*window).max(1) as u64,
+            AttentionSpec::BlockLocal { window } => nn * 2 * (*window).max(1) as u64,
+            AttentionSpec::Strided { stride } => {
+                nn * (nn / (*stride).max(1) as u64).max(1)
+            }
+            AttentionSpec::Routing { clusters } => {
+                clusters.iter().map(|m| (m.len() as u64).pow(2)).sum()
+            }
+            AttentionSpec::Union(parts) => {
+                parts.iter().map(|p| p.memory_estimate(n)).sum()
+            }
+            AttentionSpec::Intersect(parts) => {
+                parts.iter().map(|p| p.memory_estimate(n)).min().unwrap_or(0)
+            }
         }
     }
 }
@@ -44,43 +81,31 @@ pub fn optimal_clusters(n: usize) -> usize {
     ((2.0 * n as f64).sqrt().round() as usize).max(1)
 }
 
-/// Memory footprint (attention-matrix entries instantiated).
-pub fn attention_memory(kind: AttentionKind, n: usize) -> u64 {
-    let n = n as u64;
-    match kind {
-        AttentionKind::Full => n * n / 2,
-        AttentionKind::Local { window } => n * window as u64,
-        AttentionKind::Strided { stride } => n * (n / stride as u64).max(1),
-        AttentionKind::Routing { clusters } => {
-            let k = clusters as u64;
-            let w = (n / k).max(1);
-            k * w * w
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn routing(n: usize, k: usize) -> AttentionSpec {
+        AttentionSpec::routing_balanced(n, k).unwrap()
+    }
 
     #[test]
     fn routing_beats_full_at_scale() {
         for &n in &[1024usize, 4096, 8192] {
             let k = optimal_clusters(n);
-            let routing = attention_flops(AttentionKind::Routing { clusters: k }, n, 64);
-            let full = attention_flops(AttentionKind::Full, n, 64);
-            assert!(routing < full / 4, "n={n}: routing {routing} vs full {full}");
+            let r = routing(n, k).flops_estimate(n, 64);
+            let full = AttentionSpec::Full.flops_estimate(n, 64);
+            assert!(r < full / 4, "n={n}: routing {r} vs full {full}");
         }
     }
 
     #[test]
     fn routing_scales_as_n_to_1_5() {
-        // doubling n with k=sqrt(n) should scale cost by ~2^1.5 ≈ 2.83
+        // quadrupling n with k=sqrt(n) should scale cost by ~4^1.5 = 8x
         let d = 64;
-        let c1 = attention_flops(AttentionKind::Routing { clusters: optimal_clusters(4096) }, 4096, d);
-        let c2 = attention_flops(AttentionKind::Routing { clusters: optimal_clusters(16384) }, 16384, d);
+        let c1 = routing(4096, optimal_clusters(4096)).flops_estimate(4096, d);
+        let c2 = routing(16384, optimal_clusters(16384)).flops_estimate(16384, d);
         let ratio = c2 as f64 / c1 as f64;
-        // quadrupling n -> 4^1.5 = 8x
         assert!((ratio - 8.0).abs() < 1.5, "ratio {ratio}");
     }
 
@@ -89,31 +114,56 @@ mod tests {
         let n = 4096;
         let d = 64;
         let kopt = optimal_clusters(n);
-        let copt = attention_flops(AttentionKind::Routing { clusters: kopt }, n, d);
+        let copt = routing(n, kopt).flops_estimate(n, d);
         for &k in &[kopt / 4, kopt / 2, kopt * 2, kopt * 4] {
             if k == 0 || k == kopt {
                 continue;
             }
-            let c = attention_flops(AttentionKind::Routing { clusters: k }, n, d);
+            let c = routing(n, k).flops_estimate(n, d);
             assert!(copt <= c, "k={k} cost {c} < k*={kopt} cost {copt}");
         }
     }
 
     #[test]
     fn local_linear_in_n() {
-        let a = attention_flops(AttentionKind::Local { window: 256 }, 4096, 64);
-        let b = attention_flops(AttentionKind::Local { window: 256 }, 8192, 64);
+        let local = AttentionSpec::local(256).unwrap();
+        let a = local.flops_estimate(4096, 64);
+        let b = local.flops_estimate(8192, 64);
         assert_eq!(b, a * 2);
     }
 
     #[test]
     fn memory_model_ordering() {
         let n = 8192;
-        let full = attention_memory(AttentionKind::Full, n);
-        let local = attention_memory(AttentionKind::Local { window: 256 }, n);
-        let routing = attention_memory(
-            AttentionKind::Routing { clusters: optimal_clusters(n) }, n);
+        let full = AttentionSpec::Full.memory_estimate(n);
+        let local = AttentionSpec::local(256).unwrap().memory_estimate(n);
+        let r = routing(n, optimal_clusters(n)).memory_estimate(n);
         assert!(local < full);
-        assert!(routing < full);
+        assert!(r < full);
+    }
+
+    #[test]
+    fn union_estimate_sums_parts() {
+        let n = 1024;
+        let d = 64;
+        let local = AttentionSpec::local(64).unwrap();
+        let r = routing(n, 32);
+        let mixed =
+            AttentionSpec::union(vec![local.clone(), r.clone()]).unwrap();
+        assert_eq!(
+            mixed.flops_estimate(n, d),
+            local.flops_estimate(n, d) + r.flops_estimate(n, d)
+        );
+    }
+
+    #[test]
+    fn estimate_tracks_exact_cost_for_local() {
+        // the closed-form bound upper-bounds the exact CSR count (edge
+        // rows attend fewer than `window` keys) and is tight within 2x
+        let n = 512;
+        let spec = AttentionSpec::local(32).unwrap();
+        let exact = spec.compile(n).cost(64);
+        let bound = spec.flops_estimate(n, 64);
+        assert!(exact <= bound && bound < exact * 2, "exact {exact} bound {bound}");
     }
 }

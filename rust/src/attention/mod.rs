@@ -1,14 +1,34 @@
-//! Attention sparsity-pattern library (host-side).
+//! Attention sparsity subsystem: declarative specs compiled to CSR index
+//! sets (host-side).
 //!
-//! Pure-Rust models of the sparsity patterns the paper discusses: causal
-//! full attention, (blocked) local attention, strided attention (Child et
-//! al. 2019) and cluster-routed attention (Algorithm 1).  These power the
-//! Figure-1 renderer, the complexity model of Section 4.1
-//! (`O(nkd + n²d/k)`), and the property-test suite that pins the semantics
-//! shared with the L2 graph.
+//! The paper frames every sparse-attention scheme as a per-query index set
+//! S_i ⊆ {0..i}; this module makes that framing the API, in two phases:
+//!
+//! 1. [`AttentionSpec`] — a declarative, serializable description of a
+//!    scheme: causal full attention, (blocked) local attention, strided
+//!    attention (Child et al. 2019), cluster-routed attention
+//!    (Algorithm 1), plus `Union`/`Intersect` composition for the mixed
+//!    local+routing head plans of Sec. 4.2.  Constructors validate
+//!    degenerate parameters; `flops_estimate`/`memory_estimate` keep the
+//!    closed-form Section-4.1 cost model (`O(nkd + n²d/k)`, minimized at
+//!    k ≈ √n, see [`optimal_clusters`]).
+//! 2. [`CompiledPattern`] — the spec materialized once for a sequence
+//!    length into CSR row offsets + sorted per-query key indices (with
+//!    per-entry cluster ids for routed keys).  This is the single source
+//!    of truth for "which keys may query i attend to": O(log w) `allowed`,
+//!    O(1) `nnz`/`density`, zero-allocation `row(i)` attend-set slices, an
+//!    exact-FLOP `cost(d)`, and the Figure-1 ASCII/CSV renderers.
+//!
+//! Consumers: the `figure1` CLI and bench, the complexity bench, the
+//! Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
+//! k-means routing integration
+//! ([`crate::kmeans::SphericalKMeans::routing_spec`]), and the property
+//! tests that pin the semantics shared with the L2 graph.
 
+pub mod compiled;
 pub mod complexity;
-pub mod patterns;
+pub mod spec;
 
-pub use complexity::{attention_flops, optimal_clusters, AttentionKind};
-pub use patterns::{Pattern, PatternKind};
+pub use compiled::{CompiledPattern, RowStats};
+pub use complexity::optimal_clusters;
+pub use spec::AttentionSpec;

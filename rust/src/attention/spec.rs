@@ -1,0 +1,405 @@
+//! Declarative attention-sparsity specs — phase one of the spec→compile
+//! pipeline.
+//!
+//! An [`AttentionSpec`] describes *which* scheme restricts each query's
+//! key set S_i (Sec. 3 of the paper), without fixing a sequence length:
+//! causal full attention, (blocked) local attention, strided attention
+//! (Child et al. 2019), content-routed attention (Algorithm 1), and
+//! `Union`/`Intersect` composition for the mixed head plans of Sec. 4.2
+//! (the paper's best models mix local and routing heads).  Constructors
+//! validate degenerate parameters (zero windows/strides used to mean
+//! divide-by-zero); [`AttentionSpec::compile`] materializes the spec for a
+//! sequence length into a [`CompiledPattern`] CSR index set; and
+//! [`AttentionSpec::flops_estimate`] keeps the closed-form Section-4.1
+//! asymptotic cost model (`O(nkd + n²d/k)`, minimized at k ≈ √n).
+//!
+//! Specs serialize to/from JSON (`to_json`/`from_json`) so head plans can
+//! live in manifests and configs.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::compiled::{CompiledPattern, NO_CLUSTER};
+use crate::util::json::Json;
+
+/// A declarative sparse-attention scheme.  Always causal: every variant
+/// only ever admits keys j <= i.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AttentionSpec {
+    /// Causal full attention: S_i = { j | j <= i }.
+    Full,
+    /// Sliding-window local attention: S_i = { j | i-w < j <= i }.
+    Local { window: usize },
+    /// Blocked local attention (the L1 kernel's semantics): query block b
+    /// attends to blocks b-1 and b, causally.
+    BlockLocal { window: usize },
+    /// Strided attention (Child et al.): S_i = { j <= i | (i-j) % s == 0 }.
+    Strided { stride: usize },
+    /// Cluster routing (Algorithm 1): token i attends to j <= i iff some
+    /// cluster selected both i and j.  Member lists are sorted + deduped.
+    Routing { clusters: Vec<Vec<usize>> },
+    /// Mixed head plan: a key is admitted if any part admits it.
+    Union(Vec<AttentionSpec>),
+    /// A key is admitted only if every part admits it.
+    Intersect(Vec<AttentionSpec>),
+}
+
+impl AttentionSpec {
+    pub fn full() -> AttentionSpec {
+        AttentionSpec::Full
+    }
+
+    /// Local attention; rejects `window == 0` (an empty window would make
+    /// every S_i empty and used to underflow in the old pattern code).
+    pub fn local(window: usize) -> Result<AttentionSpec> {
+        if window == 0 {
+            bail!("local attention requires window >= 1 (got 0)");
+        }
+        Ok(AttentionSpec::Local { window })
+    }
+
+    /// Blocked local attention; rejects `window == 0` (block index i/w
+    /// would divide by zero).
+    pub fn block_local(window: usize) -> Result<AttentionSpec> {
+        if window == 0 {
+            bail!("block-local attention requires window >= 1 (got 0)");
+        }
+        Ok(AttentionSpec::BlockLocal { window })
+    }
+
+    /// Strided attention; rejects `stride == 0` ((i-j) % 0 is UB-shaped).
+    pub fn strided(stride: usize) -> Result<AttentionSpec> {
+        if stride == 0 {
+            bail!("strided attention requires stride >= 1 (got 0)");
+        }
+        Ok(AttentionSpec::Strided { stride })
+    }
+
+    /// Routing from explicit cluster membership lists.  Members are
+    /// normalized (sorted ascending, deduped); membership beyond the
+    /// compiled sequence length is ignored at compile time.
+    pub fn routing(clusters: Vec<Vec<usize>>) -> AttentionSpec {
+        let clusters = clusters
+            .into_iter()
+            .map(|mut m| {
+                m.sort_unstable();
+                m.dedup();
+                m
+            })
+            .collect();
+        AttentionSpec::Routing { clusters }
+    }
+
+    /// The balanced-cluster idealization of the Section-4.1 model: k
+    /// contiguous clusters of w = max(n/k, 1) tokens each (tail tokens
+    /// beyond k*w stay unrouted, exactly as the closed-form model assumes).
+    pub fn routing_balanced(n: usize, k: usize) -> Result<AttentionSpec> {
+        if k == 0 {
+            bail!("routing requires at least one cluster (got k = 0)");
+        }
+        let w = (n / k).max(1);
+        let clusters = (0..k)
+            .map(|c| (c * w..((c + 1) * w).min(n)).collect())
+            .collect();
+        Ok(AttentionSpec::routing(clusters))
+    }
+
+    /// Mixed head plan: union of the parts' index sets.
+    pub fn union(parts: Vec<AttentionSpec>) -> Result<AttentionSpec> {
+        if parts.is_empty() {
+            bail!("union of zero specs is undefined");
+        }
+        Ok(AttentionSpec::Union(parts))
+    }
+
+    /// Intersection of the parts' index sets.
+    pub fn intersect(parts: Vec<AttentionSpec>) -> Result<AttentionSpec> {
+        if parts.is_empty() {
+            bail!("intersection of zero specs is undefined");
+        }
+        Ok(AttentionSpec::Intersect(parts))
+    }
+
+    /// Compile the spec for sequence length `n` into a CSR index set.
+    /// Infallible: constructors validate parameters; hand-built enum
+    /// values with zero windows/strides are clamped to 1 defensively.
+    /// `n = 0` compiles to an empty pattern.
+    pub fn compile(&self, n: usize) -> CompiledPattern {
+        CompiledPattern::from_rows(n, build_rows(self, n))
+    }
+
+    /// JSON encoding of the spec (declarative, nestable).
+    pub fn to_json(&self) -> Json {
+        let kind = |k: &str| ("kind".to_string(), Json::Str(k.to_string()));
+        match self {
+            AttentionSpec::Full => Json::Obj(vec![kind("full")]),
+            AttentionSpec::Local { window } => Json::Obj(vec![
+                kind("local"),
+                ("window".to_string(), Json::Num(*window as f64)),
+            ]),
+            AttentionSpec::BlockLocal { window } => Json::Obj(vec![
+                kind("block_local"),
+                ("window".to_string(), Json::Num(*window as f64)),
+            ]),
+            AttentionSpec::Strided { stride } => Json::Obj(vec![
+                kind("strided"),
+                ("stride".to_string(), Json::Num(*stride as f64)),
+            ]),
+            AttentionSpec::Routing { clusters } => Json::Obj(vec![
+                kind("routing"),
+                (
+                    "clusters".to_string(),
+                    Json::Arr(
+                        clusters
+                            .iter()
+                            .map(|m| {
+                                Json::Arr(m.iter().map(|&i| Json::Num(i as f64)).collect())
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            AttentionSpec::Union(parts) => Json::Obj(vec![
+                kind("union"),
+                ("parts".to_string(), Json::Arr(parts.iter().map(|p| p.to_json()).collect())),
+            ]),
+            AttentionSpec::Intersect(parts) => Json::Obj(vec![
+                kind("intersect"),
+                ("parts".to_string(), Json::Arr(parts.iter().map(|p| p.to_json()).collect())),
+            ]),
+        }
+    }
+
+    /// Decode a spec from JSON, re-running constructor validation.
+    pub fn from_json(j: &Json) -> Result<AttentionSpec> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("attention spec json missing string 'kind'"))?;
+        let field = |name: &str| -> Result<usize> {
+            j.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("spec '{kind}' missing integer '{name}'"))
+        };
+        let parts = |name: &str| -> Result<Vec<AttentionSpec>> {
+            j.get(name)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("spec '{kind}' missing array '{name}'"))?
+                .iter()
+                .map(AttentionSpec::from_json)
+                .collect()
+        };
+        match kind {
+            "full" => Ok(AttentionSpec::Full),
+            "local" => AttentionSpec::local(field("window")?),
+            "block_local" => AttentionSpec::block_local(field("window")?),
+            "strided" => AttentionSpec::strided(field("stride")?),
+            "routing" => {
+                let arr = j
+                    .get("clusters")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("routing spec missing array 'clusters'"))?;
+                let clusters = arr
+                    .iter()
+                    .map(|m| {
+                        m.as_arr()
+                            .ok_or_else(|| anyhow!("routing cluster must be an array"))?
+                            .iter()
+                            .map(|v| {
+                                v.as_usize()
+                                    .ok_or_else(|| anyhow!("cluster member must be an integer"))
+                            })
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .collect::<Result<Vec<Vec<usize>>>>()?;
+                Ok(AttentionSpec::routing(clusters))
+            }
+            "union" => AttentionSpec::union(parts("parts")?),
+            "intersect" => AttentionSpec::intersect(parts("parts")?),
+            other => bail!("unknown attention spec kind '{other}'"),
+        }
+    }
+}
+
+/// Per-query (key, cluster-id) rows, sorted by key and deduped — the
+/// intermediate representation `CompiledPattern::from_rows` packs into CSR.
+fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
+    match spec {
+        AttentionSpec::Full => {
+            (0..n).map(|i| (0..=i).map(|j| (j, NO_CLUSTER)).collect()).collect()
+        }
+        AttentionSpec::Local { window } => {
+            let w = (*window).max(1);
+            (0..n)
+                .map(|i| {
+                    (i.saturating_sub(w - 1)..=i).map(|j| (j, NO_CLUSTER)).collect()
+                })
+                .collect()
+        }
+        AttentionSpec::BlockLocal { window } => {
+            let w = (*window).max(1);
+            (0..n)
+                .map(|i| {
+                    let start = (i / w).saturating_sub(1) * w;
+                    (start..=i).map(|j| (j, NO_CLUSTER)).collect()
+                })
+                .collect()
+        }
+        AttentionSpec::Strided { stride } => {
+            let s = (*stride).max(1);
+            (0..n)
+                .map(|i| (i % s..=i).step_by(s).map(|j| (j, NO_CLUSTER)).collect())
+                .collect()
+        }
+        AttentionSpec::Routing { clusters } => {
+            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); n];
+            for (c, members) in clusters.iter().enumerate() {
+                // constructors normalize, but hand-built enums may not be
+                // sorted/deduped/in-range — renormalize defensively
+                let mut ms: Vec<usize> = members.iter().copied().filter(|&i| i < n).collect();
+                ms.sort_unstable();
+                ms.dedup();
+                for (idx, &i) in ms.iter().enumerate() {
+                    for &j in &ms[..=idx] {
+                        rows[i].push((j, c as u32));
+                    }
+                }
+            }
+            for row in &mut rows {
+                // sort by key then cluster; dedup keeps the lowest cluster
+                // id for a key selected by several clusters (the renderer's
+                // "first matching cluster" convention)
+                row.sort_unstable();
+                row.dedup_by_key(|e| e.0);
+            }
+            rows
+        }
+        AttentionSpec::Union(parts) => {
+            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); n];
+            for part in parts {
+                for (i, prow) in build_rows(part, n).into_iter().enumerate() {
+                    rows[i].extend(prow);
+                }
+            }
+            for row in &mut rows {
+                // NO_CLUSTER sorts last, so routed entries keep their
+                // cluster id when a key is admitted by several parts
+                row.sort_unstable();
+                row.dedup_by_key(|e| e.0);
+            }
+            rows
+        }
+        AttentionSpec::Intersect(parts) => {
+            let mut iter = parts.iter();
+            let first = match iter.next() {
+                // empty intersection = no constraint (matches `all()`)
+                None => return build_rows(&AttentionSpec::Full, n),
+                Some(p) => p,
+            };
+            let mut rows = build_rows(first, n);
+            for part in iter {
+                let prows = build_rows(part, n);
+                for (row, prow) in rows.iter_mut().zip(&prows) {
+                    let mut out = Vec::new();
+                    let (mut a, mut b) = (0usize, 0usize);
+                    while a < row.len() && b < prow.len() {
+                        match row[a].0.cmp(&prow[b].0) {
+                            std::cmp::Ordering::Less => a += 1,
+                            std::cmp::Ordering::Greater => b += 1,
+                            std::cmp::Ordering::Equal => {
+                                out.push((row[a].0, row[a].1.min(prow[b].1)));
+                                a += 1;
+                                b += 1;
+                            }
+                        }
+                    }
+                    *row = out;
+                }
+            }
+            rows
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degenerate_params_rejected() {
+        assert!(AttentionSpec::local(0).is_err());
+        assert!(AttentionSpec::block_local(0).is_err());
+        assert!(AttentionSpec::strided(0).is_err());
+        assert!(AttentionSpec::routing_balanced(16, 0).is_err());
+        assert!(AttentionSpec::union(vec![]).is_err());
+        assert!(AttentionSpec::intersect(vec![]).is_err());
+        assert!(AttentionSpec::local(1).is_ok());
+        assert!(AttentionSpec::strided(1).is_ok());
+    }
+
+    #[test]
+    fn hand_built_zero_params_clamp_instead_of_panicking() {
+        // direct enum construction bypasses validation; compile must clamp
+        let p = AttentionSpec::Local { window: 0 }.compile(4);
+        assert_eq!(p.row(2), &[2]);
+        let p = AttentionSpec::Strided { stride: 0 }.compile(4);
+        assert_eq!(p.row(3), &[0, 1, 2, 3]);
+        // clamped to blocks of 1: each query sees itself and its
+        // predecessor, so rows are {0}, {0,1}, {1,2}, {2,3}
+        let p = AttentionSpec::BlockLocal { window: 0 }.compile(4);
+        assert_eq!(p.row(3), &[2, 3]);
+        assert_eq!(p.nnz(), 7);
+    }
+
+    #[test]
+    fn routing_normalizes_members() {
+        let spec = AttentionSpec::routing(vec![vec![5, 2, 2, 0]]);
+        match &spec {
+            AttentionSpec::Routing { clusters } => assert_eq!(clusters[0], vec![0, 2, 5]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn routing_balanced_covers_prefix() {
+        let spec = AttentionSpec::routing_balanced(10, 3).unwrap();
+        match &spec {
+            AttentionSpec::Routing { clusters } => {
+                assert_eq!(clusters.len(), 3);
+                // w = 3; tail token 9 stays unrouted, as the model assumes
+                assert_eq!(clusters[0], vec![0, 1, 2]);
+                assert_eq!(clusters[2], vec![6, 7, 8]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_nested() {
+        let spec = AttentionSpec::union(vec![
+            AttentionSpec::local(8).unwrap(),
+            AttentionSpec::routing(vec![vec![0, 3, 9], vec![1, 2]]),
+            AttentionSpec::intersect(vec![
+                AttentionSpec::Full,
+                AttentionSpec::strided(4).unwrap(),
+            ])
+            .unwrap(),
+        ])
+        .unwrap();
+        let text = spec.to_json().to_string();
+        let back = AttentionSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_specs() {
+        for bad in [
+            r#"{"kind":"warp"}"#,
+            r#"{"kind":"local"}"#,
+            r#"{"kind":"local","window":0}"#,
+            r#"{"window":3}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(AttentionSpec::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+}

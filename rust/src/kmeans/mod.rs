@@ -5,6 +5,7 @@
 //! routing sparsity patterns), the complexity model, and property tests
 //! that pin down the EMA/assignment semantics shared with the L2 graph.
 
+use crate::attention::AttentionSpec;
 use crate::util::rng::Rng;
 
 /// Online spherical k-means with EMA centroid updates.
@@ -112,6 +113,13 @@ impl SphericalKMeans {
         counts
     }
 
+    /// Package balanced top-w membership over the given routing vectors
+    /// (row-major [n, dim]) as a routing [`AttentionSpec`] — Algorithm 1's
+    /// content-based index sets, ready to `compile(n)` into CSR.
+    pub fn routing_spec(&self, xs: &[f32], n: usize, w: usize) -> AttentionSpec {
+        AttentionSpec::routing(self.top_w_members(xs, n, w))
+    }
+
     /// Mean within-cluster dot product (clustering quality metric).
     pub fn cohesion(&self, xs: &[f32], n: usize) -> f32 {
         let mut total = 0.0;
@@ -211,6 +219,23 @@ mod tests {
         for m in &members {
             assert_eq!(m.len(), 10);
             assert!(m.windows(2).all(|p| p[0] < p[1]), "sorted unique");
+        }
+    }
+
+    #[test]
+    fn routing_spec_compiles_to_member_sets() {
+        let km = SphericalKMeans::new(3, 8, 0.5, 7);
+        let xs = clustered_data(30, 8, 3, 8);
+        let spec = km.routing_spec(&xs, 30, 10);
+        let members = km.top_w_members(&xs, 30, 10);
+        let p = spec.compile(30);
+        assert!(p.is_causal());
+        for m in &members {
+            for (idx, &i) in m.iter().enumerate() {
+                for &j in &m[..=idx] {
+                    assert!(p.allowed(i, j), "member pair ({i},{j}) must be admitted");
+                }
+            }
         }
     }
 

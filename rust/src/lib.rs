@@ -15,7 +15,14 @@
 //!   PJRT ([`runtime`]), generates workloads ([`data`], [`tokenizer`]),
 //!   drives training/eval ([`coordinator`]), samples ([`sampler`]),
 //!   and reproduces every table and figure of the paper ([`analysis`],
-//!   [`attention`], `rust/benches/`).
+//!   [`attention`], `rust/benches/`).  Sparsity semantics flow through one
+//!   spec→compile pipeline: a declarative
+//!   [`attention::AttentionSpec`] (full / local / block-local / strided /
+//!   routing, composable into mixed head plans with `Union`/`Intersect`)
+//!   compiles once per sequence length into a CSR-indexed
+//!   [`attention::CompiledPattern`] that feeds the Figure-1 renderers, the
+//!   exact and asymptotic cost models, and the JSD analysis from a single
+//!   source of truth.
 //!
 //! Python runs once at build time (`make artifacts`); the `rtx` binary is
 //! self-contained afterwards.

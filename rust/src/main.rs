@@ -8,14 +8,14 @@
 //! rtx eval     --variant NAME [--ckpt CKPT] [--data D] [--batches N]
 //! rtx sample   --variant NAME [--ckpt CKPT] [--tokens N] [--top-p P]
 //! rtx analyze  [--variant analysis] [--ckpt CKPT] [--runs N]   Table 6 JSD
-//! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8]
+//! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8] [--stats]
 //! ```
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 use routing_transformer::analysis;
-use routing_transformer::attention::Pattern;
+use routing_transformer::attention::AttentionSpec;
 use routing_transformer::coordinator::{
     default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
     Trainer,
@@ -27,6 +27,7 @@ use routing_transformer::sampler::{Generator, SamplerConfig};
 use routing_transformer::tokenizer::{ByteTokenizer, Tokenizer};
 use routing_transformer::util::cli::Args;
 use routing_transformer::util::rng::Rng;
+use routing_transformer::util::timing::Table;
 
 fn main() {
     let args = Args::from_env();
@@ -69,6 +70,7 @@ commands:
   sample    generate: --variant NAME [--ckpt CKPT] [--tokens N] [--top-p P] [--temp T] [--seed S]
   analyze   Table-6 JSD study: [--variant analysis] [--ckpt CKPT] [--runs 10] [--data needle]
   figure1   render Figure-1 attention patterns: [--n 64] [--window 8] [--stride 8] [--clusters 8]
+            [--stats] (nnz/density/row-size table per scheme) [--csv FILE] [--seed S]
 ";
 
 fn artifacts_root(args: &Args) -> PathBuf {
@@ -298,7 +300,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 
     println!("Table 6 — Jensen-Shannon divergence between attention heads");
     println!("(natural log; upper bound {:.4}; {} runs)", analysis::JSD_MAX, runs);
-    let mut table = routing_transformer::util::timing::Table::new(&[
+    let mut table = Table::new(&[
         "layer", "JSD(local‖local)", "JSD(local‖routing)", "JSD(routing‖routing)",
     ]);
     for layer in 0..cfg.n_layers {
@@ -319,6 +321,17 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         rows.push(layer);
     }
     table.print();
+
+    // spec-level counterpart: analytic JSD between uniform attention over
+    // the config's local window and a balanced routing plan, straight from
+    // the compiled CSR patterns (no model forward pass)
+    let local = AttentionSpec::local(cfg.window.max(1))?.compile(t);
+    let routing = AttentionSpec::routing_balanced(t, cfg.n_clusters.max(1))?.compile(t);
+    println!(
+        "\nanalytic uniform-pattern JSD: local‖routing {:.4} (bound {:.4})",
+        analysis::mean_pattern_jsd(&local, &routing),
+        analysis::JSD_MAX
+    );
     Ok(())
 }
 
@@ -326,16 +339,10 @@ fn cmd_figure1(args: &Args) -> Result<()> {
     let n = args.usize("n", 64)?;
     let window = args.usize("window", 8)?;
     let stride = args.usize("stride", 8)?;
-    let k = args.usize("clusters", 8)?;
+    let k = args.usize("clusters", 8)?.max(1);
     let seed = args.u64("seed", 0)?;
 
-    println!("Figure 1 — 2-D attention schemes (rows = outputs, cols = inputs)\n");
-    println!("local attention (window {window}):");
-    println!("{}", Pattern::local(n, window).render_ascii());
-    println!("strided attention (stride {stride}):");
-    println!("{}", Pattern::strided(n, stride).render_ascii());
-
-    // routing pattern from clustered synthetic routing vectors
+    // routing spec from clustered synthetic routing vectors
     let dim = 16;
     let mut rng = Rng::new(seed);
     let mut xs = vec![0f32; n * dim];
@@ -350,17 +357,51 @@ fn cmd_figure1(args: &Args) -> Result<()> {
     for _ in 0..30 {
         km.update(&xs, n);
     }
-    let pattern = Pattern::routing_from_vectors(n, &xs, &km, n / k);
-    println!("routing attention (k = {k} clusters, letters = clusters):");
-    println!("{}", pattern.render_ascii());
+
+    let local = AttentionSpec::local(window)?;
+    let strided = AttentionSpec::strided(stride)?;
+    let routing = km.routing_spec(&xs, n, n / k);
+    let mixed = AttentionSpec::union(vec![local.clone(), routing.clone()])?;
+    let schemes = [
+        (format!("local attention (window {window})"), local.compile(n)),
+        (format!("strided attention (stride {stride})"), strided.compile(n)),
+        (format!("routing attention (k = {k} clusters, letters = clusters)"), routing.compile(n)),
+        ("mixed local+routing head plan (union)".to_string(), mixed.compile(n)),
+    ];
+
+    println!("Figure 1 — 2-D attention schemes (rows = outputs, cols = inputs)\n");
+    for (name, pattern) in &schemes {
+        println!("{name}:");
+        println!("{}", pattern.render_ascii());
+    }
     println!(
-        "densities: local {:.3}, strided {:.3}, routing {:.3} (full = 1.0)",
-        Pattern::local(n, window).density(),
-        Pattern::strided(n, stride).density(),
-        pattern.density()
+        "densities: local {:.3}, strided {:.3}, routing {:.3}, mixed {:.3} (full = 1.0)",
+        schemes[0].1.density(),
+        schemes[1].1.density(),
+        schemes[2].1.density(),
+        schemes[3].1.density()
     );
+    if args.bool("stats", false)? {
+        println!("\npattern statistics (compiled CSR index sets, d = 64 for MACs):");
+        let mut table = Table::new(&[
+            "scheme", "nnz", "density", "row min", "row mean", "row max", "exact MACs",
+        ]);
+        for (name, pattern) in &schemes {
+            let s = pattern.row_stats();
+            table.row(&[
+                name.split(" (").next().unwrap_or(name.as_str()).to_string(),
+                pattern.nnz().to_string(),
+                format!("{:.4}", pattern.density()),
+                s.min.to_string(),
+                format!("{:.1}", s.mean),
+                s.max.to_string(),
+                format!("{:.3e}", pattern.cost(64) as f64),
+            ]);
+        }
+        table.print();
+    }
     if let Some(path) = args.flags.get("csv") {
-        std::fs::write(path, pattern.render_csv())?;
+        std::fs::write(path, schemes[2].1.render_csv())?;
         println!("routing pattern CSV written to {path}");
     }
     Ok(())

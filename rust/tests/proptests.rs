@@ -1,16 +1,17 @@
 //! Property-based tests over the coordinator substrates.
 //!
 //! The offline environment ships no `proptest`, so this file includes a
-//! small hand-rolled property harness (`props!`): each property runs over
+//! small hand-rolled property harness (`check`): each property runs over
 //! hundreds of seeded random cases and reports the failing seed for
-//! shrink-by-hand reproduction.  Invariants covered: routing patterns
-//! (balance, causality, membership), batcher (no loss/dup), k-means
-//! (norms, assignment optimality), tokenizers (round-trips), sampler
-//! (support/normalization), schedules (finiteness/monotonicity), JSON
-//! (round-trip).
+//! shrink-by-hand reproduction.  Invariants covered: compiled attention
+//! patterns (agreement with a naive reference oracle on `allowed`/`nnz`,
+//! causality, row sortedness, spec JSON round-trips), routing membership,
+//! batcher (no loss/dup), k-means (norms, assignment optimality),
+//! tokenizers (round-trips), sampler (support/normalization), schedules
+//! (finiteness/monotonicity), JSON (round-trip).
 
 use routing_transformer::analysis::{jsd, JSD_MAX};
-use routing_transformer::attention::{attention_flops, optimal_clusters, AttentionKind, Pattern};
+use routing_transformer::attention::{optimal_clusters, AttentionSpec};
 use routing_transformer::coordinator::LrSchedule;
 use routing_transformer::data::{self, TokenSource};
 use routing_transformer::kmeans::{dot, norm, SphericalKMeans};
@@ -82,19 +83,93 @@ fn prop_top_w_contains_argmax_member() {
     });
 }
 
+/// Naive reference oracle: the paper's definitions evaluated directly per
+/// (i, j) pair, including composition — the semantics `compile` must match.
+fn oracle_allowed(spec: &AttentionSpec, n: usize, i: usize, j: usize) -> bool {
+    if j > i || i >= n || j >= n {
+        return false;
+    }
+    match spec {
+        AttentionSpec::Full => true,
+        AttentionSpec::Local { window } => i - j < (*window).max(1),
+        AttentionSpec::BlockLocal { window } => {
+            let w = (*window).max(1);
+            i / w - j / w <= 1
+        }
+        AttentionSpec::Strided { stride } => (i - j) % (*stride).max(1) == 0,
+        AttentionSpec::Routing { clusters } => {
+            clusters.iter().any(|m| m.contains(&i) && m.contains(&j))
+        }
+        AttentionSpec::Union(parts) => parts.iter().any(|p| oracle_allowed(p, n, i, j)),
+        AttentionSpec::Intersect(parts) => parts.iter().all(|p| oracle_allowed(p, n, i, j)),
+    }
+}
+
+/// Random spec over positions < `bound`, with nested composition.
+fn random_spec(rng: &mut Rng, bound: usize, depth: usize) -> AttentionSpec {
+    let b = bound.max(2);
+    match rng.below(if depth == 0 { 5 } else { 7 }) {
+        0 => AttentionSpec::Full,
+        1 => AttentionSpec::local(rng.range(1, b + 1)).unwrap(),
+        2 => AttentionSpec::block_local(rng.range(1, b + 1)).unwrap(),
+        3 => AttentionSpec::strided(rng.range(1, b + 1)).unwrap(),
+        4 => {
+            let k = rng.range(1, 5);
+            let clusters: Vec<Vec<usize>> =
+                (0..k).map(|_| (0..b).filter(|_| rng.chance(0.3)).collect()).collect();
+            AttentionSpec::routing(clusters)
+        }
+        op => {
+            let parts: Vec<AttentionSpec> =
+                (0..rng.range(1, 4)).map(|_| random_spec(rng, bound, depth - 1)).collect();
+            if op == 5 {
+                AttentionSpec::union(parts).unwrap()
+            } else {
+                AttentionSpec::intersect(parts).unwrap()
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_compiled_pattern_matches_oracle() {
+    check("compiled_oracle", 150, |rng| {
+        // n = 0 and n = 1 are in range: the old code underflowed there
+        let n = rng.range(0, 40);
+        let spec = random_spec(rng, n, 2);
+        let p = spec.compile(n);
+        assert_eq!(p.n(), n);
+        let mut total = 0usize;
+        for i in 0..n {
+            let row = p.row(i);
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "rows strictly ascending");
+            assert!(row.iter().all(|&j| j <= i), "causality");
+            for j in 0..n {
+                assert_eq!(
+                    p.allowed(i, j),
+                    oracle_allowed(&spec, n, i, j),
+                    "disagrees with oracle at i={i} j={j} for {spec:?}"
+                );
+            }
+            total += row.len();
+        }
+        assert_eq!(p.nnz(), total, "CSR nnz must equal the row-length sum");
+        assert!(p.is_causal() && p.rows_sorted());
+        assert!(p.density() <= 1.0 + 1e-12);
+        // out-of-range queries are empty, never a panic
+        assert_eq!(p.row(n), &[] as &[usize]);
+        assert!(!p.allowed(n, 0));
+    });
+}
+
 #[test]
 fn prop_routing_pattern_causal_and_symmetric_membership() {
     check("routing_pattern", 100, |rng| {
         let n = rng.range(4, 48);
         let k = rng.range(1, 5);
-        let clusters: Vec<Vec<usize>> = (0..k)
-            .map(|_| {
-                let mut m: Vec<usize> = (0..n).filter(|_| rng.chance(0.3)).collect();
-                m.dedup();
-                m
-            })
-            .collect();
-        let p = Pattern::routing(n, clusters.clone());
+        let clusters: Vec<Vec<usize>> =
+            (0..k).map(|_| (0..n).filter(|_| rng.chance(0.3)).collect()).collect();
+        let p = AttentionSpec::routing(clusters.clone()).compile(n);
         assert!(p.is_causal());
         for i in 0..n {
             for j in 0..=i {
@@ -110,21 +185,31 @@ fn prop_routing_pattern_causal_and_symmetric_membership() {
 }
 
 #[test]
-fn prop_pattern_nnz_matches_attend_sets() {
-    check("pattern_nnz", 60, |rng| {
+fn prop_positional_kinds_attend_to_self() {
+    check("pattern_diag", 60, |rng| {
         let n = rng.range(2, 40);
-        let p = match rng.below(3) {
-            0 => Pattern::local(n, rng.range(1, n + 1)),
-            1 => Pattern::strided(n, rng.range(1, n + 1)),
-            _ => Pattern::block_local(n, rng.range(1, n + 1)),
+        let spec = match rng.below(3) {
+            0 => AttentionSpec::local(rng.range(1, n + 1)).unwrap(),
+            1 => AttentionSpec::strided(rng.range(1, n + 1)).unwrap(),
+            _ => AttentionSpec::block_local(rng.range(1, n + 1)).unwrap(),
         };
-        let total: usize = (0..n).map(|i| p.attend_set(i).len()).sum();
-        assert_eq!(p.nnz(), total);
+        let p = spec.compile(n);
         assert!(p.density() <= 1.0 + 1e-12);
         // every token attends at least to itself for positional kinds
         for i in 0..n {
             assert!(p.allowed(i, i));
+            assert_eq!(*p.row(i).last().unwrap(), i, "diagonal is the last entry");
         }
+    });
+}
+
+#[test]
+fn prop_spec_json_roundtrip() {
+    check("spec_json", 80, |rng| {
+        let spec = random_spec(rng, 16, 2);
+        let text = spec.to_json().to_string();
+        let back = AttentionSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec, "round-trip failed for {text}");
     });
 }
 
@@ -133,12 +218,31 @@ fn prop_complexity_routing_optimum_near_sqrt() {
     check("complexity_opt", 30, |rng| {
         let n = 1 << rng.range(8, 15);
         let d = 1 << rng.range(4, 8);
+        let flops = |k: usize| {
+            AttentionSpec::routing_balanced(n, k).unwrap().flops_estimate(n, d)
+        };
         let kopt = optimal_clusters(n);
-        let copt = attention_flops(AttentionKind::Routing { clusters: kopt }, n, d);
+        let copt = flops(kopt);
         // cost function is convex-ish in k: both far extremes are worse
-        let far_lo = attention_flops(AttentionKind::Routing { clusters: (kopt / 8).max(1) }, n, d);
-        let far_hi = attention_flops(AttentionKind::Routing { clusters: kopt * 8 }, n, d);
-        assert!(copt <= far_lo && copt <= far_hi);
+        assert!(copt <= flops((kopt / 8).max(1)) && copt <= flops(kopt * 8));
+    });
+}
+
+#[test]
+fn prop_union_nnz_bounds_and_intersect_subset() {
+    check("compose_bounds", 80, |rng| {
+        let n = rng.range(1, 32);
+        let a = random_spec(rng, n, 1);
+        let b = random_spec(rng, n, 1);
+        let pa = a.compile(n);
+        let pb = b.compile(n);
+        let pu = AttentionSpec::union(vec![a.clone(), b.clone()]).unwrap().compile(n);
+        let pi = AttentionSpec::intersect(vec![a, b]).unwrap().compile(n);
+        assert!(pu.nnz() >= pa.nnz().max(pb.nnz()));
+        assert!(pu.nnz() <= pa.nnz() + pb.nnz());
+        assert!(pi.nnz() <= pa.nnz().min(pb.nnz()));
+        // inclusion-exclusion pins the union size exactly
+        assert_eq!(pu.nnz() + pi.nnz(), pa.nnz() + pb.nnz());
     });
 }
 
