@@ -1,14 +1,16 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Three parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Four parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
 //! model adds over plain attention) vs n; (3) compiled CSR vs the old
 //! `Vec::contains`-scan pattern evaluation at n = 512, k = √n — the
-//! redesign must be >= 10x faster end to end (compile + nnz query).
+//! redesign must be >= 10x faster end to end (compile + nnz query);
+//! (4) `PatternCache` multi-head compile amortization over a heads x
+//! layers x steps serving sweep — cached must be >= 5x over uncached.
 
-use routing_transformer::attention::{optimal_clusters, AttentionSpec};
+use routing_transformer::attention::{optimal_clusters, AttentionSpec, PatternCache};
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
 use routing_transformer::util::timing::{time_fn, Table};
@@ -112,6 +114,63 @@ fn main() {
     assert!(
         speedup >= 10.0,
         "compiled path must be >= 10x faster than the contains-scan path (got {speedup:.1}x)"
+    );
+
+    // cached vs uncached multi-head pattern compilation: a serving-shaped
+    // heads x layers x steps sweep over a Sec.-4.2 head plan (per-layer
+    // local windows + one shared routing spec). The cache turns repeated
+    // compiles into hash lookups and must amortize >= 5x end to end.
+    let (heads, layers, steps) = (8usize, 4usize, 4usize);
+    let n = 512usize;
+    let k = optimal_clusters(n);
+    let routing = AttentionSpec::routing_balanced(n, k).unwrap();
+    let plan: Vec<AttentionSpec> = (0..layers)
+        .flat_map(|l| {
+            let routing = routing.clone();
+            (0..heads).map(move |h| {
+                if h % 2 == 0 {
+                    AttentionSpec::local(8 * (l + 1)).unwrap()
+                } else {
+                    routing.clone()
+                }
+            })
+        })
+        .collect();
+    let mut cache = PatternCache::new();
+    let mut cached_nnz = 0u64;
+    let cached = time_fn(1, 5, || {
+        cache.clear();
+        cached_nnz = 0;
+        for _ in 0..steps {
+            for spec in &plan {
+                cached_nnz += cache.get_or_compile(spec, n).nnz() as u64;
+            }
+        }
+    });
+    let mut fresh_nnz = 0u64;
+    let fresh = time_fn(1, 5, || {
+        fresh_nnz = 0;
+        for _ in 0..steps {
+            for spec in &plan {
+                fresh_nnz += std::hint::black_box(spec.compile(n)).nnz() as u64;
+            }
+        }
+    });
+    assert_eq!(cached_nnz, fresh_nnz, "cached and fresh compiles must count the same sets");
+    let stats = cache.stats();
+    let cache_speedup = fresh.mean / cached.mean;
+    println!(
+        "\ncached vs uncached compile over {} lookups ({} distinct specs, {:.1}% hits): \
+         {:.3} ms vs {:.3} ms ({cache_speedup:.1}x)",
+        stats.lookups(),
+        cache.len(),
+        stats.hit_rate() * 100.0,
+        cached.mean * 1e3,
+        fresh.mean * 1e3
+    );
+    assert!(
+        cache_speedup >= 5.0,
+        "cached multi-head compilation must be >= 5x over uncached (got {cache_speedup:.1}x)"
     );
     println!("\nbench_complexity OK");
 }

@@ -11,8 +11,10 @@
 //! renderers and the exact-FLOP `cost` model live here so there is exactly
 //! one source of truth for "which keys may query i attend to".
 
-/// Sentinel cluster id for entries admitted by a non-routing scheme.
-pub(crate) const NO_CLUSTER: u32 = u32::MAX;
+/// Sentinel cluster id for entries admitted by a non-routing scheme
+/// (public so engine consumers iterating raw cluster slices via
+/// [`CompiledPattern::rows`] can tell routed from unrouted entries).
+pub const NO_CLUSTER: u32 = u32::MAX;
 
 /// A compiled sparsity pattern over a sequence of length `n`, stored as
 /// CSR: `cols[row_offsets[i]..row_offsets[i+1]]` is S_i, sorted ascending.
@@ -59,6 +61,13 @@ impl CompiledPattern {
         self.n
     }
 
+    /// CSR row offsets (`n + 1` entries; `offsets()[i]` is the nnz before
+    /// row i).  Crate-internal: the engine's sharding uses it as a prefix
+    /// sum for O(1) per-range nnz and O(log n) balanced split points.
+    pub(crate) fn offsets(&self) -> &[usize] {
+        &self.row_offsets
+    }
+
     /// Total non-zero entries of the attention matrix — O(1) from CSR.
     pub fn nnz(&self) -> usize {
         self.cols.len()
@@ -76,6 +85,26 @@ impl CompiledPattern {
     /// May query `i` attend to key `j`?  O(log |S_i|) binary search.
     pub fn allowed(&self, i: usize, j: usize) -> bool {
         self.row(i).binary_search(&j).is_ok()
+    }
+
+    /// Per-entry cluster ids aligned with `row(i)` ([`NO_CLUSTER`] for
+    /// unrouted entries); empty for out-of-range `i`.
+    pub fn row_clusters(&self, i: usize) -> &[u32] {
+        if i >= self.n {
+            return &[];
+        }
+        &self.cluster_ids[self.row_offsets[i]..self.row_offsets[i + 1]]
+    }
+
+    /// Batched zero-allocation row gather: iterate `(i, keys, clusters)`
+    /// for every query row in `range` (clamped to `0..n`), handing out
+    /// slices straight from the CSR arrays.  This is the engine's
+    /// per-shard evaluation primitive — see
+    /// [`crate::attention::engine`].
+    pub fn rows(&self, range: std::ops::Range<usize>) -> RowIter<'_> {
+        let end = range.end.min(self.n);
+        let start = range.start.min(end);
+        RowIter { pattern: self, range: start..end }
     }
 
     /// Cluster id that routed key `j` into S_i, if any.
@@ -186,6 +215,29 @@ impl CompiledPattern {
         out
     }
 }
+
+/// Iterator over `(i, keys, clusters)` row slices; see
+/// [`CompiledPattern::rows`].
+#[derive(Debug, Clone)]
+pub struct RowIter<'a> {
+    pattern: &'a CompiledPattern,
+    range: std::ops::Range<usize>,
+}
+
+impl<'a> Iterator for RowIter<'a> {
+    type Item = (usize, &'a [usize], &'a [u32]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let i = self.range.next()?;
+        Some((i, self.pattern.row(i), self.pattern.row_clusters(i)))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.range.size_hint()
+    }
+}
+
+impl<'a> ExactSizeIterator for RowIter<'a> {}
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,593 @@
+//! Batched/sharded pattern-evaluation engine over [`CompiledPattern`] —
+//! the serving-scale layer on top of the spec→compile pipeline.
+//!
+//! Compiling a spec is O(nnz); a serving loop that recompiles the same
+//! head plan for every head, layer, and decode step throws the paper's
+//! O(n^1.5 d) win away on pattern construction.  This module adds the
+//! three pieces that make compiled sparsity *reusable and executable*:
+//!
+//! * [`PatternCache`] — deduplicates compiles across heads/layers/steps.
+//!   Entries are keyed by the spec's normalized identity plus the sequence
+//!   length (constructors normalize specs, so structural equality is
+//!   exactly canonical-JSON equality — the hot path hashes the spec
+//!   directly instead of re-serializing it) and reports hit/miss stats so
+//!   serving can watch its amortization.
+//! * [`ShardedPattern`] — contiguous per-shard row ranges over one
+//!   pattern, split by row count ([`ShardedPattern::by_rows`]) or by nnz
+//!   so every worker gets equal work ([`ShardedPattern::balanced`]).
+//!   Per-shard `nnz`/`cost` let a scheduler place shards; shard nnz always
+//!   sums to the pattern's `nnz()`.
+//! * [`sparse_attention`] / [`sparse_attention_rows`] — a host-side f32
+//!   reference kernel: per-row softmax(q·kᵀ/√d) over exactly the CSR
+//!   attend-set, then the weighted value gather.  Fully-masked rows (an
+//!   empty S_i, e.g. an unrouted token) produce zeros, never NaN —
+//!   mirroring the fully-masked-logit guard in [`crate::sampler`].
+//!   [`dense_masked_attention`] is the O(n²d) masked-softmax oracle the
+//!   kernel is validated against (both accumulate in f64, so they agree
+//!   to final-rounding precision).
+//!
+//! The batched zero-allocation row gather itself lives on the pattern:
+//! [`CompiledPattern::rows`] yields `(i, &[usize], &[u32])` slices
+//! straight out of the CSR arrays.
+//!
+//! Consumers: `rtx serve-bench` (heads × layers × steps sweep printing
+//! cache hit-rate and rows/sec), `bench_complexity` (cached multi-head
+//! compile ≥ 5× over uncached), `examples/analyze_attention.rs`, and the
+//! engine property tests.  Multi-backend execution (handing the CSR
+//! arrays to an accelerator kernel) is the next step; see ROADMAP.md.
+
+use std::collections::{BTreeMap, HashMap};
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::compiled::CompiledPattern;
+use super::spec::AttentionSpec;
+
+// ---------------------------------------------------------------- cache
+
+/// Hit/miss counters for a [`PatternCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from an existing compile.
+    pub hits: u64,
+    /// Lookups that had to compile (one compile per miss).
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Total lookups (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served without compiling; 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Compile cache: (spec, n) → shared [`CompiledPattern`].
+///
+/// Serving reuses one pattern across every head and decode step that
+/// shares a spec, so the cache hands out `Arc`s; a hit is a hash + spec
+/// equality check (no serialization, no compile).  Unbounded by design —
+/// a head plan holds a handful of distinct specs; eviction policy becomes
+/// interesting only with per-step routing specs, which serving should
+/// instead key by cluster epoch (see ROADMAP).
+#[derive(Debug, Default)]
+pub struct PatternCache {
+    /// Outer map by spec (hashed structurally ≡ by canonical JSON, since
+    /// constructors normalize), inner by sequence length.
+    entries: HashMap<AttentionSpec, BTreeMap<usize, Arc<CompiledPattern>>>,
+    stats: CacheStats,
+}
+
+impl PatternCache {
+    pub fn new() -> PatternCache {
+        PatternCache::default()
+    }
+
+    /// The pattern for `(spec, n)`, compiling at most once per key.
+    pub fn get_or_compile(&mut self, spec: &AttentionSpec, n: usize) -> Arc<CompiledPattern> {
+        if let Some(p) = self.entries.get(spec).and_then(|by_n| by_n.get(&n)) {
+            self.stats.hits += 1;
+            return Arc::clone(p);
+        }
+        self.stats.misses += 1;
+        let pattern = Arc::new(spec.compile(n));
+        self.entries.entry(spec.clone()).or_default().insert(n, Arc::clone(&pattern));
+        pattern
+    }
+
+    /// Cached `(spec, n)` entries.
+    pub fn len(&self) -> usize {
+        self.entries.values().map(BTreeMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop all entries and reset the counters.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.stats = CacheStats::default();
+    }
+}
+
+// ---------------------------------------------------------------- shards
+
+/// One worker's slice of a pattern: a contiguous row range plus its work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// Position in [`ShardedPattern::shards`].
+    pub index: usize,
+    /// Contiguous query rows `[start, end)` this shard owns.
+    pub rows: Range<usize>,
+    /// Non-zero entries inside `rows` (sums to the pattern's `nnz()`).
+    pub nnz: usize,
+}
+
+impl Shard {
+    pub fn n_rows(&self) -> usize {
+        self.rows.end - self.rows.start
+    }
+
+    /// Exact multiply-accumulate count for this shard at head dim `d`
+    /// (same model as [`CompiledPattern::cost`]).
+    pub fn cost(&self, d: usize) -> u64 {
+        2 * self.nnz as u64 * d as u64
+    }
+}
+
+/// A [`CompiledPattern`] split into contiguous row-range shards, so one
+/// sequence's attention can be spread across workers.  Shards partition
+/// `0..n` exactly: consecutive, disjoint, covering every row (some may be
+/// empty when `n < k`).
+#[derive(Debug, Clone)]
+pub struct ShardedPattern {
+    pattern: Arc<CompiledPattern>,
+    shards: Vec<Shard>,
+}
+
+impl ShardedPattern {
+    /// Split into `k` shards of (nearly) equal row counts.
+    pub fn by_rows(pattern: Arc<CompiledPattern>, k: usize) -> Result<ShardedPattern> {
+        if k == 0 {
+            bail!("sharding requires at least one shard (got k = 0)");
+        }
+        let n = pattern.n();
+        let per = ((n + k - 1) / k).max(1);
+        let bounds: Vec<usize> = (0..=k).map(|s| (s * per).min(n)).collect();
+        Ok(ShardedPattern::from_bounds(pattern, &bounds))
+    }
+
+    /// Split into `k` shards balancing nnz (work), using the CSR row
+    /// offsets as a prefix sum: shard `s` ends at the first row where the
+    /// running nnz reaches `total·(s+1)/k` (each split point is one binary
+    /// search).  Row-count splits can leave one worker with most of the
+    /// work (causal full attention: the last rows are the widest); nnz
+    /// splits equalize wall-clock instead.
+    pub fn balanced(pattern: Arc<CompiledPattern>, k: usize) -> Result<ShardedPattern> {
+        if k == 0 {
+            bail!("sharding requires at least one shard (got k = 0)");
+        }
+        let n = pattern.n();
+        let total = pattern.nnz();
+        let offsets = pattern.offsets();
+        let mut bounds = Vec::with_capacity(k + 1);
+        bounds.push(0usize);
+        for s in 1..k {
+            let target = ((total as u128 * s as u128) / k as u128) as usize;
+            // first row whose prefix nnz reaches the target
+            bounds.push(offsets.partition_point(|&o| o < target).min(n));
+        }
+        bounds.push(n);
+        Ok(ShardedPattern::from_bounds(pattern, &bounds))
+    }
+
+    fn from_bounds(pattern: Arc<CompiledPattern>, bounds: &[usize]) -> ShardedPattern {
+        let offsets = pattern.offsets();
+        let shards = bounds
+            .windows(2)
+            .enumerate()
+            .map(|(index, w)| Shard {
+                index,
+                rows: w[0]..w[1],
+                nnz: offsets[w[1]] - offsets[w[0]],
+            })
+            .collect();
+        ShardedPattern { pattern, shards }
+    }
+
+    pub fn pattern(&self) -> &Arc<CompiledPattern> {
+        &self.pattern
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Run the sparse-attention kernel with one worker per shard, each
+    /// writing its contiguous `[rows.start*d, rows.end*d)` slice of the
+    /// output.  Agrees bitwise with [`sparse_attention`] (identical
+    /// per-row math, disjoint rows).
+    ///
+    /// Empty shards spawn nothing, the first non-empty shard runs on the
+    /// calling thread, and a single-worker split skips threading entirely
+    /// — so the reference path pays `non_empty - 1` spawns per call.  A
+    /// persistent worker pool is the serving-scale next step (ROADMAP).
+    pub fn attention(&self, q: &[f32], k: &[f32], v: &[f32], d: usize) -> Result<Vec<f32>> {
+        let n = self.pattern.n();
+        check_qkv(q, k, v, n, d)?;
+        let mut out = vec![0f32; n * d];
+        let pattern = &*self.pattern;
+        // carve the output into per-shard slices, dropping empty shards
+        // (k > n sharding legitimately produces them)
+        let mut work: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = &mut out;
+        for shard in &self.shards {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(shard.n_rows() * d);
+            rest = tail;
+            if shard.n_rows() > 0 {
+                work.push((shard.rows.clone(), head));
+            }
+        }
+        if work.len() <= 1 {
+            for (rows, head) in work {
+                sparse_attention_rows(q, k, v, d, pattern, rows, head)?;
+            }
+            return Ok(out);
+        }
+        std::thread::scope(|scope| -> Result<()> {
+            let mut work = work.into_iter();
+            let (rows0, head0) = work.next().expect("len checked above");
+            let handles: Vec<_> = work
+                .map(|(rows, head)| {
+                    scope.spawn(move || sparse_attention_rows(q, k, v, d, pattern, rows, head))
+                })
+                .collect();
+            sparse_attention_rows(q, k, v, d, pattern, rows0, head0)?;
+            for h in handles {
+                h.join().map_err(|_| anyhow!("shard worker panicked"))??;
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------- kernel
+
+fn check_qkv(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Result<()> {
+    if d == 0 {
+        bail!("sparse attention requires head dimension d >= 1");
+    }
+    if q.len() != n * d || k.len() != n * d || v.len() != n * d {
+        bail!(
+            "q/k/v must each be [n = {n}, d = {d}] row-major (got {}, {}, {})",
+            q.len(),
+            k.len(),
+            v.len()
+        );
+    }
+    Ok(())
+}
+
+/// Host-side f32 sparse-attention reference kernel: for every query row i,
+/// softmax(q_i·k_jᵀ/√d) over exactly the pattern's attend-set S_i, then
+/// the weighted sum of values.  Returns the `[n, d]` output row-major.
+/// Scores and accumulation run in f64 so the result matches
+/// [`dense_masked_attention`] to final-rounding precision.
+pub fn sparse_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    pattern: &CompiledPattern,
+) -> Result<Vec<f32>> {
+    let n = pattern.n();
+    check_qkv(q, k, v, n, d)?;
+    let mut out = vec![0f32; n * d];
+    sparse_attention_rows(q, k, v, d, pattern, 0..n, &mut out)?;
+    Ok(out)
+}
+
+/// Shard-granular kernel: compute only the query rows in `rows`, writing
+/// row i's output at `out[(i - rows.start) * d ..]` (`out` holds exactly
+/// `rows.len() * d` values).  Q/K/V stay the full `[n, d]` buffers — keys
+/// outside the shard are still attended.  Scratch buffers are reused
+/// across rows; the row gather itself ([`CompiledPattern::rows`]) is
+/// zero-allocation.  Fully-masked rows write zeros.
+pub fn sparse_attention_rows(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    pattern: &CompiledPattern,
+    rows: Range<usize>,
+    out: &mut [f32],
+) -> Result<()> {
+    let n = pattern.n();
+    check_qkv(q, k, v, n, d)?;
+    if rows.end > n || rows.start > rows.end {
+        bail!("row range {}..{} out of bounds for n = {n}", rows.start, rows.end);
+    }
+    if out.len() != rows.len() * d {
+        bail!("out must hold rows.len() * d = {} values (got {})", rows.len() * d, out.len());
+    }
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut scores: Vec<f64> = Vec::new();
+    let mut acc: Vec<f64> = vec![0.0; d];
+    let start = rows.start;
+    for (i, cols, _clusters) in pattern.rows(rows) {
+        let oi = &mut out[(i - start) * d..(i - start + 1) * d];
+        oi.fill(0.0);
+        if cols.is_empty() {
+            // fully-masked row: no keys, no distribution — zeros, not NaN
+            continue;
+        }
+        let qi = &q[i * d..(i + 1) * d];
+        scores.clear();
+        let mut max = f64::NEG_INFINITY;
+        for &j in cols {
+            let kj = &k[j * d..(j + 1) * d];
+            let s: f64 =
+                qi.iter().zip(kj).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>() * scale;
+            max = max.max(s);
+            scores.push(s);
+        }
+        let mut z = 0.0f64;
+        for s in scores.iter_mut() {
+            *s = (*s - max).exp();
+            z += *s;
+        }
+        acc.fill(0.0);
+        for (&e, &j) in scores.iter().zip(cols) {
+            let w = e / z;
+            let vj = &v[j * d..(j + 1) * d];
+            for (a, &x) in acc.iter_mut().zip(vj) {
+                *a += w * x as f64;
+            }
+        }
+        for (o, &a) in oi.iter_mut().zip(&acc) {
+            *o = a as f32;
+        }
+    }
+    Ok(())
+}
+
+/// O(n²d) masked-softmax oracle: dense causal attention with every
+/// (i, j) pair masked by `pattern.allowed`, computed with the same f64
+/// internals as the sparse kernel.  Test/validation reference only —
+/// never the serving path.
+pub fn dense_masked_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    pattern: &CompiledPattern,
+) -> Result<Vec<f32>> {
+    let n = pattern.n();
+    check_qkv(q, k, v, n, d)?;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut out = vec![0f32; n * d];
+    for i in 0..n {
+        let qi = &q[i * d..(i + 1) * d];
+        let mut scores: Vec<(usize, f64)> = Vec::new();
+        let mut max = f64::NEG_INFINITY;
+        for j in 0..n {
+            if !pattern.allowed(i, j) {
+                continue;
+            }
+            let kj = &k[j * d..(j + 1) * d];
+            let s: f64 =
+                qi.iter().zip(kj).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>() * scale;
+            max = max.max(s);
+            scores.push((j, s));
+        }
+        if scores.is_empty() {
+            continue;
+        }
+        let z: f64 = scores.iter().map(|(_, s)| (s - max).exp()).sum();
+        let oi = &mut out[i * d..(i + 1) * d];
+        let mut acc = vec![0.0f64; d];
+        for &(j, s) in &scores {
+            let w = (s - max).exp() / z;
+            let vj = &v[j * d..(j + 1) * d];
+            for (a, &x) in acc.iter_mut().zip(vj) {
+                *a += w * x as f64;
+            }
+        }
+        for (o, &a) in oi.iter_mut().zip(&acc) {
+            *o = a as f32;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_qkv(rng: &mut Rng, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut mk = |rng: &mut Rng| (0..n * d).map(|_| rng.normal() as f32).collect();
+        (mk(rng), mk(rng), mk(rng))
+    }
+
+    #[test]
+    fn cache_compiles_once_per_key() {
+        let mut cache = PatternCache::new();
+        let local = AttentionSpec::local(4).unwrap();
+        let a = cache.get_or_compile(&local, 16);
+        let b = cache.get_or_compile(&local, 16);
+        assert!(Arc::ptr_eq(&a, &b), "hit must reuse the same compile");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+        // a different n or spec is a distinct entry
+        cache.get_or_compile(&local, 32);
+        cache.get_or_compile(&AttentionSpec::local(5).unwrap(), 16);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3 });
+        assert_eq!(cache.len(), 3);
+        assert!((cache.stats().hit_rate() - 0.25).abs() < 1e-12);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().lookups(), 0);
+    }
+
+    #[test]
+    fn cache_equals_fresh_compile() {
+        let mut cache = PatternCache::new();
+        let spec = AttentionSpec::union(vec![
+            AttentionSpec::local(3).unwrap(),
+            AttentionSpec::routing(vec![vec![0, 5, 9], vec![2, 3]]),
+        ])
+        .unwrap();
+        assert_eq!(*cache.get_or_compile(&spec, 12), spec.compile(12));
+    }
+
+    #[test]
+    fn shards_partition_rows_and_nnz() {
+        let pattern = Arc::new(AttentionSpec::Full.compile(10));
+        for k in [1usize, 2, 3, 7, 10, 15] {
+            for sharded in [
+                ShardedPattern::by_rows(Arc::clone(&pattern), k).unwrap(),
+                ShardedPattern::balanced(Arc::clone(&pattern), k).unwrap(),
+            ] {
+                assert_eq!(sharded.num_shards(), k);
+                let mut cursor = 0usize;
+                let mut nnz = 0usize;
+                for (s, shard) in sharded.shards().iter().enumerate() {
+                    assert_eq!(shard.index, s);
+                    assert_eq!(shard.rows.start, cursor, "shards must be contiguous");
+                    cursor = shard.rows.end;
+                    nnz += shard.nnz;
+                    assert_eq!(shard.cost(4), 2 * shard.nnz as u64 * 4);
+                }
+                assert_eq!(cursor, 10, "shards must cover every row");
+                assert_eq!(nnz, pattern.nnz(), "shard nnz must sum to pattern nnz");
+            }
+        }
+        assert!(ShardedPattern::by_rows(pattern, 0).is_err());
+    }
+
+    #[test]
+    fn balanced_shards_even_out_causal_skew() {
+        // causal full attention: later rows are wider; nnz-balanced split
+        // must give the first shard more rows than the last
+        let pattern = Arc::new(AttentionSpec::Full.compile(64));
+        let sharded = ShardedPattern::balanced(Arc::clone(&pattern), 4).unwrap();
+        let shards = sharded.shards();
+        assert!(shards[0].n_rows() > shards[3].n_rows());
+        let target = pattern.nnz() / 4;
+        for shard in shards {
+            assert!(
+                shard.nnz as f64 >= target as f64 * 0.5 && shard.nnz as f64 <= target as f64 * 1.5,
+                "shard {} nnz {} vs target {target}",
+                shard.index,
+                shard.nnz
+            );
+        }
+    }
+
+    #[test]
+    fn rows_iterator_matches_row_accessors() {
+        let spec = AttentionSpec::routing(vec![vec![0, 2, 5], vec![1, 3, 4]]);
+        let p = spec.compile(8);
+        let mut seen = 0usize;
+        for (i, cols, clusters) in p.rows(2..6) {
+            assert_eq!(cols, p.row(i));
+            assert_eq!(clusters, p.row_clusters(i));
+            assert_eq!(cols.len(), clusters.len());
+            seen += 1;
+        }
+        assert_eq!(seen, 4);
+        // out-of-range tails clamp instead of panicking
+        assert_eq!(p.rows(6..100).count(), 2);
+        assert_eq!(p.rows(9..12).count(), 0);
+    }
+
+    #[test]
+    fn sparse_attention_matches_dense_oracle() {
+        let mut rng = Rng::new(42);
+        let n = 48;
+        let d = 16;
+        let spec = AttentionSpec::union(vec![
+            AttentionSpec::local(6).unwrap(),
+            AttentionSpec::routing_balanced(n, 6).unwrap(),
+        ])
+        .unwrap();
+        let pattern = spec.compile(n);
+        let (q, k, v) = random_qkv(&mut rng, n, d);
+        let sparse = sparse_attention(&q, &k, &v, d, &pattern).unwrap();
+        let dense = dense_masked_attention(&q, &k, &v, d, &pattern).unwrap();
+        for (a, b) in sparse.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-5, "sparse {a} vs dense {b}");
+        }
+    }
+
+    #[test]
+    fn sharded_attention_agrees_with_single_shot() {
+        let mut rng = Rng::new(7);
+        let n = 33;
+        let d = 8;
+        let pattern = Arc::new(AttentionSpec::local(5).unwrap().compile(n));
+        let (q, k, v) = random_qkv(&mut rng, n, d);
+        let single = sparse_attention(&q, &k, &v, d, &pattern).unwrap();
+        for shards in [1usize, 2, 5, 40] {
+            let sharded = ShardedPattern::balanced(Arc::clone(&pattern), shards).unwrap();
+            assert_eq!(sharded.attention(&q, &k, &v, d).unwrap(), single);
+        }
+    }
+
+    #[test]
+    fn fully_masked_rows_are_zero_not_nan() {
+        // tokens 2 and 4 belong to no cluster: their rows are empty
+        let spec = AttentionSpec::routing(vec![vec![0, 1, 3]]);
+        let pattern = spec.compile(5);
+        assert!(pattern.row(2).is_empty() && pattern.row(4).is_empty());
+        let mut rng = Rng::new(1);
+        let (q, k, v) = random_qkv(&mut rng, 5, 4);
+        let out = sparse_attention(&q, &k, &v, 4, &pattern).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()), "masked rows must not poison the output");
+        assert!(out[2 * 4..3 * 4].iter().all(|&x| x == 0.0));
+        assert!(out[4 * 4..5 * 4].iter().all(|&x| x == 0.0));
+        assert_eq!(out, dense_masked_attention(&q, &k, &v, 4, &pattern).unwrap());
+    }
+
+    #[test]
+    fn degenerate_sizes_and_bad_shapes() {
+        // n = 0: empty everything, no panic
+        let p0 = AttentionSpec::Full.compile(0);
+        assert_eq!(sparse_attention(&[], &[], &[], 4, &p0).unwrap(), Vec::<f32>::new());
+        let s0 = ShardedPattern::balanced(Arc::new(p0), 3).unwrap();
+        assert_eq!(s0.shards().iter().map(|s| s.nnz).sum::<usize>(), 0);
+        assert_eq!(s0.attention(&[], &[], &[], 4).unwrap(), Vec::<f32>::new());
+        // n = 1: softmax over the single diagonal entry returns v[0]
+        let p1 = AttentionSpec::Full.compile(1);
+        let out = sparse_attention(&[1.0, 2.0], &[0.5, 0.5], &[3.0, -4.0], 2, &p1).unwrap();
+        assert!((out[0] - 3.0).abs() < 1e-6 && (out[1] + 4.0).abs() < 1e-6);
+        // shape mismatches and d = 0 are errors, not UB
+        let p = AttentionSpec::Full.compile(2);
+        assert!(sparse_attention(&[0.0; 3], &[0.0; 4], &[0.0; 4], 2, &p).is_err());
+        assert!(sparse_attention(&[], &[], &[], 0, &p).is_err());
+        let mut out = [0f32; 2];
+        assert!(sparse_attention_rows(&[0.0; 4], &[0.0; 4], &[0.0; 4], 2, &p, 1..3, &mut out)
+            .is_err());
+    }
+}

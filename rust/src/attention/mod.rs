@@ -16,19 +16,31 @@
 //!    length into CSR row offsets + sorted per-query key indices (with
 //!    per-entry cluster ids for routed keys).  This is the single source
 //!    of truth for "which keys may query i attend to": O(log w) `allowed`,
-//!    O(1) `nnz`/`density`, zero-allocation `row(i)` attend-set slices, an
-//!    exact-FLOP `cost(d)`, and the Figure-1 ASCII/CSV renderers.
+//!    O(1) `nnz`/`density`, zero-allocation `row(i)` attend-set slices and
+//!    batched `rows(range)` gathers, an exact-FLOP `cost(d)`, and the
+//!    Figure-1 ASCII/CSV renderers.
+//! 3. [`engine`] — the serving layer over compiled patterns: a
+//!    [`PatternCache`] deduplicating compiles across heads/layers/steps,
+//!    [`ShardedPattern`] row-range shards with per-shard nnz/cost so one
+//!    sequence splits across workers, and the host-side f32
+//!    [`sparse_attention`] reference kernel validated against a dense
+//!    masked-softmax oracle.
 //!
-//! Consumers: the `figure1` CLI and bench, the complexity bench, the
-//! Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
+//! Consumers: the `figure1` and `serve-bench` CLIs, the complexity bench,
+//! the Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
 //! k-means routing integration
 //! ([`crate::kmeans::SphericalKMeans::routing_spec`]), and the property
 //! tests that pin the semantics shared with the L2 graph.
 
 pub mod compiled;
 pub mod complexity;
+pub mod engine;
 pub mod spec;
 
-pub use compiled::{CompiledPattern, RowStats};
+pub use compiled::{CompiledPattern, RowIter, RowStats, NO_CLUSTER};
 pub use complexity::optimal_clusters;
+pub use engine::{
+    dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, PatternCache,
+    Shard, ShardedPattern,
+};
 pub use spec::AttentionSpec;

@@ -22,8 +22,10 @@ use crate::attention::compiled::{CompiledPattern, NO_CLUSTER};
 use crate::util::json::Json;
 
 /// A declarative sparse-attention scheme.  Always causal: every variant
-/// only ever admits keys j <= i.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// only ever admits keys j <= i.  `Hash` (with the constructor
+/// normalization) makes specs directly usable as compile-cache keys —
+/// structural identity coincides with canonical-JSON identity.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum AttentionSpec {
     /// Causal full attention: S_i = { j | j <= i }.
     Full,
@@ -397,6 +399,14 @@ mod tests {
             r#"{"kind":"local"}"#,
             r#"{"kind":"local","window":0}"#,
             r#"{"window":3}"#,
+            // fractional / negative params used to be silently truncated
+            // or saturated by the lossy `as` casts in Json::as_usize
+            r#"{"kind":"local","window":2.7}"#,
+            r#"{"kind":"local","window":-1}"#,
+            r#"{"kind":"strided","stride":3.5}"#,
+            r#"{"kind":"block_local","window":1e30}"#,
+            r#"{"kind":"routing","clusters":[[0,1.5]]}"#,
+            r#"{"kind":"routing","clusters":[[-2,1]]}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(AttentionSpec::from_json(&j).is_err(), "accepted {bad}");

@@ -26,14 +26,24 @@
 //!
 //! Python runs once at build time (`make artifacts`); the `rtx` binary is
 //! self-contained afterwards.
+//!
+//! The PJRT-backed layers ([`runtime`], [`coordinator`], [`bench`],
+//! [`config`], and the sampler's `Generator`) sit behind the default-on
+//! `xla` cargo feature; `--no-default-features` builds the host-only
+//! crate (attention + engine, kmeans, analysis, data, tokenizer, util)
+//! without the XLA native toolchain, which is what CI's tier-1 job runs.
 
 pub mod analysis;
-pub mod bench;
 pub mod attention;
+#[cfg(feature = "xla")]
+pub mod bench;
+#[cfg(feature = "xla")]
 pub mod config;
+#[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod data;
 pub mod kmeans;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sampler;
 pub mod tokenizer;

@@ -9,13 +9,16 @@
 //! rtx sample   --variant NAME [--ckpt CKPT] [--tokens N] [--top-p P]
 //! rtx analyze  [--variant analysis] [--ckpt CKPT] [--runs N]   Table 6 JSD
 //! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8] [--stats]
+//! rtx serve-bench [--n 256] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
 //! ```
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 use routing_transformer::analysis;
-use routing_transformer::attention::AttentionSpec;
+use routing_transformer::attention::{
+    optimal_clusters, AttentionSpec, CacheStats, PatternCache, ShardedPattern,
+};
 use routing_transformer::coordinator::{
     default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
     Trainer,
@@ -50,6 +53,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sample" => cmd_sample(args),
         "analyze" => cmd_analyze(args),
         "figure1" => cmd_figure1(args),
+        "serve-bench" => cmd_serve_bench(args),
         "help" | _ => {
             print!("{}", HELP);
             Ok(())
@@ -71,6 +75,10 @@ commands:
   analyze   Table-6 JSD study: [--variant analysis] [--ckpt CKPT] [--runs 10] [--data needle]
   figure1   render Figure-1 attention patterns: [--n 64] [--window 8] [--stride 8] [--clusters 8]
             [--stats] (nnz/density/row-size table per scheme) [--csv FILE] [--seed S]
+  serve-bench  heads x layers x steps serving sweep over the pattern engine:
+            [--n 256] [--d 64] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
+            [--window W] [--clusters K] [--seed S]
+            (prints compile-cache hit rate, per-shard work split, rows/sec)
 ";
 
 fn artifacts_root(args: &Args) -> PathBuf {
@@ -332,6 +340,107 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         analysis::mean_pattern_jsd(&local, &routing),
         analysis::JSD_MAX
     );
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let n = args.usize("n", 256)?.max(1);
+    let d = args.usize("d", 64)?.max(1);
+    let heads = args.usize("heads", 8)?.max(1);
+    let layers = args.usize("layers", 4)?.max(1);
+    let steps = args.usize("steps", 8)?.max(1);
+    let shards = args.usize("shards", 4)?.max(1);
+    let window = args.usize("window", (n / 8).max(1))?.max(1);
+    let k = args.usize("clusters", optimal_clusters(n))?.max(1);
+    let seed = args.u64("seed", 0)?;
+
+    // Sec. 4.2 head plan: even heads local, odd heads mixed local+routing.
+    // Layers and steps share the plan, so the cache must amortize compiles
+    // across the whole heads x layers x steps sweep.
+    let local = AttentionSpec::local(window)?;
+    let mixed = AttentionSpec::union(vec![
+        local.clone(),
+        AttentionSpec::routing_balanced(n, k)?,
+    ])?;
+    let plan: Vec<AttentionSpec> = (0..heads)
+        .map(|h| if h % 2 == 0 { local.clone() } else { mixed.clone() })
+        .collect();
+
+    let mut rng = Rng::new(seed);
+    let qkv: Vec<f32> = (0..3 * n * d).map(|_| rng.normal() as f32).collect();
+    let (q, rest) = qkv.split_at(n * d);
+    let (kk, v) = rest.split_at(n * d);
+
+    println!(
+        "serve-bench: n={n} d={d} heads={heads} layers={layers} steps={steps} \
+         shards={shards} window={window} clusters={k}"
+    );
+    // Per-head shard plans are built once up-front over the cache's shared
+    // compiles (2 distinct specs -> 2 compiles for all heads), so the timed
+    // sweep measures cache lookups + attention, not re-sharding.
+    let mut cache = PatternCache::new();
+    let shard_plans: Vec<ShardedPattern> = plan
+        .iter()
+        .map(|spec| ShardedPattern::balanced(cache.get_or_compile(spec, n), shards))
+        .collect::<Result<_>>()?;
+    let mut rows_done = 0u64;
+    let mut macs = 0u64;
+    let warmup = cache.stats();
+    let t0 = std::time::Instant::now();
+    for _step in 0..steps {
+        for _layer in 0..layers {
+            for (spec, sharded) in plan.iter().zip(&shard_plans) {
+                // the serving-loop lookup the cache amortizes per step
+                let pattern = cache.get_or_compile(spec, n);
+                let out = sharded.attention(q, kk, v, d)?;
+                std::hint::black_box(&out);
+                rows_done += n as u64;
+                macs += pattern.cost(d);
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let last_sharded = shard_plans.last();
+
+    // stats net of the shard-plan warm-up, so the table describes exactly
+    // the timed sweep
+    let total = cache.stats();
+    let stats = CacheStats {
+        hits: total.hits - warmup.hits,
+        misses: total.misses - warmup.misses,
+    };
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["pattern lookups (sweep)".to_string(), stats.lookups().to_string()]);
+    table.row(&["compiles during sweep".to_string(), stats.misses.to_string()]);
+    table.row(&["compiles total (incl. warm-up)".to_string(), total.misses.to_string()]);
+    table.row(&["cache hits".to_string(), stats.hits.to_string()]);
+    table.row(&[
+        "cache hit rate".to_string(),
+        format!("{:.1}%", stats.hit_rate() * 100.0),
+    ]);
+    table.row(&["patterns cached".to_string(), cache.len().to_string()]);
+    table.row(&["elapsed".to_string(), format!("{:.3} s", dt)]);
+    table.row(&[
+        "query rows/sec".to_string(),
+        format!("{:.3e}", rows_done as f64 / dt),
+    ]);
+    table.row(&["attention MACs/sec".to_string(), format!("{:.3e}", macs as f64 / dt)]);
+    table.print();
+
+    if let Some(sharded) = last_sharded {
+        println!("\nwork split of the last head's pattern across {shards} shard workers:");
+        let total = sharded.pattern().nnz().max(1);
+        let mut table = Table::new(&["shard", "rows", "nnz", "work share"]);
+        for shard in sharded.shards() {
+            table.row(&[
+                shard.index.to_string(),
+                format!("{}..{}", shard.rows.start, shard.rows.end),
+                shard.nnz.to_string(),
+                format!("{:.1}%", 100.0 * shard.nnz as f64 / total as f64),
+            ]);
+        }
+        table.print();
+    }
     Ok(())
 }
 

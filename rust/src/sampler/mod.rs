@@ -3,11 +3,16 @@
 //!
 //! The model forward runs through the AOT `logits` artifact; this module
 //! owns the host-side categorical sampling and the generation loop
-//! plumbing (prompt, max tokens, stop condition).
+//! plumbing (prompt, max tokens, stop condition).  The host-side math
+//! ([`nucleus_probs`], [`sample_logits`]) builds without the `xla`
+//! feature; only the artifact-driven [`Generator`] needs the runtime.
 
+#[cfg(feature = "xla")]
 use anyhow::{anyhow, Result};
+#[cfg(feature = "xla")]
 use xla::PjRtLoadedExecutable;
 
+#[cfg(feature = "xla")]
 use crate::runtime::{execute_tuple, i32_literal, to_f32_vec, ModelState};
 use crate::util::rng::Rng;
 
@@ -32,12 +37,32 @@ pub fn sample_logits(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize
     rng.weighted(&probs)
 }
 
-/// Temperature + top-p filtered probability vector (f64 for the sampler).
+/// Temperature + top-p filtered probability vector (f64 for the sampler),
+/// normalized to sum to 1 over the kept support.
+///
+/// Non-finite logits (`-inf` masks, `NaN`, stray `+inf`) carry zero
+/// probability.  A fully-masked row — every logit non-finite — used to
+/// poison the whole vector: `max` became `-inf`, every `exp` returned
+/// `NaN`, and `Rng::weighted` silently picked the last index.  That row
+/// now degrades to a uniform distribution over all indices (there is no
+/// finite evidence to prefer any token), and the top-p cut renormalizes
+/// explicitly so the sampler always sees a proper distribution.
 pub fn nucleus_probs(logits: &[f32], cfg: SamplerConfig) -> Vec<f64> {
     let t = cfg.temperature.max(1e-4) as f64;
-    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let mut probs: Vec<f64> =
-        logits.iter().map(|&l| ((l as f64 - max) / t).exp()).collect();
+    let max = logits
+        .iter()
+        .cloned()
+        .filter(|l| l.is_finite())
+        .fold(f32::NEG_INFINITY, f32::max) as f64;
+    if !max.is_finite() {
+        // fully-masked row: no finite logit survives; fall back to uniform
+        return vec![1.0 / logits.len().max(1) as f64; logits.len()];
+    }
+    let mut probs: Vec<f64> = logits
+        .iter()
+        .map(|&l| if l.is_finite() { ((l as f64 - max) / t).exp() } else { 0.0 })
+        .collect();
+    // z >= exp(0) = 1: at least one logit equals max, so no 0/0 here
     let z: f64 = probs.iter().sum();
     for p in &mut probs {
         *p /= z;
@@ -60,6 +85,14 @@ pub fn nucleus_probs(logits: &[f32], cfg: SamplerConfig) -> Vec<f64> {
                 *p = 0.0;
             }
         }
+        // renormalize over the kept support instead of leaving the cut
+        // mass for the sampler to absorb
+        let kept: f64 = probs.iter().sum();
+        if kept > 0.0 {
+            for p in &mut probs {
+                *p /= kept;
+            }
+        }
     }
     probs
 }
@@ -71,6 +104,7 @@ pub fn nucleus_probs(logits: &[f32], cfg: SamplerConfig) -> Vec<f64> {
 /// generation re-runs the forward per token (O(T²) per token — the
 /// honest cost of sampling without a KV-cache artifact; see DESIGN.md
 /// §Perf for the planned incremental-decode artifact).
+#[cfg(feature = "xla")]
 pub struct Generator<'a> {
     exe: &'a PjRtLoadedExecutable,
     state: &'a ModelState,
@@ -80,6 +114,7 @@ pub struct Generator<'a> {
     rng: Rng,
 }
 
+#[cfg(feature = "xla")]
 impl<'a> Generator<'a> {
     pub fn new(
         exe: &'a PjRtLoadedExecutable,
@@ -136,6 +171,41 @@ mod tests {
         let probs = nucleus_probs(&logits, SamplerConfig { temperature: 1.0, top_p: 0.5 });
         assert!(probs[0] > 0.99);
         assert!(probs[1] == 0.0 && probs[2] == 0.0 && probs[3] == 0.0);
+    }
+
+    #[test]
+    fn fully_masked_row_is_uniform_not_nan() {
+        // all -inf (and NaN) used to make max = -inf and every prob NaN,
+        // so weighted() silently returned the last index
+        let logits = vec![f32::NEG_INFINITY; 4];
+        let probs = nucleus_probs(&logits, SamplerConfig::default());
+        assert!(probs.iter().all(|p| p.is_finite()));
+        assert!(probs.iter().all(|&p| (p - 0.25).abs() < 1e-12));
+        let mut rng = Rng::new(5);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample_logits(&logits, SamplerConfig::default(), &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "degenerate row must sample uniformly");
+    }
+
+    #[test]
+    fn non_finite_logits_are_masked_out() {
+        let logits = vec![1.0, f32::NAN, f32::NEG_INFINITY, 0.0];
+        let probs = nucleus_probs(&logits, SamplerConfig { temperature: 1.0, top_p: 1.0 });
+        assert_eq!(probs[1], 0.0);
+        assert_eq!(probs[2], 0.0);
+        assert!(probs[0] > probs[3] && probs[3] > 0.0);
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_p_cut_renormalizes() {
+        let logits = vec![2.0, 1.0, 0.0, -1.0];
+        let probs = nucleus_probs(&logits, SamplerConfig { temperature: 1.0, top_p: 0.6 });
+        let mass: f64 = probs.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "kept mass must renormalize to 1 (got {mass})");
+        assert!(probs.iter().filter(|&&p| p > 0.0).count() < 4, "cut must drop the tail");
     }
 
     #[test]

@@ -40,12 +40,27 @@ impl Json {
         }
     }
 
+    /// Integer value — only if the number is integral and in i64 range.
+    /// The old lossy `as` casts truncated `2.7` to `2` and saturated
+    /// out-of-range values, silently accepting bad config/spec fields;
+    /// non-integral, non-finite, or out-of-range numbers are now `None`.
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|f| f as i64)
+        let f = self.as_f64()?;
+        // upper bound is exclusive: 2^63 rounds out of i64 range
+        if !f.is_finite() || f.fract() != 0.0 || f < -(2f64.powi(63)) || f >= 2f64.powi(63) {
+            return None;
+        }
+        Some(f as i64)
     }
 
+    /// Non-negative integer value — integral and in range, like
+    /// [`Json::as_i64`] (so `-1.0` is `None`, not a saturated `0`).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        let f = self.as_f64()?;
+        if !f.is_finite() || f.fract() != 0.0 || f < 0.0 || f >= usize::MAX as f64 {
+            return None;
+        }
+        Some(f as usize)
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -409,6 +424,27 @@ mod tests {
         let text = r#"{"name":"x","shape":[2,4,16],"n":140672,"f":1.5,"b":true}"#;
         let v = Json::parse(text).unwrap();
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn integer_accessors_reject_lossy_values() {
+        assert_eq!(Json::Num(2.0).as_usize(), Some(2));
+        assert_eq!(Json::Num(2.0).as_i64(), Some(2));
+        assert_eq!(Json::Num(-3.0).as_i64(), Some(-3));
+        // fractional values must not truncate
+        assert_eq!(Json::Num(2.7).as_usize(), None);
+        assert_eq!(Json::Num(2.7).as_i64(), None);
+        assert_eq!(Json::Num(-0.5).as_i64(), None);
+        // negatives must not saturate to 0
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        // out-of-range and non-finite must not saturate
+        assert_eq!(Json::Num(1e30).as_usize(), None);
+        assert_eq!(Json::Num(1e30).as_i64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_i64(), None);
+        // integral in-range values parsed from text still work
+        assert_eq!(Json::parse("140672").unwrap().as_usize(), Some(140672));
+        assert_eq!(Json::parse("1e3").unwrap().as_usize(), Some(1000));
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Dependency-free substrates: JSON, PRNG, CLI parsing, bench timing.
+//! The npz writer serializes `xla::Literal`s, so it rides the `xla`
+//! feature.
 
 pub mod cli;
 pub mod json;
+#[cfg(feature = "xla")]
 pub mod npz;
 pub mod rng;
 pub mod timing;

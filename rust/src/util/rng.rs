@@ -103,8 +103,19 @@ impl Rng {
     }
 
     /// Sample an index from unnormalized non-negative weights.
+    ///
+    /// Degenerate inputs are handled explicitly instead of silently
+    /// biasing: an empty slice panics (it used to underflow
+    /// `weights.len() - 1`), and a zero, negative, NaN, or infinite total
+    /// falls back to a uniform pick over all indices (a NaN total used to
+    /// make every comparison false and always return the last index; a
+    /// zero total always returned index 0).
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        assert!(!weights.is_empty(), "Rng::weighted requires at least one weight");
         let total: f64 = weights.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return self.below(weights.len());
+        }
         let mut x = self.f64() * total;
         for (i, w) in weights.iter().enumerate() {
             x -= w;
@@ -124,6 +135,8 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Build the CDF; `n = 0` yields an empty (unsampleable) distribution
+    /// instead of panicking on `cdf.last().unwrap()`.
     pub fn new(n: usize, s: f64) -> Self {
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0;
@@ -131,14 +144,25 @@ impl Zipf {
             acc += 1.0 / ((i + 1) as f64).powf(s);
             cdf.push(acc);
         }
-        let total = *cdf.last().unwrap();
-        for c in &mut cdf {
-            *c /= total;
+        if let Some(&total) = cdf.last() {
+            for c in &mut cdf {
+                *c /= total;
+            }
         }
         Zipf { cdf }
     }
 
+    /// Number of outcomes ([0, n) from construction).
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
     pub fn sample(&self, rng: &mut Rng) -> usize {
+        assert!(!self.cdf.is_empty(), "Zipf::sample over an empty range");
         let x = rng.f64();
         match self.cdf.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
             Ok(i) => i,
@@ -212,6 +236,41 @@ mod tests {
         }
         assert!(counts[0] > counts[10]);
         assert!(counts[10] > counts[60]);
+    }
+
+    #[test]
+    fn zipf_empty_range_constructs_without_panic() {
+        let z = Zipf::new(0, 1.2);
+        assert!(z.is_empty());
+        assert_eq!(z.len(), 0);
+        let z1 = Zipf::new(1, 1.2);
+        let mut rng = Rng::new(2);
+        assert_eq!(z1.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn weighted_degenerate_totals_fall_back_to_uniform() {
+        let mut rng = Rng::new(17);
+        for w in [
+            vec![0.0, 0.0, 0.0],
+            vec![f64::NAN, 1.0, 1.0],
+            vec![f64::INFINITY, 1.0, 1.0],
+            vec![-1.0, -2.0, -3.0],
+        ] {
+            let mut seen = [false; 3];
+            for _ in 0..200 {
+                let i = rng.weighted(&w);
+                assert!(i < 3);
+                seen[i] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "fallback must be uniform, not biased: {w:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one weight")]
+    fn weighted_empty_panics_with_message() {
+        Rng::new(0).weighted(&[]);
     }
 
     #[test]

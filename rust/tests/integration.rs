@@ -3,7 +3,11 @@
 //! contracts (shapes, loss decrease, determinism, retrieval advantage).
 //!
 //! Requires `make artifacts` (skipped gracefully if missing so plain
-//! `cargo test` works in a fresh checkout).
+//! `cargo test` works in a fresh checkout) and the `xla` feature (the
+//! whole file drives the PJRT runtime, so it compiles to nothing under
+//! `--no-default-features`).
+
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

@@ -11,7 +11,11 @@
 //! (finiteness/monotonicity), JSON (round-trip).
 
 use routing_transformer::analysis::{jsd, JSD_MAX};
-use routing_transformer::attention::{optimal_clusters, AttentionSpec};
+use routing_transformer::attention::{
+    dense_masked_attention, optimal_clusters, sparse_attention, AttentionSpec, PatternCache,
+    ShardedPattern,
+};
+#[cfg(feature = "xla")]
 use routing_transformer::coordinator::LrSchedule;
 use routing_transformer::data::{self, TokenSource};
 use routing_transformer::kmeans::{dot, norm, SphericalKMeans};
@@ -246,6 +250,105 @@ fn prop_union_nnz_bounds_and_intersect_subset() {
     });
 }
 
+// -------------------------------------------------------------- engine
+
+#[test]
+fn prop_sharded_pattern_partitions_rows_and_nnz() {
+    check("sharded_nnz", 100, |rng| {
+        // n = 0 and n < k are in range
+        let n = rng.range(0, 48);
+        let spec = random_spec(rng, n, 2);
+        let pattern = std::sync::Arc::new(spec.compile(n));
+        let k = rng.range(1, 9);
+        for sharded in [
+            ShardedPattern::by_rows(std::sync::Arc::clone(&pattern), k).unwrap(),
+            ShardedPattern::balanced(std::sync::Arc::clone(&pattern), k).unwrap(),
+        ] {
+            let shards = sharded.shards();
+            assert_eq!(shards.len(), k);
+            let mut cursor = 0usize;
+            let mut nnz = 0usize;
+            for (s, shard) in shards.iter().enumerate() {
+                assert_eq!(shard.index, s);
+                assert_eq!(shard.rows.start, cursor, "shards must be contiguous");
+                assert!(shard.rows.end >= shard.rows.start);
+                cursor = shard.rows.end;
+                let expect: usize = shard.rows.clone().map(|i| pattern.row(i).len()).sum();
+                assert_eq!(shard.nnz, expect, "per-shard nnz must match its rows");
+                assert_eq!(shard.cost(8), 2 * expect as u64 * 8);
+                nnz += shard.nnz;
+            }
+            assert_eq!(cursor, n, "shards must cover every row exactly once");
+            assert_eq!(nnz, pattern.nnz(), "shard nnz must sum to CompiledPattern::nnz()");
+        }
+    });
+}
+
+#[test]
+fn prop_pattern_cache_equals_fresh_compile() {
+    check("pattern_cache", 60, |rng| {
+        let mut cache = PatternCache::new();
+        let specs: Vec<(AttentionSpec, usize)> = (0..rng.range(1, 6))
+            .map(|_| {
+                let n = rng.range(0, 24);
+                (random_spec(rng, n, 1), n)
+            })
+            .collect();
+        for round in 0..3 {
+            for (spec, n) in &specs {
+                let cached = cache.get_or_compile(spec, *n);
+                assert_eq!(*cached, spec.compile(*n), "cached must equal a fresh compile");
+                if round > 0 {
+                    // later rounds must be hits on the same shared compile
+                    let again = cache.get_or_compile(spec, *n);
+                    assert!(std::sync::Arc::ptr_eq(&cached, &again));
+                }
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.lookups(), s.hits + s.misses);
+        assert!(s.misses as usize <= specs.len(), "at most one compile per distinct key");
+        assert!(cache.len() as u64 == s.misses, "one cache entry per miss");
+        assert!(s.hit_rate() <= 1.0);
+    });
+}
+
+#[test]
+fn prop_engine_sparse_attention_matches_dense_oracle() {
+    check("engine_oracle", 60, |rng| {
+        // n = 0 and n = 1 are in range; routing specs can leave rows
+        // fully masked (unrouted tokens)
+        let n = rng.range(0, 20);
+        let d = rng.range(1, 9);
+        let spec = random_spec(rng, n, 1);
+        let pattern = spec.compile(n);
+        let qkv: Vec<f32> = (0..3 * n * d).map(|_| rng.normal() as f32).collect();
+        let (q, rest) = qkv.split_at(n * d);
+        let (k, v) = rest.split_at(n * d);
+        let sparse = sparse_attention(q, k, v, d, &pattern).unwrap();
+        let dense = dense_masked_attention(q, k, v, d, &pattern).unwrap();
+        assert_eq!(sparse.len(), n * d);
+        for (a, b) in sparse.iter().zip(&dense) {
+            assert!(a.is_finite(), "kernel must never emit NaN/inf");
+            assert!((a - b).abs() < 1e-5, "sparse {a} vs dense oracle {b}");
+        }
+        // fully-masked rows are exactly zero (ties into the sampler's
+        // fully-masked-logit guard: degenerate rows degrade, never poison)
+        for i in 0..n {
+            if pattern.row(i).is_empty() {
+                assert!(sparse[i * d..(i + 1) * d].iter().all(|&x| x == 0.0));
+            }
+        }
+        // sharded multi-worker evaluation agrees bitwise with single-shot
+        let sharded = ShardedPattern::balanced(
+            std::sync::Arc::new(pattern.clone()),
+            rng.range(1, 5),
+        )
+        .unwrap();
+        assert_eq!(sharded.attention(q, k, v, d).unwrap(), sparse);
+    });
+}
+
 // ------------------------------------------------------------- k-means
 
 #[test]
@@ -352,9 +455,9 @@ fn prop_nucleus_probs_normalized_with_correct_support() {
         let cfg = SamplerConfig { temperature: 0.2 + rng.f32() * 2.0, top_p };
         let probs = nucleus_probs(&logits, cfg);
         let mass: f64 = probs.iter().sum();
-        // kept mass renormalizes only at sampling; here mass <= 1 + eps
-        assert!(mass <= 1.0 + 1e-6);
-        assert!(mass > 0.0);
+        // the top-p cut renormalizes over the kept support
+        assert!((mass - 1.0).abs() < 1e-6, "mass {mass}");
+        assert!(probs.iter().all(|&p| p >= 0.0 && p.is_finite()));
         // the argmax logit always stays in the nucleus
         let argmax = (0..v).max_by(|&a, &b| logits[a].partial_cmp(&logits[b]).unwrap()).unwrap();
         assert!(probs[argmax] > 0.0, "argmax dropped from nucleus");
@@ -369,6 +472,7 @@ fn prop_nucleus_probs_normalized_with_correct_support() {
 
 // ---------------------------------------------------------- schedules
 
+#[cfg(feature = "xla")]
 #[test]
 fn prop_schedules_finite_positive_and_warmup_monotone() {
     check("schedules", 100, |rng| {
