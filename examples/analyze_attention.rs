@@ -8,7 +8,8 @@
 use anyhow::Result;
 use routing_transformer::analysis;
 use routing_transformer::attention::{
-    dense_masked_attention, AttentionSpec, PatternCache, ShardedPattern,
+    dense_masked_attention, sparse_attention, AttentionSpec, BatchedAttention, EpochCache,
+    PatternCache, RouteSlot, ShardedPattern,
 };
 use routing_transformer::coordinator::{train_batcher, LrSchedule, TrainOptions, Trainer};
 use routing_transformer::data;
@@ -155,6 +156,46 @@ fn main() -> Result<()> {
         stats.misses,
         stats.hit_rate() * 100.0,
         sharded.shards().iter().map(|s| s.nnz).collect::<Vec<_>>()
+    );
+
+    // ------------------- decode: epoch-keyed eviction + batched requests
+    // A decode loop re-fits the routing k-means as content changes; the
+    // EpochCache serves the compiled pattern while the cluster epoch is
+    // current and evicts it the moment an update supersedes it.  Two
+    // "requests" (the content vectors and a reversed copy) then run as
+    // one batched worker sweep, bit-identical to two independent calls.
+    let mut ecache = EpochCache::new();
+    let slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+    let mut epoch = 0u64;
+    let p_before = ecache.get_routed(slot, epoch, n, || km.routing_spec(&xs, n, n / k));
+    for _refit in 0..2 {
+        km.update(&xs, n);
+        epoch += 1;
+    }
+    let p_after = ecache.get_routed(slot, epoch, n, || km.routing_spec(&xs, n, n / k));
+    assert!(
+        ecache.stats().evictions >= 1,
+        "the superseded epoch's compile must be evicted"
+    );
+    let _ = p_before;
+    let mut rev = xs.clone();
+    rev.reverse();
+    let slot1 = RouteSlot { layer: 0, head: 0, seq: 1 };
+    let p_rev = ecache.get_routed(slot1, epoch, n, || km.routing_spec(&rev, n, n / k));
+    let batch = BatchedAttention::new(vec![p_after.clone(), p_rev], 2)?;
+    let bq: Vec<f32> = xs.iter().chain(rev.iter()).copied().collect();
+    let batched = batch.attention(&bq, &bq, &bq, dim)?;
+    let solo0 = sparse_attention(&xs, &xs, &xs, dim, &p_after)?;
+    assert_eq!(&batched[..n * dim], solo0.as_slice(), "batched seq 0 must be bit-identical");
+    let solo1 = sparse_attention(&rev, &rev, &rev, dim, &batch.patterns()[1])?;
+    assert_eq!(&batched[n * dim..], solo1.as_slice(), "batched seq 1 must be bit-identical");
+    println!(
+        "decode: epoch {} -> {} evictions, epoch hit rate {:.0}%; \
+         2-request batch over {} workers OK",
+        epoch,
+        ecache.stats().evictions,
+        ecache.epoch_stats().hit_rate() * 100.0,
+        batch.num_workers()
     );
     println!("analyze_attention OK");
     Ok(())

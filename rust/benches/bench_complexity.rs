@@ -1,6 +1,6 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Four parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Five parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
@@ -8,9 +8,18 @@
 //! `Vec::contains`-scan pattern evaluation at n = 512, k = √n — the
 //! redesign must be >= 10x faster end to end (compile + nnz query);
 //! (4) `PatternCache` multi-head compile amortization over a heads x
-//! layers x steps serving sweep — cached must be >= 5x over uncached.
+//! layers x steps serving sweep — cached must be >= 5x over uncached;
+//! (5) cross-request batching — B = 8 independent sequences through one
+//! `BatchedAttention` worker sweep vs 8 sequential single-thread kernel
+//! calls, bit-identical outputs required and batched must be >= 2x (the
+//! speedup pin is gated on >= 4 cores; 2 cores cap the ceiling at 2.0x).
 
-use routing_transformer::attention::{optimal_clusters, AttentionSpec, PatternCache};
+use std::sync::Arc;
+
+use routing_transformer::attention::{
+    optimal_clusters, sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern,
+    PatternCache,
+};
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
 use routing_transformer::util::timing::{time_fn, Table};
@@ -172,5 +181,78 @@ fn main() {
         cache_speedup >= 5.0,
         "cached multi-head compilation must be >= 5x over uncached (got {cache_speedup:.1}x)"
     );
+
+    // cross-request batching: B = 8 sequences with (mildly different)
+    // mixed local+routing patterns, one nnz-balanced worker sweep vs B
+    // independent single-thread kernel calls.
+    let b = 8usize;
+    let n = 1024usize;
+    let k = optimal_clusters(n);
+    // 0 = unknown: available_parallelism() can fail in restricted
+    // containers, and an unknown host must not arm the >= 2x pin below
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(0);
+    let workers = cores.clamp(2, 8);
+    let patterns: Vec<Arc<CompiledPattern>> = (0..b)
+        .map(|s| {
+            let spec = AttentionSpec::union(vec![
+                AttentionSpec::local(64).unwrap(),
+                AttentionSpec::routing_balanced(n, k + s % 3).unwrap(),
+            ])
+            .unwrap();
+            Arc::new(spec.compile(n))
+        })
+        .collect();
+    let mut rng = Rng::new(23);
+    let mk = |rng: &mut Rng| -> Vec<f32> {
+        (0..b * n * d).map(|_| rng.normal() as f32).collect()
+    };
+    let q = mk(&mut rng);
+    let kv = mk(&mut rng);
+    let v = mk(&mut rng);
+    let batch = BatchedAttention::new(patterns.clone(), workers).unwrap();
+
+    // row-for-row agreement first: batched must be bit-identical
+    let batched_out = batch.attention(&q, &kv, &v, d).unwrap();
+    let mut sequential_out = Vec::with_capacity(b * n * d);
+    for (s, p) in patterns.iter().enumerate() {
+        let lo = s * n * d;
+        let hi = lo + n * d;
+        sequential_out
+            .extend(sparse_attention(&q[lo..hi], &kv[lo..hi], &v[lo..hi], d, p).unwrap());
+    }
+    assert_eq!(batched_out, sequential_out, "batched must be bit-identical to sequential");
+
+    let batched = time_fn(1, 3, || {
+        std::hint::black_box(batch.attention(&q, &kv, &v, d).unwrap());
+    });
+    let sequential = time_fn(1, 3, || {
+        for (s, p) in patterns.iter().enumerate() {
+            let lo = s * n * d;
+            let hi = lo + n * d;
+            std::hint::black_box(
+                sparse_attention(&q[lo..hi], &kv[lo..hi], &v[lo..hi], d, p).unwrap(),
+            );
+        }
+    });
+    let batch_speedup = sequential.mean / batched.mean;
+    println!(
+        "\nbatched vs sequential attention at B={b}, n={n}, d={d} ({workers} workers): \
+         {:.3} ms vs {:.3} ms ({batch_speedup:.1}x)",
+        batched.mean * 1e3,
+        sequential.mean * 1e3
+    );
+    if cores >= 4 {
+        assert!(
+            batch_speedup >= 2.0,
+            "batched sweep must be >= 2x over sequential at B = {b} (got {batch_speedup:.1}x)"
+        );
+    } else {
+        // a 2-core host caps the theoretical speedup at exactly 2.0x, so
+        // the hard pin would fail on correct code; report instead
+        println!(
+            "({} cores: >= 2x pin skipped, needs >= 4 cores for headroom)",
+            if cores == 0 { "unknown".to_string() } else { cores.to_string() }
+        );
+    }
     println!("\nbench_complexity OK");
 }

@@ -1,0 +1,767 @@
+//! Decode-loop serving layer: epoch-keyed routing state and cross-request
+//! batching on top of the pattern engine.
+//!
+//! The paper's O(n^1.5 d) win assumes routing assignments are *recomputed
+//! as content changes* — online spherical k-means (Algorithm 1) moves
+//! centroids every update, so a decode loop cannot treat a compiled
+//! routing pattern as immutable the way it treats a local or strided one.
+//! This module adds the three serving pieces the engine deliberately left
+//! out:
+//!
+//! * [`RoutingSession`] — per-layer/per-head [`SphericalKMeans`] state
+//!   with a monotonically increasing **cluster epoch** per slot, bumped by
+//!   [`RoutingSession::update`].  The epoch is the cache-coherence token:
+//!   two routing specs generated at the same epoch come from the same
+//!   centroids and may share a compile; specs from different epochs never
+//!   may.
+//! * [`EpochCache`] — a generation-aware cache pairing a pinned
+//!   [`PatternCache`](super::PatternCache) for static specs (local/strided
+//!   head-plan parts, kept forever) with slot-owned routed compiles: each
+//!   routed slot ((layer, head, sequence), see [`RouteSlot`]) holds
+//!   exactly one live pattern tagged with its cluster epoch.  A lookup
+//!   with a stale epoch drops the superseded compile (counted in
+//!   [`CacheStats::evictions`] via the merged stats) and regenerates the
+//!   spec via the caller's closure — so a pattern compiled from a
+//!   previous epoch's memberships is never served, and the cache stays
+//!   bounded.
+//! * [`BatchedAttention`] / [`sparse_attention_batch`] — cross-request
+//!   batching: B independent sequences (`[B, n, d]` row-major q/k/v, one
+//!   compiled pattern per sequence or one shared pattern) run through a
+//!   single nnz-balanced worker sweep instead of B separate kernel calls,
+//!   so one worker pool amortizes across requests.  The per-row math is
+//!   exactly [`sparse_attention_rows`], making the batched output
+//!   **bit-identical** to B independent
+//!   [`sparse_attention`](super::sparse_attention) calls.
+//!
+//! Consumers: `rtx serve-bench` (`--sequences`/`--route-every`, printing
+//! epoch hit-rate, eviction count, and batched vs sequential rows/sec),
+//! `bench_complexity` (batched ≥ 2× sequential at B = 8),
+//! `examples/analyze_attention.rs`, and the decode property tests.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::compiled::CompiledPattern;
+use super::engine::{run_on_workers, sparse_attention_rows, CacheStats, PatternCache};
+use super::spec::AttentionSpec;
+use crate::kmeans::SphericalKMeans;
+
+// -------------------------------------------------------------- session
+
+/// A routed cache slot: one (layer, head) of one request's sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RouteSlot {
+    pub layer: usize,
+    pub head: usize,
+    /// Request/sequence index within a batch (0 for single-sequence use).
+    pub seq: usize,
+}
+
+/// Per-layer/per-head online k-means routing state for a decode session.
+///
+/// Owns one [`SphericalKMeans`] per (layer, head) slot plus that slot's
+/// **cluster epoch** — a counter bumped by every [`RoutingSession::update`]
+/// call.  Epochs advance independently per slot (layers may re-route on
+/// different schedules), and they key the [`EpochCache`] invalidation:
+/// patterns compiled under an older epoch are stale the moment the
+/// centroids move.
+#[derive(Debug, Clone)]
+pub struct RoutingSession {
+    layers: usize,
+    heads: usize,
+    kms: Vec<SphericalKMeans>,
+    epochs: Vec<u64>,
+}
+
+impl RoutingSession {
+    /// One k-means instance per (layer, head), independently seeded.
+    pub fn new(
+        layers: usize,
+        heads: usize,
+        k: usize,
+        dim: usize,
+        decay: f32,
+        seed: u64,
+    ) -> Result<RoutingSession> {
+        if layers == 0 || heads == 0 {
+            bail!("routing session requires layers >= 1 and heads >= 1 (got {layers} x {heads})");
+        }
+        if k == 0 || dim == 0 {
+            bail!("routing session requires k >= 1 clusters and dim >= 1 (got k = {k}, dim = {dim})");
+        }
+        let kms = (0..layers * heads)
+            .map(|s| {
+                SphericalKMeans::new(k, dim, decay, seed ^ (s as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15))
+            })
+            .collect();
+        Ok(RoutingSession { layers, heads, kms, epochs: vec![0; layers * heads] })
+    }
+
+    fn slot(&self, layer: usize, head: usize) -> usize {
+        assert!(
+            layer < self.layers && head < self.heads,
+            "slot ({layer}, {head}) out of bounds for {} x {} routing session",
+            self.layers,
+            self.heads
+        );
+        layer * self.heads + head
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// The slot's current cluster epoch (0 until the first update).
+    pub fn epoch(&self, layer: usize, head: usize) -> u64 {
+        self.epochs[self.slot(layer, head)]
+    }
+
+    /// The slot's k-means state (e.g. for cohesion diagnostics).
+    pub fn kmeans(&self, layer: usize, head: usize) -> &SphericalKMeans {
+        &self.kms[self.slot(layer, head)]
+    }
+
+    /// One online k-means step over `xs` (row-major [n, dim]) for a slot,
+    /// bumping its cluster epoch; returns the new epoch.  Every pattern
+    /// compiled under the previous epoch is stale after this call.
+    pub fn update(&mut self, layer: usize, head: usize, xs: &[f32], n: usize) -> u64 {
+        let s = self.slot(layer, head);
+        self.kms[s].update(xs, n);
+        self.epochs[s] += 1;
+        self.epochs[s]
+    }
+
+    /// Balanced top-w routing spec for a slot over the routing vectors
+    /// `xs` (row-major [n, dim]) — Algorithm 1's content-based index
+    /// sets at the slot's current centroids.
+    pub fn routing_spec(
+        &self,
+        layer: usize,
+        head: usize,
+        xs: &[f32],
+        n: usize,
+        w: usize,
+    ) -> AttentionSpec {
+        self.kms[self.slot(layer, head)].routing_spec(xs, n, w)
+    }
+
+    /// Epoch-cached compiled routing pattern for `slot`: serves the live
+    /// compile while the slot's epoch is current, regenerates (and evicts
+    /// the stale compile) after an [`RoutingSession::update`].
+    pub fn routed_pattern(
+        &self,
+        cache: &mut EpochCache,
+        slot: RouteSlot,
+        xs: &[f32],
+        n: usize,
+        w: usize,
+    ) -> Arc<CompiledPattern> {
+        cache.get_routed(slot, self.epoch(slot.layer, slot.head), n, || {
+            self.routing_spec(slot.layer, slot.head, xs, n, w)
+        })
+    }
+}
+
+// ---------------------------------------------------------------- cache
+
+/// Slot-level hit/miss counters for an [`EpochCache`] (spec regeneration,
+/// not compile work — see [`EpochCache::stats`] for the compile side).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EpochCacheStats {
+    /// Routed lookups whose slot epoch was current: the stored spec was
+    /// reused without regeneration.
+    pub epoch_hits: u64,
+    /// Routed lookups that had to regenerate the spec (unseen slot, stale
+    /// epoch, or changed sequence length).
+    pub epoch_misses: u64,
+}
+
+impl EpochCacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.epoch_hits + self.epoch_misses
+    }
+
+    /// Fraction of routed lookups served at the current epoch; 0.0 before
+    /// any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.epoch_hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct SlotEntry {
+    epoch: u64,
+    n: usize,
+    pattern: Arc<CompiledPattern>,
+}
+
+/// Generation-aware compile cache for a decode loop.
+///
+/// Static head-plan specs go through [`EpochCache::get_static`], land in
+/// a spec-keyed [`PatternCache`], and stay pinned for the lifetime of the
+/// cache.  Routed patterns never enter that shared map: each
+/// [`RouteSlot`] *owns* its one live compile, tagged with the cluster
+/// epoch it was built from.  While the epoch matches,
+/// [`EpochCache::get_routed`] is an O(1) slot lookup returning the shared
+/// `Arc` (no spec regeneration, no hashing of O(n) membership lists).
+/// When the epoch moves — a k-means update superseded the memberships —
+/// the stale compile is dropped (counted as an eviction in
+/// [`EpochCache::stats`]) and the new spec is built via the caller's
+/// closure and compiled.  A pattern from a previous epoch's memberships
+/// is therefore never served, slot evictions can never touch a pinned
+/// static compile (or another slot's), and the cache holds at most one
+/// live routing pattern per slot.
+#[derive(Debug, Default)]
+pub struct EpochCache {
+    cache: PatternCache,
+    slots: HashMap<RouteSlot, SlotEntry>,
+    /// Hit/miss/eviction counters for the routed (slot-owned) side,
+    /// merged with the static side by [`EpochCache::stats`].
+    routed: CacheStats,
+    stats: EpochCacheStats,
+}
+
+impl EpochCache {
+    pub fn new() -> EpochCache {
+        EpochCache::default()
+    }
+
+    /// Pinned lookup for static (epoch-free) specs: local, strided, and
+    /// other content-independent head-plan parts.
+    pub fn get_static(&mut self, spec: &AttentionSpec, n: usize) -> Arc<CompiledPattern> {
+        self.cache.get_or_compile(spec, n)
+    }
+
+    /// Epoch-keyed lookup for a routed slot.  `make_spec` runs only when
+    /// the slot is unseen or its stored epoch/length is stale; a stale
+    /// entry's compile is dropped (one eviction) first.
+    pub fn get_routed(
+        &mut self,
+        slot: RouteSlot,
+        epoch: u64,
+        n: usize,
+        make_spec: impl FnOnce() -> AttentionSpec,
+    ) -> Arc<CompiledPattern> {
+        if let Some(entry) = self.slots.get(&slot) {
+            if entry.epoch == epoch && entry.n == n {
+                self.stats.epoch_hits += 1;
+                self.routed.hits += 1;
+                return Arc::clone(&entry.pattern);
+            }
+        }
+        if self.slots.remove(&slot).is_some() {
+            self.routed.evictions += 1;
+        }
+        self.stats.epoch_misses += 1;
+        self.routed.misses += 1;
+        let pattern = Arc::new(make_spec().compile(n));
+        self.slots.insert(slot, SlotEntry { epoch, n, pattern: Arc::clone(&pattern) });
+        pattern
+    }
+
+    /// Epoch a slot's live pattern was compiled under, if any.
+    pub fn slot_epoch(&self, slot: RouteSlot) -> Option<u64> {
+        self.slots.get(&slot).map(|e| e.epoch)
+    }
+
+    /// Compile-level counters across both sides: the pinned static
+    /// [`PatternCache`] plus the slot-owned routed patterns (whose
+    /// stale-epoch drops fill [`CacheStats::evictions`]).
+    pub fn stats(&self) -> CacheStats {
+        let s = self.cache.stats();
+        CacheStats {
+            hits: s.hits + self.routed.hits,
+            misses: s.misses + self.routed.misses,
+            evictions: s.evictions + self.routed.evictions,
+        }
+    }
+
+    /// Slot-level epoch hit/miss counters (routed lookups only).
+    pub fn epoch_stats(&self) -> EpochCacheStats {
+        self.stats
+    }
+
+    /// Live compiles: pinned static entries + one per routed slot.
+    pub fn len(&self) -> usize {
+        self.cache.len() + self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty() && self.slots.is_empty()
+    }
+
+    /// Drop every entry and reset all counters.
+    pub fn clear(&mut self) {
+        self.cache.clear();
+        self.slots.clear();
+        self.routed = CacheStats::default();
+        self.stats = EpochCacheStats::default();
+    }
+}
+
+// ---------------------------------------------------------------- batch
+
+/// One worker's slice of a batch: contiguous rows of one sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct SeqRows {
+    seq: usize,
+    rows: Range<usize>,
+}
+
+/// Cross-request batching: B independent sequences evaluated by one
+/// nnz-balanced worker sweep.
+///
+/// Construction takes one compiled pattern per sequence (all sharing one
+/// sequence length `n`; use [`BatchedAttention::shared`] when every
+/// sequence runs the same pattern) and a worker count, then splits the
+/// *global* row space `[0, B·n)` into `workers` contiguous chunks of
+/// (nearly) equal nnz — so a batch where one request routes densely and
+/// another sparsely still spreads evenly, and chunks may span sequence
+/// boundaries.  [`BatchedAttention::attention`] runs each chunk on its
+/// own worker thread via [`sparse_attention_rows`], which makes the
+/// output bit-identical to B independent
+/// [`sparse_attention`](super::sparse_attention) calls.
+#[derive(Debug, Clone)]
+pub struct BatchedAttention {
+    patterns: Vec<Arc<CompiledPattern>>,
+    n: usize,
+    /// Per-worker run lists, in global-row order; empty runs are dropped.
+    plan: Vec<Vec<SeqRows>>,
+}
+
+impl BatchedAttention {
+    /// Plan a batch over per-sequence patterns (`patterns.len()` = B).
+    pub fn new(patterns: Vec<Arc<CompiledPattern>>, workers: usize) -> Result<BatchedAttention> {
+        if workers == 0 {
+            bail!("batched attention requires at least one worker (got workers = 0)");
+        }
+        let n = patterns.first().map(|p| p.n()).unwrap_or(0);
+        if let Some(bad) = patterns.iter().find(|p| p.n() != n) {
+            bail!(
+                "every sequence in a batch must share one length (expected n = {n}, got {})",
+                bad.n()
+            );
+        }
+        let b = patterns.len();
+        let rows_total = b * n;
+        let total_nnz: usize = patterns.iter().map(|p| p.nnz()).sum();
+        // prefix[g] = nnz of all global rows before g, where global row g
+        // is row g % n of sequence g / n — the batch-wide analogue of the
+        // CSR offsets ShardedPattern::balanced splits on
+        let mut prefix = Vec::with_capacity(rows_total + 1);
+        prefix.push(0usize);
+        let mut base = 0usize;
+        for p in &patterns {
+            let offsets = p.offsets();
+            for &o in &offsets[1..] {
+                prefix.push(base + o);
+            }
+            base += p.nnz();
+        }
+        let mut bounds = Vec::with_capacity(workers + 1);
+        bounds.push(0usize);
+        for s in 1..workers {
+            let target = ((total_nnz as u128 * s as u128) / workers as u128) as usize;
+            bounds.push(prefix.partition_point(|&o| o < target).min(rows_total));
+        }
+        bounds.push(rows_total);
+        let plan = bounds
+            .windows(2)
+            .map(|w| {
+                let (mut gs, ge) = (w[0], w[1]);
+                let mut runs = Vec::new();
+                while gs < ge {
+                    let seq = gs / n;
+                    let seq_end = ((seq + 1) * n).min(ge);
+                    runs.push(SeqRows { seq, rows: (gs - seq * n)..(seq_end - seq * n) });
+                    gs = seq_end;
+                }
+                runs
+            })
+            .collect();
+        Ok(BatchedAttention { patterns, n, plan })
+    }
+
+    /// Plan a batch of `b` sequences all running one shared pattern.
+    pub fn shared(
+        pattern: Arc<CompiledPattern>,
+        b: usize,
+        workers: usize,
+    ) -> Result<BatchedAttention> {
+        BatchedAttention::new(vec![pattern; b], workers)
+    }
+
+    /// Number of sequences B in the batch.
+    pub fn batch(&self) -> usize {
+        self.patterns.len()
+    }
+
+    /// The per-sequence compiled patterns (index = sequence).
+    pub fn patterns(&self) -> &[Arc<CompiledPattern>] {
+        &self.patterns
+    }
+
+    /// Shared per-sequence length.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total non-zero entries across every sequence's pattern.
+    pub fn nnz(&self) -> usize {
+        self.patterns.iter().map(|p| p.nnz()).sum()
+    }
+
+    /// Exact multiply-accumulate count for one batched pass at head dim
+    /// `d` (sum of the per-sequence [`CompiledPattern::cost`]s).
+    pub fn cost(&self, d: usize) -> u64 {
+        self.patterns.iter().map(|p| p.cost(d)).sum()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Rows assigned to each worker (diagnostic; sums to B·n).
+    pub fn worker_rows(&self) -> Vec<usize> {
+        self.plan
+            .iter()
+            .map(|runs| runs.iter().map(|r| r.rows.len()).sum())
+            .collect()
+    }
+
+    fn run_chunk(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        runs: &[SeqRows],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let stride = self.n * d;
+        let mut rest = out;
+        for run in runs {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(run.rows.len() * d);
+            rest = tail;
+            let base = run.seq * stride;
+            sparse_attention_rows(
+                &q[base..base + stride],
+                &k[base..base + stride],
+                &v[base..base + stride],
+                d,
+                &self.patterns[run.seq],
+                run.rows.clone(),
+                head,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Evaluate the whole batch: `q`/`k`/`v` are `[B, n, d]` row-major
+    /// (sequence-major), the result is the matching `[B, n, d]` output.
+    /// One worker thread per non-empty chunk; a single-chunk plan runs on
+    /// the calling thread.  Bit-identical to evaluating each sequence
+    /// independently with [`sparse_attention`](super::sparse_attention).
+    pub fn attention(&self, q: &[f32], k: &[f32], v: &[f32], d: usize) -> Result<Vec<f32>> {
+        let b = self.patterns.len();
+        if d == 0 {
+            bail!("batched attention requires head dimension d >= 1");
+        }
+        let expect = b * self.n * d;
+        if q.len() != expect || k.len() != expect || v.len() != expect {
+            bail!(
+                "q/k/v must each be [B = {b}, n = {}, d = {d}] row-major (got {}, {}, {})",
+                self.n,
+                q.len(),
+                k.len(),
+                v.len()
+            );
+        }
+        let mut out = vec![0f32; expect];
+        // carve the output into per-chunk slices (chunks are contiguous
+        // and ordered in global rows), dropping empty chunks
+        let mut work: Vec<(&[SeqRows], &mut [f32])> = Vec::new();
+        let mut rest: &mut [f32] = &mut out;
+        for runs in &self.plan {
+            let rows: usize = runs.iter().map(|r| r.rows.len()).sum();
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * d);
+            rest = tail;
+            if rows > 0 {
+                work.push((runs.as_slice(), head));
+            }
+        }
+        run_on_workers(work, |runs, head| self.run_chunk(q, k, v, d, runs, head))?;
+        Ok(out)
+    }
+}
+
+/// One-shot convenience over [`BatchedAttention`]: evaluate B sequences
+/// (`patterns.len()` = B, q/k/v `[B, n, d]` row-major) in one balanced
+/// worker sweep.
+pub fn sparse_attention_batch(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    patterns: &[Arc<CompiledPattern>],
+    workers: usize,
+) -> Result<Vec<f32>> {
+    BatchedAttention::new(patterns.to_vec(), workers)?.attention(q, k, v, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{sparse_attention, AttentionSpec};
+    use crate::util::rng::Rng;
+
+    fn random_qkv(rng: &mut Rng, rows: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut mk = |rng: &mut Rng| (0..rows * d).map(|_| rng.normal() as f32).collect();
+        (mk(rng), mk(rng), mk(rng))
+    }
+
+    #[test]
+    fn session_epochs_bump_per_slot() {
+        let mut s = RoutingSession::new(2, 3, 4, 8, 0.5, 7).unwrap();
+        assert_eq!((s.layers(), s.heads()), (2, 3));
+        assert_eq!(s.epoch(1, 2), 0);
+        let xs: Vec<f32> = {
+            let mut rng = Rng::new(1);
+            (0..16 * 8).map(|_| rng.normal() as f32).collect()
+        };
+        assert_eq!(s.update(1, 2, &xs, 16), 1);
+        assert_eq!(s.update(1, 2, &xs, 16), 2);
+        assert_eq!(s.epoch(1, 2), 2);
+        // other slots are untouched
+        assert_eq!(s.epoch(0, 0), 0);
+        assert_eq!(s.epoch(1, 1), 0);
+        // the spec reflects the slot's own centroids
+        let spec = s.routing_spec(1, 2, &xs, 16, 4);
+        assert_eq!(spec, s.kmeans(1, 2).routing_spec(&xs, 16, 4));
+    }
+
+    #[test]
+    fn session_rejects_degenerate_shapes() {
+        assert!(RoutingSession::new(0, 2, 4, 8, 0.5, 0).is_err());
+        assert!(RoutingSession::new(2, 0, 4, 8, 0.5, 0).is_err());
+        assert!(RoutingSession::new(2, 2, 0, 8, 0.5, 0).is_err());
+        assert!(RoutingSession::new(2, 2, 4, 0, 0.5, 0).is_err());
+        assert!(RoutingSession::new(1, 1, 1, 1, 0.5, 0).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn session_slot_bounds_checked() {
+        let s = RoutingSession::new(2, 2, 2, 4, 0.5, 0).unwrap();
+        s.epoch(2, 0);
+    }
+
+    #[test]
+    fn epoch_bump_evicts_stale_pattern_and_counts() {
+        let mut cache = EpochCache::new();
+        let slot = RouteSlot { layer: 0, head: 1, seq: 0 };
+        let s0 = AttentionSpec::routing(vec![vec![0, 1, 2]]);
+        let s1 = AttentionSpec::routing(vec![vec![0, 3, 4]]);
+        let p0 = cache.get_routed(slot, 0, 8, || s0.clone());
+        assert_eq!(*p0, s0.compile(8));
+        assert_eq!(cache.stats().evictions, 0);
+        assert_eq!(cache.slot_epoch(slot), Some(0));
+        // same epoch: hit, same Arc, no spec regeneration
+        let again = cache.get_routed(slot, 0, 8, || panic!("hit must not regenerate"));
+        assert!(Arc::ptr_eq(&p0, &again));
+        assert_eq!(cache.epoch_stats(), EpochCacheStats { epoch_hits: 1, epoch_misses: 1 });
+        // epoch bump: stale compile evicted before the new one lands
+        let p1 = cache.get_routed(slot, 1, 8, || s1.clone());
+        assert_eq!(*p1, s1.compile(8));
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.len(), 1, "one live routing pattern per slot");
+        assert_eq!(cache.slot_epoch(slot), Some(1));
+        // the old epoch's pattern is gone: looking it up again recompiles
+        let misses_before = cache.stats().misses;
+        cache.get_static(&s0, 8);
+        assert_eq!(cache.stats().misses, misses_before + 1, "stale compile must not linger");
+    }
+
+    #[test]
+    fn static_specs_stay_pinned_across_churn() {
+        let mut cache = EpochCache::new();
+        let local = AttentionSpec::local(3).unwrap();
+        let pinned = cache.get_static(&local, 12);
+        let slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+        for epoch in 0..5u64 {
+            let members = vec![vec![epoch as usize, epoch as usize + 1]];
+            cache.get_routed(slot, epoch, 12, || AttentionSpec::routing(members.clone()));
+        }
+        assert_eq!(cache.stats().evictions, 4);
+        assert_eq!(cache.len(), 2, "pinned static + one live routed");
+        let still = cache.get_static(&local, 12);
+        assert!(Arc::ptr_eq(&pinned, &still), "static compile survives routing churn");
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.epoch_stats().lookups(), 0);
+    }
+
+    #[test]
+    fn routed_pattern_tracks_session_epochs() {
+        let n = 24;
+        let dim = 8;
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let mut session = RoutingSession::new(1, 2, 3, dim, 0.3, 5).unwrap();
+        let mut cache = EpochCache::new();
+        let slot = RouteSlot { layer: 0, head: 1, seq: 0 };
+        let p0 = session.routed_pattern(&mut cache, slot, &xs, n, 6);
+        assert_eq!(*p0, session.routing_spec(0, 1, &xs, n, 6).compile(n));
+        // no update: repeated fetches are epoch hits on the same compile
+        let p0b = session.routed_pattern(&mut cache, slot, &xs, n, 6);
+        assert!(Arc::ptr_eq(&p0, &p0b));
+        // update moves centroids -> new epoch -> fresh memberships served
+        session.update(0, 1, &xs, n);
+        let p1 = session.routed_pattern(&mut cache, slot, &xs, n, 6);
+        assert_eq!(*p1, session.routing_spec(0, 1, &xs, n, 6).compile(n));
+        assert_eq!(cache.slot_epoch(slot), Some(1));
+        assert!(cache.stats().evictions >= 1);
+        assert_eq!(
+            cache.epoch_stats(),
+            EpochCacheStats { epoch_hits: 1, epoch_misses: 2 }
+        );
+    }
+
+    #[test]
+    fn batched_matches_independent_calls_bitwise() {
+        let mut rng = Rng::new(42);
+        let n = 20;
+        let d = 8;
+        let patterns: Vec<Arc<CompiledPattern>> = vec![
+            Arc::new(AttentionSpec::local(4).unwrap().compile(n)),
+            Arc::new(AttentionSpec::Full.compile(n)),
+            Arc::new(AttentionSpec::routing(vec![vec![0, 3, 7, 11], vec![2, 5, 19]]).compile(n)),
+        ];
+        let b = patterns.len();
+        let (q, k, v) = random_qkv(&mut rng, b * n, d);
+        for workers in [1usize, 2, 3, 7] {
+            let batch = BatchedAttention::new(patterns.clone(), workers).unwrap();
+            assert_eq!(batch.batch(), b);
+            assert_eq!(batch.num_workers(), workers);
+            assert_eq!(batch.worker_rows().iter().sum::<usize>(), b * n);
+            let out = batch.attention(&q, &k, &v, d).unwrap();
+            let mut expect = Vec::with_capacity(b * n * d);
+            for (s, p) in patterns.iter().enumerate() {
+                let lo = s * n * d;
+                let hi = lo + n * d;
+                expect.extend(sparse_attention(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, p).unwrap());
+            }
+            assert_eq!(out, expect, "batched must be bit-identical at workers = {workers}");
+        }
+        // free-function form agrees too
+        let via_fn = sparse_attention_batch(&q, &k, &v, d, &patterns, 2).unwrap();
+        assert_eq!(via_fn, BatchedAttention::new(patterns, 2).unwrap().attention(&q, &k, &v, d).unwrap());
+    }
+
+    #[test]
+    fn shared_pattern_batch() {
+        let mut rng = Rng::new(9);
+        let n = 12;
+        let d = 4;
+        let pattern = Arc::new(AttentionSpec::local(3).unwrap().compile(n));
+        let b = 4;
+        let (q, k, v) = random_qkv(&mut rng, b * n, d);
+        let batch = BatchedAttention::shared(Arc::clone(&pattern), b, 3).unwrap();
+        assert_eq!(batch.nnz(), b * pattern.nnz());
+        assert_eq!(batch.cost(d), b as u64 * pattern.cost(d));
+        let out = batch.attention(&q, &k, &v, d).unwrap();
+        for s in 0..b {
+            let lo = s * n * d;
+            let hi = lo + n * d;
+            let single = sparse_attention(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, &pattern).unwrap();
+            assert_eq!(&out[lo..hi], single.as_slice(), "sequence {s} must match");
+        }
+    }
+
+    #[test]
+    fn batch_degenerate_shapes() {
+        // empty batch: no rows, empty output
+        let empty = BatchedAttention::new(Vec::new(), 2).unwrap();
+        assert_eq!(empty.batch(), 0);
+        assert_eq!(empty.attention(&[], &[], &[], 4).unwrap(), Vec::<f32>::new());
+        // n = 0 sequences
+        let z = Arc::new(AttentionSpec::Full.compile(0));
+        let batch = BatchedAttention::new(vec![Arc::clone(&z), z], 3).unwrap();
+        assert_eq!(batch.attention(&[], &[], &[], 4).unwrap(), Vec::<f32>::new());
+        // n = 1
+        let one = Arc::new(AttentionSpec::Full.compile(1));
+        let batch = BatchedAttention::shared(one, 2, 2).unwrap();
+        let out = batch.attention(&[1.0, 2.0], &[0.5, 0.5], &[3.0, -4.0], 1).unwrap();
+        assert_eq!(out, vec![3.0, -4.0]);
+        // mismatched sequence lengths, zero workers, bad shapes, d = 0
+        let p8 = Arc::new(AttentionSpec::Full.compile(8));
+        let p9 = Arc::new(AttentionSpec::Full.compile(9));
+        assert!(BatchedAttention::new(vec![Arc::clone(&p8), p9], 2).is_err());
+        assert!(BatchedAttention::new(vec![Arc::clone(&p8)], 0).is_err());
+        let batch = BatchedAttention::new(vec![p8], 2).unwrap();
+        assert!(batch.attention(&[0.0; 8], &[0.0; 8], &[0.0; 8], 0).is_err());
+        assert!(batch.attention(&[0.0; 7], &[0.0; 8], &[0.0; 8], 1).is_err());
+    }
+
+    #[test]
+    fn decode_loop_end_to_end() {
+        // a miniature serving loop: 2 sequences, 1 layer x 2 heads (head 0
+        // static local, head 1 routed), routing re-fit every 2 steps
+        let n = 32;
+        let d = 8;
+        let b = 2;
+        let steps = 6;
+        let mut rng = Rng::new(17);
+        let mut session = RoutingSession::new(1, 2, 4, d, 0.5, 2).unwrap();
+        let mut cache = EpochCache::new();
+        let local = AttentionSpec::local(4).unwrap();
+        let (q, k, v) = random_qkv(&mut rng, b * n, d);
+        let mut xs: Vec<Vec<f32>> = (0..b)
+            .map(|_| (0..n * d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        for step in 0..steps {
+            if step % 2 == 0 {
+                for x in xs.iter_mut().flat_map(|s| s.iter_mut()) {
+                    *x = 0.9 * *x + 0.1 * rng.normal() as f32;
+                }
+                let all: Vec<f32> = xs.concat();
+                session.update(0, 1, &all, b * n);
+            }
+            let static_p = cache.get_static(&local, n);
+            let routed: Vec<Arc<CompiledPattern>> = (0..b)
+                .map(|s| {
+                    let slot = RouteSlot { layer: 0, head: 1, seq: s };
+                    session.routed_pattern(&mut cache, slot, &xs[s], n, n / 4)
+                })
+                .collect();
+            for patterns in [vec![Arc::clone(&static_p); b], routed] {
+                let batch = BatchedAttention::new(patterns.clone(), 3).unwrap();
+                let out = batch.attention(&q, &k, &v, d).unwrap();
+                for (s, p) in patterns.iter().enumerate() {
+                    let lo = s * n * d;
+                    let hi = lo + n * d;
+                    let single =
+                        sparse_attention(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, p).unwrap();
+                    assert_eq!(&out[lo..hi], single.as_slice());
+                }
+            }
+        }
+        // 3 re-fits: first populates both slots, the next two evict both
+        assert_eq!(cache.stats().evictions, 2 * b as u64);
+        let es = cache.epoch_stats();
+        assert_eq!(es.lookups(), (steps * b) as u64);
+        assert_eq!(es.epoch_misses, 3 * b as u64, "one regeneration per slot per epoch");
+        assert!(cache.len() <= 1 + b, "bounded: pinned static + one routed per slot");
+    }
+}

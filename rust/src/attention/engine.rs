@@ -30,11 +30,35 @@
 //! [`CompiledPattern::rows`] yields `(i, &[usize], &[u32])` slices
 //! straight out of the CSR arrays.
 //!
+//! # Epoch/eviction lifecycle
+//!
+//! The cache itself is spec-keyed and append-only: static specs (local /
+//! strided / block-local head plans) are compiled once and stay pinned for
+//! the lifetime of the process — a head plan holds a handful of distinct
+//! specs, so there is nothing to evict.  Content-routed specs are
+//! different: online k-means (Algorithm 1) moves centroids on every
+//! `update`, so each update starts a new **cluster epoch** whose
+//! memberships — and therefore whose compiled routing pattern — supersede
+//! the previous epoch's.  [`PatternCache::evict`] is the spec-keyed
+//! invalidation primitive (drop every compiled length of one spec,
+//! counted in [`CacheStats::evictions`]); [`super::decode::EpochCache`]
+//! goes one step further for the decode loop: routed compiles never enter
+//! the shared spec-keyed map at all — each (layer, head, sequence) slot
+//! owns its one live pattern tagged with the epoch it was built from,
+//! hits are O(1) while the slot's epoch matches, and an epoch bump drops
+//! the stale compile (an eviction in the merged stats) before the new
+//! memberships are compiled.  The decode loop thus never sees a pattern
+//! built from superseded centroids, a slot's eviction can never collide
+//! with a pinned static compile, and the cache stays bounded at one live
+//! routing pattern per slot plus the pinned static specs.
+//!
 //! Consumers: `rtx serve-bench` (heads × layers × steps sweep printing
-//! cache hit-rate and rows/sec), `bench_complexity` (cached multi-head
-//! compile ≥ 5× over uncached), `examples/analyze_attention.rs`, and the
-//! engine property tests.  Multi-backend execution (handing the CSR
-//! arrays to an accelerator kernel) is the next step; see ROADMAP.md.
+//! cache hit-rate, epoch hit-rate, evictions, and batched vs sequential
+//! rows/sec), `bench_complexity` (cached multi-head compile ≥ 5× over
+//! uncached; batched ≥ 2× over sequential at B = 8),
+//! `examples/analyze_attention.rs`, and the engine property tests.
+//! Multi-backend execution (handing the CSR arrays to an accelerator
+//! kernel) is the next step; see ROADMAP.md.
 
 use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
@@ -47,13 +71,17 @@ use super::spec::AttentionSpec;
 
 // ---------------------------------------------------------------- cache
 
-/// Hit/miss counters for a [`PatternCache`].
+/// Hit/miss/eviction counters for a [`PatternCache`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups served from an existing compile.
     pub hits: u64,
     /// Lookups that had to compile (one compile per miss).
     pub misses: u64,
+    /// Compiled patterns dropped by [`PatternCache::evict`] (one per
+    /// `(spec, n)` entry removed) — the routing-churn signal a serving
+    /// loop watches; see [`super::decode::EpochCache`].
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -76,10 +104,11 @@ impl CacheStats {
 ///
 /// Serving reuses one pattern across every head and decode step that
 /// shares a spec, so the cache hands out `Arc`s; a hit is a hash + spec
-/// equality check (no serialization, no compile).  Unbounded by design —
-/// a head plan holds a handful of distinct specs; eviction policy becomes
-/// interesting only with per-step routing specs, which serving should
-/// instead key by cluster epoch (see ROADMAP).
+/// equality check (no serialization, no compile).  Static specs stay
+/// pinned forever (a head plan holds a handful), with
+/// [`PatternCache::evict`] available for spec-keyed invalidation; the
+/// decode loop's per-epoch routing compiles are slot-owned by
+/// [`super::decode::EpochCache`] and never enter this map at all.
 #[derive(Debug, Default)]
 pub struct PatternCache {
     /// Outer map by spec (hashed structurally ≡ by canonical JSON, since
@@ -103,6 +132,22 @@ impl PatternCache {
         let pattern = Arc::new(spec.compile(n));
         self.entries.entry(spec.clone()).or_default().insert(n, Arc::clone(&pattern));
         pattern
+    }
+
+    /// Drop every compiled length of `spec`, counting one eviction per
+    /// `(spec, n)` entry removed; returns how many were dropped.  The
+    /// spec-keyed invalidation primitive: when content supersedes a
+    /// compiled routing spec (see [`super::decode::EpochCache`] for the
+    /// epoch bookkeeping), the old compile is dead weight and must not
+    /// linger.
+    pub fn evict(&mut self, spec: &AttentionSpec) -> usize {
+        match self.entries.remove(spec) {
+            Some(by_n) => {
+                self.stats.evictions += by_n.len() as u64;
+                by_n.len()
+            }
+            None => 0,
+        }
     }
 
     /// Cached `(spec, n)` entries.
@@ -167,7 +212,7 @@ impl ShardedPattern {
             bail!("sharding requires at least one shard (got k = 0)");
         }
         let n = pattern.n();
-        let per = ((n + k - 1) / k).max(1);
+        let per = n.div_ceil(k).max(1);
         let bounds: Vec<usize> = (0..=k).map(|s| (s * per).min(n)).collect();
         Ok(ShardedPattern::from_bounds(pattern, &bounds))
     }
@@ -238,7 +283,7 @@ impl ShardedPattern {
         let pattern = &*self.pattern;
         // carve the output into per-shard slices, dropping empty shards
         // (k > n sharding legitimately produces them)
-        let mut work: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
+        let mut work: Vec<(Range<usize>, &mut [f32])> = Vec::new();
         let mut rest: &mut [f32] = &mut out;
         for shard in &self.shards {
             let (head, tail) = std::mem::take(&mut rest).split_at_mut(shard.n_rows() * d);
@@ -247,28 +292,40 @@ impl ShardedPattern {
                 work.push((shard.rows.clone(), head));
             }
         }
-        if work.len() <= 1 {
-            for (rows, head) in work {
-                sparse_attention_rows(q, k, v, d, pattern, rows, head)?;
-            }
-            return Ok(out);
-        }
-        std::thread::scope(|scope| -> Result<()> {
-            let mut work = work.into_iter();
-            let (rows0, head0) = work.next().expect("len checked above");
-            let handles: Vec<_> = work
-                .map(|(rows, head)| {
-                    scope.spawn(move || sparse_attention_rows(q, k, v, d, pattern, rows, head))
-                })
-                .collect();
-            sparse_attention_rows(q, k, v, d, pattern, rows0, head0)?;
-            for h in handles {
-                h.join().map_err(|_| anyhow!("shard worker panicked"))??;
-            }
-            Ok(())
-        })?;
+        run_on_workers(work, |rows, head| sparse_attention_rows(q, k, v, d, pattern, rows, head))?;
         Ok(out)
     }
+}
+
+// ---------------------------------------------------------------- workers
+
+/// Run `(item, out-slice)` pairs with one worker thread per pair beyond
+/// the first (which runs on the calling thread); zero or one pair runs
+/// inline with no spawn at all.  The single home of the carve/spawn/join
+/// concurrency machinery, shared by [`ShardedPattern::attention`] and
+/// [`super::decode::BatchedAttention::attention`] — a future persistent
+/// worker pool replaces exactly this function.
+pub(crate) fn run_on_workers<T: Send>(
+    work: Vec<(T, &mut [f32])>,
+    f: impl Fn(T, &mut [f32]) -> Result<()> + Sync,
+) -> Result<()> {
+    if work.len() <= 1 {
+        for (item, out) in work {
+            f(item, out)?;
+        }
+        return Ok(());
+    }
+    std::thread::scope(|scope| -> Result<()> {
+        let f = &f;
+        let mut work = work.into_iter();
+        let (item0, out0) = work.next().expect("len checked above");
+        let handles: Vec<_> = work.map(|(item, out)| scope.spawn(move || f(item, out))).collect();
+        f(item0, out0)?;
+        for h in handles {
+            h.join().map_err(|_| anyhow!("shard worker panicked"))??;
+        }
+        Ok(())
+    })
 }
 
 // ---------------------------------------------------------------- kernel
@@ -437,17 +494,39 @@ mod tests {
         let a = cache.get_or_compile(&local, 16);
         let b = cache.get_or_compile(&local, 16);
         assert!(Arc::ptr_eq(&a, &b), "hit must reuse the same compile");
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
         assert_eq!(cache.len(), 1);
         // a different n or spec is a distinct entry
         cache.get_or_compile(&local, 32);
         cache.get_or_compile(&AttentionSpec::local(5).unwrap(), 16);
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3, evictions: 0 });
         assert_eq!(cache.len(), 3);
         assert!((cache.stats().hit_rate() - 0.25).abs() < 1e-12);
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.stats().lookups(), 0);
+    }
+
+    #[test]
+    fn evict_drops_every_length_and_counts() {
+        let mut cache = PatternCache::new();
+        let local = AttentionSpec::local(4).unwrap();
+        let routed = AttentionSpec::routing(vec![vec![0, 1, 2]]);
+        cache.get_or_compile(&routed, 8);
+        cache.get_or_compile(&routed, 16);
+        cache.get_or_compile(&local, 8);
+        assert_eq!(cache.len(), 3);
+        // both compiled lengths of the routed spec go at once
+        assert_eq!(cache.evict(&routed), 2);
+        assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.len(), 1, "static spec must stay pinned");
+        // evicting an absent spec is a no-op
+        assert_eq!(cache.evict(&routed), 0);
+        assert_eq!(cache.stats().evictions, 2);
+        // the next lookup recompiles (a miss, not a stale hit)
+        let fresh = cache.get_or_compile(&routed, 8);
+        assert_eq!(*fresh, routed.compile(8));
+        assert_eq!(cache.stats().misses, 4);
     }
 
     #[test]

@@ -25,6 +25,13 @@
 //!    sequence splits across workers, and the host-side f32
 //!    [`sparse_attention`] reference kernel validated against a dense
 //!    masked-softmax oracle.
+//! 4. [`decode`] — the decode-loop layer: [`RoutingSession`] owns
+//!    per-layer/per-head online k-means state with a cluster **epoch**
+//!    per slot, [`EpochCache`] evicts compiled routing patterns the
+//!    moment their epoch goes stale (static specs stay pinned), and
+//!    [`BatchedAttention`] packs B independent sequences into one
+//!    nnz-balanced worker sweep, bit-identical to B separate
+//!    [`sparse_attention`] calls.
 //!
 //! Consumers: the `figure1` and `serve-bench` CLIs, the complexity bench,
 //! the Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
@@ -34,11 +41,16 @@
 
 pub mod compiled;
 pub mod complexity;
+pub mod decode;
 pub mod engine;
 pub mod spec;
 
 pub use compiled::{CompiledPattern, RowIter, RowStats, NO_CLUSTER};
 pub use complexity::optimal_clusters;
+pub use decode::{
+    sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, RouteSlot,
+    RoutingSession,
+};
 pub use engine::{
     dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, PatternCache,
     Shard, ShardedPattern,

@@ -20,7 +20,14 @@ pub struct SphericalKMeans {
 
 impl SphericalKMeans {
     /// Random unit-vector initialization (seeded).
+    ///
+    /// Degenerate shapes are rejected loudly: `k == 0` would make
+    /// [`SphericalKMeans::assign`] index out of bounds (there is no best
+    /// cluster among zero centroids) and `dim == 0` silently produced
+    /// empty centroids whose dot products are all `0.0`.
     pub fn new(k: usize, dim: usize, decay: f32, seed: u64) -> Self {
+        assert!(k >= 1, "spherical k-means requires k >= 1 clusters (got k = 0)");
+        assert!(dim >= 1, "spherical k-means requires dim >= 1 (got dim = 0)");
         let mut rng = Rng::new(seed);
         let mut centroids = vec![0f32; k * dim];
         for c in 0..k {
@@ -66,6 +73,12 @@ impl SphericalKMeans {
     /// Balanced top-w membership (Algorithm 1 lines 12-15): for every
     /// centroid, the `w` highest-scoring vectors, indices sorted ascending
     /// to preserve temporal order.  `xs` is row-major [n, dim].
+    ///
+    /// NaN routing scores (a poisoned routing vector upstream) sort
+    /// *last*, ties broken by index — the old `partial_cmp(..).unwrap()`
+    /// aborted the entire routing pass on the first NaN, taking the
+    /// serving loop down with it.  A NaN-scored token is only selected
+    /// once every finite-scoring token already is (i.e. when `w == n`).
     pub fn top_w_members(&self, xs: &[f32], n: usize, w: usize) -> Vec<Vec<usize>> {
         assert_eq!(xs.len(), n * self.dim);
         let w = w.min(n);
@@ -75,7 +88,13 @@ impl SphericalKMeans {
                 let mut scored: Vec<(f32, usize)> = (0..n)
                     .map(|i| (dot(mu, &xs[i * self.dim..(i + 1) * self.dim]), i))
                     .collect();
-                scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+                scored.sort_by(|a, b| match (a.0.is_nan(), b.0.is_nan()) {
+                    (false, false) => b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)),
+                    (true, true) => a.1.cmp(&b.1),
+                    // NaN scores sort last, after every finite score
+                    (true, false) => std::cmp::Ordering::Greater,
+                    (false, true) => std::cmp::Ordering::Less,
+                });
                 let mut idx: Vec<usize> = scored[..w].iter().map(|&(_, i)| i).collect();
                 idx.sort_unstable();
                 idx
@@ -86,12 +105,21 @@ impl SphericalKMeans {
     /// One EMA update from a mini-batch of vectors (xs row-major [n, dim]):
     /// hard-assign each vector, average per cluster, EMA, re-project to the
     /// unit sphere.  Empty clusters keep their centroid.  Returns counts.
+    ///
+    /// Non-finite vectors are skipped entirely (and not counted): one NaN
+    /// folded into a cluster mean would stick forever — `decay · NaN` is
+    /// NaN, and `normalize` cannot rescue it — silently corrupting every
+    /// future routing assignment against that centroid.  Skipping mirrors
+    /// [`SphericalKMeans::top_w_members`], which sorts NaN scores last.
     pub fn update(&mut self, xs: &[f32], n: usize) -> Vec<usize> {
         assert_eq!(xs.len(), n * self.dim);
         let mut sums = vec![0f32; self.k * self.dim];
         let mut counts = vec![0usize; self.k];
         for i in 0..n {
             let x = &xs[i * self.dim..(i + 1) * self.dim];
+            if x.iter().any(|v| !v.is_finite()) {
+                continue;
+            }
             let c = self.assign(x);
             counts[c] += 1;
             for d in 0..self.dim {
@@ -254,6 +282,69 @@ mod tests {
                 assert_eq!(km.centroid(c), &before[c * 4..(c + 1) * 4]);
             }
         }
+    }
+
+    #[test]
+    fn top_w_nan_scores_sort_last_instead_of_panicking() {
+        // token 3's routing vector is poisoned: its dot against every
+        // centroid is NaN, which used to abort the pass via
+        // partial_cmp(..).unwrap()
+        let km = SphericalKMeans::new(2, 4, 0.5, 11);
+        let mut xs = clustered_data(8, 4, 2, 12);
+        xs[3 * 4] = f32::NAN;
+        let members = km.top_w_members(&xs, 8, 3);
+        assert_eq!(members.len(), 2);
+        for m in &members {
+            assert_eq!(m.len(), 3, "balanced membership survives NaN scores");
+            assert!(m.windows(2).all(|p| p[0] < p[1]));
+            assert!(!m.contains(&3), "NaN-scored token must sort after every finite one");
+        }
+        // w = n still admits every token, NaN-scored ones last
+        for m in &km.top_w_members(&xs, 8, 8) {
+            assert_eq!(m.len(), 8);
+        }
+        // the spec -> compile path stays NaN-safe end to end
+        let p = km.routing_spec(&xs, 8, 3).compile(8);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    fn update_skips_non_finite_vectors() {
+        // a poisoned vector folded into the EMA would make the centroid
+        // NaN forever (decay * NaN = NaN); update must quarantine it
+        let mut km = SphericalKMeans::new(2, 4, 0.5, 21);
+        let mut xs = clustered_data(8, 4, 2, 22);
+        xs[0] = f32::NAN;
+        xs[4 + 2] = f32::INFINITY;
+        let counts = km.update(&xs, 8);
+        assert_eq!(counts.iter().sum::<usize>(), 6, "the two poisoned vectors are skipped");
+        assert!(km.centroids.iter().all(|c| c.is_finite()), "centroids must stay finite");
+        for _ in 0..5 {
+            km.update(&xs, 8);
+        }
+        assert!(km.centroids.iter().all(|c| c.is_finite()), "finiteness must persist");
+        // routing over the same poisoned batch still works end to end
+        let p = km.routing_spec(&xs, 8, 4).compile(8);
+        assert!(p.is_causal());
+    }
+
+    #[test]
+    #[should_panic(expected = "k >= 1")]
+    fn zero_clusters_rejected() {
+        SphericalKMeans::new(0, 4, 0.5, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "dim >= 1")]
+    fn zero_dim_rejected() {
+        SphericalKMeans::new(4, 0, 0.5, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "assertion")]
+    fn update_shape_mismatch_rejected() {
+        let mut km = SphericalKMeans::new(2, 4, 0.5, 1);
+        km.update(&[0.0; 7], 2); // 7 != 2 * 4
     }
 
     #[test]

@@ -10,14 +10,17 @@
 //! rtx analyze  [--variant analysis] [--ckpt CKPT] [--runs N]   Table 6 JSD
 //! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8] [--stats]
 //! rtx serve-bench [--n 256] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
+//!                 [--sequences 1] [--route-every 2]
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 use routing_transformer::analysis;
 use routing_transformer::attention::{
-    optimal_clusters, AttentionSpec, CacheStats, PatternCache, ShardedPattern,
+    optimal_clusters, sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern,
+    EpochCache, RouteSlot, RoutingSession,
 };
 use routing_transformer::coordinator::{
     default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
@@ -75,10 +78,11 @@ commands:
   analyze   Table-6 JSD study: [--variant analysis] [--ckpt CKPT] [--runs 10] [--data needle]
   figure1   render Figure-1 attention patterns: [--n 64] [--window 8] [--stride 8] [--clusters 8]
             [--stats] (nnz/density/row-size table per scheme) [--csv FILE] [--seed S]
-  serve-bench  heads x layers x steps serving sweep over the pattern engine:
+  serve-bench  heads x layers x steps decode sweep over the pattern engine:
             [--n 256] [--d 64] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
-            [--window W] [--clusters K] [--seed S]
-            (prints compile-cache hit rate, per-shard work split, rows/sec)
+            [--window W] [--clusters K] [--sequences B] [--route-every R] [--seed S]
+            (B requests batched per worker sweep, k-means re-fit every R steps;
+             prints epoch hit rate, evictions, batched vs sequential rows/sec)
 ";
 
 fn artifacts_root(args: &Args) -> PathBuf {
@@ -352,91 +356,163 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let shards = args.usize("shards", 4)?.max(1);
     let window = args.usize("window", (n / 8).max(1))?.max(1);
     let k = args.usize("clusters", optimal_clusters(n))?.max(1);
+    let b = args.usize("sequences", 1)?.max(1);
+    let route_every = args.usize("route-every", 2)?.max(1);
     let seed = args.u64("seed", 0)?;
+    let w_top = (n / k).max(1);
 
-    // Sec. 4.2 head plan: even heads local, odd heads mixed local+routing.
-    // Layers and steps share the plan, so the cache must amortize compiles
-    // across the whole heads x layers x steps sweep.
+    // Sec. 4.2 head plan: even heads are static local (pinned compiles),
+    // odd heads mix local with content-routed attention whose memberships
+    // come from the session's online k-means — re-fit (epoch bump) every
+    // `route_every` steps as the per-sequence content drifts.
     let local = AttentionSpec::local(window)?;
-    let mixed = AttentionSpec::union(vec![
-        local.clone(),
-        AttentionSpec::routing_balanced(n, k)?,
-    ])?;
-    let plan: Vec<AttentionSpec> = (0..heads)
-        .map(|h| if h % 2 == 0 { local.clone() } else { mixed.clone() })
-        .collect();
+    let mut session = RoutingSession::new(layers, heads, k, d, 0.5, seed)?;
+    let mut cache = EpochCache::new();
 
     let mut rng = Rng::new(seed);
-    let qkv: Vec<f32> = (0..3 * n * d).map(|_| rng.normal() as f32).collect();
-    let (q, rest) = qkv.split_at(n * d);
-    let (kk, v) = rest.split_at(n * d);
+    let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    };
+    // B independent requests: [B, n, d] q/k/v plus per-sequence routing
+    // vectors that drift between re-fits
+    let q = mk(&mut rng, b * n * d);
+    let kk = mk(&mut rng, b * n * d);
+    let v = mk(&mut rng, b * n * d);
+    let mut xs: Vec<Vec<f32>> = (0..b).map(|_| mk(&mut rng, n * d)).collect();
 
     println!(
         "serve-bench: n={n} d={d} heads={heads} layers={layers} steps={steps} \
-         shards={shards} window={window} clusters={k}"
+         shards={shards} window={window} clusters={k} sequences={b} route-every={route_every}"
     );
-    // Per-head shard plans are built once up-front over the cache's shared
-    // compiles (2 distinct specs -> 2 compiles for all heads), so the timed
-    // sweep measures cache lookups + attention, not re-sharding.
-    let mut cache = PatternCache::new();
-    let shard_plans: Vec<ShardedPattern> = plan
-        .iter()
-        .map(|spec| ShardedPattern::balanced(cache.get_or_compile(spec, n), shards))
-        .collect::<Result<_>>()?;
-    let mut rows_done = 0u64;
+
+    // The static even-head batch never changes: plan it once.  Routed
+    // batches are re-planned only when their slot's epoch moves; the
+    // per-step cache consultation (the lookup a decode server performs)
+    // still happens every step so the epoch hit-rate is honest.
+    let static_batch = BatchedAttention::shared(cache.get_static(&local, n), b, shards)?;
+    let mut routed_batches: Vec<Option<(u64, BatchedAttention)>> = vec![None; layers * heads];
+
+    let mut batched_rows = 0u64;
     let mut macs = 0u64;
-    let warmup = cache.stats();
-    let t0 = std::time::Instant::now();
-    for _step in 0..steps {
-        for _layer in 0..layers {
-            for (spec, sharded) in plan.iter().zip(&shard_plans) {
-                // the serving-loop lookup the cache amortizes per step
-                let pattern = cache.get_or_compile(spec, n);
-                let out = sharded.attention(q, kk, v, d)?;
-                std::hint::black_box(&out);
-                rows_done += n as u64;
-                macs += pattern.cost(d);
+    let mut batched_dt = 0f64;
+    let mut sequential_dt = 0f64;
+    for step in 0..steps {
+        if step % route_every == 0 {
+            // content moved: drift the routing vectors, one online k-means
+            // step per routed slot over the whole batch's content, epoch++
+            for x in xs.iter_mut().flat_map(|s| s.iter_mut()) {
+                *x = 0.9 * *x + 0.43 * rng.normal() as f32;
+            }
+            let all: Vec<f32> = xs.concat();
+            for layer in 0..layers {
+                for head in (1..heads).step_by(2) {
+                    session.update(layer, head, &all, b * n);
+                }
+            }
+        }
+        for layer in 0..layers {
+            for head in 0..heads {
+                let batch: &BatchedAttention = if head % 2 == 0 {
+                    &static_batch
+                } else {
+                    let epoch = session.epoch(layer, head);
+                    let patterns: Vec<Arc<CompiledPattern>> = (0..b)
+                        .map(|s| {
+                            let slot = RouteSlot { layer, head, seq: s };
+                            cache.get_routed(slot, epoch, n, || {
+                                AttentionSpec::union(vec![
+                                    local.clone(),
+                                    session.routing_spec(layer, head, &xs[s], n, w_top),
+                                ])
+                                .expect("two-part union is non-empty")
+                            })
+                        })
+                        .collect();
+                    let si = layer * heads + head;
+                    if !matches!(&routed_batches[si], Some((e, _)) if *e == epoch) {
+                        routed_batches[si] = Some((epoch, BatchedAttention::new(patterns, shards)?));
+                    }
+                    &routed_batches[si].as_ref().expect("planned above").1
+                };
+                let t0 = std::time::Instant::now();
+                let batched = batch.attention(&q, &kk, &v, d)?;
+                batched_dt += t0.elapsed().as_secs_f64();
+                batched_rows += (b * n) as u64;
+                macs += batch.cost(d);
+
+                // the path batching replaces: B independent kernel calls
+                let t1 = std::time::Instant::now();
+                let mut sequential = Vec::with_capacity(b * n * d);
+                for (s, pattern) in batch.patterns().iter().enumerate() {
+                    let lo = s * n * d;
+                    let hi = lo + n * d;
+                    sequential.extend(sparse_attention(
+                        &q[lo..hi],
+                        &kk[lo..hi],
+                        &v[lo..hi],
+                        d,
+                        pattern,
+                    )?);
+                }
+                sequential_dt += t1.elapsed().as_secs_f64();
+                if batched != sequential {
+                    bail!("batched output diverged from sequential at step {step}");
+                }
+                std::hint::black_box(&batched);
             }
         }
     }
-    let dt = t0.elapsed().as_secs_f64().max(1e-9);
-    let last_sharded = shard_plans.last();
+    let batched_dt = batched_dt.max(1e-9);
+    let sequential_dt = sequential_dt.max(1e-9);
 
-    // stats net of the shard-plan warm-up, so the table describes exactly
-    // the timed sweep
-    let total = cache.stats();
-    let stats = CacheStats {
-        hits: total.hits - warmup.hits,
-        misses: total.misses - warmup.misses,
-    };
+    let cs = cache.stats();
+    let es = cache.epoch_stats();
     let mut table = Table::new(&["metric", "value"]);
-    table.row(&["pattern lookups (sweep)".to_string(), stats.lookups().to_string()]);
-    table.row(&["compiles during sweep".to_string(), stats.misses.to_string()]);
-    table.row(&["compiles total (incl. warm-up)".to_string(), total.misses.to_string()]);
-    table.row(&["cache hits".to_string(), stats.hits.to_string()]);
+    table.row(&["routed lookups".to_string(), es.lookups().to_string()]);
+    table.row(&["epoch hits".to_string(), es.epoch_hits.to_string()]);
+    table.row(&["epoch hit rate".to_string(), format!("{:.1}%", es.hit_rate() * 100.0)]);
+    table.row(&["evictions (stale epochs)".to_string(), cs.evictions.to_string()]);
+    table.row(&["compiles".to_string(), cs.misses.to_string()]);
+    table.row(&["compile-cache hits".to_string(), cs.hits.to_string()]);
+    table.row(&["compile-cache hit rate".to_string(), format!("{:.1}%", cs.hit_rate() * 100.0)]);
+    table.row(&["patterns cached (live)".to_string(), cache.len().to_string()]);
+    table.row(&["batched elapsed".to_string(), format!("{:.3} s", batched_dt)]);
     table.row(&[
-        "cache hit rate".to_string(),
-        format!("{:.1}%", stats.hit_rate() * 100.0),
+        "batched rows/sec".to_string(),
+        format!("{:.3e}", batched_rows as f64 / batched_dt),
     ]);
-    table.row(&["patterns cached".to_string(), cache.len().to_string()]);
-    table.row(&["elapsed".to_string(), format!("{:.3} s", dt)]);
+    table.row(&["sequential elapsed".to_string(), format!("{:.3} s", sequential_dt)]);
     table.row(&[
-        "query rows/sec".to_string(),
-        format!("{:.3e}", rows_done as f64 / dt),
+        "sequential rows/sec".to_string(),
+        format!("{:.3e}", batched_rows as f64 / sequential_dt),
     ]);
-    table.row(&["attention MACs/sec".to_string(), format!("{:.3e}", macs as f64 / dt)]);
+    table.row(&[
+        "batched speedup".to_string(),
+        format!("{:.2}x", sequential_dt / batched_dt),
+    ]);
+    table.row(&["attention MACs/sec (batched)".to_string(), format!("{:.3e}", macs as f64 / batched_dt)]);
     table.print();
 
-    if let Some(sharded) = last_sharded {
-        println!("\nwork split of the last head's pattern across {shards} shard workers:");
-        let total = sharded.pattern().nnz().max(1);
-        let mut table = Table::new(&["shard", "rows", "nnz", "work share"]);
-        for shard in sharded.shards() {
+    // the last head of the last layer: routed when heads is even (head
+    // heads-1 is odd), the shared static batch otherwise
+    let last_batch: Option<&BatchedAttention> = if (heads - 1) % 2 == 0 {
+        Some(&static_batch)
+    } else {
+        routed_batches[(layers - 1) * heads + (heads - 1)].as_ref().map(|(_, batch)| batch)
+    };
+    if let Some(batch) = last_batch {
+        println!(
+            "\nrow split of the last head's batch ({} sequences x {n} rows) across {} workers:",
+            batch.batch(),
+            batch.num_workers()
+        );
+        let mut table = Table::new(&["worker", "rows", "row share"]);
+        let total_rows = (batch.batch() * n).max(1);
+        for (w, rows) in batch.worker_rows().iter().enumerate() {
             table.row(&[
-                shard.index.to_string(),
-                format!("{}..{}", shard.rows.start, shard.rows.end),
-                shard.nnz.to_string(),
-                format!("{:.1}%", 100.0 * shard.nnz as f64 / total as f64),
+                w.to_string(),
+                rows.to_string(),
+                format!("{:.1}%", 100.0 * *rows as f64 / total_rows as f64),
             ]);
         }
         table.print();

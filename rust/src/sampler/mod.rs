@@ -68,9 +68,13 @@ pub fn nucleus_probs(logits: &[f32], cfg: SamplerConfig) -> Vec<f64> {
         *p /= z;
     }
     if cfg.top_p < 1.0 {
-        // keep the smallest prefix of sorted probs with mass >= top_p
+        // keep the smallest prefix of sorted probs with mass >= top_p;
+        // total_cmp keeps the descending sort total even if a prob were
+        // NaN (the masking above makes probs finite today, but the old
+        // partial_cmp(..).unwrap() aborted sampling the moment that
+        // invariant slipped — same panic class as the routing top-w sort)
         let mut order: Vec<usize> = (0..probs.len()).collect();
-        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        order.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
         let mut mass = 0.0;
         let mut keep = vec![false; probs.len()];
         for &i in &order {
@@ -187,6 +191,17 @@ mod tests {
             seen[sample_logits(&logits, SamplerConfig::default(), &mut rng)] = true;
         }
         assert!(seen.iter().all(|&s| s), "degenerate row must sample uniformly");
+        // partially-masked rows (NaN + -inf alongside one finite logit)
+        // drive the top-p sort over zero-probability entries; the sort
+        // must stay total and the finite logit must keep the whole mass
+        let mixed = vec![f32::NAN, f32::NEG_INFINITY, 1.0, f32::NAN];
+        let probs = nucleus_probs(&mixed, SamplerConfig { temperature: 1.0, top_p: 0.5 });
+        assert!(probs.iter().all(|p| p.is_finite()));
+        assert!((probs[2] - 1.0).abs() < 1e-12, "finite logit keeps all mass");
+        assert!(probs[0] == 0.0 && probs[1] == 0.0 && probs[3] == 0.0);
+        for _ in 0..50 {
+            assert_eq!(sample_logits(&mixed, SamplerConfig::default(), &mut rng), 2);
+        }
     }
 
     #[test]

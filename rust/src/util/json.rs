@@ -108,13 +108,6 @@ impl Json {
         }
     }
 
-    /// Serialize back to compact JSON text.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -150,6 +143,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact JSON serialization (`value.to_string()` via the blanket
+/// `ToString`; an inherent `to_string` would shadow this impl).
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

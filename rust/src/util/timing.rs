@@ -61,7 +61,15 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn to_string(&self) -> String {
+    pub fn print(&self) {
+        print!("{self}");
+    }
+}
+
+/// Column-aligned rendering (`table.to_string()` via the blanket
+/// `ToString`; an inherent `to_string` would shadow this impl).
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -76,22 +84,12 @@ impl Table {
                 .collect::<Vec<_>>()
                 .join(" | ")
         };
-        let mut out = String::new();
-        out.push_str(&fmt_row(&self.headers));
-        out.push('\n');
-        out.push_str(
-            &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"),
-        );
-        out.push('\n');
+        writeln!(f, "{}", fmt_row(&self.headers))?;
+        writeln!(f, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"))?;
         for row in &self.rows {
-            out.push_str(&fmt_row(row));
-            out.push('\n');
+            writeln!(f, "{}", fmt_row(row))?;
         }
-        out
-    }
-
-    pub fn print(&self) {
-        print!("{}", self.to_string());
+        Ok(())
     }
 }
 

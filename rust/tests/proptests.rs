@@ -6,13 +6,19 @@
 //! shrink-by-hand reproduction.  Invariants covered: compiled attention
 //! patterns (agreement with a naive reference oracle on `allowed`/`nnz`,
 //! causality, row sortedness, spec JSON round-trips), routing membership,
-//! batcher (no loss/dup), k-means (norms, assignment optimality),
-//! tokenizers (round-trips), sampler (support/normalization), schedules
-//! (finiteness/monotonicity), JSON (round-trip).
+//! engine (shard partition, cache == fresh compile, kernel == oracle,
+//! batched == B independent calls bit-for-bit, epoch-cache staleness +
+//! eviction accounting), batcher (no loss/dup), k-means (norms,
+//! assignment optimality), tokenizers (round-trips), sampler
+//! (support/normalization), schedules (finiteness/monotonicity), JSON
+//! (round-trip).
+
+use std::sync::Arc;
 
 use routing_transformer::analysis::{jsd, JSD_MAX};
 use routing_transformer::attention::{
-    dense_masked_attention, optimal_clusters, sparse_attention, AttentionSpec, PatternCache,
+    dense_masked_attention, optimal_clusters, sparse_attention, sparse_attention_batch,
+    AttentionSpec, BatchedAttention, CompiledPattern, EpochCache, PatternCache, RouteSlot,
     ShardedPattern,
 };
 #[cfg(feature = "xla")]
@@ -346,6 +352,100 @@ fn prop_engine_sparse_attention_matches_dense_oracle() {
         )
         .unwrap();
         assert_eq!(sharded.attention(q, k, v, d).unwrap(), sparse);
+    });
+}
+
+#[test]
+fn prop_batched_attention_bit_identical_to_sequential() {
+    check("batched_attention", 60, |rng| {
+        // B = 1, n = 0, and n = 1 are all in range; patterns are either
+        // one shared compile or a mixed per-sequence set
+        let b = rng.range(1, 5);
+        let n = rng.range(0, 16);
+        let d = rng.range(1, 7);
+        let shared = rng.chance(0.3);
+        let patterns: Vec<Arc<CompiledPattern>> = if shared {
+            let p = Arc::new(random_spec(rng, n, 1).compile(n));
+            vec![p; b]
+        } else {
+            (0..b).map(|_| Arc::new(random_spec(rng, n, 1).compile(n))).collect()
+        };
+        let qkv: Vec<f32> = (0..3 * b * n * d).map(|_| rng.normal() as f32).collect();
+        let (q, rest) = qkv.split_at(b * n * d);
+        let (k, v) = rest.split_at(b * n * d);
+        let workers = rng.range(1, 6);
+        let batch = BatchedAttention::new(patterns.clone(), workers).unwrap();
+        assert_eq!(batch.batch(), b);
+        assert_eq!(batch.nnz(), patterns.iter().map(|p| p.nnz()).sum::<usize>());
+        assert_eq!(batch.worker_rows().iter().sum::<usize>(), b * n);
+        let out = batch.attention(q, k, v, d).unwrap();
+        let mut expect = Vec::with_capacity(b * n * d);
+        for (s, p) in patterns.iter().enumerate() {
+            let lo = s * n * d;
+            let hi = lo + n * d;
+            expect.extend(sparse_attention(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, p).unwrap());
+        }
+        assert_eq!(out, expect, "batched must be bit-identical to B independent calls");
+        // the one-shot form plans identically
+        assert_eq!(sparse_attention_batch(q, k, v, d, &patterns, workers).unwrap(), expect);
+    });
+}
+
+#[test]
+fn prop_epoch_cache_never_serves_stale_and_counts_evictions() {
+    check("epoch_cache", 60, |rng| {
+        let n = rng.range(1, 24);
+        let n_slots = rng.range(1, 4);
+        let mut cache = EpochCache::new();
+        // per-slot current (epoch, memberships); cluster 0 carries a
+        // slot-unique tag so specs never collide across slots, which
+        // keeps the eviction accounting exact
+        let fresh_spec = |rng: &mut Rng, si: usize| {
+            let mut clusters: Vec<Vec<usize>> = vec![vec![1000 + si]];
+            clusters
+                .extend((0..rng.range(1, 4)).map(|_| (0..n).filter(|_| rng.chance(0.3)).collect()));
+            AttentionSpec::routing(clusters)
+        };
+        let mut current: Vec<(u64, AttentionSpec)> =
+            (0..n_slots).map(|si| (0, fresh_spec(rng, si))).collect();
+        let static_spec = AttentionSpec::local(rng.range(1, n + 1)).unwrap();
+        let pinned = cache.get_static(&static_spec, n);
+        let mut expected_evictions = 0u64;
+        let mut seen: Vec<bool> = vec![false; n_slots];
+        for _round in 0..rng.range(2, 6) {
+            for si in 0..n_slots {
+                let slot = RouteSlot { layer: 0, head: si, seq: 0 };
+                if rng.chance(0.5) {
+                    // epoch bump: the slot's memberships are superseded
+                    current[si].0 += 1;
+                    current[si].1 = fresh_spec(rng, si);
+                    if seen[si] {
+                        expected_evictions += 1;
+                    }
+                }
+                let (epoch, spec) = current[si].clone();
+                let p = cache.get_routed(slot, epoch, n, || spec.clone());
+                seen[si] = true;
+                assert_eq!(
+                    *p,
+                    spec.compile(n),
+                    "cache must never serve a previous epoch's memberships"
+                );
+                assert_eq!(cache.slot_epoch(slot), Some(epoch));
+                // a same-epoch re-fetch is a hit on the same shared compile
+                let again =
+                    cache.get_routed(slot, epoch, n, || panic!("hit must not regenerate"));
+                assert!(Arc::ptr_eq(&p, &again));
+                assert_eq!(cache.stats().evictions, expected_evictions);
+            }
+        }
+        // static compiles survive arbitrary routing churn
+        assert!(Arc::ptr_eq(&pinned, &cache.get_static(&static_spec, n)));
+        // bounded: the pinned static entry + at most one live per slot
+        assert!(cache.len() <= 1 + n_slots, "stale compiles must not accumulate");
+        let es = cache.epoch_stats();
+        assert_eq!(es.lookups(), es.epoch_hits + es.epoch_misses);
+        assert!(es.hit_rate() <= 1.0);
     });
 }
 
