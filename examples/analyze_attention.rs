@@ -5,11 +5,13 @@
 //!
 //! Run: `cargo run --release --example analyze_attention -- [steps]`
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use routing_transformer::analysis;
 use routing_transformer::attention::{
     dense_masked_attention, sparse_attention, AttentionSpec, BatchedAttention, EpochCache,
-    PatternCache, RouteSlot, ShardedPattern,
+    Execution, PatternCache, RouteSlot, RoutingSession, ShardedPattern, WorkerPool,
 };
 use routing_transformer::coordinator::{train_batcher, LrSchedule, TrainOptions, Trainer};
 use routing_transformer::data;
@@ -196,6 +198,46 @@ fn main() -> Result<()> {
         ecache.stats().evictions,
         ecache.epoch_stats().hit_rate() * 100.0,
         batch.num_workers()
+    );
+
+    // ---------------- pool execution + incremental re-routing
+    // The batch above ran on the resident global WorkerPool (the default
+    // execution).  The scoped spawn-per-call baseline and the inline
+    // single-thread path must agree bitwise with it.
+    let pool = WorkerPool::global();
+    for exec in [Execution::Scoped, Execution::Inline, Execution::Pool(pool)] {
+        let again = batch.attention_with(&bq, &bq, &bq, dim, exec)?;
+        assert_eq!(again, batched, "every execution strategy must agree bitwise");
+    }
+    // Incremental flow: a RoutingSession advances a slot's assignment
+    // epoch only when an update really moves a token between clusters,
+    // so a stable re-fit keeps the compiled pattern live (an
+    // unchanged-epoch hit) instead of evicting it.
+    let mut session = RoutingSession::new(1, 1, k, dim, 0.5, 9)?;
+    let mut icache = EpochCache::new();
+    let islot = RouteSlot { layer: 0, head: 0, seq: 0 };
+    session.update(0, 0, &xs, n);
+    let p0 = session.routed_pattern(&mut icache, islot, &xs, n, n / k);
+    let upd = session.update(0, 0, &xs, n);
+    let p1 = session.routed_pattern(&mut icache, islot, &xs, n, n / k);
+    if upd.delta.changed() {
+        assert!(icache.stats().evictions >= 1, "moved tokens must evict the stale compile");
+        println!(
+            "incremental: re-fit moved {} tokens (dirty set {:?}) -> recompile + eviction",
+            upd.delta.moved.len(),
+            session.dirty_tokens(0, 0)
+        );
+    } else {
+        assert!(Arc::ptr_eq(&p0, &p1), "a stable re-fit must keep serving the live compile");
+        assert_eq!(icache.epoch_stats().unchanged_epochs, 1);
+        println!("incremental: re-fit moved no tokens -> unchanged-epoch hit, no recompile");
+    }
+    println!(
+        "pool: {} workers configured, {} spawned, {} jobs across {} batches",
+        pool.workers(),
+        pool.spawned_workers(),
+        pool.jobs_run(),
+        pool.batches()
     );
     println!("analyze_attention OK");
     Ok(())

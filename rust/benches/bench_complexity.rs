@@ -12,13 +12,17 @@
 //! (5) cross-request batching — B = 8 independent sequences through one
 //! `BatchedAttention` worker sweep vs 8 sequential single-thread kernel
 //! calls, bit-identical outputs required and batched must be >= 2x (the
-//! speedup pin is gated on >= 4 cores; 2 cores cap the ceiling at 2.0x).
+//! speedup pin is gated on >= 4 cores; 2 cores cap the ceiling at 2.0x);
+//! (6) the resident `WorkerPool` vs scoped spawn-per-call over a
+//! decode-shaped loop (B = 8 small sequences, 64 steps, so the per-call
+//! thread spawns dominate) — bit-identical outputs required and the pool
+//! must be >= 1.3x (gated on >= 4 cores like part 5).
 
 use std::sync::Arc;
 
 use routing_transformer::attention::{
     optimal_clusters, sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern,
-    PatternCache,
+    Execution, PatternCache, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -251,6 +255,80 @@ fn main() {
         // the hard pin would fail on correct code; report instead
         println!(
             "({} cores: >= 2x pin skipped, needs >= 4 cores for headroom)",
+            if cores == 0 { "unknown".to_string() } else { cores.to_string() }
+        );
+    }
+
+    // resident pool vs scoped spawn-per-call: a decode-shaped loop of 64
+    // small batched steps (B = 8, n = 64), where the kernel work per call
+    // is small enough that the scoped path's (workers - 1) thread spawns
+    // per call are the dominant overhead — exactly the residual per-step
+    // cost the pool exists to amortize.
+    let b = 8usize;
+    let n = 64usize;
+    let d = 32usize;
+    let steps = 64usize;
+    let k = optimal_clusters(n);
+    let patterns: Vec<Arc<CompiledPattern>> = (0..b)
+        .map(|s| {
+            let spec = AttentionSpec::union(vec![
+                AttentionSpec::local(8).unwrap(),
+                AttentionSpec::routing_balanced(n, (k + s % 3).max(1)).unwrap(),
+            ])
+            .unwrap();
+            Arc::new(spec.compile(n))
+        })
+        .collect();
+    let mut rng = Rng::new(29);
+    let mk = |rng: &mut Rng| -> Vec<f32> {
+        (0..b * n * d).map(|_| rng.normal() as f32).collect()
+    };
+    let q = mk(&mut rng);
+    let kv = mk(&mut rng);
+    let v = mk(&mut rng);
+    let batch = BatchedAttention::new(patterns, workers).unwrap();
+    let pool = WorkerPool::global();
+
+    // row-for-row equality across all three execution paths first
+    let inline_out = batch.attention_with(&q, &kv, &v, d, Execution::Inline).unwrap();
+    let pool_out = batch.attention_with(&q, &kv, &v, d, Execution::Pool(pool)).unwrap();
+    let scoped_out = batch.attention_with(&q, &kv, &v, d, Execution::Scoped).unwrap();
+    assert_eq!(pool_out, inline_out, "pool must be bit-identical to inline");
+    assert_eq!(scoped_out, inline_out, "scoped must be bit-identical to inline");
+
+    let pooled = time_fn(1, 3, || {
+        for _ in 0..steps {
+            std::hint::black_box(
+                batch.attention_with(&q, &kv, &v, d, Execution::Pool(pool)).unwrap(),
+            );
+        }
+    });
+    let scoped = time_fn(1, 3, || {
+        for _ in 0..steps {
+            std::hint::black_box(
+                batch.attention_with(&q, &kv, &v, d, Execution::Scoped).unwrap(),
+            );
+        }
+    });
+    let rows = (steps * b * n) as f64;
+    let pool_speedup = scoped.mean / pooled.mean;
+    println!(
+        "\npool vs scoped-spawn at B={b}, n={n}, d={d}, steps={steps} ({workers} workers): \
+         {:.3} ms vs {:.3} ms ({:.3e} vs {:.3e} rows/sec, {pool_speedup:.2}x)",
+        pooled.mean * 1e3,
+        scoped.mean * 1e3,
+        rows / pooled.mean,
+        rows / scoped.mean
+    );
+    if cores >= 4 {
+        assert!(
+            pool_speedup >= 1.3,
+            "resident pool must be >= 1.3x over spawn-per-call at steps = {steps} \
+             (got {pool_speedup:.2}x)"
+        );
+    } else {
+        println!(
+            "({} cores: >= 1.3x pool pin skipped, needs >= 4 cores for headroom)",
             if cores == 0 { "unknown".to_string() } else { cores.to_string() }
         );
     }

@@ -9,45 +9,70 @@
 //! out:
 //!
 //! * [`RoutingSession`] — per-layer/per-head [`SphericalKMeans`] state
-//!   with a monotonically increasing **cluster epoch** per slot, bumped by
-//!   [`RoutingSession::update`].  The epoch is the cache-coherence token:
-//!   two routing specs generated at the same epoch come from the same
-//!   centroids and may share a compile; specs from different epochs never
-//!   may.
+//!   with two counters per slot, both advanced by
+//!   [`RoutingSession::update`] and both monotone: the **cluster epoch**
+//!   (bumped by every non-empty update — centroids moved) and the
+//!   **assignment epoch** (advanced only when the update's
+//!   [`AssignmentDelta`] actually moved a token between clusters).  The
+//!   assignment epoch is the cache-coherence token: MoSA-style
+//!   expert-choice routing observes most assignments are stable step to
+//!   step, so a compiled routing pattern is kept across centroid drift
+//!   until an argmax assignment really changes.  This reuse is a
+//!   deliberate approximation: a centroid step can reorder a top-w
+//!   ranking without moving any argmax (exact only at `w == n`) — see
+//!   [`AssignmentDelta::changed`]; use [`EpochCache::get_routed`]'s
+//!   strict cluster-epoch keying when per-epoch exactness matters more
+//!   than recompile cost.  Each slot also accumulates a **dirty set** —
+//!   the tokens moved since the set was last drained
+//!   ([`RoutingSession::take_dirty`]) — the worklist an incremental
+//!   re-router consumes.  Dirty indices are positions in the `xs`
+//!   batches handed to `update`, so the worklist is meaningful only
+//!   when a slot's updates use one consistent batch shape (as
+//!   serve-bench does).  An empty (`n == 0`) update is a strict no-op:
+//!   no epoch bump, no dirty tokens.
 //! * [`EpochCache`] — a generation-aware cache pairing a pinned
 //!   [`PatternCache`](super::PatternCache) for static specs (local/strided
 //!   head-plan parts, kept forever) with slot-owned routed compiles: each
 //!   routed slot ((layer, head, sequence), see [`RouteSlot`]) holds
-//!   exactly one live pattern tagged with its cluster epoch.  A lookup
-//!   with a stale epoch drops the superseded compile (counted in
-//!   [`CacheStats::evictions`] via the merged stats) and regenerates the
-//!   spec via the caller's closure — so a pattern compiled from a
-//!   previous epoch's memberships is never served, and the cache stays
-//!   bounded.
+//!   exactly one live pattern tagged with the assignment epoch it was
+//!   built from.  [`EpochCache::get_routed_at`] serves the live compile
+//!   while the assignment epoch matches — including across cluster-epoch
+//!   bumps that moved nothing, which count as
+//!   [`EpochCacheStats::unchanged_epochs`] hits instead of evictions.
+//!   Only a lookup whose assignment epoch moved drops the superseded
+//!   compile (counted in [`CacheStats::evictions`] via the merged stats)
+//!   and regenerates the spec via the caller's closure — so a pattern
+//!   compiled from superseded assignments is never served, and the cache
+//!   stays bounded at one live pattern per slot.
 //! * [`BatchedAttention`] / [`sparse_attention_batch`] — cross-request
 //!   batching: B independent sequences (`[B, n, d]` row-major q/k/v, one
 //!   compiled pattern per sequence or one shared pattern) run through a
-//!   single nnz-balanced worker sweep instead of B separate kernel calls,
-//!   so one worker pool amortizes across requests.  The per-row math is
-//!   exactly [`sparse_attention_rows`], making the batched output
+//!   single nnz-balanced sweep instead of B separate kernel calls,
+//!   executed on the resident [`super::pool::WorkerPool`] by default
+//!   ([`BatchedAttention::attention_with`] takes a per-call
+//!   [`Execution`] override).  The per-row math is exactly
+//!   [`sparse_attention_rows`], making the batched output
 //!   **bit-identical** to B independent
 //!   [`sparse_attention`](super::sparse_attention) calls.
 //!
-//! Consumers: `rtx serve-bench` (`--sequences`/`--route-every`, printing
-//! epoch hit-rate, eviction count, and batched vs sequential rows/sec),
-//! `bench_complexity` (batched ≥ 2× sequential at B = 8),
-//! `examples/analyze_attention.rs`, and the decode property tests.
+//! Consumers: `rtx serve-bench` (`--sequences`/`--route-every`/`--pool`,
+//! printing epoch hit-rate, unchanged-epoch hits, eviction count, dirty
+//! tokens, and batched vs sequential plus pool vs scoped rows/sec),
+//! `bench_complexity` (batched ≥ 2× sequential at B = 8; pool ≥ 1.3×
+//! scoped), `examples/analyze_attention.rs`, the decode property tests,
+//! and the stateful model-based suite (`tests/stateful.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::ops::Range;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::compiled::CompiledPattern;
-use super::engine::{run_on_workers, sparse_attention_rows, CacheStats, PatternCache};
+use super::engine::{sparse_attention_rows, CacheStats, PatternCache};
+use super::pool::Execution;
 use super::spec::AttentionSpec;
-use crate::kmeans::SphericalKMeans;
+use crate::kmeans::{AssignmentDelta, SphericalKMeans};
 
 // -------------------------------------------------------------- session
 
@@ -60,20 +85,39 @@ pub struct RouteSlot {
     pub seq: usize,
 }
 
+/// What one [`RoutingSession::update`] did to a slot.
+#[derive(Debug, Clone)]
+pub struct RouteUpdate {
+    /// The slot's cluster epoch after the update (bumped iff the batch
+    /// was non-empty).
+    pub epoch: u64,
+    /// The slot's assignment epoch after the update (advanced to `epoch`
+    /// iff the update moved at least one token between clusters).
+    pub assignment_epoch: u64,
+    /// The k-means delta: per-cluster counts plus the moved tokens.
+    pub delta: AssignmentDelta,
+}
+
 /// Per-layer/per-head online k-means routing state for a decode session.
 ///
 /// Owns one [`SphericalKMeans`] per (layer, head) slot plus that slot's
-/// **cluster epoch** — a counter bumped by every [`RoutingSession::update`]
-/// call.  Epochs advance independently per slot (layers may re-route on
-/// different schedules), and they key the [`EpochCache`] invalidation:
-/// patterns compiled under an older epoch are stale the moment the
-/// centroids move.
+/// **cluster epoch** (bumped by every non-empty
+/// [`RoutingSession::update`]), **assignment epoch** (advanced only when
+/// an update's [`AssignmentDelta`] moved a token — the token the
+/// [`EpochCache`] keys invalidation on), and **dirty set** (tokens moved
+/// since [`RoutingSession::take_dirty`] last drained it).  Epochs advance
+/// independently per slot (layers may re-route on different schedules).
+/// A pattern compiled under an older *assignment* epoch is stale; a
+/// pattern whose assignment epoch is current stays servable even while
+/// the cluster epoch keeps bumping past it.
 #[derive(Debug, Clone)]
 pub struct RoutingSession {
     layers: usize,
     heads: usize,
     kms: Vec<SphericalKMeans>,
     epochs: Vec<u64>,
+    assignment_epochs: Vec<u64>,
+    dirty: Vec<BTreeSet<usize>>,
 }
 
 impl RoutingSession {
@@ -97,7 +141,14 @@ impl RoutingSession {
                 SphericalKMeans::new(k, dim, decay, seed ^ (s as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15))
             })
             .collect();
-        Ok(RoutingSession { layers, heads, kms, epochs: vec![0; layers * heads] })
+        Ok(RoutingSession {
+            layers,
+            heads,
+            kms,
+            epochs: vec![0; layers * heads],
+            assignment_epochs: vec![0; layers * heads],
+            dirty: vec![BTreeSet::new(); layers * heads],
+        })
     }
 
     fn slot(&self, layer: usize, head: usize) -> usize {
@@ -118,9 +169,42 @@ impl RoutingSession {
         self.heads
     }
 
-    /// The slot's current cluster epoch (0 until the first update).
+    /// The slot's current cluster epoch (0 until the first non-empty
+    /// update).
     pub fn epoch(&self, layer: usize, head: usize) -> u64 {
         self.epochs[self.slot(layer, head)]
+    }
+
+    /// The slot's assignment epoch: the cluster epoch of the last update
+    /// that actually moved a token (0 until one does).  The coherence
+    /// token [`EpochCache::get_routed_at`] keys on.
+    pub fn assignment_epoch(&self, layer: usize, head: usize) -> u64 {
+        self.assignment_epochs[self.slot(layer, head)]
+    }
+
+    /// Tokens moved since the slot's dirty set was last drained, sorted
+    /// ascending — the incremental re-route worklist.
+    ///
+    /// Indices are positions within the `xs` batches handed to
+    /// [`RoutingSession::update`]: they identify tokens only if the
+    /// slot's updates keep one consistent batch shape between drains
+    /// (mixed-shape updates make the set a churn *count*, not a usable
+    /// worklist).
+    pub fn dirty_tokens(&self, layer: usize, head: usize) -> Vec<usize> {
+        self.dirty[self.slot(layer, head)].iter().copied().collect()
+    }
+
+    /// Size of the slot's pending dirty set.
+    pub fn dirty_len(&self, layer: usize, head: usize) -> usize {
+        self.dirty[self.slot(layer, head)].len()
+    }
+
+    /// Drain and return the slot's dirty set (sorted ascending) — called
+    /// by a consumer that has finished re-routing the moved tokens.  See
+    /// [`RoutingSession::dirty_tokens`] for the index-space contract.
+    pub fn take_dirty(&mut self, layer: usize, head: usize) -> Vec<usize> {
+        let s = self.slot(layer, head);
+        std::mem::take(&mut self.dirty[s]).into_iter().collect()
     }
 
     /// The slot's k-means state (e.g. for cohesion diagnostics).
@@ -128,14 +212,30 @@ impl RoutingSession {
         &self.kms[self.slot(layer, head)]
     }
 
-    /// One online k-means step over `xs` (row-major [n, dim]) for a slot,
-    /// bumping its cluster epoch; returns the new epoch.  Every pattern
-    /// compiled under the previous epoch is stale after this call.
-    pub fn update(&mut self, layer: usize, head: usize, xs: &[f32], n: usize) -> u64 {
+    /// One online k-means step over `xs` (row-major [n, dim]) for a slot.
+    ///
+    /// A non-empty batch bumps the slot's cluster epoch; its assignment
+    /// epoch advances (and the moved tokens join the slot's dirty set)
+    /// only when the step's [`AssignmentDelta`] actually moved a token —
+    /// so a pattern compiled at the previous assignment epoch goes stale
+    /// only when memberships really changed.  An empty batch (`n == 0`)
+    /// is a strict no-op: no epoch bump, no dirty tokens, no recompile
+    /// forced downstream.
+    pub fn update(&mut self, layer: usize, head: usize, xs: &[f32], n: usize) -> RouteUpdate {
         let s = self.slot(layer, head);
-        self.kms[s].update(xs, n);
-        self.epochs[s] += 1;
-        self.epochs[s]
+        let delta = self.kms[s].update(xs, n);
+        if n > 0 {
+            self.epochs[s] += 1;
+            if delta.changed() {
+                self.assignment_epochs[s] = self.epochs[s];
+                self.dirty[s].extend(delta.moved_tokens());
+            }
+        }
+        RouteUpdate {
+            epoch: self.epochs[s],
+            assignment_epoch: self.assignment_epochs[s],
+            delta,
+        }
     }
 
     /// Balanced top-w routing spec for a slot over the routing vectors
@@ -153,8 +253,10 @@ impl RoutingSession {
     }
 
     /// Epoch-cached compiled routing pattern for `slot`: serves the live
-    /// compile while the slot's epoch is current, regenerates (and evicts
-    /// the stale compile) after an [`RoutingSession::update`].
+    /// compile while the slot's *assignment* epoch is current — including
+    /// across cluster-epoch bumps that moved nothing — and regenerates
+    /// (evicting the stale compile) only after an
+    /// [`RoutingSession::update`] that actually changed assignments.
     pub fn routed_pattern(
         &self,
         cache: &mut EpochCache,
@@ -163,9 +265,13 @@ impl RoutingSession {
         n: usize,
         w: usize,
     ) -> Arc<CompiledPattern> {
-        cache.get_routed(slot, self.epoch(slot.layer, slot.head), n, || {
-            self.routing_spec(slot.layer, slot.head, xs, n, w)
-        })
+        cache.get_routed_at(
+            slot,
+            self.epoch(slot.layer, slot.head),
+            self.assignment_epoch(slot.layer, slot.head),
+            n,
+            || self.routing_spec(slot.layer, slot.head, xs, n, w),
+        )
     }
 }
 
@@ -175,12 +281,18 @@ impl RoutingSession {
 /// not compile work — see [`EpochCache::stats`] for the compile side).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EpochCacheStats {
-    /// Routed lookups whose slot epoch was current: the stored spec was
-    /// reused without regeneration.
+    /// Routed lookups served from the slot's live compile (its assignment
+    /// epoch was current): the stored spec was reused without
+    /// regeneration.  Includes the `unchanged_epochs` subset.
     pub epoch_hits: u64,
     /// Routed lookups that had to regenerate the spec (unseen slot, stale
-    /// epoch, or changed sequence length).
+    /// assignment epoch, or changed sequence length).
     pub epoch_misses: u64,
+    /// The subset of `epoch_hits` where the cluster epoch had bumped past
+    /// the compile but the assignments had not changed — each one is a
+    /// recompile the incremental (dirty-set) flow skipped; the strict
+    /// epoch-keyed flow would have evicted instead.
+    pub unchanged_epochs: u64,
 }
 
 impl EpochCacheStats {
@@ -201,27 +313,40 @@ impl EpochCacheStats {
 
 #[derive(Debug, Clone)]
 struct SlotEntry {
+    /// Cluster epoch last observed for the slot (advances freely across
+    /// unchanged-assignment bumps).
     epoch: u64,
+    /// Assignment epoch the pattern was compiled from — the coherence
+    /// token; a mismatch invalidates the entry.
+    assignment_epoch: u64,
     n: usize,
     pattern: Arc<CompiledPattern>,
 }
 
-/// Generation-aware compile cache for a decode loop.
+/// Generation-aware compile cache for a decode loop (dirty-set flow).
 ///
 /// Static head-plan specs go through [`EpochCache::get_static`], land in
 /// a spec-keyed [`PatternCache`], and stay pinned for the lifetime of the
 /// cache.  Routed patterns never enter that shared map: each
-/// [`RouteSlot`] *owns* its one live compile, tagged with the cluster
-/// epoch it was built from.  While the epoch matches,
-/// [`EpochCache::get_routed`] is an O(1) slot lookup returning the shared
-/// `Arc` (no spec regeneration, no hashing of O(n) membership lists).
-/// When the epoch moves — a k-means update superseded the memberships —
-/// the stale compile is dropped (counted as an eviction in
-/// [`EpochCache::stats`]) and the new spec is built via the caller's
-/// closure and compiled.  A pattern from a previous epoch's memberships
-/// is therefore never served, slot evictions can never touch a pinned
-/// static compile (or another slot's), and the cache holds at most one
-/// live routing pattern per slot.
+/// [`RouteSlot`] *owns* its one live compile, tagged with the assignment
+/// epoch it was built from.  While the assignment epoch matches,
+/// [`EpochCache::get_routed_at`] is an O(1) slot lookup returning the
+/// shared `Arc` (no spec regeneration, no hashing of O(n) membership
+/// lists) — even when the cluster epoch has bumped past the compile,
+/// which is recorded as an [`EpochCacheStats::unchanged_epochs`] hit
+/// rather than an eviction (the MoSA-style stability win: centroids
+/// drifted, argmax assignments did not; see
+/// [`AssignmentDelta::changed`](crate::kmeans::AssignmentDelta::changed)
+/// for why this reuse is an approximation of top-w membership
+/// stability).  When the assignment epoch moves — a
+/// k-means update really moved tokens — the stale compile is dropped
+/// (counted as an eviction in [`EpochCache::stats`]) and the new spec is
+/// built via the caller's closure and compiled.  A pattern from
+/// superseded assignments is therefore never served, slot evictions can
+/// never touch a pinned static compile (or another slot's), and the
+/// cache holds at most one live routing pattern per slot.
+/// [`EpochCache::evict_slot`] drops a slot eagerly (e.g. when its
+/// request completes).
 #[derive(Debug, Default)]
 pub struct EpochCache {
     cache: PatternCache,
@@ -243,9 +368,10 @@ impl EpochCache {
         self.cache.get_or_compile(spec, n)
     }
 
-    /// Epoch-keyed lookup for a routed slot.  `make_spec` runs only when
-    /// the slot is unseen or its stored epoch/length is stale; a stale
-    /// entry's compile is dropped (one eviction) first.
+    /// Strict epoch-keyed lookup for a routed slot: every epoch bump
+    /// invalidates.  Equivalent to [`EpochCache::get_routed_at`] with
+    /// `assignment_epoch == epoch` — for callers without assignment-delta
+    /// tracking (every centroid move is treated as a membership change).
     pub fn get_routed(
         &mut self,
         slot: RouteSlot,
@@ -253,8 +379,30 @@ impl EpochCache {
         n: usize,
         make_spec: impl FnOnce() -> AttentionSpec,
     ) -> Arc<CompiledPattern> {
-        if let Some(entry) = self.slots.get(&slot) {
-            if entry.epoch == epoch && entry.n == n {
+        self.get_routed_at(slot, epoch, epoch, n, make_spec)
+    }
+
+    /// Assignment-epoch-keyed lookup for a routed slot — the incremental
+    /// (dirty-set) flow.  `make_spec` runs only when the slot is unseen
+    /// or its stored assignment epoch/length is stale; a stale entry's
+    /// compile is dropped (one eviction) first.  A lookup whose cluster
+    /// `epoch` advanced while `assignment_epoch` did not serves the live
+    /// compile and counts an [`EpochCacheStats::unchanged_epochs`] hit —
+    /// the recompile the delta proved unnecessary.
+    pub fn get_routed_at(
+        &mut self,
+        slot: RouteSlot,
+        epoch: u64,
+        assignment_epoch: u64,
+        n: usize,
+        make_spec: impl FnOnce() -> AttentionSpec,
+    ) -> Arc<CompiledPattern> {
+        if let Some(entry) = self.slots.get_mut(&slot) {
+            if entry.assignment_epoch == assignment_epoch && entry.n == n {
+                if entry.epoch != epoch {
+                    entry.epoch = epoch;
+                    self.stats.unchanged_epochs += 1;
+                }
                 self.stats.epoch_hits += 1;
                 self.routed.hits += 1;
                 return Arc::clone(&entry.pattern);
@@ -266,13 +414,32 @@ impl EpochCache {
         self.stats.epoch_misses += 1;
         self.routed.misses += 1;
         let pattern = Arc::new(make_spec().compile(n));
-        self.slots.insert(slot, SlotEntry { epoch, n, pattern: Arc::clone(&pattern) });
+        self.slots.insert(
+            slot,
+            SlotEntry { epoch, assignment_epoch, n, pattern: Arc::clone(&pattern) },
+        );
         pattern
     }
 
-    /// Epoch a slot's live pattern was compiled under, if any.
+    /// Drop one routed slot's live compile — a request ended, or the
+    /// caller wants to force a recompile.  Counts one eviction when the
+    /// slot was present; returns whether it was.
+    pub fn evict_slot(&mut self, slot: RouteSlot) -> bool {
+        let present = self.slots.remove(&slot).is_some();
+        if present {
+            self.routed.evictions += 1;
+        }
+        present
+    }
+
+    /// Cluster epoch a slot's live pattern was last served at, if any.
     pub fn slot_epoch(&self, slot: RouteSlot) -> Option<u64> {
         self.slots.get(&slot).map(|e| e.epoch)
+    }
+
+    /// Assignment epoch a slot's live pattern was compiled from, if any.
+    pub fn slot_assignment_epoch(&self, slot: RouteSlot) -> Option<u64> {
+        self.slots.get(&slot).map(|e| e.assignment_epoch)
     }
 
     /// Compile-level counters across both sides: the pinned static
@@ -469,11 +636,28 @@ impl BatchedAttention {
     }
 
     /// Evaluate the whole batch: `q`/`k`/`v` are `[B, n, d]` row-major
-    /// (sequence-major), the result is the matching `[B, n, d]` output.
-    /// One worker thread per non-empty chunk; a single-chunk plan runs on
-    /// the calling thread.  Bit-identical to evaluating each sequence
-    /// independently with [`sparse_attention`](super::sparse_attention).
+    /// (sequence-major), the result is the matching `[B, n, d]` output,
+    /// computed on the default execution strategy (the resident global
+    /// [`super::pool::WorkerPool`]).  Bit-identical to evaluating each
+    /// sequence independently with
+    /// [`sparse_attention`](super::sparse_attention).
     pub fn attention(&self, q: &[f32], k: &[f32], v: &[f32], d: usize) -> Result<Vec<f32>> {
+        self.attention_with(q, k, v, d, Execution::default())
+    }
+
+    /// [`BatchedAttention::attention`] with an explicit per-call
+    /// [`Execution`] strategy (inline reference, scoped spawn-per-call
+    /// baseline, or a resident pool) — all three are bit-identical.  One
+    /// worker per non-empty chunk; a single-chunk plan runs on the
+    /// calling thread.
+    pub fn attention_with(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        exec: Execution<'_>,
+    ) -> Result<Vec<f32>> {
         let b = self.patterns.len();
         if d == 0 {
             bail!("batched attention requires head dimension d >= 1");
@@ -501,7 +685,7 @@ impl BatchedAttention {
                 work.push((runs.as_slice(), head));
             }
         }
-        run_on_workers(work, |runs, head| self.run_chunk(q, k, v, d, runs, head))?;
+        exec.run(work, |runs, head| self.run_chunk(q, k, v, d, runs, head))?;
         Ok(out)
     }
 }
@@ -536,19 +720,72 @@ mod tests {
         let mut s = RoutingSession::new(2, 3, 4, 8, 0.5, 7).unwrap();
         assert_eq!((s.layers(), s.heads()), (2, 3));
         assert_eq!(s.epoch(1, 2), 0);
+        assert_eq!(s.assignment_epoch(1, 2), 0);
         let xs: Vec<f32> = {
             let mut rng = Rng::new(1);
             (0..16 * 8).map(|_| rng.normal() as f32).collect()
         };
-        assert_eq!(s.update(1, 2, &xs, 16), 1);
-        assert_eq!(s.update(1, 2, &xs, 16), 2);
+        assert_eq!(s.update(1, 2, &xs, 16).epoch, 1);
+        assert_eq!(s.update(1, 2, &xs, 16).epoch, 2);
         assert_eq!(s.epoch(1, 2), 2);
+        // the assignment epoch never runs ahead of the cluster epoch
+        assert!(s.assignment_epoch(1, 2) <= 2);
         // other slots are untouched
         assert_eq!(s.epoch(0, 0), 0);
         assert_eq!(s.epoch(1, 1), 0);
+        assert_eq!(s.dirty_len(0, 0), 0);
         // the spec reflects the slot's own centroids
         let spec = s.routing_spec(1, 2, &xs, 16, 4);
         assert_eq!(spec, s.kmeans(1, 2).routing_spec(&xs, 16, 4));
+    }
+
+    #[test]
+    fn empty_update_is_a_noop_on_epochs_and_dirty_sets() {
+        // regression: an n = 0 update used to bump the epoch and force a
+        // recompile even though nothing could have changed
+        let mut s = RoutingSession::new(1, 1, 2, 4, 0.5, 3).unwrap();
+        let centroids_before = s.kmeans(0, 0).centroids.clone();
+        let upd = s.update(0, 0, &[], 0);
+        assert_eq!(upd.epoch, 0, "empty batch must not bump the cluster epoch");
+        assert_eq!(upd.assignment_epoch, 0);
+        assert!(!upd.delta.changed());
+        assert_eq!(s.epoch(0, 0), 0);
+        assert_eq!(s.dirty_len(0, 0), 0, "empty batch must not dirty the slot");
+        assert_eq!(s.kmeans(0, 0).centroids, centroids_before);
+        // and the cache keeps serving the live compile across it
+        let mut cache = EpochCache::new();
+        let slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+        let xs: Vec<f32> = vec![0.5; 8 * 4];
+        let p0 = s.routed_pattern(&mut cache, slot, &xs, 8, 2);
+        s.update(0, 0, &[], 0);
+        let p1 = s.routed_pattern(&mut cache, slot, &xs, 8, 2);
+        assert!(Arc::ptr_eq(&p0, &p1), "no-op update must not invalidate the slot");
+        assert_eq!(cache.stats().evictions, 0);
+    }
+
+    #[test]
+    fn dirty_sets_track_moved_tokens_and_drain() {
+        // whatever an update's delta moves must land in the slot's dirty
+        // set, accumulate across updates, and drain exactly once
+        let mut s = RoutingSession::new(1, 2, 2, 2, 0.0, 1).unwrap();
+        let xs = vec![0.98, 0.2, 0.0, 1.0];
+        let upd = s.update(0, 1, &xs, 2);
+        assert_eq!(s.dirty_tokens(0, 1), upd.delta.moved_tokens().collect::<Vec<_>>());
+        if upd.delta.changed() {
+            assert_eq!(s.assignment_epoch(0, 1), 1, "a moving update advances the epoch");
+        } else {
+            assert_eq!(s.assignment_epoch(0, 1), 0, "a stable update must not");
+        }
+        let upd2 = s.update(0, 1, &xs, 2);
+        let expect: BTreeSet<usize> =
+            upd.delta.moved_tokens().chain(upd2.delta.moved_tokens()).collect();
+        let expect: Vec<usize> = expect.into_iter().collect();
+        assert_eq!(s.dirty_tokens(0, 1), expect);
+        assert_eq!(s.take_dirty(0, 1), expect);
+        assert_eq!(s.dirty_len(0, 1), 0, "take_dirty drains the set");
+        assert_eq!(s.take_dirty(0, 1), Vec::<usize>::new());
+        // the other head's slot is independent
+        assert_eq!(s.dirty_len(0, 0), 0);
     }
 
     #[test]
@@ -580,13 +817,18 @@ mod tests {
         // same epoch: hit, same Arc, no spec regeneration
         let again = cache.get_routed(slot, 0, 8, || panic!("hit must not regenerate"));
         assert!(Arc::ptr_eq(&p0, &again));
-        assert_eq!(cache.epoch_stats(), EpochCacheStats { epoch_hits: 1, epoch_misses: 1 });
+        assert_eq!(
+            cache.epoch_stats(),
+            EpochCacheStats { epoch_hits: 1, epoch_misses: 1, unchanged_epochs: 0 }
+        );
         // epoch bump: stale compile evicted before the new one lands
+        // (strict keying — no assignment-delta tracking on this path)
         let p1 = cache.get_routed(slot, 1, 8, || s1.clone());
         assert_eq!(*p1, s1.compile(8));
         assert_eq!(cache.stats().evictions, 1);
         assert_eq!(cache.len(), 1, "one live routing pattern per slot");
         assert_eq!(cache.slot_epoch(slot), Some(1));
+        assert_eq!(cache.slot_assignment_epoch(slot), Some(1));
         // the old epoch's pattern is gone: looking it up again recompiles
         let misses_before = cache.stats().misses;
         cache.get_static(&s0, 8);
@@ -613,7 +855,7 @@ mod tests {
     }
 
     #[test]
-    fn routed_pattern_tracks_session_epochs() {
+    fn routed_pattern_tracks_session_assignment_epochs() {
         let n = 24;
         let dim = 8;
         let mut rng = Rng::new(3);
@@ -626,16 +868,82 @@ mod tests {
         // no update: repeated fetches are epoch hits on the same compile
         let p0b = session.routed_pattern(&mut cache, slot, &xs, n, 6);
         assert!(Arc::ptr_eq(&p0, &p0b));
-        // update moves centroids -> new epoch -> fresh memberships served
-        session.update(0, 1, &xs, n);
+        // update moves centroids -> the delta decides whether the compile
+        // survives: changed assignments evict and recompile, a stable
+        // step keeps serving the live pattern as an unchanged-epoch hit
+        let upd = session.update(0, 1, &xs, n);
         let p1 = session.routed_pattern(&mut cache, slot, &xs, n, 6);
-        assert_eq!(*p1, session.routing_spec(0, 1, &xs, n, 6).compile(n));
         assert_eq!(cache.slot_epoch(slot), Some(1));
-        assert!(cache.stats().evictions >= 1);
-        assert_eq!(
-            cache.epoch_stats(),
-            EpochCacheStats { epoch_hits: 1, epoch_misses: 2 }
-        );
+        if upd.delta.changed() {
+            assert_eq!(*p1, session.routing_spec(0, 1, &xs, n, 6).compile(n));
+            assert_eq!(cache.slot_assignment_epoch(slot), Some(1));
+            assert_eq!(cache.stats().evictions, 1);
+            assert_eq!(
+                cache.epoch_stats(),
+                EpochCacheStats { epoch_hits: 1, epoch_misses: 2, unchanged_epochs: 0 }
+            );
+        } else {
+            assert!(Arc::ptr_eq(&p0, &p1), "stable assignments keep the live compile");
+            assert_eq!(cache.slot_assignment_epoch(slot), Some(0));
+            assert_eq!(cache.stats().evictions, 0);
+            assert_eq!(
+                cache.epoch_stats(),
+                EpochCacheStats { epoch_hits: 2, epoch_misses: 1, unchanged_epochs: 1 }
+            );
+        }
+    }
+
+    #[test]
+    fn unchanged_assignment_epoch_bump_is_a_hit_not_an_eviction() {
+        let mut cache = EpochCache::new();
+        let slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+        let spec = AttentionSpec::routing(vec![vec![0, 1, 2]]);
+        // compiled at cluster epoch 1, assignment epoch 1
+        let p = cache.get_routed_at(slot, 1, 1, 8, || spec.clone());
+        // cluster epochs 2..=4 bump past the compile with assignments
+        // frozen at 1: every lookup is a hit on the same Arc
+        for epoch in 2..=4u64 {
+            let again =
+                cache.get_routed_at(slot, epoch, 1, 8, || panic!("unchanged must not regenerate"));
+            assert!(Arc::ptr_eq(&p, &again));
+            assert_eq!(cache.slot_epoch(slot), Some(epoch), "last-seen epoch advances");
+            assert_eq!(cache.slot_assignment_epoch(slot), Some(1));
+        }
+        let es = cache.epoch_stats();
+        assert_eq!(es.unchanged_epochs, 3);
+        assert_eq!(es.epoch_hits, 3, "unchanged-epoch hits are hits");
+        assert_eq!(cache.stats().evictions, 0, "no recompile, no eviction");
+        // a same-epoch re-fetch is a plain hit, not an unchanged one
+        cache.get_routed_at(slot, 4, 1, 8, || panic!("hit must not regenerate"));
+        assert_eq!(cache.epoch_stats().unchanged_epochs, 3);
+        // the moment assignments move, the stale compile goes
+        let s2 = AttentionSpec::routing(vec![vec![0, 3, 4]]);
+        let p2 = cache.get_routed_at(slot, 5, 5, 8, || s2.clone());
+        assert_eq!(*p2, s2.compile(8));
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.slot_assignment_epoch(slot), Some(5));
+    }
+
+    #[test]
+    fn evict_slot_drops_exactly_one_slot() {
+        let mut cache = EpochCache::new();
+        let a = RouteSlot { layer: 0, head: 0, seq: 0 };
+        let b = RouteSlot { layer: 0, head: 0, seq: 1 };
+        cache.get_routed(a, 0, 8, || AttentionSpec::routing(vec![vec![0, 1]]));
+        cache.get_routed(b, 0, 8, || AttentionSpec::routing(vec![vec![2, 3]]));
+        let pinned = cache.get_static(&AttentionSpec::local(2).unwrap(), 8);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.evict_slot(a), "present slot evicts");
+        assert!(!cache.evict_slot(a), "absent slot is a no-op");
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.len(), 2, "the other slot and the pinned static survive");
+        assert_eq!(cache.slot_epoch(a), None);
+        assert_eq!(cache.slot_epoch(b), Some(0));
+        assert!(Arc::ptr_eq(&pinned, &cache.get_static(&AttentionSpec::local(2).unwrap(), 8)));
+        // the evicted slot recompiles on its next lookup
+        let misses = cache.stats().misses;
+        cache.get_routed(a, 0, 8, || AttentionSpec::routing(vec![vec![0, 1]]));
+        assert_eq!(cache.stats().misses, misses + 1);
     }
 
     #[test]
@@ -730,13 +1038,25 @@ mod tests {
         let mut xs: Vec<Vec<f32>> = (0..b)
             .map(|_| (0..n * d).map(|_| rng.normal() as f32).collect())
             .collect();
+        // delta-aware accounting: a re-fit after the slots are populated
+        // costs one eviction + recompile per slot only when it moved a
+        // token; a stable re-fit is an unchanged-epoch hit per slot
+        let mut changed_refits = 0u64;
+        let mut unchanged_refits = 0u64;
         for step in 0..steps {
             if step % 2 == 0 {
                 for x in xs.iter_mut().flat_map(|s| s.iter_mut()) {
                     *x = 0.9 * *x + 0.1 * rng.normal() as f32;
                 }
                 let all: Vec<f32> = xs.concat();
-                session.update(0, 1, &all, b * n);
+                let upd = session.update(0, 1, &all, b * n);
+                if step > 0 {
+                    if upd.delta.changed() {
+                        changed_refits += 1;
+                    } else {
+                        unchanged_refits += 1;
+                    }
+                }
             }
             let static_p = cache.get_static(&local, n);
             let routed: Vec<Arc<CompiledPattern>> = (0..b)
@@ -757,11 +1077,22 @@ mod tests {
                 }
             }
         }
-        // 3 re-fits: first populates both slots, the next two evict both
-        assert_eq!(cache.stats().evictions, 2 * b as u64);
+        // 3 re-fits: the first populates both slots; each later one costs
+        // per-slot evictions/recompiles only when its delta moved tokens
+        let b64 = b as u64;
+        assert_eq!(cache.stats().evictions, b64 * changed_refits);
         let es = cache.epoch_stats();
         assert_eq!(es.lookups(), (steps * b) as u64);
-        assert_eq!(es.epoch_misses, 3 * b as u64, "one regeneration per slot per epoch");
+        assert_eq!(
+            es.epoch_misses,
+            b64 * (1 + changed_refits),
+            "one regeneration per slot per changed assignment epoch"
+        );
+        assert_eq!(
+            es.unchanged_epochs,
+            b64 * unchanged_refits,
+            "stable re-fits must be served as unchanged-epoch hits"
+        );
         assert!(cache.len() <= 1 + b, "bounded: pinned static + one routed per slot");
     }
 }

@@ -28,35 +28,48 @@
 //!
 //! The batched zero-allocation row gather itself lives on the pattern:
 //! [`CompiledPattern::rows`] yields `(i, &[usize], &[u32])` slices
-//! straight out of the CSR arrays.
+//! straight out of the CSR arrays.  Multi-worker execution runs on the
+//! resident [`super::pool::WorkerPool`] by default (see
+//! [`ShardedPattern::attention_with`] for the per-call
+//! [`Execution`](super::pool::Execution) override).
 //!
-//! # Epoch/eviction lifecycle
+//! # Epoch/eviction lifecycle (dirty-set flow)
 //!
 //! The cache itself is spec-keyed and append-only: static specs (local /
 //! strided / block-local head plans) are compiled once and stay pinned for
 //! the lifetime of the process — a head plan holds a handful of distinct
 //! specs, so there is nothing to evict.  Content-routed specs are
 //! different: online k-means (Algorithm 1) moves centroids on every
-//! `update`, so each update starts a new **cluster epoch** whose
-//! memberships — and therefore whose compiled routing pattern — supersede
-//! the previous epoch's.  [`PatternCache::evict`] is the spec-keyed
+//! `update`, so each update starts a new **cluster epoch**.  But moved
+//! centroids do not necessarily move *assignments* — MoSA-style
+//! expert-choice routing observes most assignments are stable step to
+//! step — so [`crate::kmeans::SphericalKMeans::update`] reports the
+//! assignment delta (which tokens changed cluster), and
+//! [`super::decode::RoutingSession`] advances a slot's **assignment
+//! epoch** (and extends its dirty token set) only when the delta is
+//! non-empty.  [`PatternCache::evict`] remains the spec-keyed
 //! invalidation primitive (drop every compiled length of one spec,
 //! counted in [`CacheStats::evictions`]); [`super::decode::EpochCache`]
-//! goes one step further for the decode loop: routed compiles never enter
-//! the shared spec-keyed map at all — each (layer, head, sequence) slot
-//! owns its one live pattern tagged with the epoch it was built from,
-//! hits are O(1) while the slot's epoch matches, and an epoch bump drops
-//! the stale compile (an eviction in the merged stats) before the new
-//! memberships are compiled.  The decode loop thus never sees a pattern
-//! built from superseded centroids, a slot's eviction can never collide
-//! with a pinned static compile, and the cache stays bounded at one live
-//! routing pattern per slot plus the pinned static specs.
+//! goes further for the decode loop: routed compiles never enter the
+//! shared spec-keyed map at all — each (layer, head, sequence) slot owns
+//! its one live pattern tagged with the assignment epoch it was built
+//! from.  A lookup whose assignment epoch still matches is an O(1) hit
+//! even when the cluster epoch has bumped past the compile (counted in
+//! [`super::decode::EpochCacheStats::unchanged_epochs`] — a recompile
+//! skipped, not an eviction); a lookup whose assignment epoch moved
+//! drops the stale compile (an eviction in the merged stats) before the
+//! new memberships are compiled.  The decode loop thus never serves a
+//! pattern built from superseded *assignments*, a slot's eviction can
+//! never collide with a pinned static compile, and the cache stays
+//! bounded at one live routing pattern per slot plus the pinned statics.
 //!
 //! Consumers: `rtx serve-bench` (heads × layers × steps sweep printing
 //! cache hit-rate, epoch hit-rate, evictions, and batched vs sequential
-//! rows/sec), `bench_complexity` (cached multi-head compile ≥ 5× over
-//! uncached; batched ≥ 2× over sequential at B = 8),
-//! `examples/analyze_attention.rs`, and the engine property tests.
+//! rows/sec, plus `--pool` pool-vs-scoped comparison rows),
+//! `bench_complexity` (cached multi-head compile ≥ 5× over uncached;
+//! batched ≥ 2× over sequential at B = 8; pool ≥ 1.3× over scoped
+//! spawns), `examples/analyze_attention.rs`, the engine property tests,
+//! and the stateful model-based suite (`tests/stateful.rs`).
 //! Multi-backend execution (handing the CSR arrays to an accelerator
 //! kernel) is the next step; see ROADMAP.md.
 
@@ -64,9 +77,10 @@ use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use super::compiled::CompiledPattern;
+use super::pool::Execution;
 use super::spec::AttentionSpec;
 
 // ---------------------------------------------------------------- cache
@@ -269,14 +283,28 @@ impl ShardedPattern {
 
     /// Run the sparse-attention kernel with one worker per shard, each
     /// writing its contiguous `[rows.start*d, rows.end*d)` slice of the
-    /// output.  Agrees bitwise with [`sparse_attention`] (identical
-    /// per-row math, disjoint rows).
-    ///
-    /// Empty shards spawn nothing, the first non-empty shard runs on the
-    /// calling thread, and a single-worker split skips threading entirely
-    /// — so the reference path pays `non_empty - 1` spawns per call.  A
-    /// persistent worker pool is the serving-scale next step (ROADMAP).
+    /// output, on the default execution strategy (the resident global
+    /// [`super::pool::WorkerPool`]).  Agrees bitwise with
+    /// [`sparse_attention`] (identical per-row math, disjoint rows).
     pub fn attention(&self, q: &[f32], k: &[f32], v: &[f32], d: usize) -> Result<Vec<f32>> {
+        self.attention_with(q, k, v, d, Execution::default())
+    }
+
+    /// [`ShardedPattern::attention`] with an explicit per-call
+    /// [`Execution`] strategy (inline reference, scoped spawn-per-call
+    /// baseline, or a resident pool) — all three are bit-identical.
+    ///
+    /// Empty shards dispatch nothing, the first non-empty shard runs on
+    /// the calling thread, and a single-worker split skips work
+    /// distribution entirely.
+    pub fn attention_with(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        exec: Execution<'_>,
+    ) -> Result<Vec<f32>> {
         let n = self.pattern.n();
         check_qkv(q, k, v, n, d)?;
         let mut out = vec![0f32; n * d];
@@ -292,40 +320,9 @@ impl ShardedPattern {
                 work.push((shard.rows.clone(), head));
             }
         }
-        run_on_workers(work, |rows, head| sparse_attention_rows(q, k, v, d, pattern, rows, head))?;
+        exec.run(work, |rows, head| sparse_attention_rows(q, k, v, d, pattern, rows, head))?;
         Ok(out)
     }
-}
-
-// ---------------------------------------------------------------- workers
-
-/// Run `(item, out-slice)` pairs with one worker thread per pair beyond
-/// the first (which runs on the calling thread); zero or one pair runs
-/// inline with no spawn at all.  The single home of the carve/spawn/join
-/// concurrency machinery, shared by [`ShardedPattern::attention`] and
-/// [`super::decode::BatchedAttention::attention`] — a future persistent
-/// worker pool replaces exactly this function.
-pub(crate) fn run_on_workers<T: Send>(
-    work: Vec<(T, &mut [f32])>,
-    f: impl Fn(T, &mut [f32]) -> Result<()> + Sync,
-) -> Result<()> {
-    if work.len() <= 1 {
-        for (item, out) in work {
-            f(item, out)?;
-        }
-        return Ok(());
-    }
-    std::thread::scope(|scope| -> Result<()> {
-        let f = &f;
-        let mut work = work.into_iter();
-        let (item0, out0) = work.next().expect("len checked above");
-        let handles: Vec<_> = work.map(|(item, out)| scope.spawn(move || f(item, out))).collect();
-        f(item0, out0)?;
-        for h in handles {
-            h.join().map_err(|_| anyhow!("shard worker panicked"))??;
-        }
-        Ok(())
-    })
 }
 
 // ---------------------------------------------------------------- kernel
@@ -631,6 +628,46 @@ mod tests {
         for shards in [1usize, 2, 5, 40] {
             let sharded = ShardedPattern::balanced(Arc::clone(&pattern), shards).unwrap();
             assert_eq!(sharded.attention(&q, &k, &v, d).unwrap(), single);
+        }
+    }
+
+    #[test]
+    fn all_masked_pattern_shards_partition_and_return_zeros() {
+        // total nnz = 0: a routing spec with no clusters admits nothing.
+        // The nnz-balance split must still partition the rows (no
+        // divide-by-zero in the balance targets) and attention must
+        // return zeros, matching the dense oracle.
+        let n = 6;
+        let d = 4;
+        let mut rng = Rng::new(5);
+        let (q, k, v) = random_qkv(&mut rng, n, d);
+        for spec in [
+            AttentionSpec::routing(vec![]),
+            AttentionSpec::routing(vec![Vec::new(), Vec::new()]),
+        ] {
+            let pattern = Arc::new(spec.compile(n));
+            assert_eq!(pattern.nnz(), 0, "all-masked pattern must have nnz 0");
+            for shards in [1usize, 2, 4, 9] {
+                for sharded in [
+                    ShardedPattern::balanced(Arc::clone(&pattern), shards).unwrap(),
+                    ShardedPattern::by_rows(Arc::clone(&pattern), shards).unwrap(),
+                ] {
+                    assert_eq!(sharded.num_shards(), shards);
+                    let mut cursor = 0usize;
+                    for shard in sharded.shards() {
+                        assert_eq!(shard.rows.start, cursor, "shards must stay contiguous");
+                        cursor = shard.rows.end;
+                        assert_eq!(shard.nnz, 0);
+                    }
+                    assert_eq!(cursor, n, "shards must still cover every row");
+                    let out = sharded.attention(&q, &k, &v, d).unwrap();
+                    assert_eq!(out, vec![0f32; n * d], "all-masked rows are zeros, not NaN");
+                }
+            }
+            assert_eq!(
+                dense_masked_attention(&q, &k, &v, d, &pattern).unwrap(),
+                vec![0f32; n * d]
+            );
         }
     }
 

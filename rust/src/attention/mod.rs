@@ -26,33 +26,43 @@
 //!    [`sparse_attention`] reference kernel validated against a dense
 //!    masked-softmax oracle.
 //! 4. [`decode`] — the decode-loop layer: [`RoutingSession`] owns
-//!    per-layer/per-head online k-means state with a cluster **epoch**
-//!    per slot, [`EpochCache`] evicts compiled routing patterns the
-//!    moment their epoch goes stale (static specs stay pinned), and
+//!    per-layer/per-head online k-means state with a cluster **epoch**,
+//!    an **assignment epoch** (advanced only when an update actually
+//!    moved tokens between clusters), and a per-slot **dirty set**;
+//!    [`EpochCache`] evicts compiled routing patterns only when their
+//!    assignment epoch goes stale (an unchanged-assignment epoch bump is
+//!    an `unchanged_epochs` hit; static specs stay pinned), and
 //!    [`BatchedAttention`] packs B independent sequences into one
 //!    nnz-balanced worker sweep, bit-identical to B separate
 //!    [`sparse_attention`] calls.
+//! 5. [`pool`] — the execution substrate: a resident, lazily-spawned
+//!    [`WorkerPool`] (sized by `available_parallelism`, `RTX_WORKERS`
+//!    override) replaces the old per-call scoped spawns; [`Execution`]
+//!    picks inline / scoped / pool per call, all bit-identical.
 //!
 //! Consumers: the `figure1` and `serve-bench` CLIs, the complexity bench,
 //! the Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
 //! k-means routing integration
-//! ([`crate::kmeans::SphericalKMeans::routing_spec`]), and the property
-//! tests that pin the semantics shared with the L2 graph.
+//! ([`crate::kmeans::SphericalKMeans::routing_spec`]), the property
+//! tests that pin the semantics shared with the L2 graph, and the
+//! stateful model-based suite (`tests/stateful.rs`).
 
 pub mod compiled;
 pub mod complexity;
 pub mod decode;
 pub mod engine;
+pub mod pool;
 pub mod spec;
 
 pub use compiled::{CompiledPattern, RowIter, RowStats, NO_CLUSTER};
 pub use complexity::optimal_clusters;
 pub use decode::{
     sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, RouteSlot,
-    RoutingSession,
+    RouteUpdate, RoutingSession,
 };
 pub use engine::{
     dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, PatternCache,
     Shard, ShardedPattern,
 };
+pub use pool::{Execution, WorkerPool};
 pub use spec::AttentionSpec;

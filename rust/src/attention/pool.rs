@@ -1,0 +1,641 @@
+//! Resident worker pool — the serving engine's persistent execution
+//! substrate.
+//!
+//! Every multi-worker path used to pay a `thread::scope` spawn per shard
+//! per call (the seam `run_on_workers` documented as "a future persistent
+//! worker pool replaces exactly this function").  At decode-loop
+//! granularity — thousands of small attention sweeps per second — those
+//! per-call spawns are the residual per-step overhead the ROADMAP names.
+//! [`WorkerPool`] removes it: worker threads are spawned **lazily** on
+//! first use, then stay resident; a call hands its carved `(item, output
+//! slice)` pairs to the shared queue, runs the first item on the calling
+//! thread, helps drain the queue, and blocks until its batch completes.
+//! The per-item math is identical to the scoped path, so pool output is
+//! **bit-identical** to both the scoped-spawn path and the inline
+//! single-thread path.
+//!
+//! # Sizing
+//!
+//! `WorkerPool::new()` (and the shared [`WorkerPool::global`] pool) sizes
+//! itself to `std::thread::available_parallelism()`, overridable with the
+//! `RTX_WORKERS` environment variable (`RTX_WORKERS=0` is legal: no
+//! resident threads, every batch drains on the calling thread — useful
+//! for debugging).  Workers are an upper bound, not a reservation:
+//! threads spawn on demand, one per queued item, never beyond the
+//! configured size.  The calling thread always participates, so a pool
+//! of `w` workers executes a batch with up to `w + 1` threads.
+//!
+//! # Panic containment
+//!
+//! A closure that panics (or returns `Err`) inside [`WorkerPool::run`]
+//! surfaces as an `Err` from `run` — never a hang, never a poisoned
+//! pool: every queued job decrements its batch's pending count even when
+//! the closure panics, the queue mutex is never held across user code,
+//! and worker threads outlive any panic a job throws at them.
+//! Subsequent `run` calls on the same pool succeed.  (The scoped and
+//! inline execution modes keep their historical semantics: a panic on
+//! the calling thread propagates.)
+//!
+//! [`Execution`] selects the strategy per call — `Inline` (bitwise
+//! reference, no threads), `Scoped` (the pre-pool spawn-per-call path,
+//! kept as the benchmark baseline), or `Pool` (default: the global
+//! resident pool).  `bench_complexity` pins pool ≥ 1.3× scoped on a
+//! decode-shaped loop (≥ 4 cores); `rtx serve-bench --pool` prints the
+//! same comparison with a row-for-row equality check.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+/// Hard cap on configured workers — a typo'd `RTX_WORKERS=10000` must not
+/// try to spawn ten thousand threads.
+const MAX_WORKERS: usize = 256;
+
+/// A queued unit of work; lifetime-erased (see the safety note in
+/// [`WorkerPool::run`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock a mutex, ignoring poisoning: jobs catch panics before unwinding
+/// through any pool lock, so a poisoned state carries no torn data — and
+/// the pool must stay usable after a worker panic regardless.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    /// Signaled when a job is queued or shutdown begins.
+    available: Condvar,
+    /// Written under the `queue` lock so sleeping workers cannot miss it.
+    shutdown: AtomicBool,
+    /// Jobs executed (by workers or by calling threads helping drain).
+    jobs_run: AtomicU64,
+    /// Batches dispatched through the queue (multi-item `run` calls).
+    batches: AtomicU64,
+}
+
+struct SpawnState {
+    spawned: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Per-`run` completion tracking: pending job count plus the first
+/// failure (panic or `Err`) any job reported.
+struct BatchState {
+    progress: Mutex<BatchProgress>,
+    done: Condvar,
+}
+
+struct BatchProgress {
+    pending: usize,
+    failure: Option<String>,
+}
+
+impl BatchState {
+    fn new(pending: usize) -> Arc<BatchState> {
+        Arc::new(BatchState {
+            progress: Mutex::new(BatchProgress { pending, failure: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn complete(&self, failure: Option<String>) {
+        let mut g = lock(&self.progress);
+        if let Some(msg) = failure {
+            g.failure.get_or_insert(msg);
+        }
+        g.pending -= 1;
+        if g.pending == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job in the batch has completed; returns the
+    /// first recorded failure, if any.
+    fn wait_failure(&self) -> Option<String> {
+        let mut g = lock(&self.progress);
+        while g.pending > 0 {
+            g = self.done.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        g.failure.take()
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(job) = job else { return };
+        // job wrappers catch panics themselves; this is the last line of
+        // defense keeping the worker resident no matter what a job does
+        let _ = catch_unwind(AssertUnwindSafe(job));
+        shared.jobs_run.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Resolve a worker count from an optional `RTX_WORKERS`-style override,
+/// falling back to the machine's parallelism; capped at [`MAX_WORKERS`].
+fn worker_count(env_override: Option<&str>, fallback: usize) -> usize {
+    env_override
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(fallback)
+        .min(MAX_WORKERS)
+}
+
+/// A resident, lazily-spawned thread pool executing carved attention
+/// work (see the module docs for sizing and panic semantics).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    spawn: Mutex<SpawnState>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("spawned", &self.spawned_workers())
+            .field("jobs_run", &self.jobs_run())
+            .finish()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl WorkerPool {
+    /// A pool sized by [`WorkerPool::default_workers`]
+    /// (`available_parallelism`, overridable via `RTX_WORKERS`).
+    pub fn new() -> WorkerPool {
+        WorkerPool::with_workers(WorkerPool::default_workers())
+    }
+
+    /// A pool with an explicit worker-thread bound.  `workers = 0` is
+    /// legal: nothing is ever spawned and every batch drains on the
+    /// calling thread (still panic-contained).
+    pub fn with_workers(workers: usize) -> WorkerPool {
+        WorkerPool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                jobs_run: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+            }),
+            workers: workers.min(MAX_WORKERS),
+            spawn: Mutex::new(SpawnState { spawned: 0, handles: Vec::new() }),
+        }
+    }
+
+    /// The default sizing rule: `RTX_WORKERS` when set and parseable,
+    /// else `std::thread::available_parallelism()` (1 when unknown).
+    pub fn default_workers() -> usize {
+        let fallback = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        worker_count(std::env::var("RTX_WORKERS").ok().as_deref(), fallback)
+    }
+
+    /// The process-wide shared pool — what [`Execution::default`] uses,
+    /// so every `attention` call in the process amortizes one set of
+    /// resident workers.
+    pub fn global() -> &'static WorkerPool {
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        GLOBAL.get_or_init(WorkerPool::new)
+    }
+
+    /// Configured worker-thread bound (not necessarily spawned yet).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Worker threads actually spawned so far (lazy: 0 until the first
+    /// multi-item [`WorkerPool::run`]).
+    pub fn spawned_workers(&self) -> usize {
+        lock(&self.spawn).spawned
+    }
+
+    /// Jobs executed through the queue (worker threads plus calling
+    /// threads helping drain).
+    pub fn jobs_run(&self) -> u64 {
+        self.shared.jobs_run.load(Ordering::Relaxed)
+    }
+
+    /// Multi-item batches dispatched through the queue.
+    pub fn batches(&self) -> u64 {
+        self.shared.batches.load(Ordering::Relaxed)
+    }
+
+    fn ensure_workers(&self, needed: usize) {
+        let target = needed.min(self.workers);
+        if target == 0 {
+            return;
+        }
+        let mut spawn = lock(&self.spawn);
+        while spawn.spawned < target {
+            let shared = Arc::clone(&self.shared);
+            let name = format!("rtx-pool-{}", spawn.spawned);
+            match std::thread::Builder::new().name(name).spawn(move || worker_loop(shared)) {
+                Ok(handle) => {
+                    spawn.handles.push(handle);
+                    spawn.spawned += 1;
+                }
+                // spawn failure is not fatal: the calling thread drains
+                // whatever no worker picks up
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Execute `(item, output-slice)` pairs, one closure call per pair:
+    /// the calling thread runs the first pair, resident workers (plus the
+    /// calling thread, which helps drain) run the rest, and the call
+    /// returns only when every pair has finished.  Work distribution
+    /// never changes the math — output is bit-identical to running the
+    /// pairs inline in order.
+    ///
+    /// Any closure panic or `Err` surfaces as `Err` (first failure wins);
+    /// the pool remains fully usable afterwards.
+    pub fn run<T: Send>(
+        &self,
+        work: Vec<(T, &mut [f32])>,
+        f: impl Fn(T, &mut [f32]) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let m = work.len();
+        if m == 0 {
+            return Ok(());
+        }
+        if m == 1 {
+            let (item, out) = work.into_iter().next().expect("len checked above");
+            return match catch_unwind(AssertUnwindSafe(|| f(item, out))) {
+                Ok(r) => r,
+                Err(p) => Err(anyhow!("worker panicked: {}", panic_message(p))),
+            };
+        }
+        self.ensure_workers(m - 1);
+        let state = BatchState::new(m - 1);
+        let f_ref: &(dyn Fn(T, &mut [f32]) -> Result<()> + Sync) = &f;
+        let mut work = work.into_iter();
+        let (item0, out0) = work.next().expect("len checked above");
+        {
+            let mut q = lock(&self.shared.queue);
+            for (item, out) in work {
+                let state = Arc::clone(&state);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let failure = match catch_unwind(AssertUnwindSafe(|| f_ref(item, out))) {
+                        Ok(Ok(())) => None,
+                        Ok(Err(e)) => Some(e.to_string()),
+                        Err(p) => Some(format!("worker panicked: {}", panic_message(p))),
+                    };
+                    state.complete(failure);
+                });
+                // SAFETY: the job borrows `f` and the caller's q/k/v and
+                // output buffers, none of which are 'static.  Erasing the
+                // lifetime is sound because this function does not return
+                // until `state.wait_failure()` has observed pending == 0,
+                // and every queued job calls `state.complete` exactly once
+                // (the wrapper catches panics first) — so no job can
+                // outlive the borrows it captures.  This is the same
+                // contract `std::thread::scope` enforces with joins.
+                let job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                };
+                q.push_back(job);
+            }
+            self.shared.available.notify_all();
+        }
+        self.shared.batches.fetch_add(1, Ordering::Relaxed);
+        // first item on the calling thread, panic-contained so we always
+        // reach the completion wait below (jobs borrow our stack)
+        let inline = match catch_unwind(AssertUnwindSafe(|| f_ref(item0, out0))) {
+            Ok(r) => r,
+            Err(p) => Err(anyhow!("worker panicked: {}", panic_message(p))),
+        };
+        // help drain: with few (or zero) workers the caller completes the
+        // leftovers itself, so a batch can never deadlock on pool size
+        loop {
+            let job = {
+                let mut q = lock(&self.shared.queue);
+                q.pop_front()
+            };
+            let Some(job) = job else { break };
+            let _ = catch_unwind(AssertUnwindSafe(job));
+            self.shared.jobs_run.fetch_add(1, Ordering::Relaxed);
+        }
+        let failure = state.wait_failure();
+        inline?;
+        match failure {
+            Some(msg) => Err(anyhow!("worker failed: {msg}")),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            // store under the queue lock so a worker between its empty
+            // check and its wait cannot miss the shutdown notification
+            let _q = lock(&self.shared.queue);
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.available.notify_all();
+        let handles = std::mem::take(&mut lock(&self.spawn).handles);
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-call execution strategy for the carved attention sweeps
+/// ([`super::ShardedPattern::attention_with`],
+/// [`super::BatchedAttention::attention_with`]).  All three modes are
+/// bit-identical; they differ only in scheduling cost.
+#[derive(Clone, Copy, Debug)]
+pub enum Execution<'a> {
+    /// Everything on the calling thread, in order — the bitwise
+    /// reference path (panics propagate).
+    Inline,
+    /// One scoped thread per work item beyond the first — the pre-pool
+    /// spawn-per-call path, kept as the benchmark baseline
+    /// (spawned-worker panics surface as `Err`; calling-thread panics
+    /// propagate, after the scope joins).
+    Scoped,
+    /// A resident [`WorkerPool`] (all panics surface as `Err`).
+    Pool(&'a WorkerPool),
+}
+
+impl Default for Execution<'_> {
+    /// The global pool — the serving default.
+    fn default() -> Self {
+        Execution::Pool(WorkerPool::global())
+    }
+}
+
+impl Execution<'_> {
+    /// Run carved work under this strategy; see [`WorkerPool::run`] for
+    /// the shared contract.
+    pub fn run<T: Send>(
+        self,
+        work: Vec<(T, &mut [f32])>,
+        f: impl Fn(T, &mut [f32]) -> Result<()> + Sync,
+    ) -> Result<()> {
+        match self {
+            Execution::Inline => {
+                for (item, out) in work {
+                    f(item, out)?;
+                }
+                Ok(())
+            }
+            Execution::Scoped => run_scoped(work, f),
+            Execution::Pool(pool) => pool.run(work, f),
+        }
+    }
+}
+
+/// The historical scoped-spawn runner: one worker thread per pair beyond
+/// the first (which runs on the calling thread); zero or one pair runs
+/// inline with no spawn at all.  Kept verbatim as the baseline the pool
+/// is benchmarked against (`bench_complexity`, `rtx serve-bench --pool`).
+pub(crate) fn run_scoped<T: Send>(
+    work: Vec<(T, &mut [f32])>,
+    f: impl Fn(T, &mut [f32]) -> Result<()> + Sync,
+) -> Result<()> {
+    if work.len() <= 1 {
+        for (item, out) in work {
+            f(item, out)?;
+        }
+        return Ok(());
+    }
+    std::thread::scope(|scope| -> Result<()> {
+        let f = &f;
+        let mut work = work.into_iter();
+        let (item0, out0) = work.next().expect("len checked above");
+        let handles: Vec<_> = work.map(|(item, out)| scope.spawn(move || f(item, out))).collect();
+        f(item0, out0)?;
+        for h in handles {
+            h.join().map_err(|_| anyhow!("shard worker panicked"))??;
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Carve `out` into `m` equal slices paired with their index.
+    fn carve(out: &mut [f32], m: usize) -> Vec<(usize, &mut [f32])> {
+        let per = out.len() / m;
+        out.chunks_mut(per).take(m).enumerate().collect()
+    }
+
+    fn fill(i: usize, out: &mut [f32]) -> Result<()> {
+        for (j, x) in out.iter_mut().enumerate() {
+            *x = (i * 1000 + j) as f32;
+        }
+        Ok(())
+    }
+
+    fn expected(m: usize, per: usize) -> Vec<f32> {
+        (0..m).flat_map(|i| (0..per).map(move |j| (i * 1000 + j) as f32)).collect()
+    }
+
+    #[test]
+    fn pool_matches_inline_fill() {
+        let pool = WorkerPool::with_workers(3);
+        for m in [1usize, 2, 3, 5, 9] {
+            let per = 4;
+            let mut out = vec![0f32; m * per];
+            pool.run(carve(&mut out, m), fill).unwrap();
+            assert_eq!(out, expected(m, per), "m = {m}");
+        }
+        assert!(pool.jobs_run() >= 1);
+        assert!(pool.batches() >= 4, "multi-item calls go through the queue");
+    }
+
+    #[test]
+    fn pool_spawns_lazily_and_bounded() {
+        let pool = WorkerPool::with_workers(2);
+        assert_eq!(pool.spawned_workers(), 0, "no threads before first use");
+        let mut out = vec![0f32; 8];
+        pool.run(carve(&mut out, 2), fill).unwrap();
+        let after_small = pool.spawned_workers();
+        assert!((1..=2).contains(&after_small), "one queued item needs at most one worker");
+        pool.run(carve(&mut out, 8), fill).unwrap();
+        assert!(pool.spawned_workers() <= 2, "never beyond the configured bound");
+    }
+
+    #[test]
+    fn zero_worker_pool_drains_on_caller() {
+        let pool = WorkerPool::with_workers(0);
+        let mut out = vec![0f32; 12];
+        pool.run(carve(&mut out, 4), fill).unwrap();
+        assert_eq!(out, expected(4, 3));
+        assert_eq!(pool.spawned_workers(), 0);
+        assert_eq!(pool.jobs_run(), 3, "caller drained every queued job");
+    }
+
+    #[test]
+    fn panics_surface_as_err_and_pool_survives() {
+        let pool = WorkerPool::with_workers(2);
+        for panic_at in 0..4usize {
+            let mut out = vec![0f32; 16];
+            let err = pool
+                .run(carve(&mut out, 4), |i, out| {
+                    if i == panic_at {
+                        panic!("injected panic at {i}");
+                    }
+                    fill(i, out)
+                })
+                .unwrap_err();
+            assert!(err.to_string().contains("panicked"), "got: {err:#}");
+            // the same pool keeps working after every induced panic
+            let mut ok = vec![0f32; 16];
+            pool.run(carve(&mut ok, 4), fill).unwrap();
+            assert_eq!(ok, expected(4, 4));
+        }
+        // single-item calls are panic-contained too
+        let mut one = vec![0f32; 2];
+        let err = pool
+            .run(carve(&mut one, 1), |_, _| -> Result<()> { panic!("solo") })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"));
+    }
+
+    #[test]
+    fn errs_propagate_first_failure() {
+        let pool = WorkerPool::with_workers(2);
+        let mut out = vec![0f32; 8];
+        let err = pool
+            .run(carve(&mut out, 4), |i, out| {
+                if i == 2 {
+                    anyhow::bail!("item {i} rejected");
+                }
+                fill(i, out)
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("rejected"), "got: {err:#}");
+        pool.run(carve(&mut out, 4), fill).unwrap();
+    }
+
+    #[test]
+    fn concurrent_runs_share_one_pool() {
+        let pool = WorkerPool::with_workers(3);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let pool = &pool;
+                scope.spawn(move || {
+                    for m in [2usize, 5] {
+                        let per = 6;
+                        let mut out = vec![0f32; m * per];
+                        pool.run(carve(&mut out, m), |i, o| fill(i + t, o)).unwrap();
+                        let want: Vec<f32> = (0..m)
+                            .flat_map(|i| (0..per).map(move |j| ((i + t) * 1000 + j) as f32))
+                            .collect();
+                        assert_eq!(out, want);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = WorkerPool::with_workers(2);
+        let mut out = vec![0f32; 6];
+        pool.run(carve(&mut out, 3), fill).unwrap();
+        drop(pool); // must not hang or leak a wedged thread
+    }
+
+    #[test]
+    fn worker_count_override_rules() {
+        assert_eq!(worker_count(Some("6"), 2), 6);
+        assert_eq!(worker_count(Some(" 8 "), 2), 8);
+        assert_eq!(worker_count(Some("0"), 2), 0, "0 disables resident workers");
+        assert_eq!(worker_count(Some("garbage"), 3), 3, "unparseable falls back");
+        assert_eq!(worker_count(None, 5), 5);
+        assert_eq!(worker_count(Some("99999"), 2), MAX_WORKERS, "capped");
+    }
+
+    #[test]
+    fn execution_modes_agree_bitwise() {
+        let pool = WorkerPool::with_workers(2);
+        let m = 5;
+        let per = 7;
+        let mut inline = vec![0f32; m * per];
+        Execution::Inline.run(carve(&mut inline, m), fill).unwrap();
+        for exec in [Execution::Scoped, Execution::Pool(&pool), Execution::default()] {
+            let mut out = vec![0f32; m * per];
+            exec.run(carve(&mut out, m), fill).unwrap();
+            assert_eq!(out, inline, "{exec:?} must match the inline reference");
+        }
+    }
+
+    /// Timing guard (CI runs ignored tests in release): the pool must
+    /// amortize the scoped path's per-call spawns on a decode-shaped
+    /// loop of many small batches.  Gated on ≥ 4 cores — a 2-core host
+    /// leaves no headroom for a reliable pin.
+    #[test]
+    #[ignore = "timing-sensitive: run with --release -- --include-ignored"]
+    fn pool_amortizes_spawns_over_scoped() {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(0);
+        let pool = WorkerPool::global();
+        let m = 4usize;
+        let per = 256usize;
+        let steps = 400usize;
+        let mut out = vec![0f32; m * per];
+        // warm both paths (spawns the pool's workers once)
+        pool.run(carve(&mut out, m), fill).unwrap();
+        run_scoped(carve(&mut out, m), fill).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            pool.run(carve(&mut out, m), fill).unwrap();
+        }
+        let pool_dt = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        for _ in 0..steps {
+            run_scoped(carve(&mut out, m), fill).unwrap();
+        }
+        let scoped_dt = t1.elapsed().as_secs_f64();
+        let speedup = scoped_dt / pool_dt.max(1e-12);
+        println!(
+            "pool vs scoped over {steps} x {m}-way batches: {:.3} ms vs {:.3} ms ({speedup:.2}x)",
+            pool_dt * 1e3,
+            scoped_dt * 1e3
+        );
+        if cores >= 4 {
+            assert!(
+                speedup >= 1.3,
+                "resident pool must be >= 1.3x over spawn-per-call (got {speedup:.2}x)"
+            );
+        } else {
+            println!("({cores} cores: >= 1.3x pool pin skipped, needs >= 4 cores)");
+        }
+    }
+}

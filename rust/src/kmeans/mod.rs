@@ -8,6 +8,52 @@
 use crate::attention::AttentionSpec;
 use crate::util::rng::Rng;
 
+/// Assignment bookkeeping returned by [`SphericalKMeans::update`] — the
+/// signal the incremental re-routing layer keys on.
+///
+/// MoSA-style expert-choice routing (Piękos et al., 2025) observes that
+/// most cluster assignments are stable from step to step even though the
+/// centroids keep moving; a serving loop can therefore skip re-routing
+/// (and recompiling) whenever an update moved **no** token between
+/// clusters.  `moved` lists exactly the tokens whose argmax centroid
+/// changed across the EMA step — old assignment taken under the
+/// pre-update centroids, new assignment under the post-update ones.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AssignmentDelta {
+    /// Per-cluster counts of the (finite) vectors assigned under the
+    /// pre-update centroids — the mini-batch that drove the EMA.
+    pub counts: Vec<usize>,
+    /// `(token, old_cluster, new_cluster)` for every token whose argmax
+    /// assignment changed across the centroid update, ascending by token.
+    pub moved: Vec<(usize, usize, usize)>,
+    /// Finite vectors examined (non-finite ones are quarantined and never
+    /// appear in `counts` or `moved`).
+    pub assigned: usize,
+}
+
+impl AssignmentDelta {
+    /// Did this update move any token between clusters (by argmax)?
+    ///
+    /// `false` is the signal the [`crate::attention::EpochCache`] uses to
+    /// keep serving a compiled routing pattern.  Note this is a
+    /// deliberate **approximation**: balanced top-w membership
+    /// ([`SphericalKMeans::top_w_members`]) ranks *all* tokens per
+    /// centroid, so an EMA step can reorder a centroid's top-w list
+    /// without flipping any token's argmax — reuse is exact only when
+    /// `w == n` (every token is always a member).  Callers that need
+    /// strict per-epoch exactness should key invalidation on the cluster
+    /// epoch instead (`EpochCache::get_routed`); the incremental flow
+    /// trades that slack for skipping most recompiles, MoSA-style.
+    pub fn changed(&self) -> bool {
+        !self.moved.is_empty()
+    }
+
+    /// The tokens in `moved` (the per-update dirty set).
+    pub fn moved_tokens(&self) -> impl Iterator<Item = usize> + '_ {
+        self.moved.iter().map(|&(token, _, _)| token)
+    }
+}
+
 /// Online spherical k-means with EMA centroid updates.
 #[derive(Debug, Clone)]
 pub struct SphericalKMeans {
@@ -104,23 +150,36 @@ impl SphericalKMeans {
 
     /// One EMA update from a mini-batch of vectors (xs row-major [n, dim]):
     /// hard-assign each vector, average per cluster, EMA, re-project to the
-    /// unit sphere.  Empty clusters keep their centroid.  Returns counts.
+    /// unit sphere.  Empty clusters keep their centroid.  Returns the
+    /// [`AssignmentDelta`] (per-cluster counts plus the old→new cluster of
+    /// every token the update moved).
+    ///
+    /// An **empty batch (`n == 0`) is a strict no-op**: the centroids are
+    /// untouched and the returned delta reports nothing moved, so callers
+    /// (e.g. [`crate::attention::RoutingSession`]) must not bump epochs
+    /// or dirty any routing slot for it.
     ///
     /// Non-finite vectors are skipped entirely (and not counted): one NaN
     /// folded into a cluster mean would stick forever — `decay · NaN` is
     /// NaN, and `normalize` cannot rescue it — silently corrupting every
     /// future routing assignment against that centroid.  Skipping mirrors
     /// [`SphericalKMeans::top_w_members`], which sorts NaN scores last.
-    pub fn update(&mut self, xs: &[f32], n: usize) -> Vec<usize> {
+    pub fn update(&mut self, xs: &[f32], n: usize) -> AssignmentDelta {
         assert_eq!(xs.len(), n * self.dim);
-        let mut sums = vec![0f32; self.k * self.dim];
         let mut counts = vec![0usize; self.k];
+        if n == 0 {
+            return AssignmentDelta { counts, ..AssignmentDelta::default() };
+        }
+        let mut sums = vec![0f32; self.k * self.dim];
+        // assignments under the pre-update centroids; None = quarantined
+        let mut old_assign: Vec<Option<usize>> = vec![None; n];
         for i in 0..n {
             let x = &xs[i * self.dim..(i + 1) * self.dim];
             if x.iter().any(|v| !v.is_finite()) {
                 continue;
             }
             let c = self.assign(x);
+            old_assign[i] = Some(c);
             counts[c] += 1;
             for d in 0..self.dim {
                 sums[c * self.dim + d] += x[d];
@@ -138,7 +197,20 @@ impl SphericalKMeans {
             }
             normalize(&mut self.centroids[c * self.dim..(c + 1) * self.dim]);
         }
-        counts
+        // re-assign under the moved centroids: the incremental-routing
+        // delta (costs one extra assignment pass, same order as the one
+        // above; buys every skipped recompile downstream)
+        let mut moved = Vec::new();
+        let mut assigned = 0usize;
+        for (i, old) in old_assign.iter().enumerate() {
+            let Some(old) = *old else { continue };
+            assigned += 1;
+            let new = self.assign(&xs[i * self.dim..(i + 1) * self.dim]);
+            if new != old {
+                moved.push((i, old, new));
+            }
+        }
+        AssignmentDelta { counts, moved, assigned }
     }
 
     /// Package balanced top-w membership over the given routing vectors
@@ -276,12 +348,68 @@ mod tests {
             xs[i * 4] = 1.0;
         }
         let before: Vec<f32> = km.centroids.clone();
-        let counts = km.update(&xs, 16);
+        let delta = km.update(&xs, 16);
         for c in 0..2 {
-            if counts[c] == 0 {
+            if delta.counts[c] == 0 {
                 assert_eq!(km.centroid(c), &before[c * 4..(c + 1) * 4]);
             }
         }
+    }
+
+    #[test]
+    fn update_on_empty_batch_is_noop() {
+        // regression: an n = 0 update must not touch the centroids or
+        // report movement — callers key epoch bumps and dirty sets on
+        // this delta, and an empty batch must not force a recompile
+        let mut km = SphericalKMeans::new(3, 4, 0.5, 13);
+        let before = km.centroids.clone();
+        let delta = km.update(&[], 0);
+        assert_eq!(km.centroids, before, "centroids must be untouched");
+        assert_eq!(delta.counts, vec![0; 3]);
+        assert!(!delta.changed());
+        assert_eq!(delta.assigned, 0);
+        assert_eq!(delta.moved_tokens().count(), 0);
+    }
+
+    #[test]
+    fn update_delta_matches_before_after_assign_oracle() {
+        // the reported moved set must be exactly { i | assign_before(x_i)
+        // != assign_after(x_i) }, computed here with the public assign()
+        // on a cloned pre-update state
+        let mut rng = Rng::new(31);
+        for case in 0..50 {
+            let mut km = SphericalKMeans::new(3, 4, 0.3, 100 + case);
+            let n = 24;
+            let xs: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+            let before = km.clone();
+            let delta = km.update(&xs, n);
+            let mut expect = Vec::new();
+            for i in 0..n {
+                let x = &xs[i * 4..(i + 1) * 4];
+                let (old, new) = (before.assign(x), km.assign(x));
+                if old != new {
+                    expect.push((i, old, new));
+                }
+            }
+            assert_eq!(delta.moved, expect, "case {case}");
+            assert_eq!(delta.assigned, n);
+            assert_eq!(delta.counts.iter().sum::<usize>(), n);
+        }
+    }
+
+    #[test]
+    fn update_delta_detects_a_boundary_flip() {
+        // hand-built flip: centroid 1 starts between the two tokens,
+        // captures both, then (decay = 0 -> centroid := cluster mean)
+        // gets pulled toward the y-axis token, releasing token 0 to
+        // centroid 0.  Every comparison below has a wide float margin.
+        let mut km = SphericalKMeans::new(2, 2, 0.0, 1);
+        km.centroids = vec![1.0, 0.0, 0.9397, 0.342];
+        let xs = vec![0.98, 0.2, 0.0, 1.0];
+        let delta = km.update(&xs, 2);
+        assert_eq!(delta.counts, vec![0, 2], "both tokens start on centroid 1");
+        assert_eq!(delta.moved, vec![(0, 1, 0)], "token 0 must flip to centroid 0");
+        assert!(delta.changed());
     }
 
     #[test]
@@ -316,8 +444,10 @@ mod tests {
         let mut xs = clustered_data(8, 4, 2, 22);
         xs[0] = f32::NAN;
         xs[4 + 2] = f32::INFINITY;
-        let counts = km.update(&xs, 8);
-        assert_eq!(counts.iter().sum::<usize>(), 6, "the two poisoned vectors are skipped");
+        let delta = km.update(&xs, 8);
+        assert_eq!(delta.counts.iter().sum::<usize>(), 6, "the two poisoned vectors are skipped");
+        assert_eq!(delta.assigned, 6, "quarantined vectors never enter the delta");
+        assert!(delta.moved_tokens().all(|t| t != 0 && t != 1), "poisoned tokens cannot move");
         assert!(km.centroids.iter().all(|c| c.is_finite()), "centroids must stay finite");
         for _ in 0..5 {
             km.update(&xs, 8);

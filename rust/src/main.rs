@@ -10,7 +10,7 @@
 //! rtx analyze  [--variant analysis] [--ckpt CKPT] [--runs N]   Table 6 JSD
 //! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8] [--stats]
 //! rtx serve-bench [--n 256] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
-//!                 [--sequences 1] [--route-every 2]
+//!                 [--sequences 1] [--route-every 2] [--pool]
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 use routing_transformer::analysis;
 use routing_transformer::attention::{
     optimal_clusters, sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern,
-    EpochCache, RouteSlot, RoutingSession,
+    EpochCache, Execution, RouteSlot, RoutingSession, WorkerPool,
 };
 use routing_transformer::coordinator::{
     default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
@@ -81,8 +81,11 @@ commands:
   serve-bench  heads x layers x steps decode sweep over the pattern engine:
             [--n 256] [--d 64] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
             [--window W] [--clusters K] [--sequences B] [--route-every R] [--seed S]
-            (B requests batched per worker sweep, k-means re-fit every R steps;
-             prints epoch hit rate, evictions, batched vs sequential rows/sec)
+            [--pool] (B requests batched per worker sweep, k-means re-fit every R
+             steps with incremental assignment-delta invalidation; prints epoch
+             hit rate, unchanged-epoch hits, evictions, dirty tokens, batched vs
+             sequential rows/sec; --pool adds resident-pool vs scoped-spawn
+             comparison rows with a row-for-row equality check)
 ";
 
 fn artifacts_root(args: &Args) -> PathBuf {
@@ -359,6 +362,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let b = args.usize("sequences", 1)?.max(1);
     let route_every = args.usize("route-every", 2)?.max(1);
     let seed = args.u64("seed", 0)?;
+    let pool_cmp = args.bool("pool", false)?;
     let w_top = (n / k).max(1);
 
     // Sec. 4.2 head plan: even heads are static local (pinned compiles),
@@ -382,31 +386,40 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     println!(
         "serve-bench: n={n} d={d} heads={heads} layers={layers} steps={steps} \
-         shards={shards} window={window} clusters={k} sequences={b} route-every={route_every}"
+         shards={shards} window={window} clusters={k} sequences={b} route-every={route_every} \
+         pool-compare={pool_cmp}"
     );
 
     // The static even-head batch never changes: plan it once.  Routed
-    // batches are re-planned only when their slot's epoch moves; the
-    // per-step cache consultation (the lookup a decode server performs)
-    // still happens every step so the epoch hit-rate is honest.
+    // batches are re-planned only when their slot's *assignment* epoch
+    // moves (a re-fit that moved no token keeps both the compiles and
+    // the plan); the per-step cache consultation (the lookup a decode
+    // server performs) still happens every step so the epoch hit-rate is
+    // honest.
     let static_batch = BatchedAttention::shared(cache.get_static(&local, n), b, shards)?;
     let mut routed_batches: Vec<Option<(u64, BatchedAttention)>> = vec![None; layers * heads];
+    let pool = WorkerPool::global();
 
     let mut batched_rows = 0u64;
     let mut macs = 0u64;
     let mut batched_dt = 0f64;
     let mut sequential_dt = 0f64;
+    let mut scoped_dt = 0f64;
+    let mut moved_tokens = 0u64;
     for step in 0..steps {
         if step % route_every == 0 {
             // content moved: drift the routing vectors, one online k-means
-            // step per routed slot over the whole batch's content, epoch++
+            // step per routed slot over the whole batch's content; the
+            // epoch bumps, but only a non-empty assignment delta dirties
+            // the slot and forces recompiles
             for x in xs.iter_mut().flat_map(|s| s.iter_mut()) {
                 *x = 0.9 * *x + 0.43 * rng.normal() as f32;
             }
             let all: Vec<f32> = xs.concat();
             for layer in 0..layers {
                 for head in (1..heads).step_by(2) {
-                    session.update(layer, head, &all, b * n);
+                    let upd = session.update(layer, head, &all, b * n);
+                    moved_tokens += upd.delta.moved.len() as u64;
                 }
             }
         }
@@ -416,10 +429,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     &static_batch
                 } else {
                     let epoch = session.epoch(layer, head);
+                    let ae = session.assignment_epoch(layer, head);
                     let patterns: Vec<Arc<CompiledPattern>> = (0..b)
                         .map(|s| {
                             let slot = RouteSlot { layer, head, seq: s };
-                            cache.get_routed(slot, epoch, n, || {
+                            cache.get_routed_at(slot, epoch, ae, n, || {
                                 AttentionSpec::union(vec![
                                     local.clone(),
                                     session.routing_spec(layer, head, &xs[s], n, w_top),
@@ -429,8 +443,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                         })
                         .collect();
                     let si = layer * heads + head;
-                    if !matches!(&routed_batches[si], Some((e, _)) if *e == epoch) {
-                        routed_batches[si] = Some((epoch, BatchedAttention::new(patterns, shards)?));
+                    if !matches!(&routed_batches[si], Some((e, _)) if *e == ae) {
+                        routed_batches[si] = Some((ae, BatchedAttention::new(patterns, shards)?));
                     }
                     &routed_batches[si].as_ref().expect("planned above").1
                 };
@@ -439,6 +453,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 batched_dt += t0.elapsed().as_secs_f64();
                 batched_rows += (b * n) as u64;
                 macs += batch.cost(d);
+
+                if pool_cmp {
+                    // the path the resident pool replaces: a scoped
+                    // thread spawn per worker per call
+                    let t = std::time::Instant::now();
+                    let scoped = batch.attention_with(&q, &kk, &v, d, Execution::Scoped)?;
+                    scoped_dt += t.elapsed().as_secs_f64();
+                    if batched != scoped {
+                        bail!("pool output diverged from scoped-spawn at step {step}");
+                    }
+                }
 
                 // the path batching replaces: B independent kernel calls
                 let t1 = std::time::Instant::now();
@@ -467,11 +492,21 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     let cs = cache.stats();
     let es = cache.epoch_stats();
+    let dirty_pending: usize = (0..layers)
+        .flat_map(|l| (0..heads).map(move |h| (l, h)))
+        .map(|(l, h)| session.dirty_len(l, h))
+        .sum();
     let mut table = Table::new(&["metric", "value"]);
     table.row(&["routed lookups".to_string(), es.lookups().to_string()]);
     table.row(&["epoch hits".to_string(), es.epoch_hits.to_string()]);
     table.row(&["epoch hit rate".to_string(), format!("{:.1}%", es.hit_rate() * 100.0)]);
-    table.row(&["evictions (stale epochs)".to_string(), cs.evictions.to_string()]);
+    table.row(&[
+        "unchanged-epoch hits (recompiles skipped)".to_string(),
+        es.unchanged_epochs.to_string(),
+    ]);
+    table.row(&["tokens moved by re-fits".to_string(), moved_tokens.to_string()]);
+    table.row(&["dirty tokens pending".to_string(), dirty_pending.to_string()]);
+    table.row(&["evictions (stale assignments)".to_string(), cs.evictions.to_string()]);
     table.row(&["compiles".to_string(), cs.misses.to_string()]);
     table.row(&["compile-cache hits".to_string(), cs.hits.to_string()]);
     table.row(&["compile-cache hit rate".to_string(), format!("{:.1}%", cs.hit_rate() * 100.0)]);
@@ -491,6 +526,31 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         format!("{:.2}x", sequential_dt / batched_dt),
     ]);
     table.row(&["attention MACs/sec (batched)".to_string(), format!("{:.3e}", macs as f64 / batched_dt)]);
+    if pool_cmp {
+        // the batched path above ran on the resident pool (the default
+        // execution); these rows compare it against per-call scoped
+        // spawns over the identical batches (outputs checked row-for-row
+        // every step)
+        let scoped_dt = scoped_dt.max(1e-9);
+        table.row(&[
+            "pool rows/sec".to_string(),
+            format!("{:.3e}", batched_rows as f64 / batched_dt),
+        ]);
+        table.row(&["scoped-spawn elapsed".to_string(), format!("{:.3} s", scoped_dt)]);
+        table.row(&[
+            "scoped-spawn rows/sec".to_string(),
+            format!("{:.3e}", batched_rows as f64 / scoped_dt),
+        ]);
+        table.row(&[
+            "pool vs scoped speedup".to_string(),
+            format!("{:.2}x", scoped_dt / batched_dt),
+        ]);
+        table.row(&[
+            "pool workers (spawned/config)".to_string(),
+            format!("{}/{}", pool.spawned_workers(), pool.workers()),
+        ]);
+        table.row(&["pool jobs run".to_string(), pool.jobs_run().to_string()]);
+    }
     table.print();
 
     // the last head of the last layer: routed when heads is even (head

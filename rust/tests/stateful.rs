@@ -1,0 +1,474 @@
+//! Stateful model-based tests for the serving engine (à la
+//! proptest-stateful): random op sequences drive the real
+//! `RoutingSession` + `EpochCache` + `WorkerPool` stack against a naive
+//! reference model, checking after every op that
+//!
+//! * the served pattern always matches a fresh compile of the spec
+//!   current at the slot's assignment epoch,
+//! * every hit/miss/eviction/unchanged-epoch counter matches the model's
+//!   independent bookkeeping,
+//! * epochs, assignment epochs, and dirty sets evolve exactly as the
+//!   model predicts from a before/after `assign()` oracle, and
+//! * pool execution is bit-identical to the inline single-thread path
+//!   (and survives induced worker panics without hanging or poisoning).
+//!
+//! The offline environment ships no `proptest`, so this reuses the
+//! hand-rolled seeded-case harness from `tests/proptests.rs`: every
+//! property runs ≥ 64 seeded random cases and reports the failing seed.
+
+use std::cell::Cell;
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::Arc;
+
+use routing_transformer::attention::{
+    sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern, EpochCache, Execution,
+    RouteSlot, RoutingSession, ShardedPattern, WorkerPool,
+};
+use routing_transformer::kmeans::SphericalKMeans;
+use routing_transformer::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases; panic with the failing seed.
+fn check<F: Fn(&mut Rng)>(name: &str, n: usize, f: F) {
+    for case in 0..n {
+        let seed = 0x57A7_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("stateful property '{name}' failed at seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+// ------------------------------------------------------ reference model
+
+const LAYERS: usize = 2;
+const HEADS: usize = 2;
+const SEQS: usize = 2;
+const DIM: usize = 3;
+
+/// Reference mirror of one (layer, head) routing slot: an independent
+/// k-means copy plus naive epoch/dirty bookkeeping.
+struct ModelSlot {
+    km: SphericalKMeans,
+    epoch: u64,
+    assignment_epoch: u64,
+    dirty: BTreeSet<usize>,
+}
+
+/// Reference mirror of one cached (layer, head, seq) entry.
+struct ModelEntry {
+    assignment_epoch: u64,
+    epoch: u64,
+    n: usize,
+    spec: AttentionSpec,
+}
+
+#[derive(Default)]
+struct ModelCounters {
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    epoch_hits: u64,
+    epoch_misses: u64,
+    unchanged_epochs: u64,
+}
+
+struct Model {
+    slots: Vec<ModelSlot>,
+    entries: HashMap<(usize, usize, usize), ModelEntry>,
+    statics: HashSet<(AttentionSpec, usize)>,
+    counters: ModelCounters,
+}
+
+impl Model {
+    /// Mirror a fresh session: clone each slot's initial k-means state
+    /// through the public getter, so the model evolves independently.
+    fn mirror(session: &RoutingSession) -> Model {
+        let slots = (0..LAYERS)
+            .flat_map(|l| (0..HEADS).map(move |h| (l, h)))
+            .map(|(l, h)| ModelSlot {
+                km: session.kmeans(l, h).clone(),
+                epoch: 0,
+                assignment_epoch: 0,
+                dirty: BTreeSet::new(),
+            })
+            .collect();
+        Model {
+            slots,
+            entries: HashMap::new(),
+            statics: HashSet::new(),
+            counters: ModelCounters::default(),
+        }
+    }
+
+    fn slot(&mut self, layer: usize, head: usize) -> &mut ModelSlot {
+        &mut self.slots[layer * HEADS + head]
+    }
+}
+
+/// Check every SUT counter and every slot's epoch state against the model.
+fn assert_model_agrees(session: &RoutingSession, cache: &EpochCache, model: &Model) {
+    let cs = cache.stats();
+    assert_eq!(cs.hits, model.counters.hits, "compile-level hits");
+    assert_eq!(cs.misses, model.counters.misses, "compile-level misses");
+    assert_eq!(cs.evictions, model.counters.evictions, "evictions");
+    let es = cache.epoch_stats();
+    assert_eq!(es.epoch_hits, model.counters.epoch_hits, "epoch hits");
+    assert_eq!(es.epoch_misses, model.counters.epoch_misses, "epoch misses");
+    assert_eq!(es.unchanged_epochs, model.counters.unchanged_epochs, "unchanged epochs");
+    assert_eq!(
+        cache.len(),
+        model.statics.len() + model.entries.len(),
+        "live compiles: pinned statics + one per routed slot"
+    );
+    for l in 0..LAYERS {
+        for h in 0..HEADS {
+            let m = &model.slots[l * HEADS + h];
+            assert_eq!(session.epoch(l, h), m.epoch, "cluster epoch of ({l}, {h})");
+            assert_eq!(
+                session.assignment_epoch(l, h),
+                m.assignment_epoch,
+                "assignment epoch of ({l}, {h})"
+            );
+            assert_eq!(
+                session.dirty_tokens(l, h),
+                m.dirty.iter().copied().collect::<Vec<_>>(),
+                "dirty set of ({l}, {h})"
+            );
+        }
+    }
+}
+
+fn random_xs(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n * DIM).map(|_| rng.normal() as f32).collect()
+}
+
+/// A small random spec for batch/static ops (possibly all-masked).
+fn small_spec(rng: &mut Rng, n: usize) -> AttentionSpec {
+    match rng.below(4) {
+        0 => AttentionSpec::Full,
+        1 => AttentionSpec::local(rng.range(1, n.max(1) + 1)).unwrap(),
+        2 => AttentionSpec::strided(rng.range(1, n.max(1) + 1)).unwrap(),
+        _ => {
+            let clusters: Vec<Vec<usize>> = (0..rng.range(0, 3))
+                .map(|_| (0..n).filter(|_| rng.chance(0.4)).collect())
+                .collect();
+            AttentionSpec::routing(clusters)
+        }
+    }
+}
+
+// --------------------------------------------------------- property 1
+
+#[test]
+fn prop_stateful_session_and_cache_match_reference_model() {
+    check("session_cache_model", 64, |rng| {
+        let seed = rng.next_u64();
+        let k = rng.range(1, 4);
+        let mut session = RoutingSession::new(LAYERS, HEADS, k, DIM, 0.3, seed).unwrap();
+        let mut cache = EpochCache::new();
+        let mut model = Model::mirror(&session);
+        let static_pool = [
+            AttentionSpec::Full,
+            AttentionSpec::local(2).unwrap(),
+            AttentionSpec::local(3).unwrap(),
+            AttentionSpec::strided(2).unwrap(),
+        ];
+        for _op in 0..rng.range(12, 25) {
+            match rng.below(12) {
+                // Update{layer, head}: one online k-means step, mirrored
+                // independently; n = 0 and NaN-poisoned batches included
+                0..=3 => {
+                    let (layer, head) = (rng.below(LAYERS), rng.below(HEADS));
+                    let n = rng.range(0, 10);
+                    let mut xs = random_xs(rng, n);
+                    if n > 0 && rng.chance(0.15) {
+                        xs[rng.below(n * DIM)] = f32::NAN;
+                    }
+                    // naive oracle: assignments before vs after, via the
+                    // public assign() on an independent k-means copy
+                    let m = model.slot(layer, head);
+                    let before = m.km.clone();
+                    m.km.update(&xs, n);
+                    let mut moved = Vec::new();
+                    for i in 0..n {
+                        let x = &xs[i * DIM..(i + 1) * DIM];
+                        if x.iter().any(|v| !v.is_finite()) {
+                            continue;
+                        }
+                        let (old, new) = (before.assign(x), m.km.assign(x));
+                        if old != new {
+                            moved.push((i, old, new));
+                        }
+                    }
+                    if n > 0 {
+                        m.epoch += 1;
+                        if !moved.is_empty() {
+                            m.assignment_epoch = m.epoch;
+                            m.dirty.extend(moved.iter().map(|&(t, _, _)| t));
+                        }
+                    }
+                    let upd = session.update(layer, head, &xs, n);
+                    assert_eq!(upd.delta.moved, moved, "delta must match the assign() oracle");
+                    let m = model.slot(layer, head);
+                    assert_eq!(upd.epoch, m.epoch);
+                    assert_eq!(upd.assignment_epoch, m.assignment_epoch);
+                    assert_eq!(
+                        session.kmeans(layer, head).centroids,
+                        m.km.centroids,
+                        "mirrored k-means must stay bitwise in lockstep"
+                    );
+                }
+                // GetRouted{layer, head, seq}
+                4..=7 => {
+                    let (layer, head) = (rng.below(LAYERS), rng.below(HEADS));
+                    let seq = rng.below(SEQS);
+                    let slot = RouteSlot { layer, head, seq };
+                    let n = rng.range(1, 9);
+                    let w = rng.range(1, n + 1);
+                    let xs = random_xs(rng, n);
+                    let epoch = session.epoch(layer, head);
+                    let ae = session.assignment_epoch(layer, head);
+                    let key = (layer, head, seq);
+                    let expect_hit = model
+                        .entries
+                        .get(&key)
+                        .is_some_and(|e| e.assignment_epoch == ae && e.n == n);
+                    let regenerated = Cell::new(false);
+                    let p = cache.get_routed_at(slot, epoch, ae, n, || {
+                        regenerated.set(true);
+                        session.routing_spec(layer, head, &xs, n, w)
+                    });
+                    assert_eq!(
+                        regenerated.get(),
+                        !expect_hit,
+                        "spec regeneration exactly on model-predicted misses"
+                    );
+                    if expect_hit {
+                        let e = model.entries.get_mut(&key).unwrap();
+                        if e.epoch != epoch {
+                            e.epoch = epoch;
+                            model.counters.unchanged_epochs += 1;
+                        }
+                        model.counters.epoch_hits += 1;
+                        model.counters.hits += 1;
+                        assert_eq!(
+                            *p,
+                            e.spec.compile(n),
+                            "served pattern must match the spec stored at its assignment epoch"
+                        );
+                    } else {
+                        if model.entries.remove(&key).is_some() {
+                            model.counters.evictions += 1;
+                        }
+                        model.counters.epoch_misses += 1;
+                        model.counters.misses += 1;
+                        let spec =
+                            model.slots[layer * HEADS + head].km.routing_spec(&xs, n, w);
+                        assert_eq!(
+                            *p,
+                            spec.compile(n),
+                            "miss must serve a fresh compile at the current assignments"
+                        );
+                        model.entries.insert(
+                            key,
+                            ModelEntry { assignment_epoch: ae, epoch, n, spec },
+                        );
+                    }
+                    assert_eq!(cache.slot_assignment_epoch(slot), Some(ae));
+                }
+                // GetStatic
+                8..=9 => {
+                    let spec = static_pool[rng.below(static_pool.len())].clone();
+                    let n = rng.range(1, 10);
+                    let fresh = model.statics.insert((spec.clone(), n));
+                    if fresh {
+                        model.counters.misses += 1;
+                    } else {
+                        model.counters.hits += 1;
+                    }
+                    let p = cache.get_static(&spec, n);
+                    assert_eq!(*p, spec.compile(n), "static compile must be exact");
+                }
+                // EvictSlot
+                10 => {
+                    let slot = RouteSlot {
+                        layer: rng.below(LAYERS),
+                        head: rng.below(HEADS),
+                        seq: rng.below(SEQS),
+                    };
+                    let present =
+                        model.entries.remove(&(slot.layer, slot.head, slot.seq)).is_some();
+                    if present {
+                        model.counters.evictions += 1;
+                    }
+                    assert_eq!(cache.evict_slot(slot), present, "evict_slot presence");
+                }
+                // Clear (session state survives, cache resets fully)
+                _ => {
+                    cache.clear();
+                    model.entries.clear();
+                    model.statics.clear();
+                    model.counters = ModelCounters::default();
+                }
+            }
+            assert_model_agrees(&session, &cache, &model);
+        }
+    });
+}
+
+// --------------------------------------------------------- property 2
+
+#[test]
+fn prop_pool_and_scoped_match_inline_bitwise() {
+    check("pool_matches_inline", 96, |rng| {
+        let b = rng.range(1, 4);
+        let n = rng.range(0, 10);
+        let d = rng.range(1, 5);
+        let shared = rng.chance(0.3);
+        let patterns: Vec<Arc<CompiledPattern>> = if shared {
+            vec![Arc::new(small_spec(rng, n).compile(n)); b]
+        } else {
+            (0..b).map(|_| Arc::new(small_spec(rng, n).compile(n))).collect()
+        };
+        let qkv: Vec<f32> = (0..3 * b * n * d).map(|_| rng.normal() as f32).collect();
+        let (q, rest) = qkv.split_at(b * n * d);
+        let (k, v) = rest.split_at(b * n * d);
+        let workers = rng.range(1, 6);
+        let batch = BatchedAttention::new(patterns.clone(), workers).unwrap();
+        let inline = batch.attention_with(q, k, v, d, Execution::Inline).unwrap();
+        // the global pool, a local pool (possibly zero-worker), and the
+        // scoped baseline must all be bit-identical to inline
+        let local_pool = WorkerPool::with_workers(rng.range(0, 4));
+        for exec in [
+            Execution::default(),
+            Execution::Pool(&local_pool),
+            Execution::Scoped,
+        ] {
+            assert_eq!(
+                batch.attention_with(q, k, v, d, exec).unwrap(),
+                inline,
+                "{exec:?} diverged at b={b} n={n} d={d} workers={workers}"
+            );
+        }
+        // and inline itself equals B independent kernel calls
+        let mut expect = Vec::with_capacity(b * n * d);
+        for (s, p) in patterns.iter().enumerate() {
+            let lo = s * n * d;
+            let hi = lo + n * d;
+            expect.extend(sparse_attention(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, p).unwrap());
+        }
+        assert_eq!(inline, expect);
+        // sharded single-sequence path agrees across executions too
+        if n > 0 {
+            let sharded =
+                ShardedPattern::balanced(Arc::clone(&patterns[0]), rng.range(1, 5)).unwrap();
+            let lo = 0;
+            let hi = n * d;
+            let base = sharded
+                .attention_with(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, Execution::Inline)
+                .unwrap();
+            for exec in [Execution::default(), Execution::Pool(&local_pool), Execution::Scoped]
+            {
+                assert_eq!(
+                    sharded.attention_with(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, exec).unwrap(),
+                    base
+                );
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------- property 3
+
+#[test]
+fn prop_pool_survives_induced_panics() {
+    check("pool_panic_containment", 64, |rng| {
+        let pool = WorkerPool::with_workers(rng.range(0, 4));
+        let rounds = rng.range(1, 4);
+        for _round in 0..rounds {
+            let m = rng.range(2, 7);
+            let per = rng.range(1, 5);
+            let panic_at = rng.below(m);
+            let as_error = rng.chance(0.3);
+            let mut out = vec![0f32; m * per];
+            let work: Vec<(usize, &mut [f32])> =
+                out.chunks_mut(per).take(m).enumerate().collect();
+            let result = pool.run(work, |i, slice| {
+                if i == panic_at {
+                    if as_error {
+                        anyhow::bail!("injected error at {i}");
+                    }
+                    panic!("injected panic at {i}");
+                }
+                for (j, x) in slice.iter_mut().enumerate() {
+                    *x = (i * 100 + j) as f32;
+                }
+                Ok(())
+            });
+            // a failing closure must surface as Err - never a hang, and
+            // never a panic escaping run()
+            let err = result.unwrap_err().to_string();
+            if as_error {
+                assert!(err.contains("injected error"), "got: {err}");
+            } else {
+                assert!(err.contains("panicked"), "got: {err}");
+            }
+            // the same pool must keep serving correct batches afterwards
+            let mut ok = vec![0f32; m * per];
+            let work: Vec<(usize, &mut [f32])> =
+                ok.chunks_mut(per).take(m).enumerate().collect();
+            pool.run(work, |i, slice| {
+                for (j, x) in slice.iter_mut().enumerate() {
+                    *x = (i * 100 + j) as f32;
+                }
+                Ok(())
+            })
+            .unwrap();
+            let expect: Vec<f32> = (0..m)
+                .flat_map(|i| (0..per).map(move |j| (i * 100 + j) as f32))
+                .collect();
+            assert_eq!(ok, expect, "pool must stay healthy after an induced failure");
+        }
+    });
+}
+
+// --------------------------------------------------------- property 4
+
+#[test]
+fn prop_single_cluster_epoch_bumps_are_unchanged_hits() {
+    // k = 1 pins every assignment to cluster 0 forever, so every re-fit
+    // bumps the cluster epoch without moving a token: the incremental
+    // flow must serve the original compile for the whole session, and
+    // with w = n the reuse is semantically exact (every token is always
+    // a member), not just assignment-stable.
+    check("single_cluster_unchanged", 64, |rng| {
+        let n = rng.range(2, 12);
+        let mut session = RoutingSession::new(1, 1, 1, DIM, 0.5, rng.next_u64()).unwrap();
+        let mut cache = EpochCache::new();
+        let slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+        let xs = random_xs(rng, n);
+        let p0 = session.routed_pattern(&mut cache, slot, &xs, n, n);
+        let rounds = rng.range(1, 5);
+        for round in 1..=rounds {
+            let xs2 = random_xs(rng, n);
+            let upd = session.update(0, 0, &xs2, n);
+            assert!(!upd.delta.changed(), "k = 1 can never move a token");
+            assert_eq!(upd.epoch, round as u64);
+            assert_eq!(upd.assignment_epoch, 0);
+            assert_eq!(session.dirty_len(0, 0), 0);
+            let p = session.routed_pattern(&mut cache, slot, &xs2, n, n);
+            assert!(
+                Arc::ptr_eq(&p0, &p),
+                "unchanged assignments must keep serving the live compile"
+            );
+            assert_eq!(*p, session.routing_spec(0, 0, &xs2, n, n).compile(n));
+        }
+        let es = cache.epoch_stats();
+        assert_eq!(es.unchanged_epochs, rounds as u64);
+        assert_eq!(es.epoch_hits, rounds as u64);
+        assert_eq!(es.epoch_misses, 1, "only the initial compile misses");
+        assert_eq!(cache.stats().evictions, 0, "no eviction across the whole session");
+        assert_eq!(cache.len(), 1);
+    });
+}
