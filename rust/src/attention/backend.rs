@@ -1,0 +1,433 @@
+//! Pluggable attention execution backends — "run these CSR rows against
+//! `[n, d]` Q/K/V" behind one registerable [`Backend`] trait.
+//!
+//! The engine's sharding/batching layers decide *which* rows run *where*
+//! (see [`super::engine`] and [`super::pool`]); a backend decides *how*
+//! one contiguous row range is evaluated.  Every backend must be
+//! **bit-identical** to [`Reference`] — same f64 accumulation order per
+//! output element — so callers can swap backends without revalidating
+//! numerics (pinned by the backend-dimension property in
+//! `tests/stateful.rs` and the unit tests below).  Three implementations
+//! ship:
+//!
+//! * [`Reference`] — the scalar host kernel
+//!   ([`super::engine::sparse_attention_rows`]), kept as the bit-exactness
+//!   oracle every other backend is compared against.
+//! * [`Blocked`] — a cache-blocked host backend: the query row is
+//!   pre-widened to f64 once into a reusable per-worker scratch buffer,
+//!   and key columns are processed in tiles of four with one independent
+//!   f64 accumulator chain each.  Per-column dot products keep the exact
+//!   reference summation order (so results stay bitwise equal), but the
+//!   four chains give the CPU instruction-level parallelism the strict
+//!   single-chain f64 fold denies it — `bench_complexity` pins ≥ 1.5×
+//!   over [`Reference`] at n = 2048, d = 64.  No `unsafe`, no new
+//!   dependencies.
+//! * `XlaBackend` (behind the `xla` cargo feature, so not linkable from
+//!   host-only docs) — the landing slot for the PJRT/accelerator
+//!   lowering: its `stage` method exports a pattern's CSR arrays in the
+//!   i64 layout the device gather consumes; until the device kernel
+//!   lands, execution falls back to the host reference path (still
+//!   bit-identical, so the slot is safe to select).
+//!
+//! Backends register by name in a process-wide registry ([`register`] /
+//! [`lookup`] / [`names`]); `rtx serve-bench --backend` selects from it.
+//! The sharded and batched execution paths take a backend per call via
+//! [`super::ShardedPattern::attention_backend`] and
+//! [`super::BatchedAttention::attention_backend`] — backend choice and
+//! [`Execution`](super::pool::Execution) strategy compose freely.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use super::compiled::CompiledPattern;
+use super::engine::sparse_attention_rows;
+pub use super::engine::check_rows_args;
+
+/// An attention execution backend: evaluates the CSR rows of one
+/// [`CompiledPattern`] against full `[n, d]` row-major Q/K/V buffers.
+///
+/// Implementations must be bit-identical to [`Reference`]: identical f64
+/// accumulation order per output element, fully-masked rows written as
+/// zeros, and the same shape validation errors.  `Send + Sync` because
+/// one backend instance is shared across pool workers.
+pub trait Backend: Send + Sync + std::fmt::Debug {
+    /// Registry / display name (e.g. `"reference"`, `"blocked"`).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate the query rows in `rows`, writing row `i`'s output at
+    /// `out[(i - rows.start) * d ..]`; `out` holds exactly
+    /// `rows.len() * d` values and `q`/`k`/`v` stay the full `[n, d]`
+    /// buffers (keys outside the range are still attended).  Same
+    /// contract as [`super::engine::sparse_attention_rows`];
+    /// implementations should validate via [`check_rows_args`] so every
+    /// backend rejects bad shapes identically.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_rows(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        pattern: &CompiledPattern,
+        rows: Range<usize>,
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Whole-pattern convenience: evaluate every row of `pattern` into a
+    /// fresh `[n, d]` output (single-threaded; use the sharded/batched
+    /// paths for multi-worker execution).
+    fn attention(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        pattern: &CompiledPattern,
+    ) -> Result<Vec<f32>> {
+        let n = pattern.n();
+        let mut out = vec![0f32; n * d];
+        self.attention_rows(q, k, v, d, pattern, 0..n, &mut out)?;
+        Ok(out)
+    }
+}
+
+// ------------------------------------------------------------ reference
+
+/// The scalar host kernel — the bit-exactness oracle.  Delegates to
+/// [`super::engine::sparse_attention_rows`] unchanged; every other
+/// backend is validated (and benchmarked) against this one.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Reference;
+
+impl Backend for Reference {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn attention_rows(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        pattern: &CompiledPattern,
+        rows: Range<usize>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        sparse_attention_rows(q, k, v, d, pattern, rows, out)
+    }
+}
+
+// -------------------------------------------------------------- blocked
+
+/// Width of one key-column tile: four independent f64 accumulator chains
+/// is enough to hide the ~4-cycle dependent-add latency that serializes
+/// the reference kernel's single-chain score fold.
+const COL_TILE: usize = 4;
+
+/// Cache-blocked host backend, bit-identical to [`Reference`].
+///
+/// Per worker call it keeps three reusable scratch buffers (the query row
+/// widened to f64, the score vector, and the f64 output accumulator) and
+/// walks each row's attend-set in `COL_TILE` (= 4)-wide key tiles: every
+/// column's dot product still folds over the head dimension in exactly
+/// the reference order (bit-identical per column), but the tile's four
+/// accumulator chains are independent, so the CPU overlaps them instead
+/// of stalling on one serial f64 add chain.  The softmax and the value
+/// accumulation phases reuse the reference loop order unchanged (the
+/// value loop is already vectorizable: each output element owns an
+/// independent chain).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Blocked;
+
+impl Backend for Blocked {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn attention_rows(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        pattern: &CompiledPattern,
+        rows: Range<usize>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_rows_args(q, k, v, d, pattern, &rows, out)?;
+        let scale = 1.0 / (d as f64).sqrt();
+        // per-worker scratch, reused across every row of the shard
+        let mut qf: Vec<f64> = vec![0.0; d];
+        let mut scores: Vec<f64> = Vec::new();
+        let mut acc: Vec<f64> = vec![0.0; d];
+        let start = rows.start;
+        for (i, cols, _clusters) in pattern.rows(rows) {
+            let oi = &mut out[(i - start) * d..(i - start + 1) * d];
+            oi.fill(0.0);
+            if cols.is_empty() {
+                // fully-masked row: zeros, never NaN (reference contract)
+                continue;
+            }
+            // widen q_i once instead of once per key column
+            for (dst, &src) in qf.iter_mut().zip(&q[i * d..(i + 1) * d]) {
+                *dst = src as f64;
+            }
+            scores.clear();
+            let mut max = f64::NEG_INFINITY;
+            let mut tiles = cols.chunks_exact(COL_TILE);
+            for tile in tiles.by_ref() {
+                let k0 = &k[tile[0] * d..tile[0] * d + d];
+                let k1 = &k[tile[1] * d..tile[1] * d + d];
+                let k2 = &k[tile[2] * d..tile[2] * d + d];
+                let k3 = &k[tile[3] * d..tile[3] * d + d];
+                let (mut s0, mut s1, mut s2, mut s3) = (0f64, 0f64, 0f64, 0f64);
+                for (t, &qt) in qf.iter().enumerate() {
+                    s0 += qt * k0[t] as f64;
+                    s1 += qt * k1[t] as f64;
+                    s2 += qt * k2[t] as f64;
+                    s3 += qt * k3[t] as f64;
+                }
+                for s in [s0 * scale, s1 * scale, s2 * scale, s3 * scale] {
+                    max = max.max(s);
+                    scores.push(s);
+                }
+            }
+            for &j in tiles.remainder() {
+                let kj = &k[j * d..(j + 1) * d];
+                let mut s = 0f64;
+                for (t, &qt) in qf.iter().enumerate() {
+                    s += qt * kj[t] as f64;
+                }
+                let s = s * scale;
+                max = max.max(s);
+                scores.push(s);
+            }
+            // softmax + value gather: reference loop order, verbatim
+            let mut z = 0f64;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                z += *s;
+            }
+            acc.fill(0.0);
+            for (&e, &j) in scores.iter().zip(cols) {
+                let w = e / z;
+                let vj = &v[j * d..(j + 1) * d];
+                for (a, &x) in acc.iter_mut().zip(vj) {
+                    *a += w * x as f64;
+                }
+            }
+            for (o, &a) in oi.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- xla stub
+
+/// Feature-gated landing slot for the accelerator (PJRT) lowering of a
+/// [`CompiledPattern`].
+///
+/// The ROADMAP's multi-backend step ends with the CSR arrays handed to a
+/// device gather kernel; [`XlaBackend::stage`] already exports them in
+/// the i64 layout that lowering consumes, so the device kernel can land
+/// behind this type without touching any call site.  Until it does,
+/// execution falls back to the host [`Reference`] path — bit-identical,
+/// so selecting `--backend xla` today is safe (just not yet faster).
+#[cfg(feature = "xla")]
+#[derive(Debug, Default, Clone, Copy)]
+pub struct XlaBackend;
+
+#[cfg(feature = "xla")]
+impl XlaBackend {
+    /// Stage a pattern for device transfer: `(row_offsets, cols)` as i64
+    /// buffers (`n + 1` offsets, `nnz` key indices) — the two literals
+    /// the PJRT sparse-gather lowering takes alongside Q/K/V.
+    pub fn stage(pattern: &CompiledPattern) -> (Vec<i64>, Vec<i64>) {
+        let offsets = pattern.offsets().iter().map(|&o| o as i64).collect();
+        let cols = (0..pattern.n())
+            .flat_map(|i| pattern.row(i).iter().map(|&j| j as i64))
+            .collect();
+        (offsets, cols)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn attention_rows(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        pattern: &CompiledPattern,
+        rows: Range<usize>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        // host fallback until the PJRT kernel lands; see the type docs
+        sparse_attention_rows(q, k, v, d, pattern, rows, out)
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+type BackendMap = BTreeMap<String, Arc<dyn Backend>>;
+
+fn registry() -> &'static Mutex<BackendMap> {
+    static REGISTRY: OnceLock<Mutex<BackendMap>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map: BackendMap = BTreeMap::new();
+        map.insert("reference".to_string(), Arc::new(Reference));
+        map.insert("blocked".to_string(), Arc::new(Blocked));
+        #[cfg(feature = "xla")]
+        map.insert("xla".to_string(), Arc::new(XlaBackend));
+        Mutex::new(map)
+    })
+}
+
+/// Register a backend under [`Backend::name`]; errors if the name is
+/// already taken (the built-ins `reference`/`blocked` — plus `xla` with
+/// the feature — are pre-registered).
+pub fn register(backend: Arc<dyn Backend>) -> Result<()> {
+    let name = backend.name().to_string();
+    let mut map = registry().lock().unwrap_or_else(|e| e.into_inner());
+    if map.contains_key(&name) {
+        bail!("attention backend '{name}' is already registered");
+    }
+    map.insert(name, backend);
+    Ok(())
+}
+
+/// Look a backend up by registry name (`None` if unknown; see [`names`]).
+pub fn lookup(name: &str) -> Option<Arc<dyn Backend>> {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
+}
+
+/// Registered backend names, sorted — for `--backend` error messages.
+pub fn names() -> Vec<String> {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).keys().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttentionSpec;
+    use crate::util::rng::Rng;
+
+    fn random_qkv(rng: &mut Rng, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut mk = |rng: &mut Rng| (0..n * d).map(|_| rng.normal() as f32).collect();
+        (mk(rng), mk(rng), mk(rng))
+    }
+
+    fn specs(n: usize) -> Vec<AttentionSpec> {
+        vec![
+            AttentionSpec::Full,
+            AttentionSpec::local(3).unwrap(),
+            AttentionSpec::strided(2).unwrap(),
+            AttentionSpec::routing(vec![(0..n).step_by(2).collect(), vec![1, 3]]),
+            // fully-masked: no cluster admits anything
+            AttentionSpec::routing(vec![]),
+            AttentionSpec::union(vec![
+                AttentionSpec::local(2).unwrap(),
+                AttentionSpec::routing(vec![vec![0, 5, 6]]),
+            ])
+            .unwrap(),
+        ]
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_reference() {
+        let mut rng = Rng::new(77);
+        for n in [0usize, 1, 2, 5, 17, 33] {
+            // d sweeps across the tile boundary cases (d=1, d%4 != 0, big)
+            for d in [1usize, 3, 4, 7, 16] {
+                let (q, k, v) = random_qkv(&mut rng, n, d);
+                for spec in specs(n) {
+                    let p = spec.compile(n);
+                    let a = Reference.attention(&q, &k, &v, d, &p).unwrap();
+                    let b = Blocked.attention(&q, &k, &v, d, &p).unwrap();
+                    assert_eq!(a, b, "n={n} d={d} spec={spec:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_handles_masked_rows_and_tile_remainders() {
+        // rows with 0, 1, 2, 3, 4, 5 columns exercise every tile shape
+        let spec = AttentionSpec::routing(vec![vec![0, 1, 2, 3, 4, 5]]);
+        let p = spec.compile(8);
+        assert!(p.row(6).is_empty() && p.row(7).is_empty());
+        let mut rng = Rng::new(5);
+        let (q, k, v) = random_qkv(&mut rng, 8, 4);
+        let out = Blocked.attention(&q, &k, &v, 4, &p).unwrap();
+        assert_eq!(out, Reference.attention(&q, &k, &v, 4, &p).unwrap());
+        assert!(out[6 * 4..].iter().all(|&x| x == 0.0), "masked rows stay zero");
+    }
+
+    #[test]
+    fn blocked_validates_shapes_like_reference() {
+        let p = AttentionSpec::Full.compile(2);
+        assert!(Blocked.attention(&[0.0; 3], &[0.0; 4], &[0.0; 4], 2, &p).is_err());
+        assert!(Blocked.attention(&[], &[], &[], 0, &p).is_err());
+        let mut out = [0f32; 2];
+        assert!(Blocked
+            .attention_rows(&[0.0; 4], &[0.0; 4], &[0.0; 4], 2, &p, 1..3, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn registry_serves_builtins_and_rejects_duplicates() {
+        let r = lookup("reference").expect("built-in");
+        assert_eq!(r.name(), "reference");
+        let b = lookup("blocked").expect("built-in");
+        assert_eq!(b.name(), "blocked");
+        assert!(lookup("warp-drive").is_none());
+        let names = names();
+        assert!(names.contains(&"reference".to_string()));
+        assert!(names.contains(&"blocked".to_string()));
+        assert!(register(Arc::new(Reference)).is_err(), "duplicate name must be rejected");
+    }
+
+    #[test]
+    fn custom_backends_can_register() {
+        /// A deliberately silly wrapper proving third-party registration.
+        #[derive(Debug)]
+        struct Custom;
+        impl Backend for Custom {
+            fn name(&self) -> &'static str {
+                "custom-test-backend"
+            }
+            fn attention_rows(
+                &self,
+                q: &[f32],
+                k: &[f32],
+                v: &[f32],
+                d: usize,
+                pattern: &CompiledPattern,
+                rows: std::ops::Range<usize>,
+                out: &mut [f32],
+            ) -> Result<()> {
+                sparse_attention_rows(q, k, v, d, pattern, rows, out)
+            }
+        }
+        register(Arc::new(Custom)).unwrap();
+        let found = lookup("custom-test-backend").expect("registered");
+        let p = AttentionSpec::local(2).unwrap().compile(4);
+        let mut rng = Rng::new(9);
+        let (q, k, v) = random_qkv(&mut rng, 4, 2);
+        assert_eq!(
+            found.attention(&q, &k, &v, 2, &p).unwrap(),
+            Reference.attention(&q, &k, &v, 2, &p).unwrap()
+        );
+    }
+}

@@ -32,8 +32,11 @@ pub struct CompiledPattern {
 /// Per-row attend-set size summary (for `rtx figure1 --stats`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RowStats {
+    /// Smallest attend-set size across rows.
     pub min: usize,
+    /// Mean attend-set size (`nnz / n`).
     pub mean: f64,
+    /// Largest attend-set size across rows.
     pub max: usize,
 }
 
@@ -75,6 +78,14 @@ impl CompiledPattern {
 
     /// The attend-set S_i as a sorted slice; empty for out-of-range `i`
     /// (so `n = 0` is a total no-op rather than an underflow).
+    ///
+    /// ```
+    /// use routing_transformer::attention::AttentionSpec;
+    /// let p = AttentionSpec::local(3).unwrap().compile(8);
+    /// assert_eq!(p.row(5), &[3, 4, 5]);
+    /// assert_eq!(p.row(0), &[0]);
+    /// assert!(p.row(99).is_empty(), "out-of-range rows are empty, not a panic");
+    /// ```
     pub fn row(&self, i: usize) -> &[usize] {
         if i >= self.n {
             return &[];

@@ -50,16 +50,40 @@
 //!   single nnz-balanced sweep instead of B separate kernel calls,
 //!   executed on the resident [`super::pool::WorkerPool`] by default
 //!   ([`BatchedAttention::attention_with`] takes a per-call
-//!   [`Execution`] override).  The per-row math is exactly
-//!   [`sparse_attention_rows`], making the batched output
-//!   **bit-identical** to B independent
+//!   [`Execution`] override, [`BatchedAttention::attention_backend`] a
+//!   per-call kernel [`Backend`](super::backend::Backend)).  The per-row
+//!   math is exactly
+//!   [`sparse_attention_rows`](super::sparse_attention_rows), making the
+//!   batched output **bit-identical** to B independent
 //!   [`sparse_attention`](super::sparse_attention) calls.
 //!
-//! Consumers: `rtx serve-bench` (`--sequences`/`--route-every`/`--pool`,
-//! printing epoch hit-rate, unchanged-epoch hits, eviction count, dirty
-//! tokens, and batched vs sequential plus pool vs scoped rows/sec),
+//! # Slot lifecycle (birth → serve → re-route → retire)
+//!
+//! A [`RouteSlot`] is born on its first routed lookup: the miss runs the
+//! caller's spec closure, compiles it, and parks the compile on the slot
+//! tagged with the current assignment epoch.  While the slot's
+//! assignment epoch holds, every lookup is an O(1) hit (cluster-epoch
+//! bumps that moved nothing included).  When a k-means update moves
+//! tokens, the next lookup evicts the stale compile and regenerates —
+//! and with a [`MemberCache`] the regeneration itself re-ranks only the
+//! clusters the update's [`AssignmentDelta`] touched (per-cluster
+//! version counters; untouched centroids are bit-unchanged, so their
+//! cached lists stay exact).  When the request ends — the stream closes,
+//! the sequence is retired — the serving loop must call
+//! [`EpochCache::evict_slot`] (as `rtx serve-bench` does after its sweep)
+//! so the per-request compile is garbage-collected instead of leaking;
+//! the eviction is counted in [`CacheStats::evictions`] and the slot's
+//! next lookup (if any) recompiles from scratch.  Static head-plan
+//! compiles are shared across requests and deliberately survive
+//! retirement.
+//!
+//! Consumers: `rtx serve-bench` (`--sequences`/`--route-every`/`--pool`/
+//! `--backend`/`--json`, printing epoch hit-rate, unchanged-epoch hits,
+//! eviction count, dirty tokens, membership rows regenerated vs reused,
+//! and per-backend plus batched-vs-sequential rows/sec),
 //! `bench_complexity` (batched ≥ 2× sequential at B = 8; pool ≥ 1.3×
-//! scoped), `examples/analyze_attention.rs`, the decode property tests,
+//! scoped; incremental regeneration counter-verified),
+//! `examples/analyze_attention.rs`, the decode property tests,
 //! and the stateful model-based suite (`tests/stateful.rs`).
 
 use std::collections::{BTreeSet, HashMap};
@@ -69,7 +93,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::compiled::CompiledPattern;
-use super::engine::{sparse_attention_rows, CacheStats, PatternCache};
+use super::engine::{CacheStats, PatternCache};
 use super::pool::Execution;
 use super::spec::AttentionSpec;
 use crate::kmeans::{AssignmentDelta, SphericalKMeans};
@@ -79,7 +103,9 @@ use crate::kmeans::{AssignmentDelta, SphericalKMeans};
 /// A routed cache slot: one (layer, head) of one request's sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct RouteSlot {
+    /// Transformer layer index.
     pub layer: usize,
+    /// Head index within the layer.
     pub head: usize,
     /// Request/sequence index within a batch (0 for single-sequence use).
     pub seq: usize,
@@ -112,12 +138,28 @@ pub struct RouteUpdate {
 /// the cluster epoch keeps bumping past it.
 #[derive(Debug, Clone)]
 pub struct RoutingSession {
+    /// Process-unique id stamped at construction (clones share it — a
+    /// clone's centroids are bit-identical, so member-cache reuse across
+    /// the clone stays exact; a *new* session gets a fresh nonce so a
+    /// surviving [`MemberCache`] can never mistake its versions for the
+    /// old session's and serve stale lists).
+    nonce: u64,
     layers: usize,
     heads: usize,
+    k: usize,
     kms: Vec<SphericalKMeans>,
     epochs: Vec<u64>,
     assignment_epochs: Vec<u64>,
     dirty: Vec<BTreeSet<usize>>,
+    /// Per-slot, per-cluster monotone version counters: bumped whenever an
+    /// update EMA-moved that cluster's centroid (`delta.counts[c] > 0`).
+    /// A cluster whose version has not moved since a membership list was
+    /// built has a bit-unchanged centroid, so the list is still exact —
+    /// the invariant the incremental regeneration path relies on.
+    cluster_versions: Vec<Vec<u64>>,
+    /// Per-slot dirty *cluster* sets: clusters touched since the set was
+    /// last drained via [`RoutingSession::take_dirty_clusters`].
+    dirty_clusters: Vec<BTreeSet<usize>>,
 }
 
 impl RoutingSession {
@@ -141,13 +183,18 @@ impl RoutingSession {
                 SphericalKMeans::new(k, dim, decay, seed ^ (s as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15))
             })
             .collect();
+        static NONCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         Ok(RoutingSession {
+            nonce: NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             layers,
             heads,
+            k,
             kms,
             epochs: vec![0; layers * heads],
             assignment_epochs: vec![0; layers * heads],
             dirty: vec![BTreeSet::new(); layers * heads],
+            cluster_versions: vec![vec![0; k]; layers * heads],
+            dirty_clusters: vec![BTreeSet::new(); layers * heads],
         })
     }
 
@@ -161,12 +208,20 @@ impl RoutingSession {
         layer * self.heads + head
     }
 
+    /// Number of layers the session routes.
     pub fn layers(&self) -> usize {
         self.layers
     }
 
+    /// Number of heads per layer.
     pub fn heads(&self) -> usize {
         self.heads
+    }
+
+    /// Number of routing clusters per slot (the `k` of every slot's
+    /// [`SphericalKMeans`]).
+    pub fn clusters(&self) -> usize {
+        self.k
     }
 
     /// The slot's current cluster epoch (0 until the first non-empty
@@ -207,6 +262,39 @@ impl RoutingSession {
         std::mem::take(&mut self.dirty[s]).into_iter().collect()
     }
 
+    /// Clusters touched (centroid EMA-moved, i.e. `delta.counts[c] > 0`)
+    /// since the slot's dirty-cluster set was last drained, sorted
+    /// ascending — the cluster-granular worklist an incremental
+    /// re-router consumes.  Single-consumer; multi-consumer flows (e.g.
+    /// several sequences sharing one slot's centroids) should use the
+    /// non-draining per-cluster versions a [`MemberCache`] snapshots
+    /// instead.
+    pub fn dirty_clusters(&self, layer: usize, head: usize) -> Vec<usize> {
+        self.dirty_clusters[self.slot(layer, head)].iter().copied().collect()
+    }
+
+    /// Size of the slot's pending dirty-cluster set.
+    pub fn dirty_cluster_len(&self, layer: usize, head: usize) -> usize {
+        self.dirty_clusters[self.slot(layer, head)].len()
+    }
+
+    /// Drain and return the slot's dirty-cluster set (sorted ascending);
+    /// see [`RoutingSession::dirty_clusters()`].
+    pub fn take_dirty_clusters(&mut self, layer: usize, head: usize) -> Vec<usize> {
+        let s = self.slot(layer, head);
+        std::mem::take(&mut self.dirty_clusters[s]).into_iter().collect()
+    }
+
+    /// The slot's per-cluster version counters (length
+    /// [`RoutingSession::clusters`]): `versions[c]` advances once per
+    /// update whose mini-batch assigned at least one vector to cluster
+    /// `c` — exactly the updates that EMA-moved its centroid.  A
+    /// [`MemberCache`] snapshots this slice to decide which membership
+    /// lists are stale.
+    pub fn cluster_versions(&self, layer: usize, head: usize) -> &[u64] {
+        &self.cluster_versions[self.slot(layer, head)]
+    }
+
     /// The slot's k-means state (e.g. for cohesion diagnostics).
     pub fn kmeans(&self, layer: usize, head: usize) -> &SphericalKMeans {
         &self.kms[self.slot(layer, head)]
@@ -229,6 +317,14 @@ impl RoutingSession {
             if delta.changed() {
                 self.assignment_epochs[s] = self.epochs[s];
                 self.dirty[s].extend(delta.moved_tokens());
+            }
+            for (c, &count) in delta.counts.iter().enumerate() {
+                if count > 0 {
+                    // this cluster's centroid EMA-moved: its top-w
+                    // membership list may have changed
+                    self.cluster_versions[s][c] += 1;
+                    self.dirty_clusters[s].insert(c);
+                }
             }
         }
         RouteUpdate {
@@ -273,12 +369,189 @@ impl RoutingSession {
             || self.routing_spec(slot.layer, slot.head, xs, n, w),
         )
     }
+
+    /// Incremental (dirty-cluster-only) routing spec: equal to
+    /// [`RoutingSession::routing_spec`] for the same arguments, but
+    /// recomputes a cluster's top-w membership list only when that
+    /// cluster's version moved since `members` last saw the slot —
+    /// i.e. only clusters an [`AssignmentDelta`] actually touched.
+    ///
+    /// Exactness: an untouched cluster's centroid is bit-unchanged, so
+    /// over identical routing vectors its top-w list is identical; any
+    /// shape change (different `xs` contents, `n`, effective `w`, or a
+    /// cache built against another slot/shape) conservatively falls back
+    /// to a full rebuild.  Per-call and cumulative accounting lands in
+    /// [`MemberCache::stats()`] — the regenerated-vs-total counter
+    /// `rtx serve-bench` reports.
+    pub fn routing_spec_cached(
+        &self,
+        layer: usize,
+        head: usize,
+        members: &mut MemberCache,
+        xs: &[f32],
+        n: usize,
+        w: usize,
+    ) -> AttentionSpec {
+        let s = self.slot(layer, head);
+        let km = &self.kms[s];
+        let versions = &self.cluster_versions[s];
+        members.regenerate((self.nonce, layer, head), km, versions, xs, n, w);
+        AttentionSpec::routing(members.members.clone())
+    }
+
+    /// [`RoutingSession::routed_pattern`] through a [`MemberCache`]: the
+    /// epoch-cache hit path is unchanged (no spec regeneration at all on
+    /// an assignment-epoch hit), and when the spec *is* regenerated, only
+    /// the delta-touched clusters are recomputed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn routed_pattern_cached(
+        &self,
+        cache: &mut EpochCache,
+        members: &mut MemberCache,
+        slot: RouteSlot,
+        xs: &[f32],
+        n: usize,
+        w: usize,
+    ) -> Arc<CompiledPattern> {
+        cache.get_routed_at(
+            slot,
+            self.epoch(slot.layer, slot.head),
+            self.assignment_epoch(slot.layer, slot.head),
+            n,
+            || self.routing_spec_cached(slot.layer, slot.head, members, xs, n, w),
+        )
+    }
+}
+
+// ------------------------------------------------------- member cache
+
+/// Counters for one [`MemberCache`] — the incremental-regeneration
+/// savings signal (`rtx serve-bench` prints the aggregate).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegenStats {
+    /// Cluster membership lists recomputed (top-w re-ranked).
+    pub regenerated: u64,
+    /// Cluster membership lists served unchanged from the cache.
+    pub reused: u64,
+    /// Calls that rebuilt every list because the cache shape was stale
+    /// (first use, different `xs`/`n`/`w`, or another slot's snapshot).
+    pub full_rebuilds: u64,
+    /// Total [`RoutingSession::routing_spec_cached`] calls.
+    pub calls: u64,
+}
+
+impl RegenStats {
+    /// Total membership rows considered (`regenerated + reused`).
+    pub fn rows_total(&self) -> u64 {
+        self.regenerated + self.reused
+    }
+
+    /// Fraction of membership rows served without recomputation; 0.0
+    /// before any call.
+    pub fn reuse_rate(&self) -> f64 {
+        if self.rows_total() == 0 {
+            0.0
+        } else {
+            self.reused as f64 / self.rows_total() as f64
+        }
+    }
+}
+
+/// Caller-owned cache of one routed stream's balanced top-w membership
+/// lists, enabling dirty-cluster-only spec regeneration.
+///
+/// One `MemberCache` belongs to one consumer of one slot's centroids
+/// (e.g. one `(layer, head, sequence)` routed stream): it remembers the
+/// routing vectors, shape, membership lists, and the per-cluster version
+/// snapshot they were built at.  On the next
+/// [`RoutingSession::routing_spec_cached`] call with the same vectors and
+/// shape, only clusters whose session version advanced (their centroid
+/// EMA-moved since) are re-ranked; everything else is reused, exactly.
+/// Any mismatch — including NaN-poisoned vectors, which never compare
+/// equal — falls back to a full rebuild, so the cache can be wrong only
+/// in cost, never in content.
+#[derive(Debug, Clone, Default)]
+pub struct MemberCache {
+    /// (session nonce, layer, head) the snapshot was taken against — a
+    /// cache wandering between slots, or surviving a session that was
+    /// dropped and rebuilt, must full-rebuild rather than trust another
+    /// centroid state's version counters.
+    slot: (u64, usize, usize),
+    versions: Vec<u64>,
+    xs: Vec<f32>,
+    n: usize,
+    /// Effective membership width (`w.min(n)`), so `w = 5, n = 3` and
+    /// `w = 9, n = 3` share one cache entry (identical lists).
+    w: usize,
+    members: Vec<Vec<usize>>,
+    valid: bool,
+    stats: RegenStats,
+}
+
+impl MemberCache {
+    /// An empty cache; the first use is always a full rebuild.
+    pub fn new() -> MemberCache {
+        MemberCache::default()
+    }
+
+    /// Cumulative regeneration counters.
+    pub fn stats(&self) -> RegenStats {
+        self.stats
+    }
+
+    /// The cached membership lists (empty before first use).
+    pub fn members(&self) -> &[Vec<usize>] {
+        &self.members
+    }
+
+    /// Bring the cached lists up to date against `km` + `versions`; see
+    /// [`RoutingSession::routing_spec_cached`].
+    fn regenerate(
+        &mut self,
+        slot: (u64, usize, usize),
+        km: &SphericalKMeans,
+        versions: &[u64],
+        xs: &[f32],
+        n: usize,
+        w: usize,
+    ) {
+        let w_eff = w.min(n);
+        self.stats.calls += 1;
+        let shape_ok = self.valid
+            && self.slot == slot
+            && self.members.len() == km.k
+            && self.versions.len() == km.k
+            && self.n == n
+            && self.w == w_eff
+            && self.xs == xs;
+        if !shape_ok {
+            self.stats.full_rebuilds += 1;
+            self.stats.regenerated += km.k as u64;
+            self.members = km.top_w_members(xs, n, w);
+            self.versions = versions.to_vec();
+            self.xs = xs.to_vec();
+            self.n = n;
+            self.w = w_eff;
+            self.slot = slot;
+            self.valid = true;
+            return;
+        }
+        for c in 0..km.k {
+            if self.versions[c] == versions[c] {
+                self.stats.reused += 1;
+            } else {
+                self.members[c] = km.top_w_of(c, xs, n, w);
+                self.versions[c] = versions[c];
+                self.stats.regenerated += 1;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------- cache
 
 /// Slot-level hit/miss counters for an [`EpochCache`] (spec regeneration,
-/// not compile work — see [`EpochCache::stats`] for the compile side).
+/// not compile work — see [`EpochCache::stats()`] for the compile side).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EpochCacheStats {
     /// Routed lookups served from the slot's live compile (its assignment
@@ -296,6 +569,7 @@ pub struct EpochCacheStats {
 }
 
 impl EpochCacheStats {
+    /// Total routed lookups (`epoch_hits + epoch_misses`).
     pub fn lookups(&self) -> u64 {
         self.epoch_hits + self.epoch_misses
     }
@@ -340,7 +614,7 @@ struct SlotEntry {
 /// for why this reuse is an approximation of top-w membership
 /// stability).  When the assignment epoch moves — a
 /// k-means update really moved tokens — the stale compile is dropped
-/// (counted as an eviction in [`EpochCache::stats`]) and the new spec is
+/// (counted as an eviction in [`EpochCache::stats()`]) and the new spec is
 /// built via the caller's closure and compiled.  A pattern from
 /// superseded assignments is therefore never served, slot evictions can
 /// never touch a pinned static compile (or another slot's), and the
@@ -352,12 +626,13 @@ pub struct EpochCache {
     cache: PatternCache,
     slots: HashMap<RouteSlot, SlotEntry>,
     /// Hit/miss/eviction counters for the routed (slot-owned) side,
-    /// merged with the static side by [`EpochCache::stats`].
+    /// merged with the static side by [`EpochCache::stats()`].
     routed: CacheStats,
     stats: EpochCacheStats,
 }
 
 impl EpochCache {
+    /// An empty cache with zeroed counters.
     pub fn new() -> EpochCache {
         EpochCache::default()
     }
@@ -389,6 +664,23 @@ impl EpochCache {
     /// `epoch` advanced while `assignment_epoch` did not serves the live
     /// compile and counts an [`EpochCacheStats::unchanged_epochs`] hit —
     /// the recompile the delta proved unnecessary.
+    ///
+    /// ```
+    /// use routing_transformer::attention::{AttentionSpec, EpochCache, RouteSlot};
+    /// let mut cache = EpochCache::new();
+    /// let slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+    /// let spec = AttentionSpec::routing(vec![vec![0, 1, 2]]);
+    /// // compiled at cluster epoch 1, assignment epoch 1
+    /// let a = cache.get_routed_at(slot, 1, 1, 8, || spec.clone());
+    /// // centroids drifted (epoch 2) but no assignment moved: same compile
+    /// let b = cache.get_routed_at(slot, 2, 1, 8, || unreachable!("served live"));
+    /// assert!(std::sync::Arc::ptr_eq(&a, &b));
+    /// assert_eq!(cache.epoch_stats().unchanged_epochs, 1);
+    /// // assignments moved (epoch 3): the stale compile is evicted
+    /// let c = cache.get_routed_at(slot, 3, 3, 8, || AttentionSpec::routing(vec![vec![0, 3]]));
+    /// assert!(!std::sync::Arc::ptr_eq(&a, &c));
+    /// assert_eq!(cache.stats().evictions, 1);
+    /// ```
     pub fn get_routed_at(
         &mut self,
         slot: RouteSlot,
@@ -464,6 +756,7 @@ impl EpochCache {
         self.cache.len() + self.slots.len()
     }
 
+    /// True when neither a static nor a routed compile is live.
     pub fn is_empty(&self) -> bool {
         self.cache.is_empty() && self.slots.is_empty()
     }
@@ -496,7 +789,9 @@ struct SeqRows {
 /// (nearly) equal nnz — so a batch where one request routes densely and
 /// another sparsely still spreads evenly, and chunks may span sequence
 /// boundaries.  [`BatchedAttention::attention`] runs each chunk on its
-/// own worker thread via [`sparse_attention_rows`], which makes the
+/// own worker thread via the selected
+/// [`Backend`](super::backend::Backend)'s row kernel (the scalar
+/// [`Reference`](super::backend::Reference) by default), which makes the
 /// output bit-identical to B independent
 /// [`sparse_attention`](super::sparse_attention) calls.
 #[derive(Debug, Clone)]
@@ -595,6 +890,8 @@ impl BatchedAttention {
         self.patterns.iter().map(|p| p.cost(d)).sum()
     }
 
+    /// Number of planned worker chunks (the `workers` the plan was built
+    /// with).
     pub fn num_workers(&self) -> usize {
         self.plan.len()
     }
@@ -607,6 +904,7 @@ impl BatchedAttention {
             .collect()
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_chunk(
         &self,
         q: &[f32],
@@ -614,6 +912,7 @@ impl BatchedAttention {
         v: &[f32],
         d: usize,
         runs: &[SeqRows],
+        backend: &dyn super::backend::Backend,
         out: &mut [f32],
     ) -> Result<()> {
         let stride = self.n * d;
@@ -622,7 +921,7 @@ impl BatchedAttention {
             let (head, tail) = std::mem::take(&mut rest).split_at_mut(run.rows.len() * d);
             rest = tail;
             let base = run.seq * stride;
-            sparse_attention_rows(
+            backend.attention_rows(
                 &q[base..base + stride],
                 &k[base..base + stride],
                 &v[base..base + stride],
@@ -649,7 +948,8 @@ impl BatchedAttention {
     /// [`Execution`] strategy (inline reference, scoped spawn-per-call
     /// baseline, or a resident pool) — all three are bit-identical.  One
     /// worker per non-empty chunk; a single-chunk plan runs on the
-    /// calling thread.
+    /// calling thread.  Runs the [`Reference`](super::backend::Reference)
+    /// kernel; see [`BatchedAttention::attention_backend`].
     pub fn attention_with(
         &self,
         q: &[f32],
@@ -657,6 +957,23 @@ impl BatchedAttention {
         v: &[f32],
         d: usize,
         exec: Execution<'_>,
+    ) -> Result<Vec<f32>> {
+        self.attention_backend(q, k, v, d, exec, &super::backend::Reference)
+    }
+
+    /// [`BatchedAttention::attention_with`] with an explicit
+    /// [`Backend`](super::backend::Backend): every chunk's rows run
+    /// through `backend` instead of the scalar reference kernel.  All
+    /// registered backends are bit-identical, so backend choice changes
+    /// wall-clock only, never the output.
+    pub fn attention_backend(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        exec: Execution<'_>,
+        backend: &dyn super::backend::Backend,
     ) -> Result<Vec<f32>> {
         let b = self.patterns.len();
         if d == 0 {
@@ -685,7 +1002,7 @@ impl BatchedAttention {
                 work.push((runs.as_slice(), head));
             }
         }
-        exec.run(work, |runs, head| self.run_chunk(q, k, v, d, runs, head))?;
+        exec.run(work, |runs, head| self.run_chunk(q, k, v, d, runs, backend, head))?;
         Ok(out)
     }
 }
@@ -922,6 +1239,104 @@ mod tests {
         assert_eq!(*p2, s2.compile(8));
         assert_eq!(cache.stats().evictions, 1);
         assert_eq!(cache.slot_assignment_epoch(slot), Some(5));
+    }
+
+    #[test]
+    fn incremental_spec_regen_equals_from_scratch_and_reuses_untouched() {
+        // a sparse mini-batch EMA-moves only the clusters it assigns to;
+        // the member cache must re-rank exactly those and reuse the rest
+        let mut s = RoutingSession::new(1, 1, 4, 4, 0.5, 9).unwrap();
+        let mut members = MemberCache::new();
+        let mut rng = Rng::new(2);
+        let xs: Vec<f32> = (0..16 * 4).map(|_| rng.normal() as f32).collect();
+        let spec0 = s.routing_spec_cached(0, 0, &mut members, &xs, 16, 4);
+        assert_eq!(spec0, s.routing_spec(0, 0, &xs, 16, 4));
+        assert_eq!(members.stats().full_rebuilds, 1, "first use is a full rebuild");
+        assert_eq!(members.stats().regenerated, 4);
+        // no update in between: every list is reused
+        let spec1 = s.routing_spec_cached(0, 0, &mut members, &xs, 16, 4);
+        assert_eq!(spec1, spec0);
+        assert_eq!(members.stats().reused, 4);
+        // a one-vector update touches exactly one cluster
+        let upd = s.update(0, 0, &xs[0..4], 1);
+        let touched: Vec<usize> = upd
+            .delta
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(c, _)| c)
+            .collect();
+        assert_eq!(touched.len(), 1);
+        assert_eq!(s.dirty_clusters(0, 0), touched);
+        let before = members.stats();
+        let spec2 = s.routing_spec_cached(0, 0, &mut members, &xs, 16, 4);
+        assert_eq!(spec2, s.routing_spec(0, 0, &xs, 16, 4), "incremental == from-scratch");
+        let after = members.stats();
+        assert_eq!(after.regenerated - before.regenerated, 1, "only the touched cluster");
+        assert_eq!(after.reused - before.reused, 3);
+        assert_eq!(after.full_rebuilds, 1, "no spurious full rebuild");
+        assert!(after.reuse_rate() > 0.5);
+        // the cluster worklist drains exactly once
+        assert_eq!(s.take_dirty_clusters(0, 0), touched);
+        assert_eq!(s.dirty_cluster_len(0, 0), 0);
+        assert_eq!(s.take_dirty_clusters(0, 0), Vec::<usize>::new());
+        // changed content falls back to a (still exact) full rebuild
+        let xs2: Vec<f32> = (0..16 * 4).map(|_| rng.normal() as f32).collect();
+        let spec3 = s.routing_spec_cached(0, 0, &mut members, &xs2, 16, 4);
+        assert_eq!(spec3, s.routing_spec(0, 0, &xs2, 16, 4));
+        assert_eq!(members.stats().full_rebuilds, 2);
+        // a changed effective width does too (w is clamped to n first)
+        let spec4 = s.routing_spec_cached(0, 0, &mut members, &xs2, 16, 7);
+        assert_eq!(spec4, s.routing_spec(0, 0, &xs2, 16, 7));
+        assert_eq!(members.stats().full_rebuilds, 3);
+    }
+
+    #[test]
+    fn member_cache_rebuilds_for_a_replaced_session() {
+        // same shape, same xs, but a *new* session (fresh centroids):
+        // the surviving cache must full-rebuild, never trust the old
+        // snapshot — while a clone (bit-identical state) keeps reusing
+        let mut rng = Rng::new(6);
+        let xs: Vec<f32> = (0..12 * 4).map(|_| rng.normal() as f32).collect();
+        let s1 = RoutingSession::new(1, 1, 3, 4, 0.5, 7).unwrap();
+        let mut members = MemberCache::new();
+        s1.routing_spec_cached(0, 0, &mut members, &xs, 12, 3);
+        let clone = s1.clone();
+        clone.routing_spec_cached(0, 0, &mut members, &xs, 12, 3);
+        assert_eq!(members.stats().full_rebuilds, 1, "a clone shares the nonce and reuses");
+        assert_eq!(members.stats().reused, 3);
+        let s2 = RoutingSession::new(1, 1, 3, 4, 0.5, 99).unwrap();
+        let spec = s2.routing_spec_cached(0, 0, &mut members, &xs, 12, 3);
+        assert_eq!(members.stats().full_rebuilds, 2, "a replaced session must rebuild");
+        assert_eq!(spec, s2.routing_spec(0, 0, &xs, 12, 3), "and serve ITS centroids' lists");
+    }
+
+    #[test]
+    fn retired_sequence_slots_are_garbage_collected() {
+        // stream-close GC: evict_slot drops the per-request compile,
+        // counts the eviction, and leaves statics + other requests alone
+        let mut session = RoutingSession::new(1, 1, 2, 4, 0.5, 8).unwrap();
+        let mut cache = EpochCache::new();
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let local = AttentionSpec::local(2).unwrap();
+        cache.get_static(&local, 8);
+        let a = RouteSlot { layer: 0, head: 0, seq: 0 };
+        let b = RouteSlot { layer: 0, head: 0, seq: 1 };
+        session.routed_pattern(&mut cache, a, &xs, 8, 4);
+        session.routed_pattern(&mut cache, b, &xs, 8, 4);
+        assert_eq!(cache.len(), 3);
+        let evictions = cache.stats().evictions;
+        assert!(cache.evict_slot(a), "request 0 completes: its slot is collected");
+        assert_eq!(cache.stats().evictions, evictions + 1, "GC counts as an eviction");
+        assert_eq!(cache.len(), 2, "the static and the live request survive");
+        assert_eq!(cache.slot_epoch(a), None, "the retired compile is gone");
+        // a later lookup for the retired slot recompiles from scratch
+        let misses = cache.epoch_stats().epoch_misses;
+        session.routed_pattern(&mut cache, a, &xs, 8, 4);
+        assert_eq!(cache.epoch_stats().epoch_misses, misses + 1);
+        assert!(!cache.evict_slot(RouteSlot { layer: 0, head: 0, seq: 9 }), "absent is a no-op");
     }
 
     #[test]

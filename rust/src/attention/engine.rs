@@ -70,8 +70,13 @@
 //! batched ≥ 2× over sequential at B = 8; pool ≥ 1.3× over scoped
 //! spawns), `examples/analyze_attention.rs`, the engine property tests,
 //! and the stateful model-based suite (`tests/stateful.rs`).
-//! Multi-backend execution (handing the CSR arrays to an accelerator
-//! kernel) is the next step; see ROADMAP.md.
+//!
+//! The per-row kernel itself is pluggable: [`super::backend`] abstracts
+//! "execute these CSR rows" behind a registerable
+//! [`Backend`](super::backend::Backend) trait (scalar reference, the
+//! cache-blocked host kernel, and the `xla`-gated accelerator landing
+//! slot), selected per call via [`ShardedPattern::attention_backend`].
+//! See `ARCHITECTURE.md` for the full pipeline.
 
 use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
@@ -132,6 +137,7 @@ pub struct PatternCache {
 }
 
 impl PatternCache {
+    /// An empty cache with zeroed counters.
     pub fn new() -> PatternCache {
         PatternCache::default()
     }
@@ -169,10 +175,12 @@ impl PatternCache {
         self.entries.values().map(BTreeMap::len).sum()
     }
 
+    /// True when no compile is cached.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Hit/miss/eviction counters since construction (or [`PatternCache::clear`]).
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
@@ -189,7 +197,7 @@ impl PatternCache {
 /// One worker's slice of a pattern: a contiguous row range plus its work.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Shard {
-    /// Position in [`ShardedPattern::shards`].
+    /// Position in [`ShardedPattern::shards()`].
     pub index: usize,
     /// Contiguous query rows `[start, end)` this shard owns.
     pub rows: Range<usize>,
@@ -198,6 +206,7 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// Number of query rows this shard owns (possibly 0 when `k > n`).
     pub fn n_rows(&self) -> usize {
         self.rows.end - self.rows.start
     }
@@ -269,14 +278,17 @@ impl ShardedPattern {
         ShardedPattern { pattern, shards }
     }
 
+    /// The shared compiled pattern the shards slice.
     pub fn pattern(&self) -> &Arc<CompiledPattern> {
         &self.pattern
     }
 
+    /// The shard list (consecutive, disjoint, covering `0..n`).
     pub fn shards(&self) -> &[Shard] {
         &self.shards
     }
 
+    /// Number of shards (the `k` the split was built with).
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -293,6 +305,8 @@ impl ShardedPattern {
     /// [`ShardedPattern::attention`] with an explicit per-call
     /// [`Execution`] strategy (inline reference, scoped spawn-per-call
     /// baseline, or a resident pool) — all three are bit-identical.
+    /// Runs the [`Reference`](super::backend::Reference) kernel; see
+    /// [`ShardedPattern::attention_backend`] to pick another backend.
     ///
     /// Empty shards dispatch nothing, the first non-empty shard runs on
     /// the calling thread, and a single-worker split skips work
@@ -304,6 +318,23 @@ impl ShardedPattern {
         v: &[f32],
         d: usize,
         exec: Execution<'_>,
+    ) -> Result<Vec<f32>> {
+        self.attention_backend(q, k, v, d, exec, &super::backend::Reference)
+    }
+
+    /// [`ShardedPattern::attention_with`] with an explicit
+    /// [`Backend`](super::backend::Backend): every shard's rows run
+    /// through `backend` instead of the scalar reference kernel.  All
+    /// registered backends are bit-identical, so this changes wall-clock
+    /// only, never the output.
+    pub fn attention_backend(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        exec: Execution<'_>,
+        backend: &dyn super::backend::Backend,
     ) -> Result<Vec<f32>> {
         let n = self.pattern.n();
         check_qkv(q, k, v, n, d)?;
@@ -320,7 +351,7 @@ impl ShardedPattern {
                 work.push((shard.rows.clone(), head));
             }
         }
-        exec.run(work, |rows, head| sparse_attention_rows(q, k, v, d, pattern, rows, head))?;
+        exec.run(work, |rows, head| backend.attention_rows(q, k, v, d, pattern, rows, head))?;
         Ok(out)
     }
 }
@@ -338,6 +369,34 @@ fn check_qkv(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Result<()> 
             k.len(),
             v.len()
         );
+    }
+    Ok(())
+}
+
+/// Shared argument validation for the row-range kernel contract — used by
+/// [`sparse_attention_rows`] and every built-in
+/// [`super::backend::Backend`] implementation, and public (re-exported as
+/// `attention::backend::check_rows_args`) so external backends can reject
+/// bad shapes with the exact same errors instead of re-implementing the
+/// checks: d >= 1, q/k/v each `[n, d]`, `rows` within `0..n` and
+/// non-inverted, `out` exactly `rows.len() * d`.
+#[allow(clippy::too_many_arguments)]
+pub fn check_rows_args(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    pattern: &CompiledPattern,
+    rows: &Range<usize>,
+    out: &[f32],
+) -> Result<()> {
+    let n = pattern.n();
+    check_qkv(q, k, v, n, d)?;
+    if rows.end > n || rows.start > rows.end {
+        bail!("row range {}..{} out of bounds for n = {n}", rows.start, rows.end);
+    }
+    if out.len() != rows.len() * d {
+        bail!("out must hold rows.len() * d = {} values (got {})", rows.len() * d, out.len());
     }
     Ok(())
 }
@@ -376,14 +435,7 @@ pub fn sparse_attention_rows(
     rows: Range<usize>,
     out: &mut [f32],
 ) -> Result<()> {
-    let n = pattern.n();
-    check_qkv(q, k, v, n, d)?;
-    if rows.end > n || rows.start > rows.end {
-        bail!("row range {}..{} out of bounds for n = {n}", rows.start, rows.end);
-    }
-    if out.len() != rows.len() * d {
-        bail!("out must hold rows.len() * d = {} values (got {})", rows.len() * d, out.len());
-    }
+    check_rows_args(q, k, v, d, pattern, &rows, out)?;
     let scale = 1.0 / (d as f64).sqrt();
     let mut scores: Vec<f64> = Vec::new();
     let mut acc: Vec<f64> = vec![0.0; d];

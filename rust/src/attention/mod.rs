@@ -39,14 +39,26 @@
 //!    [`WorkerPool`] (sized by `available_parallelism`, `RTX_WORKERS`
 //!    override) replaces the old per-call scoped spawns; [`Execution`]
 //!    picks inline / scoped / pool per call, all bit-identical.
+//! 6. [`backend`] — the kernel layer: a registerable [`Backend`] trait
+//!    ("execute these CSR rows against [n, d] Q/K/V") with the scalar
+//!    [`Reference`] oracle, the cache-blocked [`Blocked`] host kernel
+//!    (bit-identical, ≥ 1.5× faster), and the `xla`-feature-gated
+//!    accelerator landing slot; selected per call via
+//!    [`ShardedPattern::attention_backend`] /
+//!    [`BatchedAttention::attention_backend`].
 //!
 //! Consumers: the `figure1` and `serve-bench` CLIs, the complexity bench,
 //! the Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
 //! k-means routing integration
 //! ([`crate::kmeans::SphericalKMeans::routing_spec`]), the property
 //! tests that pin the semantics shared with the L2 graph, and the
-//! stateful model-based suite (`tests/stateful.rs`).
+//! stateful model-based suite (`tests/stateful.rs`).  The full pipeline
+//! (spec → compile → cache → shard/batch → execution → backend) is
+//! documented in `ARCHITECTURE.md` at the repository root.
 
+#![warn(missing_docs)]
+
+pub mod backend;
 pub mod compiled;
 pub mod complexity;
 pub mod decode;
@@ -54,11 +66,12 @@ pub mod engine;
 pub mod pool;
 pub mod spec;
 
+pub use backend::{Backend, Blocked, Reference};
 pub use compiled::{CompiledPattern, RowIter, RowStats, NO_CLUSTER};
 pub use complexity::optimal_clusters;
 pub use decode::{
-    sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, RouteSlot,
-    RouteUpdate, RoutingSession,
+    sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, MemberCache,
+    RegenStats, RouteSlot, RouteUpdate, RoutingSession,
 };
 pub use engine::{
     dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, PatternCache,

@@ -168,6 +168,23 @@ fn worker_count(env_override: Option<&str>, fallback: usize) -> usize {
 
 /// A resident, lazily-spawned thread pool executing carved attention
 /// work (see the module docs for sizing and panic semantics).
+///
+/// ```
+/// use routing_transformer::attention::WorkerPool;
+/// let pool = WorkerPool::with_workers(2);
+/// let mut out = vec![0f32; 6];
+/// let work: Vec<(usize, &mut [f32])> = out.chunks_mut(3).enumerate().collect();
+/// pool.run(work, |i, slice| {
+///     slice.fill(i as f32);
+///     Ok(())
+/// })
+/// .unwrap();
+/// assert_eq!(out, [0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+/// // a failing job surfaces as Err and the pool stays usable
+/// let mut out = vec![0f32; 6];
+/// let work: Vec<(usize, &mut [f32])> = out.chunks_mut(3).enumerate().collect();
+/// assert!(pool.run(work, |_, _| anyhow::bail!("boom")).is_err());
+/// ```
 pub struct WorkerPool {
     shared: Arc<Shared>,
     workers: usize,

@@ -46,12 +46,22 @@ pub enum AttentionSpec {
 }
 
 impl AttentionSpec {
+    /// Causal full attention (constructor-style alias for
+    /// [`AttentionSpec::Full`]).
     pub fn full() -> AttentionSpec {
         AttentionSpec::Full
     }
 
     /// Local attention; rejects `window == 0` (an empty window would make
     /// every S_i empty and used to underflow in the old pattern code).
+    ///
+    /// ```
+    /// use routing_transformer::attention::AttentionSpec;
+    /// let local = AttentionSpec::local(4).unwrap();
+    /// let p = local.compile(16);
+    /// assert_eq!(p.row(10), &[7, 8, 9, 10]);
+    /// assert!(AttentionSpec::local(0).is_err(), "degenerate windows are rejected");
+    /// ```
     pub fn local(window: usize) -> Result<AttentionSpec> {
         if window == 0 {
             bail!("local attention requires window >= 1 (got 0)");

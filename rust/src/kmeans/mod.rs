@@ -5,6 +5,8 @@
 //! routing sparsity patterns), the complexity model, and property tests
 //! that pin down the EMA/assignment semantics shared with the L2 graph.
 
+#![warn(missing_docs)]
+
 use crate::attention::AttentionSpec;
 use crate::util::rng::Rng;
 
@@ -57,8 +59,11 @@ impl AssignmentDelta {
 /// Online spherical k-means with EMA centroid updates.
 #[derive(Debug, Clone)]
 pub struct SphericalKMeans {
+    /// Number of clusters (>= 1).
     pub k: usize,
+    /// Dimensionality of the routing vectors (>= 1).
     pub dim: usize,
+    /// EMA decay: `mu <- decay * mu + (1 - decay) * batch_mean`.
     pub decay: f32,
     /// Row-major [k, dim], unit-normalized.
     pub centroids: Vec<f32>,
@@ -92,6 +97,7 @@ impl SphericalKMeans {
         }
     }
 
+    /// Centroid `c` as a `[dim]` slice.
     pub fn centroid(&self, c: usize) -> &[f32] {
         &self.centroids[c * self.dim..(c + 1) * self.dim]
     }
@@ -126,26 +132,32 @@ impl SphericalKMeans {
     /// serving loop down with it.  A NaN-scored token is only selected
     /// once every finite-scoring token already is (i.e. when `w == n`).
     pub fn top_w_members(&self, xs: &[f32], n: usize, w: usize) -> Vec<Vec<usize>> {
+        (0..self.k).map(|c| self.top_w_of(c, xs, n, w)).collect()
+    }
+
+    /// One centroid's balanced top-w membership list — the single-cluster
+    /// unit of [`SphericalKMeans::top_w_members`] (identical ordering and
+    /// NaN semantics), exposed so an incremental re-router can regenerate
+    /// only the clusters an update actually touched (see
+    /// `attention::decode::MemberCache`).
+    pub fn top_w_of(&self, c: usize, xs: &[f32], n: usize, w: usize) -> Vec<usize> {
         assert_eq!(xs.len(), n * self.dim);
+        assert!(c < self.k, "cluster {c} out of bounds for k = {}", self.k);
         let w = w.min(n);
-        (0..self.k)
-            .map(|c| {
-                let mu = self.centroid(c);
-                let mut scored: Vec<(f32, usize)> = (0..n)
-                    .map(|i| (dot(mu, &xs[i * self.dim..(i + 1) * self.dim]), i))
-                    .collect();
-                scored.sort_by(|a, b| match (a.0.is_nan(), b.0.is_nan()) {
-                    (false, false) => b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)),
-                    (true, true) => a.1.cmp(&b.1),
-                    // NaN scores sort last, after every finite score
-                    (true, false) => std::cmp::Ordering::Greater,
-                    (false, true) => std::cmp::Ordering::Less,
-                });
-                let mut idx: Vec<usize> = scored[..w].iter().map(|&(_, i)| i).collect();
-                idx.sort_unstable();
-                idx
-            })
-            .collect()
+        let mu = self.centroid(c);
+        let mut scored: Vec<(f32, usize)> = (0..n)
+            .map(|i| (dot(mu, &xs[i * self.dim..(i + 1) * self.dim]), i))
+            .collect();
+        scored.sort_by(|a, b| match (a.0.is_nan(), b.0.is_nan()) {
+            (false, false) => b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)),
+            (true, true) => a.1.cmp(&b.1),
+            // NaN scores sort last, after every finite score
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+        });
+        let mut idx: Vec<usize> = scored[..w].iter().map(|&(_, i)| i).collect();
+        idx.sort_unstable();
+        idx
     }
 
     /// One EMA update from a mini-batch of vectors (xs row-major [n, dim]):
@@ -232,14 +244,17 @@ impl SphericalKMeans {
     }
 }
 
+/// Plain dot product over two equal-length slices.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean norm.
 pub fn norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
 
+/// Scale `a` to unit norm in place (norm clamped away from zero).
 pub fn normalize(a: &mut [f32]) {
     let n = norm(a).max(1e-6);
     for x in a.iter_mut() {
@@ -320,6 +335,26 @@ mod tests {
             assert_eq!(m.len(), 10);
             assert!(m.windows(2).all(|p| p[0] < p[1]), "sorted unique");
         }
+    }
+
+    #[test]
+    fn top_w_of_matches_full_membership_per_cluster() {
+        let km = SphericalKMeans::new(4, 8, 0.5, 17);
+        let mut xs = clustered_data(24, 8, 4, 18);
+        xs[5 * 8] = f32::NAN; // NaN ordering must match too
+        for w in [1usize, 3, 24, 40] {
+            let all = km.top_w_members(&xs, 24, w);
+            for c in 0..4 {
+                assert_eq!(all[c], km.top_w_of(c, &xs, 24, w), "cluster {c}, w {w}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn top_w_of_rejects_bad_cluster() {
+        let km = SphericalKMeans::new(2, 4, 0.5, 1);
+        km.top_w_of(2, &[0.0; 8], 2, 1);
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //!   spherical k-means routing, Adam + centroid-EMA train step; AOT-lowered
 //!   to HLO text by `python/compile/aot.py`.
 //! * **L3** — this crate: the coordinator that loads the HLO artifacts via
-//!   PJRT ([`runtime`]), generates workloads ([`data`], [`tokenizer`]),
-//!   drives training/eval ([`coordinator`]), samples ([`sampler`]),
+//!   PJRT (`runtime`), generates workloads ([`data`], [`tokenizer`]),
+//!   drives training/eval (`coordinator`), samples ([`sampler`]),
 //!   and reproduces every table and figure of the paper ([`analysis`],
 //!   [`attention`], `rust/benches/`).  Sparsity semantics flow through one
 //!   spec→compile pipeline: a declarative
@@ -27,8 +27,8 @@
 //! Python runs once at build time (`make artifacts`); the `rtx` binary is
 //! self-contained afterwards.
 //!
-//! The PJRT-backed layers ([`runtime`], [`coordinator`], [`bench`],
-//! [`config`], and the sampler's `Generator`) sit behind the default-on
+//! The PJRT-backed layers (`runtime`, `coordinator`, `bench`,
+//! `config`, and the sampler's `Generator`) sit behind the default-on
 //! `xla` cargo feature; `--no-default-features` builds the host-only
 //! crate (attention + engine, kmeans, analysis, data, tokenizer, util)
 //! without the XLA native toolchain, which is what CI's tier-1 job runs.

@@ -10,7 +10,8 @@
 //! rtx analyze  [--variant analysis] [--ckpt CKPT] [--runs N]   Table 6 JSD
 //! rtx figure1  [--n 64] [--window 8] [--stride 8] [--clusters 8] [--stats]
 //! rtx serve-bench [--n 256] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
-//!                 [--sequences 1] [--route-every 2] [--pool]
+//!                 [--sequences 1] [--route-every 2] [--drift-every 4]
+//!                 [--backend reference,blocked] [--pool] [--json]
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -19,8 +20,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 use routing_transformer::analysis;
 use routing_transformer::attention::{
-    optimal_clusters, sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern,
-    EpochCache, Execution, RouteSlot, RoutingSession, WorkerPool,
+    backend, optimal_clusters, sparse_attention, AttentionSpec, Backend, BatchedAttention,
+    CompiledPattern, EpochCache, Execution, MemberCache, RegenStats, RouteSlot, RoutingSession,
+    WorkerPool,
 };
 use routing_transformer::coordinator::{
     default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
@@ -32,6 +34,7 @@ use routing_transformer::runtime::{Artifacts, ModelState, Runtime};
 use routing_transformer::sampler::{Generator, SamplerConfig};
 use routing_transformer::tokenizer::{ByteTokenizer, Tokenizer};
 use routing_transformer::util::cli::Args;
+use routing_transformer::util::json::Json;
 use routing_transformer::util::rng::Rng;
 use routing_transformer::util::timing::Table;
 
@@ -80,12 +83,19 @@ commands:
             [--stats] (nnz/density/row-size table per scheme) [--csv FILE] [--seed S]
   serve-bench  heads x layers x steps decode sweep over the pattern engine:
             [--n 256] [--d 64] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
-            [--window W] [--clusters K] [--sequences B] [--route-every R] [--seed S]
-            [--pool] (B requests batched per worker sweep, k-means re-fit every R
-             steps with incremental assignment-delta invalidation; prints epoch
-             hit rate, unchanged-epoch hits, evictions, dirty tokens, batched vs
-             sequential rows/sec; --pool adds resident-pool vs scoped-spawn
-             comparison rows with a row-for-row equality check)
+            [--window W] [--clusters K] [--sequences B] [--route-every R]
+            [--drift-every D] [--backend NAMES] [--seed S] [--pool] [--json]
+            (B requests batched per worker sweep, k-means re-fit every R steps,
+             content drift every D steps, incremental assignment-delta
+             invalidation and dirty-cluster-only membership regeneration; prints
+             epoch hit rate, unchanged-epoch hits, evictions, dirty tokens,
+             membership rows regenerated vs reused, rows/sec per backend
+             (--backend, comma-separated registry names; default
+             reference,blocked, all checked bit-identical), and batched vs
+             sequential rows/sec; retires every sequence's routed slots on
+             completion (stream-close GC); --pool adds resident-pool vs
+             scoped-spawn comparison rows; --json appends one machine-readable
+             summary line, schema documented in ARCHITECTURE.md)
 ";
 
 fn artifacts_root(args: &Args) -> PathBuf {
@@ -361,9 +371,30 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let k = args.usize("clusters", optimal_clusters(n))?.max(1);
     let b = args.usize("sequences", 1)?.max(1);
     let route_every = args.usize("route-every", 2)?.max(1);
+    let drift_every = args.usize("drift-every", route_every * 2)?.max(1);
     let seed = args.u64("seed", 0)?;
     let pool_cmp = args.bool("pool", false)?;
+    let json_out = args.bool("json", false)?;
     let w_top = (n / k).max(1);
+
+    // kernel backends to sweep: all bit-identical, compared row for row
+    let mut backends: Vec<std::sync::Arc<dyn Backend>> = Vec::new();
+    for name in args.str("backend", "reference,blocked").split(',') {
+        let name = name.trim();
+        if name.is_empty() {
+            continue;
+        }
+        match backend::lookup(name) {
+            Some(be) => backends.push(be),
+            None => bail!(
+                "unknown attention backend '{name}' (registered: {})",
+                backend::names().join(", ")
+            ),
+        }
+    }
+    if backends.is_empty() {
+        bail!("--backend needs at least one registered backend name");
+    }
 
     // Sec. 4.2 head plan: even heads are static local (pinned compiles),
     // odd heads mix local with content-routed attention whose memberships
@@ -387,7 +418,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "serve-bench: n={n} d={d} heads={heads} layers={layers} steps={steps} \
          shards={shards} window={window} clusters={k} sequences={b} route-every={route_every} \
-         pool-compare={pool_cmp}"
+         drift-every={drift_every} backends={} pool-compare={pool_cmp}",
+        backends.iter().map(|be| be.name()).collect::<Vec<_>>().join(",")
     );
 
     // The static even-head batch never changes: plan it once.  Routed
@@ -398,23 +430,31 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // honest.
     let static_batch = BatchedAttention::shared(cache.get_static(&local, n), b, shards)?;
     let mut routed_batches: Vec<Option<(u64, BatchedAttention)>> = vec![None; layers * heads];
+    // one membership cache per routed stream (slot x sequence): spec
+    // regeneration re-ranks only the clusters each re-fit touched
+    let mut member_caches: Vec<MemberCache> =
+        (0..layers * heads * b).map(|_| MemberCache::new()).collect();
     let pool = WorkerPool::global();
 
     let mut batched_rows = 0u64;
     let mut macs = 0u64;
-    let mut batched_dt = 0f64;
+    let mut backend_dt = vec![0f64; backends.len()];
     let mut sequential_dt = 0f64;
     let mut scoped_dt = 0f64;
     let mut moved_tokens = 0u64;
     for step in 0..steps {
-        if step % route_every == 0 {
-            // content moved: drift the routing vectors, one online k-means
-            // step per routed slot over the whole batch's content; the
-            // epoch bumps, but only a non-empty assignment delta dirties
-            // the slot and forces recompiles
+        if step % drift_every == 0 {
+            // the per-request content moves (new tokens, shifting topics)
             for x in xs.iter_mut().flat_map(|s| s.iter_mut()) {
                 *x = 0.9 * *x + 0.43 * rng.normal() as f32;
             }
+        }
+        if step % route_every == 0 {
+            // one online k-means step per routed slot over the whole
+            // batch's content; the cluster epoch bumps, but only a
+            // non-empty assignment delta dirties the slot and forces
+            // recompiles — and a re-fit between content drifts re-ranks
+            // only the clusters its delta touched
             let all: Vec<f32> = xs.concat();
             for layer in 0..layers {
                 for head in (1..heads).step_by(2) {
@@ -433,10 +473,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     let patterns: Vec<Arc<CompiledPattern>> = (0..b)
                         .map(|s| {
                             let slot = RouteSlot { layer, head, seq: s };
+                            let mc = &mut member_caches[(layer * heads + head) * b + s];
                             cache.get_routed_at(slot, epoch, ae, n, || {
                                 AttentionSpec::union(vec![
                                     local.clone(),
-                                    session.routing_spec(layer, head, &xs[s], n, w_top),
+                                    session.routing_spec_cached(layer, head, mc, &xs[s], n, w_top),
                                 ])
                                 .expect("two-part union is non-empty")
                             })
@@ -448,17 +489,43 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     }
                     &routed_batches[si].as_ref().expect("planned above").1
                 };
-                let t0 = std::time::Instant::now();
-                let batched = batch.attention(&q, &kk, &v, d)?;
-                batched_dt += t0.elapsed().as_secs_f64();
+                let mut canonical: Option<Vec<f32>> = None;
+                for (bi, be) in backends.iter().enumerate() {
+                    let t0 = std::time::Instant::now();
+                    let out =
+                        batch.attention_backend(&q, &kk, &v, d, Execution::default(), be.as_ref())?;
+                    backend_dt[bi] += t0.elapsed().as_secs_f64();
+                    match &canonical {
+                        None => canonical = Some(out),
+                        Some(first) => {
+                            if &out != first {
+                                bail!(
+                                    "backend '{}' diverged from '{}' at step {step}",
+                                    be.name(),
+                                    backends[0].name()
+                                );
+                            }
+                        }
+                    }
+                }
+                let batched = canonical.expect("at least one backend ran");
                 batched_rows += (b * n) as u64;
                 macs += batch.cost(d);
 
                 if pool_cmp {
                     // the path the resident pool replaces: a scoped
-                    // thread spawn per worker per call
+                    // thread spawn per worker per call, on the SAME
+                    // kernel as the pool-side timing so the comparison
+                    // isolates scheduling cost, not backend choice
                     let t = std::time::Instant::now();
-                    let scoped = batch.attention_with(&q, &kk, &v, d, Execution::Scoped)?;
+                    let scoped = batch.attention_backend(
+                        &q,
+                        &kk,
+                        &v,
+                        d,
+                        Execution::Scoped,
+                        backends[0].as_ref(),
+                    )?;
                     scoped_dt += t.elapsed().as_secs_f64();
                     if batched != scoped {
                         bail!("pool output diverged from scoped-spawn at step {step}");
@@ -487,7 +554,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             }
         }
     }
-    let batched_dt = batched_dt.max(1e-9);
+    // the first requested backend is the canonical timing baseline
+    let batched_dt = backend_dt[0].max(1e-9);
     let sequential_dt = sequential_dt.max(1e-9);
 
     let cs = cache.stats();
@@ -496,6 +564,36 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .flat_map(|l| (0..heads).map(move |h| (l, h)))
         .map(|(l, h)| session.dirty_len(l, h))
         .sum();
+    // drain the cluster-granular worklists the way a re-router would:
+    // everything the member caches already consumed shows up here as
+    // the clusters a version-blind consumer would still have re-ranked
+    let dirty_clusters_drained: usize = (0..layers)
+        .flat_map(|l| (0..heads).map(move |h| (l, h)))
+        .map(|(l, h)| session.take_dirty_clusters(l, h).len())
+        .sum();
+    let mut regen = RegenStats::default();
+    for mc in &member_caches {
+        let st = mc.stats();
+        regen.regenerated += st.regenerated;
+        regen.reused += st.reused;
+        regen.full_rebuilds += st.full_rebuilds;
+        regen.calls += st.calls;
+    }
+    let live_before_gc = cache.len();
+    // stream close: every sequence completes here, so its routed slots
+    // retire through the per-request GC path (counted as evictions but
+    // reported separately; static compiles deliberately survive)
+    let mut retired = 0usize;
+    for layer in 0..layers {
+        for head in (1..heads).step_by(2) {
+            for s in 0..b {
+                if cache.evict_slot(RouteSlot { layer, head, seq: s }) {
+                    retired += 1;
+                }
+            }
+        }
+    }
+    let live_after_gc = cache.len();
     let mut table = Table::new(&["metric", "value"]);
     table.row(&["routed lookups".to_string(), es.lookups().to_string()]);
     table.row(&["epoch hits".to_string(), es.epoch_hits.to_string()]);
@@ -506,16 +604,37 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     ]);
     table.row(&["tokens moved by re-fits".to_string(), moved_tokens.to_string()]);
     table.row(&["dirty tokens pending".to_string(), dirty_pending.to_string()]);
+    table.row(&[
+        "dirty clusters drained".to_string(),
+        dirty_clusters_drained.to_string(),
+    ]);
     table.row(&["evictions (stale assignments)".to_string(), cs.evictions.to_string()]);
     table.row(&["compiles".to_string(), cs.misses.to_string()]);
     table.row(&["compile-cache hits".to_string(), cs.hits.to_string()]);
     table.row(&["compile-cache hit rate".to_string(), format!("{:.1}%", cs.hit_rate() * 100.0)]);
-    table.row(&["patterns cached (live)".to_string(), cache.len().to_string()]);
+    table.row(&[
+        "membership rows regenerated".to_string(),
+        format!("{} of {}", regen.regenerated, regen.rows_total()),
+    ]);
+    table.row(&[
+        "membership rows reused".to_string(),
+        format!("{} ({:.1}%)", regen.reused, regen.reuse_rate() * 100.0),
+    ]);
+    table.row(&["membership full rebuilds".to_string(), regen.full_rebuilds.to_string()]);
+    table.row(&["patterns cached (live)".to_string(), live_before_gc.to_string()]);
+    table.row(&["slots retired (stream-close GC)".to_string(), retired.to_string()]);
+    table.row(&["patterns cached after GC".to_string(), live_after_gc.to_string()]);
     table.row(&["batched elapsed".to_string(), format!("{:.3} s", batched_dt)]);
     table.row(&[
         "batched rows/sec".to_string(),
         format!("{:.3e}", batched_rows as f64 / batched_dt),
     ]);
+    for (bi, be) in backends.iter().enumerate() {
+        table.row(&[
+            format!("{} backend rows/sec", be.name()),
+            format!("{:.3e}", batched_rows as f64 / backend_dt[bi].max(1e-9)),
+        ]);
+    }
     table.row(&["sequential elapsed".to_string(), format!("{:.3} s", sequential_dt)]);
     table.row(&[
         "sequential rows/sec".to_string(),
@@ -576,6 +695,84 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             ]);
         }
         table.print();
+    }
+
+    if json_out {
+        // one greppable line per run; schema documented in ARCHITECTURE.md
+        let f = |key: &str, v: f64| (key.to_string(), Json::Num(v));
+        let mut fields = vec![
+            ("bench".to_string(), Json::Str("serve-bench".to_string())),
+            f("n", n as f64),
+            f("d", d as f64),
+            f("heads", heads as f64),
+            f("layers", layers as f64),
+            f("steps", steps as f64),
+            f("shards", shards as f64),
+            f("sequences", b as f64),
+            f("route_every", route_every as f64),
+            f("drift_every", drift_every as f64),
+            (
+                "backends".to_string(),
+                Json::Arr(
+                    backends
+                        .iter()
+                        .enumerate()
+                        .map(|(bi, be)| {
+                            Json::Obj(vec![
+                                ("name".to_string(), Json::Str(be.name().to_string())),
+                                f("elapsed_sec", backend_dt[bi]),
+                                f("rows_per_sec", batched_rows as f64 / backend_dt[bi].max(1e-9)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            f("batched_rows", batched_rows as f64),
+            f("sequential_rows_per_sec", batched_rows as f64 / sequential_dt),
+            f("macs_per_sec", macs as f64 / batched_dt),
+            (
+                "cache".to_string(),
+                Json::Obj(vec![
+                    f("hits", cs.hits as f64),
+                    f("misses", cs.misses as f64),
+                    f("evictions", cs.evictions as f64),
+                ]),
+            ),
+            (
+                "epoch".to_string(),
+                Json::Obj(vec![
+                    f("hits", es.epoch_hits as f64),
+                    f("misses", es.epoch_misses as f64),
+                    f("unchanged", es.unchanged_epochs as f64),
+                    f("hit_rate", es.hit_rate()),
+                ]),
+            ),
+            (
+                "regen".to_string(),
+                Json::Obj(vec![
+                    f("regenerated", regen.regenerated as f64),
+                    f("reused", regen.reused as f64),
+                    f("full_rebuilds", regen.full_rebuilds as f64),
+                    f("reuse_rate", regen.reuse_rate()),
+                ]),
+            ),
+            f("moved_tokens", moved_tokens as f64),
+            f("dirty_tokens_pending", dirty_pending as f64),
+            f("dirty_clusters_drained", dirty_clusters_drained as f64),
+            f("retired_slots", retired as f64),
+            f("live_patterns_after_gc", live_after_gc as f64),
+        ];
+        if pool_cmp {
+            fields.push((
+                "pool".to_string(),
+                Json::Obj(vec![
+                    f("scoped_rows_per_sec", batched_rows as f64 / scoped_dt.max(1e-9)),
+                    f("pool_rows_per_sec", batched_rows as f64 / batched_dt),
+                    f("workers", pool.workers() as f64),
+                ]),
+            ));
+        }
+        println!("{}", Json::Obj(fields));
     }
     Ok(())
 }

@@ -5,7 +5,8 @@
 //! owns the host-side categorical sampling and the generation loop
 //! plumbing (prompt, max tokens, stop condition).  The host-side math
 //! ([`nucleus_probs`], [`sample_logits`]) builds without the `xla`
-//! feature; only the artifact-driven [`Generator`] needs the runtime.
+//! feature; only the artifact-driven `Generator` (xla-gated) needs the
+//! runtime.
 
 #[cfg(feature = "xla")]
 use anyhow::{anyhow, Result};

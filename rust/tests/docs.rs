@@ -1,0 +1,104 @@
+//! Documentation drift guard: every `rtx <subcommand>` named inside a
+//! code fence of the top-level `README.md` / `ARCHITECTURE.md` must be a
+//! subcommand the CLI actually dispatches (the `match cmd` arms in
+//! `src/main.rs`), so the quickstart can never rot silently when a
+//! subcommand is renamed or removed.  Everything is `include_str!`-ed at
+//! compile time, so this runs in the host-only (no-xla) CI job even
+//! though the `rtx` binary itself needs the `xla` feature.
+
+use std::collections::BTreeSet;
+
+const MAIN_RS: &str = include_str!("../src/main.rs");
+const README: &str = include_str!("../../README.md");
+const ARCHITECTURE: &str = include_str!("../../ARCHITECTURE.md");
+
+/// Subcommand names dispatched by `fn run`: the first string literal of
+/// every match arm inside the `match cmd {` block.
+fn subcommands_from_main() -> BTreeSet<String> {
+    let start = MAIN_RS.find("match cmd {").expect("main.rs must dispatch via `match cmd {`");
+    let block = &MAIN_RS[start..];
+    let end = block.find("\n    }").expect("match block must close");
+    let mut names = BTreeSet::new();
+    for line in block[..end].lines() {
+        let Some((head, _)) = line.split_once("=>") else { continue };
+        // a head may hold several patterns: `"help" | _ =>`
+        for pat in head.split('|') {
+            let pat = pat.trim();
+            if let Some(name) = pat.strip_prefix('"').and_then(|p| p.strip_suffix('"')) {
+                names.insert(name.to_string());
+            }
+        }
+    }
+    assert!(
+        names.contains("serve-bench") && names.contains("figure1"),
+        "subcommand extraction looks broken: got {names:?}"
+    );
+    names
+}
+
+/// `rtx <word>` references inside fenced code blocks (``` ... ```);
+/// returns (doc-name, line, subcommand) triples.
+fn fenced_rtx_refs(doc_name: &str, doc: &str) -> Vec<(String, usize, String)> {
+    let mut refs = Vec::new();
+    let mut in_fence = false;
+    for (ln, line) in doc.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if !in_fence {
+            continue;
+        }
+        let mut tokens = line.split_whitespace().peekable();
+        while let Some(tok) = tokens.next() {
+            if tok != "rtx" && tok != "./rtx" {
+                continue;
+            }
+            if let Some(&next) = tokens.peek() {
+                // `rtx --help` style lines name no subcommand; skip flags
+                if !next.starts_with('-') {
+                    refs.push((doc_name.to_string(), ln + 1, next.to_string()));
+                }
+            }
+        }
+    }
+    refs
+}
+
+#[test]
+fn doc_code_fences_name_real_rtx_subcommands() {
+    let valid = subcommands_from_main();
+    let mut refs = fenced_rtx_refs("README.md", README);
+    refs.extend(fenced_rtx_refs("ARCHITECTURE.md", ARCHITECTURE));
+    assert!(
+        !refs.is_empty(),
+        "the docs must demonstrate at least one `rtx` invocation in a code fence"
+    );
+    for (doc, line, sub) in &refs {
+        assert!(
+            valid.contains(sub),
+            "{doc}:{line} names `rtx {sub}`, which is not a dispatched subcommand \
+             (valid: {valid:?})"
+        );
+    }
+}
+
+#[test]
+fn docs_exist_and_are_cross_linked() {
+    assert!(
+        README.contains("ARCHITECTURE.md"),
+        "README.md must link the architecture document"
+    );
+    assert!(
+        ARCHITECTURE.contains("serve-bench"),
+        "ARCHITECTURE.md must document the serving pipeline / bench schema"
+    );
+    assert!(
+        README.contains("--no-default-features"),
+        "README.md must document the host-only build matrix"
+    );
+    assert!(
+        README.contains("RTX_WORKERS"),
+        "README.md must document the worker-pool sizing override"
+    );
+}

@@ -8,9 +8,15 @@
 //! * every hit/miss/eviction/unchanged-epoch counter matches the model's
 //!   independent bookkeeping,
 //! * epochs, assignment epochs, and dirty sets evolve exactly as the
-//!   model predicts from a before/after `assign()` oracle, and
+//!   model predicts from a before/after `assign()` oracle,
 //! * pool execution is bit-identical to the inline single-thread path
-//!   (and survives induced worker panics without hanging or poisoning).
+//!   (and survives induced worker panics without hanging or poisoning),
+//! * every execution backend ({Reference, Blocked}, plus registry
+//!   lookups) is bit-identical across random batches — including n = 0,
+//!   n = 1, and fully-masked rows, and
+//! * incremental (dirty-cluster-only) spec regeneration equals a
+//!   from-scratch `routing_spec`, with regen counters matching a
+//!   touched-cluster model exactly.
 //!
 //! The offline environment ships no `proptest`, so this reuses the
 //! hand-rolled seeded-case harness from `tests/proptests.rs`: every
@@ -21,8 +27,9 @@ use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
 
 use routing_transformer::attention::{
-    sparse_attention, AttentionSpec, BatchedAttention, CompiledPattern, EpochCache, Execution,
-    RouteSlot, RoutingSession, ShardedPattern, WorkerPool,
+    sparse_attention, AttentionSpec, Backend, BatchedAttention, Blocked, CompiledPattern,
+    EpochCache, Execution, MemberCache, Reference, RouteSlot, RoutingSession, ShardedPattern,
+    WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -434,6 +441,176 @@ fn prop_pool_survives_induced_panics() {
 }
 
 // --------------------------------------------------------- property 4
+
+#[test]
+fn prop_backend_dimension_agrees_bitwise() {
+    // random batches x {Reference, Blocked} x {Inline, Scoped, Pool} must
+    // all be bit-identical — including n = 0, n = 1, and fully-masked
+    // rows — so backend choice can never change a served output.
+    check("backend_bitwise", 96, |rng| {
+        let b = rng.range(1, 4);
+        let n = rng.range(0, 10);
+        let d = rng.range(1, 10); // crosses the 4-wide column-tile boundary
+        let patterns: Vec<Arc<CompiledPattern>> = (0..b)
+            .map(|_| {
+                let spec = if rng.chance(0.2) {
+                    // explicit all-masked pattern: nothing is admitted
+                    AttentionSpec::routing(vec![])
+                } else {
+                    small_spec(rng, n)
+                };
+                Arc::new(spec.compile(n))
+            })
+            .collect();
+        let qkv: Vec<f32> = (0..3 * b * n * d).map(|_| rng.normal() as f32).collect();
+        let (q, rest) = qkv.split_at(b * n * d);
+        let (k, v) = rest.split_at(b * n * d);
+        let workers = rng.range(1, 6);
+        let batch = BatchedAttention::new(patterns.clone(), workers).unwrap();
+        let reference = batch
+            .attention_backend(q, k, v, d, Execution::Inline, &Reference)
+            .unwrap();
+        for exec in [Execution::Inline, Execution::default(), Execution::Scoped] {
+            assert_eq!(
+                batch.attention_backend(q, k, v, d, exec, &Blocked).unwrap(),
+                reference,
+                "Blocked/{exec:?} diverged at b={b} n={n} d={d} workers={workers}"
+            );
+        }
+        // registry-resolved backends agree too (the serve-bench path)
+        for name in ["reference", "blocked"] {
+            let backend = routing_transformer::attention::backend::lookup(name).unwrap();
+            assert_eq!(
+                batch
+                    .attention_backend(q, k, v, d, Execution::Inline, backend.as_ref())
+                    .unwrap(),
+                reference,
+                "registry backend '{name}' diverged"
+            );
+        }
+        // the sharded single-sequence path gets the same guarantee
+        if n > 0 {
+            let sharded =
+                ShardedPattern::balanced(Arc::clone(&patterns[0]), rng.range(1, 5)).unwrap();
+            let hi = n * d;
+            let base = sharded
+                .attention_backend(&q[..hi], &k[..hi], &v[..hi], d, Execution::Inline, &Reference)
+                .unwrap();
+            for exec in [Execution::Inline, Execution::default(), Execution::Scoped] {
+                assert_eq!(
+                    sharded
+                        .attention_backend(&q[..hi], &k[..hi], &v[..hi], d, exec, &Blocked)
+                        .unwrap(),
+                    base
+                );
+            }
+            // and the one-shot Backend::attention convenience
+            assert_eq!(Blocked.attention(&q[..hi], &k[..hi], &v[..hi], d, &patterns[0]).unwrap(), base);
+        }
+    });
+}
+
+// --------------------------------------------------------- property 5
+
+#[test]
+fn prop_incremental_regen_equals_from_scratch_with_exact_counters() {
+    // random interleavings of k-means updates, content changes, width
+    // changes, and spec regenerations: the incremental (dirty-cluster)
+    // spec must always equal a from-scratch routing_spec, and the regen
+    // counters must match a model that predicts touched clusters from an
+    // independent k-means mirror (touched == clusters with a non-zero
+    // pre-update assignment count).
+    check("incremental_regen", 64, |rng| {
+        let k = rng.range(1, 5);
+        let n = rng.range(1, 12);
+        let mut session = RoutingSession::new(1, 1, k, DIM, 0.3, rng.next_u64()).unwrap();
+        let mut mirror = session.kmeans(0, 0).clone();
+        let mut members = MemberCache::new();
+        let mut xs = random_xs(rng, n);
+        let mut w = rng.range(1, n + 1);
+        // model of the member cache's keying state
+        let mut model_versions = vec![0u64; k];
+        let mut cached: Option<(Vec<u64>, Vec<f32>, usize)> = None; // (versions, xs, w_eff)
+        let mut dirty_model: BTreeSet<usize> = BTreeSet::new();
+        for _op in 0..rng.range(8, 20) {
+            match rng.below(6) {
+                0 | 1 => {
+                    // k-means step over a random (possibly empty) batch
+                    let m = rng.range(0, 8);
+                    let batch = random_xs(rng, m);
+                    let delta = mirror.update(&batch, m);
+                    let upd = session.update(0, 0, &batch, m);
+                    assert_eq!(upd.delta.counts, delta.counts, "mirror in lockstep");
+                    if m > 0 {
+                        for (c, &count) in delta.counts.iter().enumerate() {
+                            if count > 0 {
+                                model_versions[c] += 1;
+                                dirty_model.insert(c);
+                            }
+                        }
+                    }
+                    assert_eq!(
+                        session.dirty_clusters(0, 0),
+                        dirty_model.iter().copied().collect::<Vec<_>>(),
+                        "dirty-cluster worklist"
+                    );
+                    assert_eq!(session.cluster_versions(0, 0), model_versions.as_slice());
+                }
+                2 => {
+                    // content change: every cached list goes stale at once
+                    xs = random_xs(rng, n);
+                }
+                3 => {
+                    w = rng.range(1, n + 1);
+                }
+                4 => {
+                    // drain the worklist like an external re-router would
+                    let drained = session.take_dirty_clusters(0, 0);
+                    assert_eq!(drained, dirty_model.iter().copied().collect::<Vec<_>>());
+                    dirty_model.clear();
+                    assert_eq!(session.dirty_cluster_len(0, 0), 0);
+                }
+                _ => {
+                    let before = members.stats();
+                    let spec = session.routing_spec_cached(0, 0, &mut members, &xs, n, w);
+                    assert_eq!(
+                        spec,
+                        session.routing_spec(0, 0, &xs, n, w),
+                        "incremental spec must equal from-scratch at k={k} n={n} w={w}"
+                    );
+                    let after = members.stats();
+                    let w_eff = w.min(n);
+                    let predict_full = match &cached {
+                        None => true,
+                        Some((_, cxs, cw)) => cxs != &xs || *cw != w_eff,
+                    };
+                    if predict_full {
+                        assert_eq!(after.full_rebuilds, before.full_rebuilds + 1);
+                        assert_eq!(after.regenerated, before.regenerated + k as u64);
+                        assert_eq!(after.reused, before.reused);
+                    } else {
+                        let stale = cached
+                            .as_ref()
+                            .map(|(cv, _, _)| {
+                                cv.iter().zip(&model_versions).filter(|(a, b)| a != b).count()
+                            })
+                            .unwrap();
+                        assert_eq!(after.full_rebuilds, before.full_rebuilds);
+                        assert_eq!(
+                            after.regenerated,
+                            before.regenerated + stale as u64,
+                            "exactly the delta-touched clusters re-rank"
+                        );
+                        assert_eq!(after.reused, before.reused + (k - stale) as u64);
+                    }
+                    cached = Some((model_versions.clone(), xs.clone(), w_eff));
+                }
+            }
+        }
+    });
+}
+
+// --------------------------------------------------------- property 6
 
 #[test]
 fn prop_single_cluster_epoch_bumps_are_unchanged_hits() {
