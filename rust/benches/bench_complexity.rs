@@ -1,6 +1,6 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Five parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Nine parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
@@ -22,13 +22,19 @@
 //! be >= 1.5x (single-thread ILP, so no core gate);
 //! (8) incremental (dirty-cluster-only) spec regeneration — a sparse
 //! k-means step must re-rank exactly the delta-touched clusters
-//! (counter-verified) and still produce the from-scratch spec.
+//! (counter-verified) and still produce the from-scratch spec;
+//! (9) the continuous-batching serve loop end to end — a seeded open-loop
+//! workload must resolve every request exactly once, drain its routed
+//! compiles via retirement GC, replay bit-deterministically, and report
+//! p50/p99 step latency (liveness pins only — wall-clock serve latency is
+//! tracked across PRs in `BENCH_serve.json`, not pinned here).
 
 use std::sync::Arc;
 
 use routing_transformer::attention::{
-    optimal_clusters, sparse_attention, AttentionSpec, Backend, BatchedAttention, Blocked,
-    CompiledPattern, Execution, MemberCache, PatternCache, Reference, RoutingSession, WorkerPool,
+    optimal_clusters, run_serve, sparse_attention, ArrivalConfig, AttentionSpec, Backend,
+    BatchedAttention, Blocked, CompiledPattern, Execution, MemberCache, PatternCache, Reference,
+    RoutingSession, ServeOptions, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -423,6 +429,67 @@ fn main() {
          (sparse update re-ranked {touched}/{k} clusters)",
         cached_regen.mean * 1e3,
         full.mean * 1e3
+    );
+
+    // continuous-batching serve loop: an open-loop seeded workload through
+    // the full admit -> decode -> retire -> GC arc.  Liveness pins only —
+    // every request resolves exactly once, retirement GC drains every
+    // routed compile, and the whole run replays bit-deterministically.
+    // No wall-clock pin: serve latency is a trajectory (BENCH_serve.json),
+    // not a floor.
+    let opts = ServeOptions {
+        n: 128,
+        d: 32,
+        layers: 2,
+        heads: 4,
+        window: 16,
+        clusters: 8,
+        top_w: 16,
+        workers,
+        capacity: 4,
+        route_every: 4,
+        arrivals: ArrivalConfig {
+            requests: 32,
+            rate: 1.5,
+            contents: 8,
+            zipf_s: 1.1,
+            work: (2, 8),
+            slack: (4, 32),
+            seed: 47,
+        },
+        seed: 47,
+    };
+    let summary = run_serve(&opts, &Blocked).expect("serve loop must complete");
+    let s = summary.stats;
+    assert_eq!(
+        s.completed + s.rejected + s.shed,
+        s.submitted,
+        "every submitted request must reach exactly one terminal state"
+    );
+    assert_eq!(s.submitted, 32);
+    assert!(s.completed >= 1, "a sane open-loop config completes requests");
+    assert_eq!(
+        summary.live_patterns_after_gc, 1,
+        "after drain only the pinned static pattern survives retirement GC"
+    );
+    assert_eq!(summary.step_us.count(), s.steps - s.idle_steps);
+    let replay = run_serve(&opts, &Blocked).expect("serve loop must complete");
+    assert_eq!(replay.stats, s, "serve schedule must be seed-deterministic");
+    assert_eq!(replay.outcomes, summary.outcomes);
+    assert_eq!(replay.macs, summary.macs);
+    println!(
+        "\nserve loop at n={}, capacity={}, {} requests ({} completed / {} rejected / {} shed, \
+         peak batch {}): p50/p99 step {:.0}/{:.0} µs, {:.3e} rows/sec",
+        opts.n,
+        opts.capacity,
+        s.submitted,
+        s.completed,
+        s.rejected,
+        s.shed,
+        s.peak_active,
+        summary.step_us.p50(),
+        summary.step_us.p99(),
+        summary.rows_per_sec()
     );
 
     println!("\nbench_complexity OK");

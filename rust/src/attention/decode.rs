@@ -455,6 +455,16 @@ impl RegenStats {
             self.reused as f64 / self.rows_total() as f64
         }
     }
+
+    /// Fold another counter set into this one — the serve layer resets a
+    /// retired slot's [`MemberCache`] and folds its counters into the
+    /// run-wide aggregate first, so per-request GC never loses accounting.
+    pub fn merge(&mut self, other: RegenStats) {
+        self.regenerated += other.regenerated;
+        self.reused += other.reused;
+        self.full_rebuilds += other.full_rebuilds;
+        self.calls += other.calls;
+    }
 }
 
 /// Caller-owned cache of one routed stream's balanced top-w membership

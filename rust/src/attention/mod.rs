@@ -46,8 +46,17 @@
 //!    accelerator landing slot; selected per call via
 //!    [`ShardedPattern::attention_backend`] /
 //!    [`BatchedAttention::attention_backend`].
+//! 7. [`serve`] — the continuous-batching front-end: a deterministic
+//!    open-loop arrival process ([`RequestQueue`]: seeded exponential
+//!    interarrivals, Zipf content popularity), a [`Scheduler`] with
+//!    per-request deadlines, admission control, and shed accounting
+//!    (admit → decode steps → retire → [`EpochCache::evict_slot`] GC),
+//!    and the [`run_serve`] loop that repacks the live batch every step
+//!    and reports p50/p99 step latency from a streaming histogram —
+//!    `rtx serve` against `rtx serve-bench`'s lock-step baseline.
 //!
-//! Consumers: the `figure1` and `serve-bench` CLIs, the complexity bench,
+//! Consumers: the `figure1`, `serve-bench`, and `serve` CLIs, the
+//! complexity bench,
 //! the Table-6 JSD analysis ([`crate::analysis::mean_pattern_jsd`]), the
 //! k-means routing integration
 //! ([`crate::kmeans::SphericalKMeans::routing_spec`]), the property
@@ -64,6 +73,7 @@ pub mod complexity;
 pub mod decode;
 pub mod engine;
 pub mod pool;
+pub mod serve;
 pub mod spec;
 
 pub use backend::{Backend, Blocked, Reference};
@@ -78,4 +88,9 @@ pub use engine::{
     Shard, ShardedPattern,
 };
 pub use pool::{Execution, WorkerPool};
+pub use serve::{
+    run_serve, ArrivalConfig, BatchEntry, OutcomeKind, RequestOutcome, RequestQueue, Retired,
+    Scheduler, ServeOptions, ServeRequest, ServeStats, ServeSummary, StepFinish, StepPlan,
+    Submission, JSON_SCHEMA_VERSION,
+};
 pub use spec::AttentionSpec;

@@ -12,31 +12,45 @@
 //! rtx serve-bench [--n 256] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
 //!                 [--sequences 1] [--route-every 2] [--drift-every 4]
 //!                 [--backend reference,blocked] [--pool] [--json]
+//! rtx serve    [--n 256] [--heads 8] [--layers 4] [--capacity 8] [--requests 64]
+//!              [--rate 1.0] [--zipf 1.1] [--backend blocked] [--json] [--append]
 //! ```
+//!
+//! The PJRT-backed commands (`info`/`train`/`eval`/`sample`/`analyze`) need
+//! the default `xla` feature; the pattern-engine commands (`figure1`,
+//! `serve-bench`, `serve`) run in the `--no-default-features` host build
+//! too — that is the binary CI's `rust-host` job smokes.
 
+#[cfg(feature = "xla")]
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
 use routing_transformer::analysis;
 use routing_transformer::attention::{
-    backend, optimal_clusters, sparse_attention, AttentionSpec, Backend, BatchedAttention,
-    CompiledPattern, EpochCache, Execution, MemberCache, RegenStats, RouteSlot, RoutingSession,
-    WorkerPool,
+    backend, optimal_clusters, run_serve, sparse_attention, ArrivalConfig, AttentionSpec, Backend,
+    BatchedAttention, CompiledPattern, EpochCache, Execution, MemberCache, RegenStats, RouteSlot,
+    RoutingSession, ServeOptions, ServeSummary, WorkerPool, JSON_SCHEMA_VERSION,
 };
+#[cfg(feature = "xla")]
 use routing_transformer::coordinator::{
     default_data_for, eval_batcher, train_batcher, Evaluator, LrSchedule, TrainOptions,
     Trainer,
 };
+#[cfg(feature = "xla")]
 use routing_transformer::data;
 use routing_transformer::kmeans::SphericalKMeans;
+#[cfg(feature = "xla")]
 use routing_transformer::runtime::{Artifacts, ModelState, Runtime};
+#[cfg(feature = "xla")]
 use routing_transformer::sampler::{Generator, SamplerConfig};
+#[cfg(feature = "xla")]
 use routing_transformer::tokenizer::{ByteTokenizer, Tokenizer};
 use routing_transformer::util::cli::Args;
 use routing_transformer::util::json::Json;
 use routing_transformer::util::rng::Rng;
-use routing_transformer::util::timing::Table;
+use routing_transformer::util::timing::{StreamingHistogram, Table};
 
 fn main() {
     let args = Args::from_env();
@@ -60,6 +74,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "analyze" => cmd_analyze(args),
         "figure1" => cmd_figure1(args),
         "serve-bench" => cmd_serve_bench(args),
+        "serve" => cmd_serve(args),
         "help" | _ => {
             print!("{}", HELP);
             Ok(())
@@ -96,12 +111,66 @@ commands:
              completion (stream-close GC); --pool adds resident-pool vs
              scoped-spawn comparison rows; --json appends one machine-readable
              summary line, schema documented in ARCHITECTURE.md)
+  serve     continuous-batching server front-end over the same engine:
+            requests arrive over virtual time (seeded exponential
+            interarrivals, Zipf content popularity), are admitted against
+            per-request deadlines, join/leave the decode batch mid-flight,
+            and retire through per-slot epoch-cache GC — the asynchronous
+            counterpart to serve-bench's lock-step sweep:
+            [--n 256] [--d 64] [--heads 8] [--layers 4] [--window W]
+            [--clusters K] [--capacity 8] [--workers 4] [--route-every 4]
+            [--requests 64] [--rate 1.0] [--contents 64] [--zipf 1.1]
+            [--work-min 4] [--work-max 16] [--slack-min 8] [--slack-max 64]
+            [--backend blocked] [--seed S] [--json] [--append [FILE]]
+            (prints admitted/completed/rejected/shed counts, p50/p99 step
+             latency from a streaming histogram, rows/sec, and the
+             cache/epoch/regen counters; --json prints one machine-readable
+             line, --append appends it to BENCH_serve.json (or FILE) so the
+             perf trajectory persists across runs; schema in ARCHITECTURE.md)
+
+info/train/eval/sample/analyze need the default `xla` build; figure1,
+serve-bench, and serve also work with --no-default-features (host-only).
 ";
 
+#[cfg(not(feature = "xla"))]
+fn xla_required(cmd: &str) -> Result<()> {
+    bail!(
+        "`rtx {cmd}` needs the PJRT runtime, but this binary was built without the \
+         `xla` feature (host-only build); rebuild with default features to enable it"
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_info(_args: &Args) -> Result<()> {
+    xla_required("info")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    xla_required("train")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_eval(_args: &Args) -> Result<()> {
+    xla_required("eval")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_sample(_args: &Args) -> Result<()> {
+    xla_required("sample")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_analyze(_args: &Args) -> Result<()> {
+    xla_required("analyze")
+}
+
+#[cfg(feature = "xla")]
 fn artifacts_root(args: &Args) -> PathBuf {
     PathBuf::from(args.str("artifacts", "artifacts"))
 }
 
+#[cfg(feature = "xla")]
 fn load_artifacts(args: &Args) -> Result<(Runtime, Artifacts)> {
     let rt = Runtime::cpu()?;
     let variant = args.str_req("variant")?;
@@ -109,6 +178,7 @@ fn load_artifacts(args: &Args) -> Result<(Runtime, Artifacts)> {
     Ok((rt, art))
 }
 
+#[cfg(feature = "xla")]
 fn load_state(art: &Artifacts, args: &Args) -> Result<ModelState> {
     match args.flags.get("ckpt") {
         Some(path) => ModelState::load(&art.manifest, Path::new(path)),
@@ -116,6 +186,7 @@ fn load_state(art: &Artifacts, args: &Args) -> Result<ModelState> {
     }
 }
 
+#[cfg(feature = "xla")]
 fn cmd_info(args: &Args) -> Result<()> {
     let root = artifacts_root(args);
     if let Some(variant) = args.flags.get("variant") {
@@ -161,6 +232,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<()> {
     // --config FILE loads a RunConfig; individual CLI flags override it.
     let file_cfg = match args.flags.get("config") {
@@ -209,6 +281,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_eval(args: &Args) -> Result<()> {
     let (rt, art) = load_artifacts(args)?;
     let manifest = &art.manifest;
@@ -234,6 +307,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_sample(args: &Args) -> Result<()> {
     let (rt, art) = load_artifacts(args)?;
     let manifest = &art.manifest;
@@ -270,6 +344,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_analyze(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     let variant = args.str("variant", "analysis");
@@ -442,7 +517,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut sequential_dt = 0f64;
     let mut scoped_dt = 0f64;
     let mut moved_tokens = 0u64;
+    // per-step latency of the canonical (first) backend's batched sweeps —
+    // the same histogram the `serve` loop uses, so p50/p99 come from one
+    // shared implementation
+    let mut step_hist = StreamingHistogram::new();
     for step in 0..steps {
+        let mut step_sec = 0f64;
         if step % drift_every == 0 {
             // the per-request content moves (new tokens, shifting topics)
             for x in xs.iter_mut().flat_map(|s| s.iter_mut()) {
@@ -494,7 +574,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     let t0 = std::time::Instant::now();
                     let out =
                         batch.attention_backend(&q, &kk, &v, d, Execution::default(), be.as_ref())?;
-                    backend_dt[bi] += t0.elapsed().as_secs_f64();
+                    let dt = t0.elapsed().as_secs_f64();
+                    backend_dt[bi] += dt;
+                    if bi == 0 {
+                        step_sec += dt;
+                    }
                     match &canonical {
                         None => canonical = Some(out),
                         Some(first) => {
@@ -553,6 +637,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 std::hint::black_box(&batched);
             }
         }
+        step_hist.record(step_sec * 1e6);
     }
     // the first requested backend is the canonical timing baseline
     let batched_dt = backend_dt[0].max(1e-9);
@@ -625,6 +710,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     table.row(&["slots retired (stream-close GC)".to_string(), retired.to_string()]);
     table.row(&["patterns cached after GC".to_string(), live_after_gc.to_string()]);
     table.row(&["batched elapsed".to_string(), format!("{:.3} s", batched_dt)]);
+    table.row(&[
+        "step latency p50/p99".to_string(),
+        format!("{:.0} / {:.0} µs", step_hist.p50(), step_hist.p99()),
+    ]);
     table.row(&[
         "batched rows/sec".to_string(),
         format!("{:.3e}", batched_rows as f64 / batched_dt),
@@ -702,6 +791,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let f = |key: &str, v: f64| (key.to_string(), Json::Num(v));
         let mut fields = vec![
             ("bench".to_string(), Json::Str("serve-bench".to_string())),
+            f("schema", JSON_SCHEMA_VERSION as f64),
             f("n", n as f64),
             f("d", d as f64),
             f("heads", heads as f64),
@@ -730,6 +820,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             f("batched_rows", batched_rows as f64),
             f("sequential_rows_per_sec", batched_rows as f64 / sequential_dt),
             f("macs_per_sec", macs as f64 / batched_dt),
+            f("p50_step_us", step_hist.p50()),
+            f("p99_step_us", step_hist.p99()),
+            f("mean_step_us", step_hist.mean()),
             (
                 "cache".to_string(),
                 Json::Obj(vec![
@@ -775,6 +868,236 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         println!("{}", Json::Obj(fields));
     }
     Ok(())
+}
+
+/// Default perf-trajectory file `--append` writes to (JSONL: one summary
+/// line per run, appended, never rewritten).
+const BENCH_SERVE_PATH: &str = "BENCH_serve.json";
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize("n", 256)?.max(1);
+    let d = args.usize("d", 64)?.max(1);
+    let heads = args.usize("heads", 8)?.max(1);
+    let layers = args.usize("layers", 4)?.max(1);
+    let window = args.usize("window", (n / 8).max(1))?.max(1);
+    let k = args.usize("clusters", optimal_clusters(n))?.max(1);
+    let capacity = args.usize("capacity", 8)?.max(1);
+    let workers = args.usize("workers", 4)?.max(1);
+    let route_every = args.u64("route-every", 4)?.max(1);
+    let requests = args.usize("requests", 64)?;
+    let rate = args.f64("rate", 1.0)?;
+    let contents = args.usize("contents", 64)?.max(1);
+    let zipf_s = args.f64("zipf", 1.1)?;
+    let work_min = args.u64("work-min", 4)?.max(1);
+    let work_max = args.u64("work-max", 16)?.max(work_min);
+    let slack_min = args.u64("slack-min", 8)?;
+    let slack_max = args.u64("slack-max", 64)?.max(slack_min);
+    let seed = args.u64("seed", 0)?;
+    let json_out = args.bool("json", false)?;
+    let backend_name = args.str("backend", "blocked");
+    let be = match backend::lookup(&backend_name) {
+        Some(be) => be,
+        None => bail!(
+            "unknown attention backend '{backend_name}' (registered: {})",
+            backend::names().join(", ")
+        ),
+    };
+    // bare `--append` (parsed as "true") means the default trajectory file
+    let append_path: Option<String> = args.flags.get("append").map(|v| {
+        if v == "true" {
+            BENCH_SERVE_PATH.to_string()
+        } else {
+            v.clone()
+        }
+    });
+
+    let opts = ServeOptions {
+        n,
+        d,
+        layers,
+        heads,
+        window,
+        clusters: k,
+        top_w: (n / k).max(1),
+        workers,
+        capacity,
+        route_every,
+        arrivals: ArrivalConfig {
+            requests,
+            rate,
+            contents,
+            zipf_s,
+            work: (work_min, work_max),
+            slack: (slack_min, slack_max),
+            seed,
+        },
+        seed,
+    };
+    println!(
+        "serve: n={n} d={d} heads={heads} layers={layers} window={window} clusters={k} \
+         capacity={capacity} workers={workers} route-every={route_every} requests={requests} \
+         rate={rate} contents={contents} zipf={zipf_s} work=[{work_min},{work_max}] \
+         slack=[{slack_min},{slack_max}] backend={} seed={seed}",
+        be.name()
+    );
+    let summary = run_serve(&opts, be.as_ref())?;
+
+    let s = summary.stats;
+    let hist = &summary.step_us;
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["requests submitted".to_string(), s.submitted.to_string()]);
+    table.row(&["admitted".to_string(), s.admitted.to_string()]);
+    table.row(&["completed".to_string(), s.completed.to_string()]);
+    table.row(&["rejected at submit".to_string(), s.rejected.to_string()]);
+    table.row(&["shed from queue".to_string(), s.shed.to_string()]);
+    table.row(&[
+        "completion rate".to_string(),
+        format!("{:.1}%", s.completion_rate() * 100.0),
+    ]);
+    table.row(&["virtual steps".to_string(), summary.virtual_steps.to_string()]);
+    table.row(&[
+        "decode steps (executed/idle/skipped)".to_string(),
+        format!("{}/{}/{}", s.steps, s.idle_steps, s.fast_forwarded),
+    ]);
+    table.row(&["peak batch".to_string(), s.peak_active.to_string()]);
+    table.row(&[
+        "step latency p50/p99".to_string(),
+        format!("{:.0} / {:.0} µs", hist.p50(), hist.p99()),
+    ]);
+    table.row(&[
+        "step latency mean/max".to_string(),
+        format!("{:.0} / {:.0} µs", hist.mean(), hist.max()),
+    ]);
+    table.row(&["attention elapsed".to_string(), format!("{:.3} s", summary.elapsed_sec)]);
+    table.row(&["rows/sec".to_string(), format!("{:.3e}", summary.rows_per_sec())]);
+    table.row(&["MACs/sec".to_string(), format!("{:.3e}", summary.macs_per_sec())]);
+    let es = summary.epoch;
+    table.row(&["routed epoch hit rate".to_string(), format!("{:.1}%", es.hit_rate() * 100.0)]);
+    table.row(&[
+        "unchanged-epoch hits (recompiles skipped)".to_string(),
+        es.unchanged_epochs.to_string(),
+    ]);
+    let cs = summary.cache;
+    table.row(&["compiles".to_string(), cs.misses.to_string()]);
+    table.row(&[
+        "evictions (stale + retirement GC)".to_string(),
+        format!("{} ({} from GC)", cs.evictions, s.gc_evictions),
+    ]);
+    let rg = summary.regen;
+    table.row(&[
+        "membership rows regenerated/reused".to_string(),
+        format!("{}/{} ({:.1}% reused)", rg.regenerated, rg.reused, rg.reuse_rate() * 100.0),
+    ]);
+    table.row(&[
+        "patterns live after GC".to_string(),
+        summary.live_patterns_after_gc.to_string(),
+    ]);
+    table.print();
+
+    let line = serve_json_line(&opts, be.name(), &summary);
+    if json_out {
+        println!("{line}");
+    }
+    if let Some(path) = append_path {
+        use std::io::Write;
+        let mut file =
+            std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        writeln!(file, "{line}")?;
+        println!("appended summary line to {path}");
+    }
+    Ok(())
+}
+
+/// The `serve` perf-trajectory line: the PR 5 `serve-bench` schema's
+/// cache/epoch/regen sub-objects plus the request-lifecycle and step-
+/// latency fields, stamped with `"schema"`.  Documented in
+/// ARCHITECTURE.md; appended (JSONL) to `BENCH_serve.json` by `--append`.
+fn serve_json_line(opts: &ServeOptions, backend_name: &str, summary: &ServeSummary) -> Json {
+    let f = |key: &str, v: f64| (key.to_string(), Json::Num(v));
+    let s = summary.stats;
+    let hist = &summary.step_us;
+    let cs = summary.cache;
+    let es = summary.epoch;
+    let rg = summary.regen;
+    Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serve".to_string())),
+        f("schema", JSON_SCHEMA_VERSION as f64),
+        f("n", opts.n as f64),
+        f("d", opts.d as f64),
+        f("heads", opts.heads as f64),
+        f("layers", opts.layers as f64),
+        f("window", opts.window as f64),
+        f("clusters", opts.clusters as f64),
+        f("capacity", opts.capacity as f64),
+        f("workers", opts.workers as f64),
+        f("route_every", opts.route_every as f64),
+        f("requests", opts.arrivals.requests as f64),
+        f("rate", opts.arrivals.rate),
+        f("contents", opts.arrivals.contents as f64),
+        f("zipf_s", opts.arrivals.zipf_s),
+        (
+            "work".to_string(),
+            Json::Arr(vec![
+                Json::Num(opts.arrivals.work.0 as f64),
+                Json::Num(opts.arrivals.work.1 as f64),
+            ]),
+        ),
+        (
+            "slack".to_string(),
+            Json::Arr(vec![
+                Json::Num(opts.arrivals.slack.0 as f64),
+                Json::Num(opts.arrivals.slack.1 as f64),
+            ]),
+        ),
+        f("seed", opts.seed as f64),
+        ("backend".to_string(), Json::Str(backend_name.to_string())),
+        f("submitted", s.submitted as f64),
+        f("admitted", s.admitted as f64),
+        f("completed", s.completed as f64),
+        f("rejected", s.rejected as f64),
+        f("shed", s.shed as f64),
+        f("completion_rate", s.completion_rate()),
+        f("peak_active", s.peak_active as f64),
+        f("virtual_steps", summary.virtual_steps as f64),
+        f("steps", s.steps as f64),
+        f("idle_steps", s.idle_steps as f64),
+        f("fast_forwarded", s.fast_forwarded as f64),
+        f("p50_step_us", hist.p50()),
+        f("p99_step_us", hist.p99()),
+        f("mean_step_us", hist.mean()),
+        f("batched_rows", summary.batched_rows as f64),
+        f("rows_per_sec", summary.rows_per_sec()),
+        f("macs_per_sec", summary.macs_per_sec()),
+        f("elapsed_sec", summary.elapsed_sec),
+        (
+            "cache".to_string(),
+            Json::Obj(vec![
+                f("hits", cs.hits as f64),
+                f("misses", cs.misses as f64),
+                f("evictions", cs.evictions as f64),
+            ]),
+        ),
+        (
+            "epoch".to_string(),
+            Json::Obj(vec![
+                f("hits", es.epoch_hits as f64),
+                f("misses", es.epoch_misses as f64),
+                f("unchanged", es.unchanged_epochs as f64),
+                f("hit_rate", es.hit_rate()),
+            ]),
+        ),
+        (
+            "regen".to_string(),
+            Json::Obj(vec![
+                f("regenerated", rg.regenerated as f64),
+                f("reused", rg.reused as f64),
+                f("full_rebuilds", rg.full_rebuilds as f64),
+                f("reuse_rate", rg.reuse_rate()),
+            ]),
+        ),
+        f("gc_evictions", s.gc_evictions as f64),
+        f("live_patterns_after_gc", summary.live_patterns_after_gc as f64),
+    ])
 }
 
 fn cmd_figure1(args: &Args) -> Result<()> {

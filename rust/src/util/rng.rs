@@ -102,6 +102,24 @@ impl Rng {
         }
     }
 
+    /// Exponential variate with the given rate (mean `1 / rate`) via
+    /// inverse-CDF sampling: `-ln(1 - u) / rate` with `u ∈ [0, 1)`.
+    ///
+    /// This is the interarrival-time distribution of a Poisson arrival
+    /// process, so the serve layer's request generator draws gaps between
+    /// request arrivals from it. `1 - u ∈ (0, 1]` never hits zero (so the
+    /// log is always finite) and `u = 0` yields exactly `0.0`.
+    ///
+    /// Panics if `rate` is not strictly positive and finite.
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(
+            rate > 0.0 && rate.is_finite(),
+            "Rng::exponential requires a positive finite rate, got {rate}"
+        );
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Sample an index from unnormalized non-negative weights.
     ///
     /// Degenerate inputs are handled explicitly instead of silently
@@ -168,6 +186,14 @@ impl Zipf {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
+    }
+
+    /// Draw `n` samples in one call — exactly `n` successive [`Zipf::sample`]
+    /// calls against the same `rng`, so interleaving a manual loop with this
+    /// convenience produces identical streams. The serve layer uses it to
+    /// draw all request content ids up front.
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.sample(rng)).collect()
     }
 }
 
@@ -271,6 +297,56 @@ mod tests {
     #[should_panic(expected = "at least one weight")]
     fn weighted_empty_panics_with_message() {
         Rng::new(0).weighted(&[]);
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut rng = Rng::new(19);
+        for rate in [0.5, 2.0, 8.0] {
+            let n = 40_000;
+            let mean = (0..n).map(|_| rng.exponential(rate)).sum::<f64>() / n as f64;
+            let expect = 1.0 / rate;
+            assert!(
+                (mean - expect).abs() < 0.05 * expect,
+                "rate {rate}: mean {mean} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_deterministic_and_nonnegative() {
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        for _ in 0..1000 {
+            let x = a.exponential(1.5);
+            assert_eq!(x, b.exponential(1.5));
+            assert!(x >= 0.0 && x.is_finite());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive finite rate")]
+    fn exponential_rejects_zero_rate() {
+        Rng::new(0).exponential(0.0);
+    }
+
+    #[test]
+    fn zipf_sample_n_matches_repeated_sample() {
+        let z = Zipf::new(50, 1.1);
+        let mut a = Rng::new(31);
+        let mut b = Rng::new(31);
+        let batch = z.sample_n(&mut a, 200);
+        let manual: Vec<usize> = (0..200).map(|_| z.sample(&mut b)).collect();
+        assert_eq!(batch, manual, "sample_n must be exactly n successive sample() calls");
+        assert!(batch.iter().all(|&c| c < 50));
+        // the two rngs must also be left in identical states
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn zipf_sample_n_zero_is_empty() {
+        let z = Zipf::new(10, 1.0);
+        assert!(z.sample_n(&mut Rng::new(1), 0).is_empty());
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Tiny benchmarking substrate (no criterion in the offline environment).
 //!
 //! Provides warmup + repeated timing with mean/stddev/min, throughput
-//! helpers, and the table printer the per-paper-table bench harnesses use
-//! to emit "paper vs measured" rows.
+//! helpers, the table printer the per-paper-table bench harnesses use to
+//! emit "paper vs measured" rows, and [`StreamingHistogram`] — the shared
+//! constant-memory p50/p99 estimator behind both `rtx serve` and
+//! `rtx serve-bench --json` (one percentile implementation, two callers).
 
 use std::time::Instant;
 
@@ -43,6 +45,145 @@ pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Stats {
         samples.push(t0.elapsed().as_secs_f64());
     }
     Stats::from_samples(&samples)
+}
+
+/// Log-bucketed bins per power of two: ratio 2^(1/8) ≈ 1.09, so quantile
+/// estimates carry at most ~4.5% relative error (half a bucket width).
+const HIST_BINS_PER_OCTAVE: f64 = 8.0;
+/// 8 bins/octave × 40 octaves covers [1, 2^40] — for microsecond samples
+/// that is one µs up to ~12.7 days per step, far beyond any real step.
+const HIST_BUCKETS: usize = 320;
+
+/// Constant-memory streaming quantile estimator over non-negative samples.
+///
+/// Samples land in geometric buckets (ratio `2^(1/8)`), so `quantile`
+/// answers within ~4.5% relative error using a fixed 320-slot table — no
+/// per-sample storage, which is what a serve loop recording every decode
+/// step needs. `min`, `max`, and `mean` are tracked exactly; quantiles are
+/// clamped into `[min, max]` so the edges never drift outside the observed
+/// range. Units are whatever the caller records (the serve layer records
+/// microseconds).
+#[derive(Debug, Clone)]
+pub struct StreamingHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for StreamingHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingHistogram {
+    /// An empty histogram ([`StreamingHistogram::quantile`] returns 0.0).
+    pub fn new() -> Self {
+        StreamingHistogram {
+            buckets: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        // values in [0, 1] share bucket 0; the clamp also absorbs any
+        // sample beyond the 2^40 top edge instead of indexing out of range
+        let idx = (v.max(1.0).log2() * HIST_BINS_PER_OCTAVE).floor();
+        (idx as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Record one sample. Negative or NaN inputs are clamped to 0.0 so a
+    /// jittery clock can never corrupt the table.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of all recorded samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded sample (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate `q`-quantile (`q` clamped into [0, 1]); 0.0 when empty.
+    ///
+    /// Walks the cumulative bucket counts to the target rank and returns
+    /// the geometric midpoint of the landing bucket, clamped into the
+    /// exact `[min, max]` envelope.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let mid = 2f64.powf((i as f64 + 0.5) / HIST_BINS_PER_OCTAVE);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median estimate (`quantile(0.5)`).
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// Tail-latency estimate (`quantile(0.99)`).
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram into this one (same bucket layout by
+    /// construction); counts, sum, and the min/max envelope all merge.
+    pub fn merge(&mut self, other: &StreamingHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Simple column-aligned table printer for bench reports.
@@ -113,6 +254,87 @@ mod tests {
         assert_eq!(count, 7);
         assert_eq!(s.n, 5);
         assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn histogram_empty_reports_zero() {
+        let h = StreamingHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        let mut h = StreamingHistogram::new();
+        for v in 1..=1000 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 1000.0);
+        assert!((h.mean() - 500.5).abs() < 1e-9, "mean is exact: {}", h.mean());
+        let p50 = h.p50();
+        let p99 = h.p99();
+        assert!((p50 - 500.0).abs() / 500.0 < 0.10, "p50 {p50} not within 10% of 500");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.10, "p99 {p99} not within 10% of 990");
+        // quantiles are monotone and clamped into [min, max]
+        let mut last = 0.0;
+        for i in 0..=20 {
+            let q = h.quantile(i as f64 / 20.0);
+            assert!(q >= last, "quantile must be monotone in q");
+            assert!((1.0..=1000.0).contains(&q));
+            last = q;
+        }
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let mut h = StreamingHistogram::new();
+        h.record(123.4);
+        // one sample: the [min, max] clamp pins every quantile to it
+        assert_eq!(h.quantile(0.0), 123.4);
+        assert_eq!(h.p50(), 123.4);
+        assert_eq!(h.p99(), 123.4);
+        assert_eq!(h.mean(), 123.4);
+    }
+
+    #[test]
+    fn histogram_clamps_bad_samples() {
+        let mut h = StreamingHistogram::new();
+        h.record(-5.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(1e30); // beyond the 2^40 top edge: absorbed, not a panic
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.0);
+        assert!(h.quantile(0.5).is_finite());
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_stream() {
+        let mut a = StreamingHistogram::new();
+        let mut b = StreamingHistogram::new();
+        let mut both = StreamingHistogram::new();
+        for v in 1..=500 {
+            a.record(v as f64);
+            both.record(v as f64);
+        }
+        for v in 501..=1000 {
+            b.record(v as f64 * 3.0);
+            both.record(v as f64 * 3.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        assert!((a.mean() - both.mean()).abs() < 1e-9);
+        for i in 0..=10 {
+            assert_eq!(a.quantile(i as f64 / 10.0), both.quantile(i as f64 / 10.0));
+        }
     }
 
     #[test]

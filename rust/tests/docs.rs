@@ -3,8 +3,9 @@
 //! subcommand the CLI actually dispatches (the `match cmd` arms in
 //! `src/main.rs`), so the quickstart can never rot silently when a
 //! subcommand is renamed or removed.  Everything is `include_str!`-ed at
-//! compile time, so this runs in the host-only (no-xla) CI job even
-//! though the `rtx` binary itself needs the `xla` feature.
+//! compile time, so this runs in the host-only (no-xla) CI job — where
+//! the `rtx` binary itself now also builds (its PJRT subcommands are
+//! cfg-gated and bail with a build hint).
 
 use std::collections::BTreeSet;
 
@@ -30,7 +31,7 @@ fn subcommands_from_main() -> BTreeSet<String> {
         }
     }
     assert!(
-        names.contains("serve-bench") && names.contains("figure1"),
+        names.contains("serve-bench") && names.contains("figure1") && names.contains("serve"),
         "subcommand extraction looks broken: got {names:?}"
     );
     names
@@ -100,5 +101,19 @@ fn docs_exist_and_are_cross_linked() {
     assert!(
         README.contains("RTX_WORKERS"),
         "README.md must document the worker-pool sizing override"
+    );
+    // the serve layer ships with docs: the continuous-batching front-end,
+    // its persisted perf trajectory, and the versioned --json schema
+    assert!(
+        README.contains("rtx serve"),
+        "README.md must document the continuous-batching serve command"
+    );
+    assert!(
+        ARCHITECTURE.contains("BENCH_serve.json"),
+        "ARCHITECTURE.md must document the persisted serve perf trajectory"
+    );
+    assert!(
+        ARCHITECTURE.contains("evict_slot"),
+        "ARCHITECTURE.md must document the retirement GC path"
     );
 }

@@ -16,20 +16,25 @@
 //!   n = 1, and fully-masked rows, and
 //! * incremental (dirty-cluster-only) spec regeneration equals a
 //!   from-scratch `routing_spec`, with regen counters matching a
-//!   touched-cluster model exactly.
+//!   touched-cluster model exactly, and
+//! * the serve-layer `Scheduler` (admission control, FIFO slot grants,
+//!   deadline sheds, retirement GC) agrees with a naive mirror on every
+//!   step's batch, every outcome, and every counter — including the
+//!   `EpochCache` evictions its retirement GC fires.
 //!
 //! The offline environment ships no `proptest`, so this reuses the
 //! hand-rolled seeded-case harness from `tests/proptests.rs`: every
 //! property runs ≥ 64 seeded random cases and reports the failing seed.
 
 use std::cell::Cell;
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use routing_transformer::attention::{
-    sparse_attention, AttentionSpec, Backend, BatchedAttention, Blocked, CompiledPattern,
-    EpochCache, Execution, MemberCache, Reference, RouteSlot, RoutingSession, ShardedPattern,
-    WorkerPool,
+    sparse_attention, AttentionSpec, Backend, BatchEntry, BatchedAttention, Blocked,
+    CompiledPattern, EpochCache, Execution, MemberCache, OutcomeKind, Reference, RequestOutcome,
+    Retired, RouteSlot, RoutingSession, Scheduler, ServeRequest, ServeStats, ShardedPattern,
+    Submission, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -647,5 +652,272 @@ fn prop_single_cluster_epoch_bumps_are_unchanged_hits() {
         assert_eq!(es.epoch_misses, 1, "only the initial compile misses");
         assert_eq!(cache.stats().evictions, 0, "no eviction across the whole session");
         assert_eq!(cache.len(), 1);
+    });
+}
+
+// --------------------------------------------------------- property 7
+
+/// Naive mirror of the serve-layer `Scheduler` plus the `EpochCache`
+/// entries its retirement GC owns: one wait queue, one slot map, one
+/// outcome ledger, and a live-routed-entry set, all evolved by the
+/// documented semantics only.
+struct SchedMirror {
+    now: u64,
+    waiting: VecDeque<ServeRequest>,
+    /// slot -> (id, content, remaining, deadline)
+    active: BTreeMap<usize, (u64, usize, u64, u64)>,
+    free: BTreeSet<usize>,
+    outcomes: Vec<RequestOutcome>,
+    /// (layer, head, slot) routed entries compiled into the cache.
+    live: HashSet<(usize, usize, usize)>,
+    stats: ServeStats,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl SchedMirror {
+    fn new(capacity: usize) -> SchedMirror {
+        SchedMirror {
+            now: 0,
+            waiting: VecDeque::new(),
+            active: BTreeMap::new(),
+            free: (0..capacity).collect(),
+            outcomes: Vec::new(),
+            live: HashSet::new(),
+            stats: ServeStats::default(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+}
+
+/// One full begin/touch/finish step cycle, mirrored and asserted:
+/// shed-sweep before FIFO admission into lowest free slots, batch
+/// snapshot slot-ascending, completion at `now + 1`, and retirement GC
+/// evicting exactly the slot's live routed entries.  `touches` are
+/// mid-step `get_routed_at` probes: `(layer, head, pick)` selects the
+/// `pick % active`-th live slot.
+fn sched_model_step(
+    sched: &mut Scheduler,
+    cache: &mut EpochCache,
+    m: &mut SchedMirror,
+    touches: &[(usize, usize, usize)],
+) {
+    const N: usize = 6;
+    let now = m.now;
+    let plan = sched.begin_step();
+    m.stats.steps += 1;
+
+    // model: shed the whole queue's infeasible tail first
+    let mut shed = Vec::new();
+    let mut kept = VecDeque::new();
+    for req in m.waiting.drain(..) {
+        if now + req.work > req.deadline {
+            m.stats.shed += 1;
+            m.outcomes.push(RequestOutcome { id: req.id, kind: OutcomeKind::Shed, at: now });
+            shed.push(req.id);
+        } else {
+            kept.push_back(req);
+        }
+    }
+    m.waiting = kept;
+
+    // model: FIFO admission into the lowest free slots
+    let mut admitted = Vec::new();
+    while !m.waiting.is_empty() {
+        let Some(&slot) = m.free.iter().next() else { break };
+        let req = m.waiting.pop_front().unwrap();
+        m.free.remove(&slot);
+        m.active.insert(slot, (req.id, req.content, req.work, req.deadline));
+        m.stats.admitted += 1;
+        admitted.push(BatchEntry {
+            id: req.id,
+            slot,
+            content: req.content,
+            remaining: req.work,
+            deadline: req.deadline,
+        });
+    }
+    let batch: Vec<BatchEntry> = m
+        .active
+        .iter()
+        .map(|(&slot, &(id, content, remaining, deadline))| BatchEntry {
+            id,
+            slot,
+            content,
+            remaining,
+            deadline,
+        })
+        .collect();
+    m.stats.peak_active = m.stats.peak_active.max(batch.len());
+    if batch.is_empty() {
+        m.stats.idle_steps += 1;
+    }
+    assert_eq!(plan.step, now, "step stamp");
+    assert_eq!(plan.shed, shed, "shed ids in queue order");
+    assert_eq!(plan.admitted, admitted, "FIFO admission into lowest free slots");
+    assert_eq!(plan.batch, batch, "batch snapshot, slot-ascending");
+
+    // mid-step routed-cache touches: the first touch of a (layer, head,
+    // slot) compiles (miss), re-touches hit the live entry
+    for &(layer, head, pick) in touches {
+        if m.active.is_empty() {
+            break;
+        }
+        let slots: Vec<usize> = m.active.keys().copied().collect();
+        let slot = slots[pick % slots.len()];
+        let key = (layer, head, slot);
+        let hit = m.live.contains(&key);
+        if hit {
+            m.hits += 1;
+        } else {
+            m.misses += 1;
+            m.live.insert(key);
+        }
+        let compiled = Cell::new(false);
+        cache.get_routed_at(RouteSlot { layer, head, seq: slot }, 0, 0, N, || {
+            compiled.set(true);
+            AttentionSpec::local(2).unwrap()
+        });
+        assert_eq!(compiled.get(), !hit, "compile exactly on first touch of a slot");
+    }
+
+    // model: charge one step, retire at zero, GC the slot's live entries
+    let fin = sched.finish_step(cache);
+    let mut retired = Vec::new();
+    let mut gc = 0u64;
+    let slots: Vec<usize> = m.active.keys().copied().collect();
+    for slot in slots {
+        let e = m.active.get_mut(&slot).unwrap();
+        e.2 -= 1;
+        if e.2 == 0 {
+            let (id, ..) = m.active.remove(&slot).unwrap();
+            m.free.insert(slot);
+            m.stats.completed += 1;
+            m.outcomes.push(RequestOutcome { id, kind: OutcomeKind::Completed, at: now + 1 });
+            for layer in 0..LAYERS {
+                for head in 0..HEADS {
+                    if m.live.remove(&(layer, head, slot)) {
+                        gc += 1;
+                        m.evictions += 1;
+                    }
+                }
+            }
+            retired.push(Retired { id, slot, completed_at: now + 1 });
+        }
+    }
+    m.stats.gc_evictions += gc;
+    m.now = now + 1;
+    assert_eq!(fin.step, now);
+    assert_eq!(fin.retired, retired, "retirements in slot order at now + 1");
+    assert_eq!(fin.gc_evictions, gc, "GC evicts exactly the live routed entries");
+
+    // full state agreement after every step
+    assert_eq!(sched.stats(), m.stats, "scheduler counters");
+    assert_eq!(sched.now(), m.now);
+    assert_eq!(sched.active_len(), m.active.len());
+    assert_eq!(sched.waiting_len(), m.waiting.len());
+    let cs = cache.stats();
+    assert_eq!(cs.hits, m.hits, "cache hits");
+    assert_eq!(cs.misses, m.misses, "cache misses");
+    assert_eq!(cs.evictions, m.evictions, "cache evictions == retirement GC");
+    assert_eq!(cache.len(), m.live.len(), "live compiles == model live set");
+}
+
+#[test]
+fn prop_scheduler_matches_reference_model() {
+    // Random submit / step / cache-touch / fast-forward sequences against
+    // the naive mirror: reject iff `now + work > deadline` (or work == 0)
+    // at submit, shed-sweep before FIFO admission, completion at
+    // `now + 1`, retirement GC evicting exactly the live routed entries.
+    // After a bounded drain every submitted request must appear in the
+    // ledger exactly once and every counter must match the model.
+    check("scheduler_model", 64, |rng| {
+        let capacity = rng.range(1, 4);
+        let mut sched = Scheduler::new(capacity, LAYERS, HEADS).unwrap();
+        let mut cache = EpochCache::new();
+        let mut m = SchedMirror::new(capacity);
+        let mut next_id = 0u64;
+        for _op in 0..rng.range(12, 28) {
+            match rng.below(5) {
+                // Submit: random work (0 exercises the degenerate reject)
+                // and a deadline tight enough to trigger both verdicts
+                0..=1 => {
+                    let id = next_id;
+                    next_id += 1;
+                    let work = rng.below(4) as u64;
+                    let deadline = m.now + rng.below(10) as u64;
+                    let req = ServeRequest {
+                        id,
+                        content: rng.below(8),
+                        arrival: m.now,
+                        work,
+                        deadline,
+                    };
+                    let expect_reject = work == 0 || m.now + work > deadline;
+                    m.stats.submitted += 1;
+                    if expect_reject {
+                        m.stats.rejected += 1;
+                        m.outcomes.push(RequestOutcome {
+                            id,
+                            kind: OutcomeKind::Rejected,
+                            at: m.now,
+                        });
+                    } else {
+                        m.stats.queued += 1;
+                        m.waiting.push_back(req);
+                    }
+                    let got = sched.submit(req);
+                    assert_eq!(
+                        got == Submission::Rejected,
+                        expect_reject,
+                        "admission-control verdict at now={} work={work} deadline={deadline}",
+                        m.now
+                    );
+                    assert_eq!(sched.stats(), m.stats);
+                }
+                // Step (with 0-2 mid-step cache touches)
+                2..=3 => {
+                    let touches: Vec<(usize, usize, usize)> = (0..rng.below(3))
+                        .map(|_| (rng.below(LAYERS), rng.below(HEADS), rng.below(16)))
+                        .collect();
+                    sched_model_step(&mut sched, &mut cache, &mut m, &touches);
+                }
+                // FastForward (idle only — mirrors run_serve's guard)
+                _ => {
+                    if sched.is_idle() {
+                        let to = m.now + rng.below(6) as u64;
+                        sched.fast_forward(to);
+                        if to > m.now {
+                            m.stats.fast_forwarded += to - m.now;
+                            m.now = to;
+                        }
+                        assert_eq!(sched.now(), m.now);
+                        assert_eq!(sched.stats(), m.stats);
+                    }
+                }
+            }
+        }
+        // drain: finite work + finite deadlines means this terminates
+        let mut guard = 0;
+        while !sched.is_idle() {
+            sched_model_step(&mut sched, &mut cache, &mut m, &[]);
+            guard += 1;
+            assert!(guard < 512, "drain must terminate");
+        }
+        assert_eq!(m.stats.submitted, next_id);
+        assert_eq!(
+            m.stats.resolved(),
+            next_id,
+            "every submitted request reaches exactly one terminal state"
+        );
+        assert_eq!(sched.outcomes(), m.outcomes.as_slice(), "exact ledger, exact order");
+        let mut ids: Vec<u64> = sched.outcomes().iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..next_id).collect::<Vec<_>>(), "each id exactly once");
+        assert_eq!(cache.len(), m.live.len());
+        assert!(m.live.is_empty(), "a full drain GCs every routed entry");
     });
 }
