@@ -1,6 +1,6 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Nine parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Ten parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
@@ -27,14 +27,20 @@
 //! workload must resolve every request exactly once, drain its routed
 //! compiles via retirement GC, replay bit-deterministically, and report
 //! p50/p99 step latency (liveness pins only — wall-clock serve latency is
-//! tracked across PRs in `BENCH_serve.json`, not pinned here).
+//! tracked across PRs in `BENCH_serve.json`, not pinned here);
+//! (10) memory-bounded banded compilation — `ChunkedPattern` streaming
+//! 512-row bands against a 4 MiB `MemoryBudget` must stay bit-identical
+//! to the monolithic compile for Local and Routing specs at
+//! n ∈ {8192, 65536}, with peak resident pattern bytes bounded by
+//! budget + one band and growing sublinearly in n (n grows 8x, peak must
+//! grow <= 4x) while the monolithic footprint grows linearly.
 
 use std::sync::Arc;
 
 use routing_transformer::attention::{
     optimal_clusters, run_serve, sparse_attention, ArrivalConfig, AttentionSpec, Backend,
-    BatchedAttention, Blocked, CompiledPattern, Execution, MemberCache, PatternCache, Reference,
-    RoutingSession, ServeOptions, WorkerPool,
+    BatchedAttention, Blocked, ChunkedPattern, CompiledPattern, Execution, MemberCache,
+    MemoryBudget, PatternCache, Reference, RoutingSession, ServeOptions, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -458,6 +464,7 @@ fn main() {
             seed: 47,
         },
         seed: 47,
+        ..ServeOptions::default()
     };
     let summary = run_serve(&opts, &Blocked).expect("serve loop must complete");
     let s = summary.stats;
@@ -491,6 +498,88 @@ fn main() {
         summary.step_us.p99(),
         summary.rows_per_sec()
     );
+
+    // memory-bounded banded compilation: `ChunkedPattern` streams 512-row
+    // bands against a 4 MiB shared budget.  Outputs must be bit-identical
+    // to the unbudgeted monolithic path, and peak resident pattern bytes
+    // must be bounded by budget + one band — so as n grows 8x (and the
+    // monolithic CSR footprint grows with it), peak grows <= 4x.
+    let d = 8usize;
+    let band_rows = 512usize;
+    let budget_bytes = 1usize << 22; // 4 MiB
+    println!(
+        "\nmemory-bounded banded compilation (band_rows={band_rows}, budget={budget_bytes} B):"
+    );
+    let mut table = Table::new(&[
+        "spec", "n", "monolithic B", "peak B", "peak/mono", "band compiles", "evicted B",
+    ]);
+    for family in ["local", "routing"] {
+        let mut peaks: Vec<(usize, usize)> = Vec::new();
+        for &n in &[8192usize, 65536] {
+            let spec = match family {
+                "local" => AttentionSpec::local(128).unwrap(),
+                _ => AttentionSpec::routing_balanced(n, optimal_clusters(n)).unwrap(),
+            };
+            let pattern = spec.compile(n);
+            let mono_bytes = pattern.heap_bytes();
+            let mut rng = Rng::new(53);
+            let mk = |rng: &mut Rng| -> Vec<f32> {
+                (0..n * d).map(|_| rng.normal() as f32).collect()
+            };
+            let q = mk(&mut rng);
+            let kv = mk(&mut rng);
+            let v = mk(&mut rng);
+            let mono_out = Reference.attention(&q, &kv, &v, d, &pattern).unwrap();
+
+            let budget = MemoryBudget::bytes(budget_bytes);
+            let mut chunked = ChunkedPattern::new(spec.clone(), n, band_rows, budget.clone());
+            let banded_out = chunked.attention_backend(&q, &kv, &v, d, &Reference).unwrap();
+            assert_eq!(
+                banded_out, mono_out,
+                "budgeted banded attention must be bit-identical to the monolithic path \
+                 ({family}, n={n})"
+            );
+            assert_eq!(chunked.nnz(), pattern.nnz(), "band nnz must sum to the monolithic nnz");
+
+            let max_band = (0..n.div_ceil(band_rows))
+                .map(|b| {
+                    spec.compile_band(n, b * band_rows..((b + 1) * band_rows).min(n)).heap_bytes()
+                })
+                .max()
+                .unwrap_or(0);
+            let peak = budget.peak();
+            assert!(
+                peak <= budget_bytes + max_band,
+                "peak resident bytes must never exceed budget + one in-flight band \
+                 ({family}, n={n}: peak {peak}, budget {budget_bytes}, max band {max_band})"
+            );
+            if mono_bytes > budget_bytes {
+                assert!(
+                    chunked.bytes_evicted() > 0,
+                    "a {mono_bytes}-byte {family} pattern must spill under a \
+                     {budget_bytes}-byte budget (n={n})"
+                );
+            }
+            table.row(&[
+                family.to_string(),
+                n.to_string(),
+                mono_bytes.to_string(),
+                peak.to_string(),
+                format!("{:.3}", peak as f64 / mono_bytes as f64),
+                chunked.band_compiles().to_string(),
+                chunked.bytes_evicted().to_string(),
+            ]);
+            peaks.push((n, peak));
+        }
+        let (_, peak_small) = peaks[0];
+        let (_, peak_big) = peaks[1];
+        assert!(
+            peak_big <= peak_small * 4,
+            "peak resident bytes must grow sublinearly: n grew 8x but {family} peak went \
+             {peak_small} -> {peak_big} (> 4x)"
+        );
+    }
+    table.print();
 
     println!("\nbench_complexity OK");
 }

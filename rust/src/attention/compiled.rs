@@ -10,6 +10,18 @@
 //! attend-set as a zero-allocation slice.  The Figure-1 ASCII/CSV
 //! renderers and the exact-FLOP `cost` model live here so there is exactly
 //! one source of truth for "which keys may query i attend to".
+//!
+//! Long-context additions (the banded-compilation refactor): a
+//! [`PatternBand`] is the same CSR content for one contiguous row range
+//! only — bit-identical to slicing a monolithic compile — so 100k–1M
+//! token patterns can be materialized band by band instead of all at
+//! once ([`super::AttentionSpec::compile_band`] /
+//! [`ChunkedPattern`](super::spec::ChunkedPattern)); a [`MemoryBudget`]
+//! is the shared byte meter the pattern caches charge resident
+//! [`CompiledPattern::heap_bytes`] against and spill over.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Sentinel cluster id for entries admitted by a non-routing scheme
 /// (public so engine consumers iterating raw cluster slices via
@@ -57,6 +69,31 @@ impl CompiledPattern {
             row_offsets.push(cols.len());
         }
         CompiledPattern { n, row_offsets, cols, cluster_ids }
+    }
+
+    /// Assemble from raw CSR arrays (band concatenation / band padding).
+    /// Callers guarantee the shape invariants; debug builds assert them.
+    pub(crate) fn from_parts(
+        n: usize,
+        row_offsets: Vec<usize>,
+        cols: Vec<usize>,
+        cluster_ids: Vec<u32>,
+    ) -> CompiledPattern {
+        debug_assert_eq!(row_offsets.len(), n + 1);
+        debug_assert_eq!(cols.len(), cluster_ids.len());
+        debug_assert_eq!(*row_offsets.last().expect("n + 1 >= 1 offsets"), cols.len());
+        debug_assert!(row_offsets.windows(2).all(|w| w[0] <= w[1]));
+        CompiledPattern { n, row_offsets, cols, cluster_ids }
+    }
+
+    /// Heap bytes owned by the CSR arrays — what one resident pattern
+    /// costs a [`MemoryBudget`].  Exact for the values stored (offsets +
+    /// cols at `usize` width, cluster ids at `u32`); allocator slack is
+    /// deliberately not modeled so the number is deterministic.
+    pub fn heap_bytes(&self) -> usize {
+        self.row_offsets.len() * std::mem::size_of::<usize>()
+            + self.cols.len() * std::mem::size_of::<usize>()
+            + self.cluster_ids.len() * std::mem::size_of::<u32>()
     }
 
     /// Sequence length the pattern was compiled for.
@@ -134,8 +171,13 @@ impl CompiledPattern {
     }
 
     /// Sparsity fraction (nnz / full causal nnz); 0.0 for `n = 0`.
+    ///
+    /// The full-causal denominator `n·(n+1)/2` is computed in `u128`: in
+    /// `usize` it overflows on 32-bit targets from n = 92682 and on
+    /// 64-bit targets for n near 2⁶⁴ — exactly the long-context regime
+    /// the banded pipeline targets.
     pub fn density(&self) -> f64 {
-        let full = self.n * (self.n + 1) / 2;
+        let full = self.n as u128 * (self.n as u128 + 1) / 2;
         if full == 0 {
             0.0
         } else {
@@ -145,9 +187,11 @@ impl CompiledPattern {
 
     /// Exact multiply-accumulate count for one attention pass over this
     /// pattern with head dimension `d`: QK^T and PV each touch every
-    /// materialized (query, key) pair once (`2 · nnz · d`).
+    /// materialized (query, key) pair once (`2 · nnz · d`), saturating at
+    /// `u64::MAX` instead of wrapping when nnz·d overflows 64 bits.
     pub fn cost(&self, d: usize) -> u64 {
-        2 * self.nnz() as u64 * d as u64
+        let macs = 2u128 * self.nnz() as u128 * d as u128;
+        u64::try_from(macs).unwrap_or(u64::MAX)
     }
 
     /// Attention-matrix entries instantiated (memory model).
@@ -184,12 +228,27 @@ impl CompiledPattern {
     /// ASCII rendering of the attention scheme, Figure-1 style: rows are
     /// outputs, columns inputs; routed entries are drawn with one letter
     /// per cluster, unrouted admitted entries with '#'.
+    ///
+    /// Clipped to [`RENDER_CLIP`] rows: the unclipped render is O(n²)
+    /// bytes (~10 GB at n = 100k), so big patterns get a truncation
+    /// marker instead of an OOM.  Use
+    /// [`render_ascii_clipped`](Self::render_ascii_clipped) to pick the
+    /// window explicitly.
     pub fn render_ascii(&self) -> String {
-        let mut out = String::with_capacity(self.n * (self.n + 1));
-        for i in 0..self.n {
+        self.render_ascii_clipped(RENDER_CLIP)
+    }
+
+    /// ASCII rendering of the first `max_rows` query rows (and, by
+    /// causality, the first `max_rows` key columns — no admitted entry of
+    /// a rendered row lies outside the clipped square).  When rows are
+    /// clipped a final marker line `… (showing R of N rows)` is appended.
+    pub fn render_ascii_clipped(&self, max_rows: usize) -> String {
+        let rows = self.n.min(max_rows);
+        let mut out = String::with_capacity(rows * (rows + 1) + 48);
+        for i in 0..rows {
             let (lo, hi) = (self.row_offsets[i], self.row_offsets[i + 1]);
             let mut next = lo;
-            for j in 0..self.n {
+            for j in 0..rows {
                 let ch = if next < hi && self.cols[next] == j {
                     let c = self.cluster_ids[next];
                     next += 1;
@@ -207,14 +266,30 @@ impl CompiledPattern {
             }
             out.push('\n');
         }
+        if rows < self.n {
+            out.push_str(&format!("… (showing {rows} of {} rows)\n", self.n));
+        }
         out
     }
 
     /// CSV rendering: `query,key,cluster` rows for every non-zero entry
     /// (cluster field empty for unrouted entries).
+    ///
+    /// Clipped to [`RENDER_CLIP`] rows for the same O(n²)-output reason
+    /// as [`render_ascii`](Self::render_ascii); use
+    /// [`render_csv_clipped`](Self::render_csv_clipped) to pick the
+    /// window explicitly.
     pub fn render_csv(&self) -> String {
+        self.render_csv_clipped(RENDER_CLIP)
+    }
+
+    /// CSV rendering of the first `max_rows` query rows.  When rows are
+    /// clipped a trailing comment line
+    /// `# truncated: rows R..N omitted` is appended.
+    pub fn render_csv_clipped(&self, max_rows: usize) -> String {
+        let rows = self.n.min(max_rows);
         let mut out = String::from("query,key,cluster\n");
-        for i in 0..self.n {
+        for i in 0..rows {
             for e in self.row_offsets[i]..self.row_offsets[i + 1] {
                 let j = self.cols[e];
                 match self.cluster_ids[e] {
@@ -223,9 +298,17 @@ impl CompiledPattern {
                 }
             }
         }
+        if rows < self.n {
+            out.push_str(&format!("# truncated: rows {rows}..{} omitted\n", self.n));
+        }
         out
     }
 }
+
+/// Default row clip for [`CompiledPattern::render_ascii`] /
+/// [`CompiledPattern::render_csv`]: enough for every Figure-1-sized
+/// render to be unclipped while bounding the worst case at ~0.3 MB.
+pub const RENDER_CLIP: usize = 512;
 
 /// Iterator over `(i, keys, clusters)` row slices; see
 /// [`CompiledPattern::rows`].
@@ -249,6 +332,226 @@ impl<'a> Iterator for RowIter<'a> {
 }
 
 impl<'a> ExactSizeIterator for RowIter<'a> {}
+
+/// One contiguous row band of a compiled pattern: the same CSR content a
+/// monolithic [`AttentionSpec::compile`](super::AttentionSpec::compile)
+/// would produce for rows `start..end`, with offsets rebased to the band
+/// start so only O(band) memory is resident.  Built by
+/// [`AttentionSpec::compile_band`](super::AttentionSpec::compile_band);
+/// bit-identity with monolithic slices is property-tested.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatternBand {
+    /// Sequence length of the *whole* pattern this band belongs to.
+    n: usize,
+    /// First absolute query row covered by the band.
+    start: usize,
+    /// `len + 1` offsets, rebased so `row_offsets[0] == 0`.
+    row_offsets: Vec<usize>,
+    cols: Vec<usize>,
+    cluster_ids: Vec<u32>,
+}
+
+impl PatternBand {
+    /// Pack sorted per-row entries for absolute rows `start..start+rows.len()`.
+    pub(crate) fn from_rows(
+        n: usize,
+        start: usize,
+        rows: Vec<Vec<(usize, u32)>>,
+    ) -> PatternBand {
+        debug_assert!(start + rows.len() <= n);
+        let nnz: usize = rows.iter().map(Vec::len).sum();
+        let mut row_offsets = Vec::with_capacity(rows.len() + 1);
+        let mut cols = Vec::with_capacity(nnz);
+        let mut cluster_ids = Vec::with_capacity(nnz);
+        row_offsets.push(0);
+        for row in &rows {
+            for &(j, c) in row {
+                cols.push(j);
+                cluster_ids.push(c);
+            }
+            row_offsets.push(cols.len());
+        }
+        PatternBand { n, start, row_offsets, cols, cluster_ids }
+    }
+
+    /// Sequence length of the whole pattern (not the band length).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// First absolute query row covered.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// One past the last absolute query row covered.
+    pub fn end(&self) -> usize {
+        self.start + self.len()
+    }
+
+    /// Number of query rows in the band.
+    pub fn len(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+
+    /// True when the band covers zero rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-zero entries in the band — O(1) from the CSR tail.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Attend-set for *absolute* row `i`; empty outside the band (same
+    /// out-of-range contract as [`CompiledPattern::row`]).
+    pub fn row(&self, i: usize) -> &[usize] {
+        match i.checked_sub(self.start) {
+            Some(r) if r < self.len() => &self.cols[self.row_offsets[r]..self.row_offsets[r + 1]],
+            _ => &[],
+        }
+    }
+
+    /// Cluster ids aligned with [`row`](Self::row); empty outside the band.
+    pub fn row_clusters(&self, i: usize) -> &[u32] {
+        match i.checked_sub(self.start) {
+            Some(r) if r < self.len() => {
+                &self.cluster_ids[self.row_offsets[r]..self.row_offsets[r + 1]]
+            }
+            _ => &[],
+        }
+    }
+
+    /// Heap bytes owned by the band's CSR arrays — the
+    /// [`MemoryBudget`] charge for keeping it resident.
+    pub fn heap_bytes(&self) -> usize {
+        self.row_offsets.len() * std::mem::size_of::<usize>()
+            + self.cols.len() * std::mem::size_of::<usize>()
+            + self.cluster_ids.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Exact MAC count for evaluating just this band (`2 · nnz · d`),
+    /// saturating like [`CompiledPattern::cost`].
+    pub fn cost(&self, d: usize) -> u64 {
+        u64::try_from(2u128 * self.nnz() as u128 * d as u128).unwrap_or(u64::MAX)
+    }
+
+    /// Materialize an n-row [`CompiledPattern`] whose rows outside the
+    /// band are empty and whose band rows are bit-identical to a
+    /// monolithic compile.  This is how banded evaluation reuses every
+    /// existing [`Backend`](super::Backend) unchanged: evaluating the
+    /// padded pattern over `start..end` touches exactly the band's CSR
+    /// entries, so backends see the same slices a monolithic pattern
+    /// would hand them.
+    pub fn to_pattern(&self) -> CompiledPattern {
+        let nnz = self.nnz();
+        let mut row_offsets = Vec::with_capacity(self.n + 1);
+        row_offsets.resize(self.start + 1, 0);
+        row_offsets.extend_from_slice(&self.row_offsets[1..]);
+        row_offsets.resize(self.n + 1, nnz);
+        CompiledPattern::from_parts(
+            self.n,
+            row_offsets,
+            self.cols.clone(),
+            self.cluster_ids.clone(),
+        )
+    }
+}
+
+/// Shared byte meter for resident compiled patterns, bands, and member
+/// lists.  Cloning shares the meter (it is an `Arc` internally), so one
+/// budget can govern `PatternCache`, `EpochCache`, `MemberCache`, and
+/// `ChunkedPattern` instances at once; caches [`charge`](Self::charge)
+/// on insert, [`release`](Self::release) on evict/drop, and consult
+/// [`over_budget`](Self::over_budget) to decide when to LRU-spill.
+///
+/// The budget is a *soft* cap enforced by the caches, not the meter:
+/// pinned entries and the entry being returned from an in-flight lookup
+/// are never spilled, so `resident` may transiently exceed `max_bytes`
+/// by at most those protected entries.
+#[derive(Debug, Clone)]
+pub struct MemoryBudget {
+    inner: Arc<BudgetInner>,
+}
+
+#[derive(Debug)]
+struct BudgetInner {
+    /// `None` = unbounded (metering only, never over budget).
+    max_bytes: Option<usize>,
+    resident: AtomicUsize,
+    peak: AtomicUsize,
+    evicted: AtomicU64,
+}
+
+impl MemoryBudget {
+    /// A metering-only budget that is never over budget.
+    pub fn unbounded() -> MemoryBudget {
+        MemoryBudget {
+            inner: Arc::new(BudgetInner {
+                max_bytes: None,
+                resident: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+                evicted: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A budget capped at `max_bytes` resident pattern bytes.
+    pub fn bytes(max_bytes: usize) -> MemoryBudget {
+        MemoryBudget {
+            inner: Arc::new(BudgetInner {
+                max_bytes: Some(max_bytes),
+                resident: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+                evicted: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// The cap, if any.
+    pub fn max_bytes(&self) -> Option<usize> {
+        self.inner.max_bytes
+    }
+
+    /// Meter `bytes` as newly resident (updates the peak watermark).
+    pub fn charge(&self, bytes: usize) {
+        let now = self.inner.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inner.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Meter `bytes` as freed (eviction or drop), counting them toward
+    /// [`evicted`](Self::evicted).
+    pub fn release(&self, bytes: usize) {
+        self.inner.resident.fetch_sub(bytes, Ordering::Relaxed);
+        self.inner.evicted.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Bytes currently metered as resident.
+    pub fn resident(&self) -> usize {
+        self.inner.resident.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`resident`](Self::resident) over the budget's
+    /// lifetime.
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes ever [`release`](Self::release)d.
+    pub fn evicted(&self) -> u64 {
+        self.inner.evicted.load(Ordering::Relaxed)
+    }
+
+    /// True when a cap is set and resident bytes exceed it — the signal
+    /// for caches to LRU-spill.
+    pub fn over_budget(&self) -> bool {
+        match self.inner.max_bytes {
+            Some(max) => self.resident() > max,
+            None => false,
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -412,5 +715,109 @@ mod tests {
         let p = AttentionSpec::local(8).unwrap().compile(64);
         assert_eq!(p.cost(64), 2 * p.nnz() as u64 * 64);
         assert_eq!(p.memory(), p.nnz() as u64);
+    }
+
+    #[test]
+    fn density_and_cost_survive_width_boundaries() {
+        // n = 200_000: n·(n+1)/2 ≈ 2·10¹⁰ overflows 32-bit usize (the
+        // old code's width), so pin the u128 path against exact f64 math
+        // on a synthetic one-entry pattern (offsets built directly —
+        // compiling 200k rows of Full would be gigabytes).
+        let n = 200_000usize;
+        let mut row_offsets = vec![0usize; n + 1];
+        for o in row_offsets.iter_mut().skip(1) {
+            *o = 1;
+        }
+        let p = CompiledPattern::from_parts(n, row_offsets, vec![0], vec![NO_CLUSTER]);
+        let expect = 1.0 / (n as f64 * (n as f64 + 1.0) / 2.0);
+        assert!((p.density() - expect).abs() < expect * 1e-12);
+        // cost saturates instead of wrapping: 2·1·usize::MAX > u64::MAX.
+        assert_eq!(p.cost(usize::MAX), u64::MAX);
+        assert_eq!(p.cost(32), 64, "small d stays exact");
+    }
+
+    #[test]
+    fn renders_clip_with_truncation_markers() {
+        let p = AttentionSpec::local(3).unwrap().compile(16);
+        let art = p.render_ascii_clipped(4);
+        let lines: Vec<&str> = art.lines().collect();
+        assert_eq!(lines.len(), 5, "4 rendered rows + marker");
+        assert!(lines[..4].iter().all(|l| l.chars().count() == 4));
+        assert_eq!(lines[4], "… (showing 4 of 16 rows)");
+        // clipped rows are byte-identical to the unclipped render's prefix
+        let full = p.render_ascii_clipped(usize::MAX);
+        for (clipped, full_row) in lines[..4].iter().zip(full.lines()) {
+            assert_eq!(*clipped, &full_row[..clipped.len()]);
+        }
+        assert!(!full.contains("showing"), "unclipped render has no marker");
+
+        let csv = p.render_csv_clipped(2);
+        assert_eq!(csv.lines().count(), 1 + 3 + 1, "header + nnz(rows 0..2) + marker");
+        assert!(csv.ends_with("# truncated: rows 2..16 omitted\n"));
+        assert!(!p.render_csv_clipped(16).contains("truncated"));
+
+        // defaults clip at RENDER_CLIP: small patterns unchanged, huge
+        // ones bounded (and causality means no rendered content is lost)
+        assert_eq!(p.render_ascii(), p.render_ascii_clipped(usize::MAX));
+        let big = AttentionSpec::local(2).unwrap().compile(RENDER_CLIP + 8);
+        assert_eq!(big.render_ascii().lines().count(), RENDER_CLIP + 1);
+        assert!(big.render_csv().ends_with(&format!(
+            "# truncated: rows {RENDER_CLIP}..{} omitted\n",
+            RENDER_CLIP + 8
+        )));
+    }
+
+    #[test]
+    fn heap_bytes_counts_csr_arrays() {
+        let p = AttentionSpec::local(4).unwrap().compile(16);
+        let usz = std::mem::size_of::<usize>();
+        assert_eq!(p.heap_bytes(), 17 * usz + p.nnz() * usz + p.nnz() * 4);
+        assert_eq!(AttentionSpec::Full.compile(0).heap_bytes(), usz);
+    }
+
+    #[test]
+    fn band_to_pattern_pads_outside_rows_empty() {
+        let spec = AttentionSpec::local(4).unwrap();
+        let band = spec.compile_band(16, 5..9);
+        assert_eq!((band.start(), band.end(), band.len()), (5, 9, 4));
+        let mono = spec.compile(16);
+        for i in 5..9 {
+            assert_eq!(band.row(i), mono.row(i));
+            assert_eq!(band.row_clusters(i), mono.row_clusters(i));
+        }
+        assert!(band.row(4).is_empty() && band.row(9).is_empty());
+        let padded = band.to_pattern();
+        assert_eq!(padded.n(), 16);
+        for i in 0..16 {
+            if (5..9).contains(&i) {
+                assert_eq!(padded.row(i), mono.row(i));
+                assert_eq!(padded.row_clusters(i), mono.row_clusters(i));
+            } else {
+                assert!(padded.row(i).is_empty());
+            }
+        }
+        assert_eq!(padded.nnz(), band.nnz());
+        assert_eq!(band.cost(8), 2 * band.nnz() as u64 * 8);
+        assert!(band.heap_bytes() < mono.heap_bytes());
+    }
+
+    #[test]
+    fn memory_budget_meters_and_caps() {
+        let b = MemoryBudget::bytes(100);
+        assert_eq!(b.max_bytes(), Some(100));
+        b.charge(60);
+        assert!(!b.over_budget());
+        let shared = b.clone(); // clones share the meter
+        shared.charge(60);
+        assert_eq!(b.resident(), 120);
+        assert!(b.over_budget());
+        b.release(60);
+        assert_eq!((b.resident(), b.peak(), b.evicted()), (60, 120, 60));
+        assert!(!b.over_budget());
+
+        let unbounded = MemoryBudget::unbounded();
+        unbounded.charge(usize::MAX / 2);
+        assert!(!unbounded.over_budget());
+        assert_eq!(unbounded.max_bytes(), None);
     }
 }

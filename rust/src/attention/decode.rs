@@ -92,7 +92,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::compiled::CompiledPattern;
+use super::compiled::{CompiledPattern, MemoryBudget};
 use super::engine::{CacheStats, PatternCache};
 use super::pool::Execution;
 use super::spec::AttentionSpec;
@@ -438,6 +438,11 @@ pub struct RegenStats {
     pub full_rebuilds: u64,
     /// Total [`RoutingSession::routing_spec_cached`] calls.
     pub calls: u64,
+    /// Heap bytes of membership state (lists, routing-vector snapshot,
+    /// version vector) resident in the cache these counters were read
+    /// from.  A merged aggregate sums each source at its merge time, so
+    /// for run-wide stats this reads as "member bytes retired".
+    pub bytes_resident: u64,
 }
 
 impl RegenStats {
@@ -464,6 +469,7 @@ impl RegenStats {
         self.reused += other.reused;
         self.full_rebuilds += other.full_rebuilds;
         self.calls += other.calls;
+        self.bytes_resident += other.bytes_resident;
     }
 }
 
@@ -480,7 +486,7 @@ impl RegenStats {
 /// Any mismatch — including NaN-poisoned vectors, which never compare
 /// equal — falls back to a full rebuild, so the cache can be wrong only
 /// in cost, never in content.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct MemberCache {
     /// (session nonce, layer, head) the snapshot was taken against — a
     /// cache wandering between slots, or surviving a session that was
@@ -496,6 +502,42 @@ pub struct MemberCache {
     members: Vec<Vec<usize>>,
     valid: bool,
     stats: RegenStats,
+    /// Shared meter the snapshot's heap bytes are charged against, if
+    /// any.  A `MemberCache` is a single-snapshot cache — its one entry
+    /// is by definition the current step's, so the budget only meters
+    /// (it never evicts membership state).
+    budget: Option<MemoryBudget>,
+    /// Bytes currently charged to `budget` (tracked even without one so
+    /// [`RegenStats::bytes_resident`] stays meaningful).
+    charged: usize,
+}
+
+impl Clone for MemberCache {
+    fn clone(&self) -> MemberCache {
+        if let Some(b) = &self.budget {
+            b.charge(self.charged);
+        }
+        MemberCache {
+            slot: self.slot,
+            versions: self.versions.clone(),
+            xs: self.xs.clone(),
+            n: self.n,
+            w: self.w,
+            members: self.members.clone(),
+            valid: self.valid,
+            stats: self.stats,
+            budget: self.budget.clone(),
+            charged: self.charged,
+        }
+    }
+}
+
+impl Drop for MemberCache {
+    fn drop(&mut self) {
+        if let Some(b) = &self.budget {
+            b.release(self.charged);
+        }
+    }
 }
 
 impl MemberCache {
@@ -504,9 +546,41 @@ impl MemberCache {
         MemberCache::default()
     }
 
-    /// Cumulative regeneration counters.
+    /// An empty cache whose membership-state heap bytes are metered
+    /// against `budget` (and released when the cache is dropped).
+    pub fn with_budget(budget: MemoryBudget) -> MemberCache {
+        let mut cache = MemberCache::default();
+        cache.budget = Some(budget);
+        cache
+    }
+
+    /// Heap bytes held by the cached snapshot: membership lists plus the
+    /// routing-vector and version-vector copies shape checks compare.
+    pub fn heap_bytes(&self) -> usize {
+        let members: usize = self.members.iter().map(|m| std::mem::size_of_val(m.as_slice())).sum();
+        members
+            + std::mem::size_of_val(self.versions.as_slice())
+            + std::mem::size_of_val(self.xs.as_slice())
+    }
+
+    /// Re-meter after a mutation: charge growth, release shrinkage.
+    fn recharge(&mut self) {
+        let now = self.heap_bytes();
+        if let Some(b) = &self.budget {
+            if now > self.charged {
+                b.charge(now - self.charged);
+            } else {
+                b.release(self.charged - now);
+            }
+        }
+        self.charged = now;
+    }
+
+    /// Cumulative regeneration counters (plus the resident-bytes gauge).
     pub fn stats(&self) -> RegenStats {
-        self.stats
+        let mut s = self.stats;
+        s.bytes_resident = self.charged as u64;
+        s
     }
 
     /// The cached membership lists (empty before first use).
@@ -544,6 +618,7 @@ impl MemberCache {
             self.w = w_eff;
             self.slot = slot;
             self.valid = true;
+            self.recharge();
             return;
         }
         for c in 0..km.k {
@@ -555,6 +630,7 @@ impl MemberCache {
                 self.stats.regenerated += 1;
             }
         }
+        self.recharge();
     }
 }
 
@@ -576,6 +652,13 @@ pub struct EpochCacheStats {
     /// recompile the incremental (dirty-set) flow skipped; the strict
     /// epoch-keyed flow would have evicted instead.
     pub unchanged_epochs: u64,
+    /// Heap bytes of slot-owned routed compiles currently resident
+    /// (gauge; the pinned static side is reported by
+    /// [`EpochCache::stats()`] instead).
+    pub bytes_resident: u64,
+    /// Cumulative heap bytes freed by routed-slot drops — stale-epoch
+    /// evictions, budget spills, and [`EpochCache::evict_slot`].
+    pub bytes_evicted: u64,
 }
 
 impl EpochCacheStats {
@@ -605,6 +688,14 @@ struct SlotEntry {
     assignment_epoch: u64,
     n: usize,
     pattern: Arc<CompiledPattern>,
+    /// Heap bytes charged to the cache's [`MemoryBudget`] for this
+    /// compile (released on any drop path).
+    bytes: usize,
+    /// Logical-clock timestamp of the last lookup that served this entry
+    /// — the LRU key for budget spills, and the step-protection token
+    /// (`last_used >= step_mark` means "touched during the in-flight
+    /// step": never spilled).
+    last_used: u64,
 }
 
 /// Generation-aware compile cache for a decode loop (dirty-set flow).
@@ -631,7 +722,15 @@ struct SlotEntry {
 /// cache holds at most one live routing pattern per slot.
 /// [`EpochCache::evict_slot`] drops a slot eagerly (e.g. when its
 /// request completes).
-#[derive(Debug, Default)]
+///
+/// Under a byte cap ([`EpochCache::with_budget`]) the routed slots share
+/// one [`MemoryBudget`] with the pinned static [`PatternCache`]: an
+/// insert that pushes the meter over budget LRU-spills routed slots —
+/// but never a pinned static compile, never the entry just inserted,
+/// and never a slot touched since the last [`EpochCache::mark_step`]
+/// call, so an in-flight step's working set cannot be evicted out from
+/// under it (the cap is soft by exactly that protected set).
+#[derive(Debug)]
 pub struct EpochCache {
     cache: PatternCache,
     slots: HashMap<RouteSlot, SlotEntry>,
@@ -639,18 +738,71 @@ pub struct EpochCache {
     /// merged with the static side by [`EpochCache::stats()`].
     routed: CacheStats,
     stats: EpochCacheStats,
+    /// Shared byte meter (unbounded by default); static compiles are
+    /// charged through `cache`, routed slots directly.
+    budget: MemoryBudget,
+    /// Logical clock driving LRU order — bumped per routed lookup, never
+    /// wall-clock, so spill order is deterministic and replayable.
+    tick: u64,
+    /// Entries with `last_used >= step_mark` are step-protected;
+    /// `u64::MAX` (the initial state) protects nothing.
+    step_mark: u64,
+}
+
+impl Default for EpochCache {
+    fn default() -> EpochCache {
+        EpochCache::with_budget(MemoryBudget::unbounded())
+    }
+}
+
+impl Drop for EpochCache {
+    /// Release the routed slots' charges (the static side's
+    /// [`PatternCache`] drop releases its own).
+    fn drop(&mut self) {
+        for entry in self.slots.values() {
+            self.budget.release(entry.bytes);
+        }
+    }
 }
 
 impl EpochCache {
-    /// An empty cache with zeroed counters.
+    /// An empty, unbudgeted (metering-only) cache with zeroed counters.
     pub fn new() -> EpochCache {
         EpochCache::default()
     }
 
+    /// An empty cache charging both sides — pinned statics and routed
+    /// slots — against `budget`.  Clones of the budget handle observe
+    /// the same meter, so one cap can govern several caches.
+    pub fn with_budget(budget: MemoryBudget) -> EpochCache {
+        EpochCache {
+            cache: PatternCache::with_budget(budget.clone()),
+            slots: HashMap::new(),
+            routed: CacheStats::default(),
+            stats: EpochCacheStats::default(),
+            budget,
+            tick: 0,
+            step_mark: u64::MAX,
+        }
+    }
+
+    /// The byte meter both sides charge against.
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
+    }
+
+    /// Start a new serve step: routed entries touched from here on are
+    /// protected from budget spills until the next call, so a step's
+    /// working set can never be evicted while the step is in flight.
+    pub fn mark_step(&mut self) {
+        self.step_mark = self.tick + 1;
+    }
+
     /// Pinned lookup for static (epoch-free) specs: local, strided, and
-    /// other content-independent head-plan parts.
+    /// other content-independent head-plan parts.  Pinned entries are
+    /// never spilled by the budget.
     pub fn get_static(&mut self, spec: &AttentionSpec, n: usize) -> Arc<CompiledPattern> {
-        self.cache.get_or_compile(spec, n)
+        self.cache.get_or_compile_pinned(spec, n)
     }
 
     /// Strict epoch-keyed lookup for a routed slot: every epoch bump
@@ -699,39 +851,85 @@ impl EpochCache {
         n: usize,
         make_spec: impl FnOnce() -> AttentionSpec,
     ) -> Arc<CompiledPattern> {
+        self.tick += 1;
         if let Some(entry) = self.slots.get_mut(&slot) {
             if entry.assignment_epoch == assignment_epoch && entry.n == n {
                 if entry.epoch != epoch {
                     entry.epoch = epoch;
                     self.stats.unchanged_epochs += 1;
                 }
+                entry.last_used = self.tick;
                 self.stats.epoch_hits += 1;
                 self.routed.hits += 1;
                 return Arc::clone(&entry.pattern);
             }
         }
-        if self.slots.remove(&slot).is_some() {
-            self.routed.evictions += 1;
+        if let Some(stale) = self.slots.remove(&slot) {
+            self.release_slot(stale.bytes);
         }
         self.stats.epoch_misses += 1;
         self.routed.misses += 1;
         let pattern = Arc::new(make_spec().compile(n));
+        let bytes = pattern.heap_bytes();
+        self.budget.charge(bytes);
+        self.routed.bytes_resident += bytes as u64;
         self.slots.insert(
             slot,
-            SlotEntry { epoch, assignment_epoch, n, pattern: Arc::clone(&pattern) },
+            SlotEntry {
+                epoch,
+                assignment_epoch,
+                n,
+                pattern: Arc::clone(&pattern),
+                bytes,
+                last_used: self.tick,
+            },
         );
+        self.spill(slot);
         pattern
+    }
+
+    /// Book one routed compile's bytes out of the meter and counters.
+    fn release_slot(&mut self, bytes: usize) {
+        self.budget.release(bytes);
+        self.routed.evictions += 1;
+        self.routed.bytes_resident -= bytes as u64;
+        self.routed.bytes_evicted += bytes as u64;
+    }
+
+    /// LRU-spill routed slots while the shared meter is over budget,
+    /// never touching `keep` (the entry just inserted) or any slot
+    /// touched since [`EpochCache::mark_step`].  `last_used` ticks are
+    /// unique, so the victim order is deterministic even though the slot
+    /// map itself is hashed.
+    fn spill(&mut self, keep: RouteSlot) {
+        while self.budget.over_budget() {
+            let victim = self
+                .slots
+                .iter()
+                .filter(|&(s, e)| *s != keep && e.last_used < self.step_mark)
+                .min_by_key(|&(_, e)| e.last_used)
+                .map(|(s, _)| *s);
+            match victim {
+                Some(s) => {
+                    let e = self.slots.remove(&s).expect("victim was drawn from the map");
+                    self.release_slot(e.bytes);
+                }
+                // everything left is pinned, step-protected, or the
+                // fresh insert — the cap is soft by exactly that set
+                None => break,
+            }
+        }
     }
 
     /// Drop one routed slot's live compile — a request ended, or the
     /// caller wants to force a recompile.  Counts one eviction when the
-    /// slot was present; returns whether it was.
-    pub fn evict_slot(&mut self, slot: RouteSlot) -> bool {
-        let present = self.slots.remove(&slot).is_some();
-        if present {
-            self.routed.evictions += 1;
-        }
-        present
+    /// slot was present and returns the heap bytes freed (`None` when
+    /// the slot had no live compile), so GC reports can print bytes
+    /// reclaimed per retirement.
+    pub fn evict_slot(&mut self, slot: RouteSlot) -> Option<usize> {
+        let entry = self.slots.remove(&slot)?;
+        self.release_slot(entry.bytes);
+        Some(entry.bytes)
     }
 
     /// Cluster epoch a slot's live pattern was last served at, if any.
@@ -753,12 +951,19 @@ impl EpochCache {
             hits: s.hits + self.routed.hits,
             misses: s.misses + self.routed.misses,
             evictions: s.evictions + self.routed.evictions,
+            bytes_resident: s.bytes_resident + self.routed.bytes_resident,
+            bytes_evicted: s.bytes_evicted + self.routed.bytes_evicted,
+            band_compiles: s.band_compiles + self.routed.band_compiles,
         }
     }
 
-    /// Slot-level epoch hit/miss counters (routed lookups only).
+    /// Slot-level epoch hit/miss counters (routed lookups only), plus
+    /// the routed side's byte gauge.
     pub fn epoch_stats(&self) -> EpochCacheStats {
-        self.stats
+        let mut s = self.stats;
+        s.bytes_resident = self.routed.bytes_resident;
+        s.bytes_evicted = self.routed.bytes_evicted;
+        s
     }
 
     /// Live compiles: pinned static entries + one per routed slot.
@@ -771,12 +976,16 @@ impl EpochCache {
         self.cache.is_empty() && self.slots.is_empty()
     }
 
-    /// Drop every entry and reset all counters.
+    /// Drop every entry and reset all counters, releasing every charged
+    /// byte back to the shared meter.
     pub fn clear(&mut self) {
         self.cache.clear();
-        self.slots.clear();
+        for (_, entry) in self.slots.drain() {
+            self.budget.release(entry.bytes);
+        }
         self.routed = CacheStats::default();
         self.stats = EpochCacheStats::default();
+        self.step_mark = u64::MAX;
     }
 }
 
@@ -1144,10 +1353,8 @@ mod tests {
         // same epoch: hit, same Arc, no spec regeneration
         let again = cache.get_routed(slot, 0, 8, || panic!("hit must not regenerate"));
         assert!(Arc::ptr_eq(&p0, &again));
-        assert_eq!(
-            cache.epoch_stats(),
-            EpochCacheStats { epoch_hits: 1, epoch_misses: 1, unchanged_epochs: 0 }
-        );
+        let es = cache.epoch_stats();
+        assert_eq!((es.epoch_hits, es.epoch_misses, es.unchanged_epochs), (1, 1, 0));
         // epoch bump: stale compile evicted before the new one lands
         // (strict keying — no assignment-delta tracking on this path)
         let p1 = cache.get_routed(slot, 1, 8, || s1.clone());
@@ -1205,18 +1412,14 @@ mod tests {
             assert_eq!(*p1, session.routing_spec(0, 1, &xs, n, 6).compile(n));
             assert_eq!(cache.slot_assignment_epoch(slot), Some(1));
             assert_eq!(cache.stats().evictions, 1);
-            assert_eq!(
-                cache.epoch_stats(),
-                EpochCacheStats { epoch_hits: 1, epoch_misses: 2, unchanged_epochs: 0 }
-            );
+            let es = cache.epoch_stats();
+            assert_eq!((es.epoch_hits, es.epoch_misses, es.unchanged_epochs), (1, 2, 0));
         } else {
             assert!(Arc::ptr_eq(&p0, &p1), "stable assignments keep the live compile");
             assert_eq!(cache.slot_assignment_epoch(slot), Some(0));
             assert_eq!(cache.stats().evictions, 0);
-            assert_eq!(
-                cache.epoch_stats(),
-                EpochCacheStats { epoch_hits: 2, epoch_misses: 1, unchanged_epochs: 1 }
-            );
+            let es = cache.epoch_stats();
+            assert_eq!((es.epoch_hits, es.epoch_misses, es.unchanged_epochs), (2, 1, 1));
         }
     }
 
@@ -1338,7 +1541,7 @@ mod tests {
         session.routed_pattern(&mut cache, b, &xs, 8, 4);
         assert_eq!(cache.len(), 3);
         let evictions = cache.stats().evictions;
-        assert!(cache.evict_slot(a), "request 0 completes: its slot is collected");
+        assert!(cache.evict_slot(a).is_some(), "request 0 completes: its slot is collected");
         assert_eq!(cache.stats().evictions, evictions + 1, "GC counts as an eviction");
         assert_eq!(cache.len(), 2, "the static and the live request survive");
         assert_eq!(cache.slot_epoch(a), None, "the retired compile is gone");
@@ -1346,7 +1549,11 @@ mod tests {
         let misses = cache.epoch_stats().epoch_misses;
         session.routed_pattern(&mut cache, a, &xs, 8, 4);
         assert_eq!(cache.epoch_stats().epoch_misses, misses + 1);
-        assert!(!cache.evict_slot(RouteSlot { layer: 0, head: 0, seq: 9 }), "absent is a no-op");
+        assert_eq!(
+            cache.evict_slot(RouteSlot { layer: 0, head: 0, seq: 9 }),
+            None,
+            "absent is a no-op"
+        );
     }
 
     #[test]
@@ -1358,8 +1565,13 @@ mod tests {
         cache.get_routed(b, 0, 8, || AttentionSpec::routing(vec![vec![2, 3]]));
         let pinned = cache.get_static(&AttentionSpec::local(2).unwrap(), 8);
         assert_eq!(cache.len(), 3);
-        assert!(cache.evict_slot(a), "present slot evicts");
-        assert!(!cache.evict_slot(a), "absent slot is a no-op");
+        let freed = cache.evict_slot(a).expect("present slot evicts");
+        assert_eq!(
+            freed,
+            AttentionSpec::routing(vec![vec![0, 1]]).compile(8).heap_bytes(),
+            "evict_slot reports the compile's heap bytes"
+        );
+        assert_eq!(cache.evict_slot(a), None, "absent slot is a no-op");
         assert_eq!(cache.stats().evictions, 1);
         assert_eq!(cache.len(), 2, "the other slot and the pinned static survive");
         assert_eq!(cache.slot_epoch(a), None);
@@ -1369,6 +1581,72 @@ mod tests {
         let misses = cache.stats().misses;
         cache.get_routed(a, 0, 8, || AttentionSpec::routing(vec![vec![0, 1]]));
         assert_eq!(cache.stats().misses, misses + 1);
+    }
+
+    #[test]
+    fn budgeted_epoch_cache_spills_lru_but_never_pinned_or_step_touched() {
+        use super::super::compiled::MemoryBudget;
+        let n = 32;
+        let local = AttentionSpec::local(2).unwrap();
+        // every slot compiles the same spec, so all routed entries have
+        // identical heap bytes and the spill arithmetic is exact
+        let routed_spec = AttentionSpec::routing(vec![(0..n).collect()]);
+        let slot_bytes = routed_spec.compile(n).heap_bytes();
+        let static_bytes = local.compile(n).heap_bytes();
+        // room for the pinned static plus two and a half routed compiles
+        let max = static_bytes + 2 * slot_bytes + slot_bytes / 2;
+        let budget = MemoryBudget::bytes(max);
+        let mut cache = EpochCache::with_budget(budget.clone());
+        let slot = |seq: usize| RouteSlot { layer: 0, head: 0, seq };
+        cache.get_static(&local, n);
+        for seq in 0..3 {
+            cache.get_routed(slot(seq), 0, n, || routed_spec.clone());
+        }
+        // third insert went over budget: the LRU slot (seq 0) spilled
+        assert!(budget.resident() <= max, "spill restored the cap");
+        assert_eq!(cache.slot_epoch(slot(0)), None, "LRU victim spilled");
+        assert_eq!(cache.slot_epoch(slot(1)), Some(0));
+        assert_eq!(cache.slot_epoch(slot(2)), Some(0));
+        // touching seq 1 makes seq 2 the LRU victim for the next insert
+        cache.get_routed(slot(1), 0, n, || unreachable!("hit: served live"));
+        cache.get_routed(slot(3), 0, n, || routed_spec.clone());
+        assert_eq!(cache.slot_epoch(slot(2)), None, "recency decides the victim");
+        assert_eq!(cache.slot_epoch(slot(1)), Some(0), "recently touched survives");
+        // a step's working set is protected: over-budget inserts spill
+        // nothing when every other slot was touched this step
+        cache.mark_step();
+        cache.get_routed(slot(1), 0, n, || unreachable!("hit: served live"));
+        cache.get_routed(slot(3), 0, n, || unreachable!("hit: served live"));
+        cache.get_routed(slot(4), 0, n, || routed_spec.clone());
+        for seq in [1, 3, 4] {
+            assert_eq!(cache.slot_epoch(slot(seq)), Some(0), "step-touched slot survives");
+        }
+        assert!(budget.over_budget(), "the cap is soft by the protected set");
+        // the pinned static never spills, even while over budget
+        assert_eq!(cache.cache.len(), 1, "pinned static survived every spill");
+        // next step: protection lapses and the cap is restored
+        cache.mark_step();
+        cache.get_routed(slot(5), 0, n, || routed_spec.clone());
+        assert!(budget.resident() <= max, "unprotected LRU slots spilled");
+        assert_eq!(cache.slot_epoch(slot(1)), None);
+        assert_eq!(cache.slot_epoch(slot(3)), None);
+        assert_eq!(cache.slot_epoch(slot(4)), Some(0));
+        assert_eq!(cache.slot_epoch(slot(5)), Some(0));
+        let es = cache.epoch_stats();
+        assert_eq!(es.bytes_resident, 2 * slot_bytes as u64, "gauge tracks live slots");
+        assert_eq!(
+            es.bytes_evicted,
+            4 * slot_bytes as u64,
+            "seqs 0, 2, 1, 3 were spilled and their bytes accounted"
+        );
+        let total = cache.stats();
+        assert_eq!(
+            total.bytes_resident,
+            (static_bytes + 2 * slot_bytes) as u64,
+            "merged gauge covers the pinned static too"
+        );
+        drop(cache);
+        assert_eq!(budget.resident(), 0, "dropping the cache releases every charge");
     }
 
     #[test]

@@ -84,7 +84,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::compiled::CompiledPattern;
+use super::compiled::{CompiledPattern, MemoryBudget};
 use super::pool::Execution;
 use super::spec::AttentionSpec;
 
@@ -97,10 +97,32 @@ pub struct CacheStats {
     pub hits: u64,
     /// Lookups that had to compile (one compile per miss).
     pub misses: u64,
-    /// Compiled patterns dropped by [`PatternCache::evict`] (one per
-    /// `(spec, n)` entry removed) — the routing-churn signal a serving
-    /// loop watches; see [`super::decode::EpochCache`].
+    /// Compiled patterns dropped by [`PatternCache::evict`] or spilled
+    /// by the [`MemoryBudget`] LRU (one per `(spec, n)` entry removed) —
+    /// the routing-churn signal a serving loop watches; see
+    /// [`super::decode::EpochCache`].
     pub evictions: u64,
+    /// Heap bytes of the patterns currently resident (a gauge, not a
+    /// counter).
+    pub bytes_resident: u64,
+    /// Cumulative heap bytes freed by evictions and spills.
+    pub bytes_evicted: u64,
+    /// Band compiles folded in by banded consumers
+    /// ([`super::spec::ChunkedPattern`]); always 0 for a plain
+    /// monolithic cache.
+    pub band_compiles: u64,
+}
+
+/// What an eviction freed: how many `(spec, n)` entries were dropped and
+/// how many pattern heap bytes they held.  Returned by
+/// [`PatternCache::evict`] / [`PatternCache::clear`] so GC reports can
+/// print bytes reclaimed, not just entry counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Freed {
+    /// `(spec, n)` entries removed.
+    pub entries: usize,
+    /// Pattern heap bytes those entries held.
+    pub bytes: usize,
 }
 
 impl CacheStats {
@@ -119,6 +141,19 @@ impl CacheStats {
     }
 }
 
+/// One cached compile plus the bookkeeping the byte budget needs.
+#[derive(Debug)]
+struct CacheEntry {
+    pattern: Arc<CompiledPattern>,
+    /// `pattern.heap_bytes()`, frozen at insert (patterns are immutable).
+    bytes: usize,
+    /// LRU clock value of the last lookup that touched this entry.
+    last_used: u64,
+    /// Pinned entries (static head-plan compiles inserted via
+    /// [`PatternCache::get_or_compile_pinned`]) are never LRU victims.
+    pinned: bool,
+}
+
 /// Compile cache: (spec, n) → shared [`CompiledPattern`].
 ///
 /// Serving reuses one pattern across every head and decode step that
@@ -128,45 +163,133 @@ impl CacheStats {
 /// [`PatternCache::evict`] available for spec-keyed invalidation; the
 /// decode loop's per-epoch routing compiles are slot-owned by
 /// [`super::decode::EpochCache`] and never enter this map at all.
-#[derive(Debug, Default)]
+///
+/// A cache built with [`PatternCache::with_budget`] charges every
+/// resident pattern's [`CompiledPattern::heap_bytes`] against the shared
+/// [`MemoryBudget`] and LRU-spills unpinned entries whenever an insert
+/// pushes the budget over — never the entry being returned from the
+/// in-flight lookup, and never a pinned static, so the budget is a soft
+/// cap that in-flight steps can trust.  [`PatternCache::new`] meters
+/// against an unbounded budget (counters move, nothing spills).
+#[derive(Debug)]
 pub struct PatternCache {
     /// Outer map by spec (hashed structurally ≡ by canonical JSON, since
     /// constructors normalize), inner by sequence length.
-    entries: HashMap<AttentionSpec, BTreeMap<usize, Arc<CompiledPattern>>>,
+    entries: HashMap<AttentionSpec, BTreeMap<usize, CacheEntry>>,
     stats: CacheStats,
+    budget: MemoryBudget,
+    /// LRU clock, bumped per lookup; deterministic (no wall-clock) so the
+    /// stateful model harness can mirror eviction order exactly.
+    tick: u64,
+}
+
+impl Default for PatternCache {
+    fn default() -> PatternCache {
+        PatternCache::new()
+    }
 }
 
 impl PatternCache {
-    /// An empty cache with zeroed counters.
+    /// An empty cache with zeroed counters and an unbounded budget.
     pub fn new() -> PatternCache {
-        PatternCache::default()
+        PatternCache::with_budget(MemoryBudget::unbounded())
+    }
+
+    /// An empty cache metering residency against `budget` (clones of one
+    /// budget share the meter, so several caches can split one cap).
+    pub fn with_budget(budget: MemoryBudget) -> PatternCache {
+        PatternCache { entries: HashMap::new(), stats: CacheStats::default(), budget, tick: 0 }
+    }
+
+    /// The budget this cache charges.
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
     }
 
     /// The pattern for `(spec, n)`, compiling at most once per key.
     pub fn get_or_compile(&mut self, spec: &AttentionSpec, n: usize) -> Arc<CompiledPattern> {
-        if let Some(p) = self.entries.get(spec).and_then(|by_n| by_n.get(&n)) {
+        self.lookup(spec, n, false)
+    }
+
+    /// [`PatternCache::get_or_compile`], marking the entry pinned: a
+    /// pinned entry is never an LRU spill victim (static head-plan
+    /// compiles must not be evicted out from under an in-flight step).
+    /// Pinning is sticky — a pinned entry stays pinned even when later
+    /// looked up unpinned.
+    pub fn get_or_compile_pinned(
+        &mut self,
+        spec: &AttentionSpec,
+        n: usize,
+    ) -> Arc<CompiledPattern> {
+        self.lookup(spec, n, true)
+    }
+
+    fn lookup(&mut self, spec: &AttentionSpec, n: usize, pin: bool) -> Arc<CompiledPattern> {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(spec).and_then(|by_n| by_n.get_mut(&n)) {
             self.stats.hits += 1;
-            return Arc::clone(p);
+            e.last_used = self.tick;
+            e.pinned |= pin;
+            return Arc::clone(&e.pattern);
         }
         self.stats.misses += 1;
         let pattern = Arc::new(spec.compile(n));
-        self.entries.entry(spec.clone()).or_default().insert(n, Arc::clone(&pattern));
+        let bytes = pattern.heap_bytes();
+        self.budget.charge(bytes);
+        self.stats.bytes_resident += bytes as u64;
+        self.entries.entry(spec.clone()).or_default().insert(
+            n,
+            CacheEntry { pattern: Arc::clone(&pattern), bytes, last_used: self.tick, pinned: pin },
+        );
+        self.spill(spec, n);
         pattern
     }
 
+    /// LRU-spill unpinned entries (other than the just-touched
+    /// `(keep_spec, keep_n)`) until the shared budget is satisfied or
+    /// nothing evictable remains.
+    fn spill(&mut self, keep_spec: &AttentionSpec, keep_n: usize) {
+        while self.budget.over_budget() {
+            let victim = self
+                .entries
+                .iter()
+                .flat_map(|(spec, by_n)| by_n.iter().map(move |(&n, e)| (spec, n, e)))
+                .filter(|&(spec, n, e)| !e.pinned && !(spec == keep_spec && n == keep_n))
+                .min_by_key(|(_, _, e)| e.last_used)
+                .map(|(spec, n, _)| (spec.clone(), n));
+            let Some((spec, n)) = victim else { break };
+            let by_n = self.entries.get_mut(&spec).expect("victim spec present");
+            let e = by_n.remove(&n).expect("victim entry present");
+            if by_n.is_empty() {
+                self.entries.remove(&spec);
+            }
+            self.release(e.bytes, 1);
+        }
+    }
+
+    /// Shared accounting for dropping entries worth `bytes`.
+    fn release(&mut self, bytes: usize, entries: u64) {
+        self.budget.release(bytes);
+        self.stats.evictions += entries;
+        self.stats.bytes_resident -= bytes as u64;
+        self.stats.bytes_evicted += bytes as u64;
+    }
+
     /// Drop every compiled length of `spec`, counting one eviction per
-    /// `(spec, n)` entry removed; returns how many were dropped.  The
-    /// spec-keyed invalidation primitive: when content supersedes a
-    /// compiled routing spec (see [`super::decode::EpochCache`] for the
-    /// epoch bookkeeping), the old compile is dead weight and must not
-    /// linger.
-    pub fn evict(&mut self, spec: &AttentionSpec) -> usize {
+    /// `(spec, n)` entry removed; returns the entries and pattern heap
+    /// bytes freed.  The spec-keyed invalidation primitive: when content
+    /// supersedes a compiled routing spec (see
+    /// [`super::decode::EpochCache`] for the epoch bookkeeping), the old
+    /// compile is dead weight and must not linger.
+    pub fn evict(&mut self, spec: &AttentionSpec) -> Freed {
         match self.entries.remove(spec) {
             Some(by_n) => {
-                self.stats.evictions += by_n.len() as u64;
-                by_n.len()
+                let entries = by_n.len();
+                let bytes: usize = by_n.values().map(|e| e.bytes).sum();
+                self.release(bytes, entries as u64);
+                Freed { entries, bytes }
             }
-            None => 0,
+            None => Freed::default(),
         }
     }
 
@@ -185,10 +308,34 @@ impl PatternCache {
         self.stats
     }
 
-    /// Drop all entries and reset the counters.
-    pub fn clear(&mut self) {
+    /// Drop all entries and reset the counters, releasing every budget
+    /// charge; returns what was freed (not counted in the — just reset —
+    /// eviction stats).
+    pub fn clear(&mut self) -> Freed {
+        let entries = self.len();
+        let bytes: usize = self
+            .entries
+            .values()
+            .flat_map(|by_n| by_n.values().map(|e| e.bytes))
+            .sum();
+        self.budget.release(bytes);
         self.entries.clear();
         self.stats = CacheStats::default();
+        Freed { entries, bytes }
+    }
+}
+
+impl Drop for PatternCache {
+    /// Return every still-charged byte to the shared meter, so dropping
+    /// a retired cache is indistinguishable (to the budget) from
+    /// clearing it first.
+    fn drop(&mut self) {
+        let bytes: usize = self
+            .entries
+            .values()
+            .flat_map(|by_n| by_n.values().map(|e| e.bytes))
+            .sum();
+        self.budget.release(bytes);
     }
 }
 
@@ -543,17 +690,23 @@ mod tests {
         let a = cache.get_or_compile(&local, 16);
         let b = cache.get_or_compile(&local, 16);
         assert!(Arc::ptr_eq(&a, &b), "hit must reuse the same compile");
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.bytes_resident, a.heap_bytes() as u64);
         assert_eq!(cache.len(), 1);
         // a different n or spec is a distinct entry
         cache.get_or_compile(&local, 32);
         cache.get_or_compile(&AttentionSpec::local(5).unwrap(), 16);
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 3, evictions: 0 });
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 3, 0));
         assert_eq!(cache.len(), 3);
         assert!((cache.stats().hit_rate() - 0.25).abs() < 1e-12);
-        cache.clear();
+        let freed = cache.clear();
+        assert_eq!(freed.entries, 3);
+        assert!(freed.bytes > 0);
         assert!(cache.is_empty());
         assert_eq!(cache.stats().lookups(), 0);
+        assert_eq!(cache.stats().bytes_resident, 0);
     }
 
     #[test]
@@ -566,16 +719,57 @@ mod tests {
         cache.get_or_compile(&local, 8);
         assert_eq!(cache.len(), 3);
         // both compiled lengths of the routed spec go at once
-        assert_eq!(cache.evict(&routed), 2);
+        let freed = cache.evict(&routed);
+        assert_eq!(freed.entries, 2);
+        assert_eq!(freed.bytes, routed.compile(8).heap_bytes() + routed.compile(16).heap_bytes());
         assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.stats().bytes_evicted, freed.bytes as u64);
         assert_eq!(cache.len(), 1, "static spec must stay pinned");
         // evicting an absent spec is a no-op
-        assert_eq!(cache.evict(&routed), 0);
+        assert_eq!(cache.evict(&routed), Freed::default());
         assert_eq!(cache.stats().evictions, 2);
         // the next lookup recompiles (a miss, not a stale hit)
         let fresh = cache.get_or_compile(&routed, 8);
         assert_eq!(*fresh, routed.compile(8));
         assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn budgeted_cache_spills_lru_but_never_pinned() {
+        let local = AttentionSpec::local(4).unwrap();
+        let pin_bytes = local.compile(64).heap_bytes();
+        // eight equal-shape routed specs (one 8-member cluster each, so
+        // every compile costs the same bytes), budget fits ~2.5 of them
+        let specs: Vec<AttentionSpec> = (0..8)
+            .map(|k| AttentionSpec::routing(vec![(k..64).step_by(8).collect()]))
+            .collect();
+        let routed_bytes = specs[0].compile(64).heap_bytes();
+        let budget = MemoryBudget::bytes(pin_bytes + 2 * routed_bytes + routed_bytes / 2);
+        let mut cache = PatternCache::with_budget(budget.clone());
+        cache.get_or_compile_pinned(&local, 64);
+        for spec in &specs {
+            cache.get_or_compile(spec, 64);
+            assert!(
+                budget.resident() <= budget.max_bytes().unwrap(),
+                "no protected entry here, so the cap holds exactly"
+            );
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0, "inserting 8 routed compiles must spill");
+        assert_eq!(s.bytes_resident, budget.resident() as u64);
+        assert!(s.bytes_evicted > 0);
+        // the pinned static survived every spill; the oldest routed did not
+        assert!(Arc::ptr_eq(
+            &cache.get_or_compile(&local, 64),
+            &cache.get_or_compile_pinned(&local, 64)
+        ));
+        let hits_before = cache.stats().hits;
+        cache.get_or_compile(&specs[0], 64);
+        assert_eq!(cache.stats().hits, hits_before, "LRU victim was recompiled, not hit");
+        // most-recent entries are the survivors
+        let misses_before = cache.stats().misses;
+        cache.get_or_compile(&specs[0], 64);
+        assert_eq!(cache.stats().misses, misses_before, "just-inserted entry is protected");
     }
 
     #[test]

@@ -18,7 +18,13 @@
 //!    of truth for "which keys may query i attend to": O(log w) `allowed`,
 //!    O(1) `nnz`/`density`, zero-allocation `row(i)` attend-set slices and
 //!    batched `rows(range)` gathers, an exact-FLOP `cost(d)`, and the
-//!    Figure-1 ASCII/CSV renderers.
+//!    Figure-1 ASCII/CSV renderers (clipped to [`RENDER_CLIP`] rows by
+//!    default so large n stays printable).  For long contexts,
+//!    [`AttentionSpec::compile_band`] materializes only a row range as a
+//!    [`PatternBand`], and [`ChunkedPattern`] streams those bands on
+//!    demand against a shared [`MemoryBudget`] (LRU spill over budget,
+//!    bit-identical to the monolithic compile) so peak resident pattern
+//!    bytes stay sublinear in n.
 //! 3. [`engine`] — the serving layer over compiled patterns: a
 //!    [`PatternCache`] deduplicating compiles across heads/layers/steps,
 //!    [`ShardedPattern`] row-range shards with per-shard nnz/cost so one
@@ -77,15 +83,15 @@ pub mod serve;
 pub mod spec;
 
 pub use backend::{Backend, Blocked, Reference};
-pub use compiled::{CompiledPattern, RowIter, RowStats, NO_CLUSTER};
+pub use compiled::{CompiledPattern, MemoryBudget, PatternBand, RowIter, RowStats, NO_CLUSTER, RENDER_CLIP};
 pub use complexity::optimal_clusters;
 pub use decode::{
     sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, MemberCache,
     RegenStats, RouteSlot, RouteUpdate, RoutingSession,
 };
 pub use engine::{
-    dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, PatternCache,
-    Shard, ShardedPattern,
+    dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, Freed,
+    PatternCache, Shard, ShardedPattern,
 };
 pub use pool::{Execution, WorkerPool};
 pub use serve::{
@@ -93,4 +99,4 @@ pub use serve::{
     Scheduler, ServeOptions, ServeRequest, ServeStats, ServeSummary, StepFinish, StepPlan,
     Submission, JSON_SCHEMA_VERSION,
 };
-pub use spec::AttentionSpec;
+pub use spec::{AttentionSpec, ChunkedPattern, ChunkedRowIter};

@@ -15,10 +15,20 @@
 //!
 //! Specs serialize to/from JSON (`to_json`/`from_json`) so head plans can
 //! live in manifests and configs.
+//!
+//! For long contexts every family is also *band-compilable*:
+//! [`AttentionSpec::compile_band`] materializes just a contiguous row
+//! range (bit-identical to the matching slice of a monolithic compile,
+//! because all row construction here is keyed on the absolute row index),
+//! and [`ChunkedPattern`] serves a whole pattern from lazily compiled,
+//! LRU-evicted bands under a [`MemoryBudget`].
+
+use std::ops::Range;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::compiled::{CompiledPattern, NO_CLUSTER};
+use crate::attention::backend::Backend;
+use crate::attention::compiled::{CompiledPattern, MemoryBudget, PatternBand, NO_CLUSTER};
 use crate::util::json::Json;
 
 /// A declarative sparse-attention scheme.  Always causal: every variant
@@ -139,6 +149,26 @@ impl AttentionSpec {
         CompiledPattern::from_rows(n, build_rows(self, n))
     }
 
+    /// Compile only the query rows in `row_range` (clamped to `0..n`,
+    /// same contract as [`CompiledPattern::rows`]) into a
+    /// [`PatternBand`].  Because every row built by this module depends
+    /// only on its absolute index, the band is bit-identical to the
+    /// matching slice of `self.compile(n)` — the property the banded
+    /// long-context path rests on, pinned in `tests/proptests.rs`.
+    ///
+    /// ```
+    /// use routing_transformer::attention::AttentionSpec;
+    /// let spec = AttentionSpec::local(4).unwrap();
+    /// let band = spec.compile_band(1 << 20, 777..779);
+    /// assert_eq!(band.row(777), spec.compile(1024).row(777));
+    /// assert!(band.heap_bytes() < 1 << 10, "only the band is resident");
+    /// ```
+    pub fn compile_band(&self, n: usize, row_range: Range<usize>) -> PatternBand {
+        let end = row_range.end.min(n);
+        let start = row_range.start.min(end);
+        PatternBand::from_rows(n, start, build_rows_range(self, n, start..end))
+    }
+
     /// JSON encoding of the spec (declarative, nestable).
     pub fn to_json(&self) -> Json {
         let kind = |k: &str| ("kind".to_string(), Json::Str(k.to_string()));
@@ -235,13 +265,27 @@ impl AttentionSpec {
 /// Per-query (key, cluster-id) rows, sorted by key and deduped — the
 /// intermediate representation `CompiledPattern::from_rows` packs into CSR.
 fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
+    build_rows_range(spec, n, 0..n)
+}
+
+/// [`build_rows`] restricted to query rows `range` (callers pass a
+/// clamped `range ⊆ 0..n`; element r of the result is absolute row
+/// `range.start + r`).  Every arm keys row content on the *absolute* row
+/// index and postprocesses per row, which is what makes a band compile
+/// bit-identical to the matching monolithic slice.
+fn build_rows_range(
+    spec: &AttentionSpec,
+    n: usize,
+    range: Range<usize>,
+) -> Vec<Vec<(usize, u32)>> {
+    debug_assert!(range.start <= range.end && range.end <= n);
     match spec {
         AttentionSpec::Full => {
-            (0..n).map(|i| (0..=i).map(|j| (j, NO_CLUSTER)).collect()).collect()
+            range.map(|i| (0..=i).map(|j| (j, NO_CLUSTER)).collect()).collect()
         }
         AttentionSpec::Local { window } => {
             let w = (*window).max(1);
-            (0..n)
+            range
                 .map(|i| {
                     (i.saturating_sub(w - 1)..=i).map(|j| (j, NO_CLUSTER)).collect()
                 })
@@ -249,7 +293,7 @@ fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
         }
         AttentionSpec::BlockLocal { window } => {
             let w = (*window).max(1);
-            (0..n)
+            range
                 .map(|i| {
                     let start = (i / w).saturating_sub(1) * w;
                     (start..=i).map(|j| (j, NO_CLUSTER)).collect()
@@ -258,12 +302,12 @@ fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
         }
         AttentionSpec::Strided { stride } => {
             let s = (*stride).max(1);
-            (0..n)
+            range
                 .map(|i| (i % s..=i).step_by(s).map(|j| (j, NO_CLUSTER)).collect())
                 .collect()
         }
         AttentionSpec::Routing { clusters } => {
-            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); n];
+            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); range.len()];
             for (c, members) in clusters.iter().enumerate() {
                 // constructors normalize, but hand-built enums may not be
                 // sorted/deduped/in-range — renormalize defensively
@@ -271,8 +315,11 @@ fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
                 ms.sort_unstable();
                 ms.dedup();
                 for (idx, &i) in ms.iter().enumerate() {
+                    if !range.contains(&i) {
+                        continue;
+                    }
                     for &j in &ms[..=idx] {
-                        rows[i].push((j, c as u32));
+                        rows[i - range.start].push((j, c as u32));
                     }
                 }
             }
@@ -286,10 +333,11 @@ fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
             rows
         }
         AttentionSpec::Union(parts) => {
-            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); n];
+            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); range.len()];
             for part in parts {
-                for (i, prow) in build_rows(part, n).into_iter().enumerate() {
-                    rows[i].extend(prow);
+                let prows = build_rows_range(part, n, range.clone());
+                for (row, prow) in rows.iter_mut().zip(prows) {
+                    row.extend(prow);
                 }
             }
             for row in &mut rows {
@@ -304,12 +352,12 @@ fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
             let mut iter = parts.iter();
             let first = match iter.next() {
                 // empty intersection = no constraint (matches `all()`)
-                None => return build_rows(&AttentionSpec::Full, n),
+                None => return build_rows_range(&AttentionSpec::Full, n, range),
                 Some(p) => p,
             };
-            let mut rows = build_rows(first, n);
+            let mut rows = build_rows_range(first, n, range.clone());
             for part in iter {
-                let prows = build_rows(part, n);
+                let prows = build_rows_range(part, n, range.clone());
                 for (row, prow) in rows.iter_mut().zip(&prows) {
                     let mut out = Vec::new();
                     let (mut a, mut b) = (0usize, 0usize);
@@ -331,6 +379,296 @@ fn build_rows(spec: &AttentionSpec, n: usize) -> Vec<Vec<(usize, u32)>> {
         }
     }
 }
+
+/// A compiled pattern served from lazily compiled row bands under a
+/// [`MemoryBudget`] — the long-context replacement for holding one
+/// monolithic [`CompiledPattern`] resident.
+///
+/// The sequence is split into `ceil(n / band_rows)` contiguous bands;
+/// [`rows`](Self::rows) / [`row`](Self::row) / [`nnz`](Self::nnz) /
+/// [`cost`](Self::cost) keep the `CompiledPattern` API shape but compile
+/// bands on first touch ([`AttentionSpec::compile_band`]) and LRU-spill
+/// resident bands whenever the shared budget is over. Bands touched by
+/// the in-flight call are never its own spill victims, so the budget is
+/// a soft cap: peak residency can exceed it by the protected band(s).
+/// Evaluation streams bands through any [`Backend`] unchanged
+/// ([`attention_backend`](Self::attention_backend)) by padding each band
+/// to an n-row pattern whose out-of-band rows are empty — bit-identical
+/// output to evaluating the monolithic compile.
+#[derive(Debug)]
+pub struct ChunkedPattern {
+    spec: AttentionSpec,
+    n: usize,
+    band_rows: usize,
+    /// `ceil(n / band_rows)` slots; `None` = not resident.
+    bands: Vec<Option<PatternBand>>,
+    /// LRU clock per band (0 = never touched).
+    last_used: Vec<u64>,
+    tick: u64,
+    budget: MemoryBudget,
+    /// Cached total nnz once every band has been visited at least once.
+    total_nnz: Option<usize>,
+    band_compiles: u64,
+    band_evictions: u64,
+    bytes_evicted: u64,
+}
+
+impl ChunkedPattern {
+    /// Serve `spec` at sequence length `n` from bands of `band_rows`
+    /// query rows (clamped to >= 1), metering residency against
+    /// `budget`.  Nothing is compiled until first touch.
+    pub fn new(
+        spec: AttentionSpec,
+        n: usize,
+        band_rows: usize,
+        budget: MemoryBudget,
+    ) -> ChunkedPattern {
+        let band_rows = band_rows.max(1);
+        let num_bands = n.div_ceil(band_rows);
+        ChunkedPattern {
+            spec,
+            n,
+            band_rows,
+            bands: (0..num_bands).map(|_| None).collect(),
+            last_used: vec![0; num_bands],
+            tick: 0,
+            budget,
+            total_nnz: None,
+            band_compiles: 0,
+            band_evictions: 0,
+            bytes_evicted: 0,
+        }
+    }
+
+    /// Sequence length served.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Query rows per band (last band may be shorter).
+    pub fn band_rows(&self) -> usize {
+        self.band_rows
+    }
+
+    /// Total number of bands (`ceil(n / band_rows)`).
+    pub fn num_bands(&self) -> usize {
+        self.bands.len()
+    }
+
+    /// The spec being served.
+    pub fn spec(&self) -> &AttentionSpec {
+        &self.spec
+    }
+
+    /// The shared byte meter this pattern charges.
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
+    }
+
+    /// Bands compiled so far (recompiles after eviction count again).
+    pub fn band_compiles(&self) -> u64 {
+        self.band_compiles
+    }
+
+    /// Bands spilled to stay under budget.
+    pub fn band_evictions(&self) -> u64 {
+        self.band_evictions
+    }
+
+    /// Total bytes freed by spills.
+    pub fn bytes_evicted(&self) -> u64 {
+        self.bytes_evicted
+    }
+
+    /// Bands currently resident.
+    pub fn resident_bands(&self) -> usize {
+        self.bands.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Heap bytes of the currently resident bands.
+    pub fn resident_bytes(&self) -> usize {
+        self.bands.iter().flatten().map(PatternBand::heap_bytes).sum()
+    }
+
+    /// Make band `b` resident (compiling if spilled), bump its LRU
+    /// clock, then spill over-budget bands outside `protected`.
+    fn ensure_band(&mut self, b: usize, protected: Range<usize>) {
+        self.tick += 1;
+        self.last_used[b] = self.tick;
+        if self.bands[b].is_none() {
+            let start = b * self.band_rows;
+            let end = ((b + 1) * self.band_rows).min(self.n);
+            let band = self.spec.compile_band(self.n, start..end);
+            self.budget.charge(band.heap_bytes());
+            self.band_compiles += 1;
+            self.bands[b] = Some(band);
+        }
+        self.spill(protected);
+    }
+
+    /// LRU-spill resident bands outside `protected` until the shared
+    /// budget is satisfied (or only protected bands remain — the soft
+    /// cap).
+    fn spill(&mut self, protected: Range<usize>) {
+        while self.budget.over_budget() {
+            let victim = self
+                .bands
+                .iter()
+                .enumerate()
+                .filter(|&(i, band)| band.is_some() && !protected.contains(&i))
+                .min_by_key(|&(i, _)| self.last_used[i])
+                .map(|(i, _)| i);
+            let Some(v) = victim else { break };
+            let bytes = self.bands[v].take().expect("victim is resident").heap_bytes();
+            self.budget.release(bytes);
+            self.band_evictions += 1;
+            self.bytes_evicted += bytes as u64;
+        }
+    }
+
+    /// Band index owning absolute row `i < n`.
+    fn band_of(&self, i: usize) -> usize {
+        i / self.band_rows
+    }
+
+    /// Attend-set for absolute row `i` (empty for `i >= n`), compiling
+    /// the owning band on demand — same contract as
+    /// [`CompiledPattern::row`].
+    pub fn row(&mut self, i: usize) -> &[usize] {
+        if i >= self.n {
+            return &[];
+        }
+        let b = self.band_of(i);
+        self.ensure_band(b, b..b + 1);
+        self.bands[b].as_ref().expect("band just ensured resident").row(i)
+    }
+
+    /// Iterate `(i, keys, clusters)` over `range` (clamped to `0..n`,
+    /// same contract as [`CompiledPattern::rows`]); every band the range
+    /// touches is made resident first and protected from spilling for
+    /// the duration of the borrow.
+    pub fn rows(&mut self, range: Range<usize>) -> ChunkedRowIter<'_> {
+        let end = range.end.min(self.n);
+        let start = range.start.min(end);
+        if start < end {
+            let b0 = self.band_of(start);
+            let b1 = self.band_of(end - 1);
+            for b in b0..=b1 {
+                self.ensure_band(b, b0..b1 + 1);
+            }
+        }
+        ChunkedRowIter { pattern: self, range: start..end }
+    }
+
+    /// Total non-zero entries; the first call streams every band through
+    /// residency once (spilling as it goes), later calls are O(1).
+    pub fn nnz(&mut self) -> usize {
+        if let Some(total) = self.total_nnz {
+            return total;
+        }
+        let mut total = 0usize;
+        for b in 0..self.num_bands() {
+            self.ensure_band(b, b..b + 1);
+            total += self.bands[b].as_ref().expect("resident").nnz();
+        }
+        self.total_nnz = Some(total);
+        total
+    }
+
+    /// Exact MAC count (`2 · nnz · d`, saturating) — same model as
+    /// [`CompiledPattern::cost`].
+    pub fn cost(&mut self, d: usize) -> u64 {
+        u64::try_from(2u128 * self.nnz() as u128 * d as u128).unwrap_or(u64::MAX)
+    }
+
+    /// Evaluate the whole pattern with `backend`, streaming band by band
+    /// so only O(band) pattern bytes are resident at once: each band is
+    /// padded to an n-row pattern (out-of-band rows empty) and handed to
+    /// [`Backend::attention_rows`] over exactly its row range, which
+    /// touches the same CSR slices the monolithic pattern would — the
+    /// output is bit-identical to `backend.attention` on
+    /// `self.spec.compile(self.n)`.
+    pub fn attention_backend(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        backend: &dyn Backend,
+    ) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; self.n * d];
+        let mut total = 0usize;
+        for b in 0..self.num_bands() {
+            self.ensure_band(b, b..b + 1);
+            let band = self.bands[b].as_ref().expect("resident");
+            let (start, end) = (band.start(), band.end());
+            total += band.nnz();
+            let padded = band.to_pattern();
+            backend.attention_rows(q, k, v, d, &padded, start..end, &mut out[start * d..end * d])?;
+        }
+        self.total_nnz = Some(total);
+        Ok(out)
+    }
+
+    /// Concatenate every band into a monolithic [`CompiledPattern`]
+    /// (bit-identical to `self.spec.compile(self.n)`; used by the
+    /// equivalence tests).  Materializes O(n) memory by definition.
+    pub fn assemble(&mut self) -> CompiledPattern {
+        let mut row_offsets = Vec::with_capacity(self.n + 1);
+        row_offsets.push(0usize);
+        let mut cols = Vec::new();
+        let mut cluster_ids = Vec::new();
+        for b in 0..self.num_bands() {
+            self.ensure_band(b, b..b + 1);
+            let band = self.bands[b].as_ref().expect("resident");
+            for i in band.start()..band.end() {
+                cols.extend_from_slice(band.row(i));
+                cluster_ids.extend_from_slice(band.row_clusters(i));
+                row_offsets.push(cols.len());
+            }
+        }
+        self.total_nnz = Some(cols.len());
+        CompiledPattern::from_parts(self.n, row_offsets, cols, cluster_ids)
+    }
+}
+
+impl Drop for ChunkedPattern {
+    /// Releasing the budget charge on drop is what lets serve GC count
+    /// retired sequences' pattern bytes as reclaimed.
+    fn drop(&mut self) {
+        for band in self.bands.iter_mut() {
+            if let Some(b) = band.take() {
+                self.budget.release(b.heap_bytes());
+            }
+        }
+    }
+}
+
+/// Iterator over `(i, keys, clusters)` rows of a [`ChunkedPattern`]; see
+/// [`ChunkedPattern::rows`].
+#[derive(Debug)]
+pub struct ChunkedRowIter<'a> {
+    pattern: &'a ChunkedPattern,
+    range: Range<usize>,
+}
+
+impl<'a> Iterator for ChunkedRowIter<'a> {
+    type Item = (usize, &'a [usize], &'a [u32]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let i = self.range.next()?;
+        let band = self.pattern.bands[self.pattern.band_of(i)]
+            .as_ref()
+            .expect("rows() made every band in range resident");
+        Some((i, band.row(i), band.row_clusters(i)))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.range.size_hint()
+    }
+}
+
+impl<'a> ExactSizeIterator for ChunkedRowIter<'a> {}
 
 #[cfg(test)]
 mod tests {
@@ -400,6 +738,107 @@ mod tests {
         let text = spec.to_json().to_string();
         let back = AttentionSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn compile_band_slices_match_monolithic() {
+        let spec = AttentionSpec::union(vec![
+            AttentionSpec::block_local(3).unwrap(),
+            AttentionSpec::routing(vec![vec![0, 4, 9, 13], vec![2, 6, 11]]),
+        ])
+        .unwrap();
+        let n = 17;
+        let mono = spec.compile(n);
+        // 5..8 straddles a BlockLocal block boundary (blocks 1 and 2)
+        for range in [0..n, 5..8, 0..0, 9..9, 16..17, 12..40] {
+            let band = spec.compile_band(n, range.clone());
+            assert_eq!(band.start(), range.start.min(n));
+            for i in band.start()..band.end() {
+                assert_eq!(band.row(i), mono.row(i), "row {i} of band {range:?}");
+                assert_eq!(band.row_clusters(i), mono.row_clusters(i));
+            }
+        }
+        assert!(spec.compile_band(0, 0..10).is_empty());
+    }
+
+    #[test]
+    fn chunked_pattern_matches_monolithic_under_tiny_budget() {
+        let spec = AttentionSpec::union(vec![
+            AttentionSpec::local(5).unwrap(),
+            AttentionSpec::routing_balanced(64, 8).unwrap(),
+        ])
+        .unwrap();
+        let n = 64;
+        let mono = spec.compile(n);
+        // budget far below the monolithic footprint forces real churn
+        let budget = MemoryBudget::bytes(mono.heap_bytes() / 4);
+        let mut chunked = ChunkedPattern::new(spec, n, 7, budget.clone());
+        assert_eq!(chunked.num_bands(), 10);
+        assert_eq!(chunked.resident_bands(), 0, "lazy until first touch");
+
+        assert_eq!(chunked.nnz(), mono.nnz());
+        assert_eq!(chunked.cost(16), mono.cost(16));
+        for i in [0, 3, 40, 63, 64, 1000] {
+            assert_eq!(chunked.row(i), mono.row(i));
+        }
+        let got: Vec<(usize, Vec<usize>, Vec<u32>)> =
+            chunked.rows(10..30).map(|(i, ks, cs)| (i, ks.to_vec(), cs.to_vec())).collect();
+        let want: Vec<(usize, Vec<usize>, Vec<u32>)> =
+            mono.rows(10..30).map(|(i, ks, cs)| (i, ks.to_vec(), cs.to_vec())).collect();
+        assert_eq!(got, want);
+        assert_eq!(chunked.assemble(), mono, "band concatenation is bit-identical");
+
+        assert!(chunked.band_compiles() > 10, "eviction churn forces recompiles");
+        assert!(chunked.band_evictions() > 0);
+        assert!(chunked.bytes_evicted() > 0);
+        assert_eq!(budget.resident(), chunked.resident_bytes());
+        // soft cap: only protected bands ride above the budget, and the
+        // widest protected window above was rows(10..30) = 4 bands
+        let max_band = (0..chunked.num_bands())
+            .map(|b| chunked.spec().compile_band(n, b * 7..(b + 1) * 7).heap_bytes())
+            .max()
+            .unwrap();
+        assert!(
+            budget.peak() <= budget.max_bytes().unwrap() + 4 * max_band,
+            "peak {} exceeds budget {} + 4 protected bands of {}",
+            budget.peak(),
+            budget.max_bytes().unwrap(),
+            max_band
+        );
+
+        drop(chunked);
+        assert_eq!(budget.resident(), 0, "drop releases every resident charge");
+    }
+
+    #[test]
+    fn chunked_attention_is_bit_identical_to_monolithic() {
+        use crate::attention::backend::Reference;
+        let spec = AttentionSpec::union(vec![
+            AttentionSpec::local(6).unwrap(),
+            AttentionSpec::routing_balanced(48, 6).unwrap(),
+        ])
+        .unwrap();
+        let (n, d) = (48, 4);
+        let mut x = 0x9E37u32;
+        let mut gen = || {
+            x = x.wrapping_mul(0x0101_9E3B).wrapping_add(12345);
+            (x >> 8) as f32 / (1 << 24) as f32 - 0.5
+        };
+        let q: Vec<f32> = (0..n * d).map(|_| gen()).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| gen()).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| gen()).collect();
+        let mono = spec.compile(n);
+        let want = Reference.attention(&q, &k, &v, d, &mono).unwrap();
+        let mut chunked =
+            ChunkedPattern::new(spec, n, 5, MemoryBudget::bytes(mono.heap_bytes() / 5));
+        let got = chunked.attention_backend(&q, &k, &v, d, &Reference).unwrap();
+        assert_eq!(got, want, "banded evaluation must be bit-identical");
+        assert_eq!(chunked.nnz(), mono.nnz(), "nnz set for free during the sweep");
+
+        let mut empty = ChunkedPattern::new(AttentionSpec::Full, 0, 4, MemoryBudget::unbounded());
+        assert_eq!(empty.num_bands(), 0);
+        assert_eq!(empty.nnz(), 0);
+        assert!(empty.attention_backend(&[], &[], &[], d, &Reference).unwrap().is_empty());
     }
 
     #[test]

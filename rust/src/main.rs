@@ -96,6 +96,8 @@ commands:
   analyze   Table-6 JSD study: [--variant analysis] [--ckpt CKPT] [--runs 10] [--data needle]
   figure1   render Figure-1 attention patterns: [--n 64] [--window 8] [--stride 8] [--clusters 8]
             [--stats] (nnz/density/row-size table per scheme) [--csv FILE] [--seed S]
+            [--render-rows 128] (clip ASCII/CSV renders to the first R rows so
+             large --n stays printable; a truncation marker notes clipped rows)
   serve-bench  heads x layers x steps decode sweep over the pattern engine:
             [--n 256] [--d 64] [--heads 8] [--layers 4] [--steps 8] [--shards 4]
             [--window W] [--clusters K] [--sequences B] [--route-every R]
@@ -122,7 +124,13 @@ commands:
             [--requests 64] [--rate 1.0] [--contents 64] [--zipf 1.1]
             [--work-min 4] [--work-max 16] [--slack-min 8] [--slack-max 64]
             [--backend blocked] [--seed S] [--json] [--append [FILE]]
-            (prints admitted/completed/rejected/shed counts, p50/p99 step
+            [--max-pattern-bytes B] [--band-rows R]
+            (--band-rows R > 0 switches to memory-bounded banded compilation:
+             patterns are compiled on demand in R-row bands against a shared
+             byte budget of B (--max-pattern-bytes, 0 = unbounded) with LRU
+             spill, bit-identical outputs, and peak/resident/evicted pattern
+             bytes reported in the summary and the schema-3 --json line;
+             prints admitted/completed/rejected/shed counts, p50/p99 step
              latency from a streaming histogram, rows/sec, and the
              cache/epoch/regen counters; --json prints one machine-readable
              line, --append appends it to BENCH_serve.json (or FILE) so the
@@ -669,11 +677,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // retire through the per-request GC path (counted as evictions but
     // reported separately; static compiles deliberately survive)
     let mut retired = 0usize;
+    let mut gc_bytes = 0usize;
     for layer in 0..layers {
         for head in (1..heads).step_by(2) {
             for s in 0..b {
-                if cache.evict_slot(RouteSlot { layer, head, seq: s }) {
+                if let Some(bytes) = cache.evict_slot(RouteSlot { layer, head, seq: s }) {
                     retired += 1;
+                    gc_bytes += bytes;
                 }
             }
         }
@@ -708,6 +718,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     table.row(&["membership full rebuilds".to_string(), regen.full_rebuilds.to_string()]);
     table.row(&["patterns cached (live)".to_string(), live_before_gc.to_string()]);
     table.row(&["slots retired (stream-close GC)".to_string(), retired.to_string()]);
+    table.row(&["GC bytes reclaimed".to_string(), gc_bytes.to_string()]);
+    table.row(&["pattern bytes resident".to_string(), cache.stats().bytes_resident.to_string()]);
     table.row(&["patterns cached after GC".to_string(), live_after_gc.to_string()]);
     table.row(&["batched elapsed".to_string(), format!("{:.3} s", batched_dt)]);
     table.row(&[
@@ -829,6 +841,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     f("hits", cs.hits as f64),
                     f("misses", cs.misses as f64),
                     f("evictions", cs.evictions as f64),
+                    f("bytes_resident", cs.bytes_resident as f64),
+                    f("bytes_evicted", cs.bytes_evicted as f64),
                 ]),
             ),
             (
@@ -853,6 +867,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             f("dirty_tokens_pending", dirty_pending as f64),
             f("dirty_clusters_drained", dirty_clusters_drained as f64),
             f("retired_slots", retired as f64),
+            f("gc_bytes_reclaimed", gc_bytes as f64),
             f("live_patterns_after_gc", live_after_gc as f64),
         ];
         if pool_cmp {
@@ -892,6 +907,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let work_max = args.u64("work-max", 16)?.max(work_min);
     let slack_min = args.u64("slack-min", 8)?;
     let slack_max = args.u64("slack-max", 64)?.max(slack_min);
+    let max_pattern_bytes = args.usize("max-pattern-bytes", 0)?;
+    let band_rows = args.usize("band-rows", 0)?;
     let seed = args.u64("seed", 0)?;
     let json_out = args.bool("json", false)?;
     let backend_name = args.str("backend", "blocked");
@@ -922,6 +939,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers,
         capacity,
         route_every,
+        max_pattern_bytes,
+        band_rows,
         arrivals: ArrivalConfig {
             requests,
             rate,
@@ -937,7 +956,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve: n={n} d={d} heads={heads} layers={layers} window={window} clusters={k} \
          capacity={capacity} workers={workers} route-every={route_every} requests={requests} \
          rate={rate} contents={contents} zipf={zipf_s} work=[{work_min},{work_max}] \
-         slack=[{slack_min},{slack_max}] backend={} seed={seed}",
+         slack=[{slack_min},{slack_max}] max-pattern-bytes={max_pattern_bytes} \
+         band-rows={band_rows} backend={} seed={seed}",
         be.name()
     );
     let summary = run_serve(&opts, be.as_ref())?;
@@ -991,6 +1011,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     table.row(&[
         "patterns live after GC".to_string(),
         summary.live_patterns_after_gc.to_string(),
+    ]);
+    table.row(&[
+        "peak pattern bytes".to_string(),
+        summary.peak_pattern_bytes.to_string(),
+    ]);
+    table.row(&[
+        "pattern bytes resident/evicted".to_string(),
+        format!("{}/{}", summary.pattern_bytes_resident, summary.pattern_bytes_evicted),
+    ]);
+    table.row(&["band compiles".to_string(), summary.band_compiles.to_string()]);
+    table.row(&[
+        "GC bytes reclaimed".to_string(),
+        summary.gc_bytes_reclaimed.to_string(),
     ]);
     table.print();
 
@@ -1050,6 +1083,8 @@ fn serve_json_line(opts: &ServeOptions, backend_name: &str, summary: &ServeSumma
             ]),
         ),
         f("seed", opts.seed as f64),
+        f("max_pattern_bytes", opts.max_pattern_bytes as f64),
+        f("band_rows", opts.band_rows as f64),
         ("backend".to_string(), Json::Str(backend_name.to_string())),
         f("submitted", s.submitted as f64),
         f("admitted", s.admitted as f64),
@@ -1075,6 +1110,8 @@ fn serve_json_line(opts: &ServeOptions, backend_name: &str, summary: &ServeSumma
                 f("hits", cs.hits as f64),
                 f("misses", cs.misses as f64),
                 f("evictions", cs.evictions as f64),
+                f("bytes_resident", cs.bytes_resident as f64),
+                f("bytes_evicted", cs.bytes_evicted as f64),
             ]),
         ),
         (
@@ -1097,6 +1134,11 @@ fn serve_json_line(opts: &ServeOptions, backend_name: &str, summary: &ServeSumma
         ),
         f("gc_evictions", s.gc_evictions as f64),
         f("live_patterns_after_gc", summary.live_patterns_after_gc as f64),
+        f("peak_pattern_bytes", summary.peak_pattern_bytes as f64),
+        f("pattern_bytes_resident", summary.pattern_bytes_resident as f64),
+        f("pattern_bytes_evicted", summary.pattern_bytes_evicted as f64),
+        f("band_compiles", summary.band_compiles as f64),
+        f("gc_bytes_reclaimed", summary.gc_bytes_reclaimed as f64),
     ])
 }
 
@@ -1106,6 +1148,7 @@ fn cmd_figure1(args: &Args) -> Result<()> {
     let stride = args.usize("stride", 8)?;
     let k = args.usize("clusters", 8)?.max(1);
     let seed = args.u64("seed", 0)?;
+    let render_rows = args.usize("render-rows", 128)?;
 
     // routing spec from clustered synthetic routing vectors
     let dim = 16;
@@ -1137,7 +1180,7 @@ fn cmd_figure1(args: &Args) -> Result<()> {
     println!("Figure 1 — 2-D attention schemes (rows = outputs, cols = inputs)\n");
     for (name, pattern) in &schemes {
         println!("{name}:");
-        println!("{}", pattern.render_ascii());
+        println!("{}", pattern.render_ascii_clipped(render_rows));
     }
     println!(
         "densities: local {:.3}, strided {:.3}, routing {:.3}, mixed {:.3} (full = 1.0)",
@@ -1166,7 +1209,7 @@ fn cmd_figure1(args: &Args) -> Result<()> {
         table.print();
     }
     if let Some(path) = args.flags.get("csv") {
-        std::fs::write(path, schemes[2].1.render_csv())?;
+        std::fs::write(path, schemes[2].1.render_csv_clipped(render_rows))?;
         println!("routing pattern CSV written to {path}");
     }
     Ok(())

@@ -116,4 +116,31 @@ fn docs_exist_and_are_cross_linked() {
         ARCHITECTURE.contains("evict_slot"),
         "ARCHITECTURE.md must document the retirement GC path"
     );
+    // the memory-bounded compilation layer ships with docs: the banded
+    // compile path, the byte budget, the new serve flags, and the
+    // schema-3 byte-accounting fields
+    assert!(
+        ARCHITECTURE.contains("Memory-bounded compilation"),
+        "ARCHITECTURE.md must document the banded compilation layer"
+    );
+    assert!(
+        ARCHITECTURE.contains("compile_band"),
+        "ARCHITECTURE.md must document the band compile entry point"
+    );
+    assert!(
+        ARCHITECTURE.contains("\"schema\": 3"),
+        "ARCHITECTURE.md must document the schema-3 --json line"
+    );
+    assert!(
+        ARCHITECTURE.contains("peak_pattern_bytes"),
+        "ARCHITECTURE.md must document the peak-resident-bytes field"
+    );
+    assert!(
+        README.contains("--max-pattern-bytes") && README.contains("--band-rows"),
+        "README.md must document the memory-bounded serve flags"
+    );
+    assert!(
+        README.contains("--render-rows"),
+        "README.md must document the figure1 render clip flag"
+    );
 }

@@ -8,7 +8,9 @@
 //! causality, row sortedness, spec JSON round-trips), routing membership,
 //! engine (shard partition, cache == fresh compile, kernel == oracle,
 //! batched == B independent calls bit-for-bit, epoch-cache staleness +
-//! eviction accounting), batcher (no loss/dup), k-means (norms,
+//! eviction accounting, banded compilation == monolithic row slices,
+//! byte-budgeted `ChunkedPattern` == monolithic compile bit-for-bit
+//! under arbitrary tiny budgets), batcher (no loss/dup), k-means (norms,
 //! assignment optimality), tokenizers (round-trips), sampler
 //! (support/normalization), schedules (finiteness/monotonicity), JSON
 //! (round-trip).
@@ -18,8 +20,8 @@ use std::sync::Arc;
 use routing_transformer::analysis::{jsd, JSD_MAX};
 use routing_transformer::attention::{
     dense_masked_attention, optimal_clusters, sparse_attention, sparse_attention_batch,
-    AttentionSpec, BatchedAttention, CompiledPattern, EpochCache, PatternCache, RouteSlot,
-    ShardedPattern,
+    AttentionSpec, BatchedAttention, ChunkedPattern, CompiledPattern, EpochCache, MemoryBudget,
+    PatternCache, Reference, RouteSlot, ShardedPattern,
 };
 #[cfg(feature = "xla")]
 use routing_transformer::coordinator::LrSchedule;
@@ -446,6 +448,102 @@ fn prop_epoch_cache_never_serves_stale_and_counts_evictions() {
         let es = cache.epoch_stats();
         assert_eq!(es.lookups(), es.epoch_hits + es.epoch_misses);
         assert!(es.hit_rate() <= 1.0);
+    });
+}
+
+#[test]
+fn prop_compile_band_equals_monolithic_row_slices() {
+    check("compile_band", 150, |rng| {
+        // n = 0 and n = 1 in range; band endpoints deliberately overshoot
+        // n to exercise the clamping contract, and may be empty
+        let n = rng.range(0, 40);
+        let spec = random_spec(rng, n, 2);
+        let p = spec.compile(n);
+        let a = rng.range(0, n + 8);
+        let b = rng.range(0, n + 8);
+        let (raw_lo, raw_hi) = (a.min(b), a.max(b));
+        let band = spec.compile_band(n, raw_lo..raw_hi);
+        let (lo, hi) = (raw_lo.min(n), raw_hi.min(n));
+        assert_eq!((band.start(), band.end()), (lo, hi), "band range clamps to 0..n");
+        assert_eq!(band.len(), hi - lo);
+        assert_eq!(band.is_empty(), lo == hi);
+        let mut nnz = 0usize;
+        for i in 0..n + 2 {
+            if (lo..hi).contains(&i) {
+                assert_eq!(band.row(i), p.row(i), "band row {i} != monolithic slice");
+                assert_eq!(band.row_clusters(i), p.row_clusters(i), "cluster ids at row {i}");
+                nnz += p.row(i).len();
+            } else {
+                assert!(band.row(i).is_empty(), "row {i} outside the band must be empty");
+            }
+        }
+        assert_eq!(band.nnz(), nnz, "band nnz must equal the covered rows' sum");
+        // the padded n-row pattern agrees row-for-row: in-band rows are the
+        // monolithic slices, out-of-band rows are empty
+        let padded = band.to_pattern();
+        assert_eq!(padded.n(), n);
+        for i in 0..n {
+            if (lo..hi).contains(&i) {
+                assert_eq!(padded.row(i), p.row(i));
+                assert_eq!(padded.row_clusters(i), p.row_clusters(i));
+            } else {
+                assert!(padded.row(i).is_empty());
+            }
+        }
+        // deterministic BlockLocal straddle: split a compile at a
+        // non-block-aligned row, so one band boundary lands strictly
+        // inside a block — both halves must still tile the monolith
+        if n >= 2 {
+            let w = rng.range(1, n);
+            let bl = AttentionSpec::block_local(w).unwrap();
+            let pb = bl.compile(n);
+            let mid = (w + 1).min(n - 1); // first row of block 1, minus alignment
+            for range in [0..mid, mid..n] {
+                let half = bl.compile_band(n, range.clone());
+                for i in range {
+                    assert_eq!(half.row(i), pb.row(i), "BlockLocal straddle row {i}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_pattern_budgeted_equals_monolithic() {
+    check("chunked_budgeted", 80, |rng| {
+        // tiny budgets (including 0 bytes) force constant spilling; the
+        // streamed result must stay bit-identical to the monolith anyway
+        let n = rng.range(0, 28);
+        let d = rng.range(1, 7);
+        let spec = random_spec(rng, n, 1);
+        let p = spec.compile(n);
+        let budget = MemoryBudget::bytes(rng.range(0, 2048));
+        let band_rows = rng.range(0, 9); // 0 clamps to 1
+        let mut chunked = ChunkedPattern::new(spec.clone(), n, band_rows, budget.clone());
+        assert_eq!(chunked.nnz(), p.nnz());
+        assert_eq!(chunked.cost(d), p.cost(d));
+        for i in 0..n + 2 {
+            assert_eq!(chunked.row(i), p.row(i), "chunked row {i} != monolithic");
+        }
+        let lo = rng.range(0, n + 2).min(n);
+        let hi = rng.range(lo, n + 2);
+        let gathered: Vec<(usize, Vec<usize>, Vec<u32>)> =
+            chunked.rows(lo..hi).map(|(i, r, c)| (i, r.to_vec(), c.to_vec())).collect();
+        for (i, r, c) in &gathered {
+            assert_eq!((r.as_slice(), c.as_slice()), (p.row(*i), p.row_clusters(*i)));
+        }
+        assert_eq!(gathered.len(), hi.min(n) - lo);
+        assert_eq!(chunked.assemble(), p, "assembled bands must equal the monolithic compile");
+        // streamed banded attention is bit-identical to the unbudgeted path
+        let qkv: Vec<f32> = (0..3 * n * d).map(|_| rng.normal() as f32).collect();
+        let (q, rest) = qkv.split_at(n * d);
+        let (k, v) = rest.split_at(n * d);
+        let banded = chunked.attention_backend(q, k, v, d, &Reference).unwrap();
+        assert_eq!(banded, sparse_attention(q, k, v, d, &p).unwrap());
+        // the shared meter tracks residency exactly, and drop returns it
+        assert_eq!(budget.resident(), chunked.resident_bytes());
+        drop(chunked);
+        assert_eq!(budget.resident(), 0, "drop must release every charged byte");
     });
 }
 

@@ -20,7 +20,13 @@
 //! * the serve-layer `Scheduler` (admission control, FIFO slot grants,
 //!   deadline sheds, retirement GC) agrees with a naive mirror on every
 //!   step's batch, every outcome, and every counter — including the
-//!   `EpochCache` evictions its retirement GC fires.
+//!   `EpochCache` evictions its retirement GC fires, and
+//! * the byte-budgeted `EpochCache` agrees with a naive mirror of the
+//!   documented spill policy: inserts charge the shared `MemoryBudget`
+//!   and spill least-recently-used routed slots in deterministic tick
+//!   order — never the just-touched slot, never entries touched since
+//!   `mark_step()`, never pinned statics — and resident bytes exceed the
+//!   budget only while everything left is protected (the soft cap).
 //!
 //! The offline environment ships no `proptest`, so this reuses the
 //! hand-rolled seeded-case harness from `tests/proptests.rs`: every
@@ -32,9 +38,9 @@ use std::sync::Arc;
 
 use routing_transformer::attention::{
     sparse_attention, AttentionSpec, Backend, BatchEntry, BatchedAttention, Blocked,
-    CompiledPattern, EpochCache, Execution, MemberCache, OutcomeKind, Reference, RequestOutcome,
-    Retired, RouteSlot, RoutingSession, Scheduler, ServeRequest, ServeStats, ShardedPattern,
-    Submission, WorkerPool,
+    CompiledPattern, EpochCache, Execution, MemberCache, MemoryBudget, OutcomeKind, Reference,
+    RequestOutcome, Retired, RouteSlot, RoutingSession, Scheduler, ServeRequest, ServeStats,
+    ShardedPattern, Submission, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -314,7 +320,7 @@ fn prop_stateful_session_and_cache_match_reference_model() {
                     if present {
                         model.counters.evictions += 1;
                     }
-                    assert_eq!(cache.evict_slot(slot), present, "evict_slot presence");
+                    assert_eq!(cache.evict_slot(slot).is_some(), present, "evict_slot presence");
                 }
                 // Clear (session state survives, cache resets fully)
                 _ => {
@@ -919,5 +925,129 @@ fn prop_scheduler_matches_reference_model() {
         assert_eq!(ids, (0..next_id).collect::<Vec<_>>(), "each id exactly once");
         assert_eq!(cache.len(), m.live.len());
         assert!(m.live.is_empty(), "a full drain GCs every routed entry");
+    });
+}
+
+// --------------------------------------------------------- property 8
+
+#[test]
+fn prop_budgeted_epoch_cache_matches_lru_spill_model() {
+    // Random lookup / mark_step / evict_slot sequences against a naive
+    // mirror of the budgeted cache's documented policy: a routed miss
+    // charges the shared meter and then spills least-recently-used slots
+    // in deterministic tick order — never the slot just touched, never an
+    // entry touched since the last `mark_step()`, never the pinned static
+    // — until the budget is satisfied or only protected entries remain.
+    check("budgeted_epoch_cache_model", 64, |rng| {
+        let max = rng.range(64, 1024);
+        let budget = MemoryBudget::bytes(max);
+        let mut cache = EpochCache::with_budget(budget.clone());
+        let static_spec = AttentionSpec::local(2).unwrap();
+        let static_n = rng.range(1, 8);
+        let pinned = cache.get_static(&static_spec, static_n);
+        let static_bytes = static_spec.compile(static_n).heap_bytes();
+
+        type Key = (usize, usize, usize);
+        // key -> (assignment_epoch, n, bytes, last_used tick)
+        let mut slots: HashMap<Key, (u64, usize, usize, u64)> = HashMap::new();
+        let mut tick = 0u64;
+        let mut step_mark = u64::MAX;
+        let mut evictions = 0u64;
+        let mut bytes_evicted = 0u64;
+        let resident = |slots: &HashMap<Key, (u64, usize, usize, u64)>| -> usize {
+            slots.values().map(|e| e.2).sum()
+        };
+
+        for _op in 0..rng.range(10, 24) {
+            match rng.below(8) {
+                // routed lookup: a hit refreshes recency only; a miss
+                // replaces any stale entry, charges, then LRU-spills
+                0..=4 => {
+                    let key: Key = (rng.below(LAYERS), rng.below(HEADS), rng.below(3));
+                    let slot = RouteSlot { layer: key.0, head: key.1, seq: key.2 };
+                    let ae = rng.below(3) as u64;
+                    let n = rng.range(1, 10);
+                    let spec = {
+                        let mut clusters: Vec<Vec<usize>> = vec![(0..n).collect()];
+                        clusters.push((0..n).filter(|_| rng.chance(0.4)).collect());
+                        AttentionSpec::routing(clusters)
+                    };
+                    tick += 1;
+                    let hit = slots.get(&key).is_some_and(|e| e.0 == ae && e.1 == n);
+                    if hit {
+                        slots.get_mut(&key).unwrap().3 = tick;
+                        cache.get_routed_at(slot, ae, ae, n, || {
+                            panic!("hit must not regenerate")
+                        });
+                    } else {
+                        if let Some(stale) = slots.remove(&key) {
+                            evictions += 1;
+                            bytes_evicted += stale.2 as u64;
+                        }
+                        let bytes = spec.compile(n).heap_bytes();
+                        slots.insert(key, (ae, n, bytes, tick));
+                        cache.get_routed_at(slot, ae, ae, n, || spec.clone());
+                        // mirror the deterministic LRU spill
+                        while static_bytes + resident(&slots) > max {
+                            let victim = slots
+                                .iter()
+                                .filter(|&(k2, e)| *k2 != key && e.3 < step_mark)
+                                .min_by_key(|&(_, e)| e.3)
+                                .map(|(k2, _)| *k2);
+                            let Some(v) = victim else { break };
+                            let e = slots.remove(&v).unwrap();
+                            evictions += 1;
+                            bytes_evicted += e.2 as u64;
+                        }
+                        // the spill postcondition: over budget only while
+                        // every survivor is the kept slot or step-touched
+                        if static_bytes + resident(&slots) > max {
+                            assert!(
+                                slots
+                                    .iter()
+                                    .all(|(k2, e)| *k2 == key || e.3 >= step_mark),
+                                "soft cap: only protected entries may hold \
+                                 residency over budget"
+                            );
+                        }
+                    }
+                }
+                // step boundary: entries touched after this are protected
+                5 => {
+                    cache.mark_step();
+                    step_mark = tick + 1;
+                }
+                // retirement GC returns the bytes it freed
+                6 => {
+                    let key: Key = (rng.below(LAYERS), rng.below(HEADS), rng.below(3));
+                    let slot = RouteSlot { layer: key.0, head: key.1, seq: key.2 };
+                    let expect = slots.remove(&key).map(|e| {
+                        evictions += 1;
+                        bytes_evicted += e.2 as u64;
+                        e.2
+                    });
+                    assert_eq!(cache.evict_slot(slot), expect, "evict_slot returns bytes freed");
+                }
+                _ => {} // idle op: state must be stable without lookups
+            }
+            let slot_bytes = resident(&slots);
+            assert_eq!(
+                budget.resident(),
+                static_bytes + slot_bytes,
+                "shared meter tracks pinned static + live routed bytes exactly"
+            );
+            let es = cache.epoch_stats();
+            assert_eq!(es.bytes_resident, slot_bytes as u64, "routed-side resident gauge");
+            assert_eq!(es.bytes_evicted, bytes_evicted, "routed-side evicted bytes");
+            assert_eq!(cache.stats().evictions, evictions, "eviction count");
+            assert_eq!(cache.len(), 1 + slots.len(), "pinned static + one per live slot");
+        }
+        // the pinned static survived arbitrary budgeted churn
+        assert!(
+            Arc::ptr_eq(&pinned, &cache.get_static(&static_spec, static_n)),
+            "pinned static must never spill"
+        );
+        drop(cache);
+        assert_eq!(budget.resident(), 0, "dropping the cache returns every charged byte");
     });
 }
