@@ -1,6 +1,6 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Ten parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Eleven parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
@@ -20,15 +20,20 @@
 //! (7) the cache-blocked host backend vs the scalar reference kernel at
 //! n = 2048, d = 64 — bit-identical outputs required and `Blocked` must
 //! be >= 1.5x (single-thread ILP, so no core gate);
-//! (8) incremental (dirty-cluster-only) spec regeneration — a sparse
+//! (8) the lane-widened `Simd` fast-math backend over the same shape —
+//! its outputs must match `Reference` within exactly its *declared*
+//! `Ulps(k)` budget (never bitwise, never a silently wider tolerance)
+//! and it must be >= 3x over the reference kernel (single-thread like
+//! part 7, so no core gate);
+//! (9) incremental (dirty-cluster-only) spec regeneration — a sparse
 //! k-means step must re-rank exactly the delta-touched clusters
 //! (counter-verified) and still produce the from-scratch spec;
-//! (9) the continuous-batching serve loop end to end — a seeded open-loop
-//! workload must resolve every request exactly once, drain its routed
-//! compiles via retirement GC, replay bit-deterministically, and report
-//! p50/p99 step latency (liveness pins only — wall-clock serve latency is
-//! tracked across PRs in `BENCH_serve.json`, not pinned here);
-//! (10) memory-bounded banded compilation — `ChunkedPattern` streaming
+//! (10) the continuous-batching serve loop end to end — a seeded
+//! open-loop workload must resolve every request exactly once, drain its
+//! routed compiles via retirement GC, replay bit-deterministically, and
+//! report p50/p99 step latency (liveness pins only — wall-clock serve
+//! latency is tracked across PRs in `BENCH_serve.json`, not pinned here);
+//! (11) memory-bounded banded compilation — `ChunkedPattern` streaming
 //! 512-row bands against a 4 MiB `MemoryBudget` must stay bit-identical
 //! to the monolithic compile for Local and Routing specs at
 //! n ∈ {8192, 65536}, with peak resident pattern bytes bounded by
@@ -38,9 +43,10 @@
 use std::sync::Arc;
 
 use routing_transformer::attention::{
-    optimal_clusters, run_serve, sparse_attention, ArrivalConfig, AttentionSpec, Backend,
-    BatchedAttention, Blocked, ChunkedPattern, CompiledPattern, Execution, MemberCache,
-    MemoryBudget, PatternCache, Reference, RoutingSession, ServeOptions, WorkerPool,
+    assert_outputs_match, optimal_clusters, run_serve, sparse_attention, ArrivalConfig,
+    AttentionSpec, Backend, BatchedAttention, Blocked, ChunkedPattern, CompiledPattern, Exactness,
+    Execution, MemberCache, MemoryBudget, PatternCache, Reference, RoutingSession, ServeOptions,
+    Simd, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -242,7 +248,8 @@ fn main() {
         sequential_out
             .extend(sparse_attention(&q[lo..hi], &kv[lo..hi], &v[lo..hi], d, p).unwrap());
     }
-    assert_eq!(batched_out, sequential_out, "batched must be bit-identical to sequential");
+    assert_outputs_match(&sequential_out, &batched_out, Exactness::Bitwise, "batched vs sequential")
+        .unwrap();
 
     let batched = time_fn(1, 3, || {
         std::hint::black_box(batch.attention(&q, &kv, &v, d).unwrap());
@@ -311,8 +318,8 @@ fn main() {
     let inline_out = batch.attention_with(&q, &kv, &v, d, Execution::Inline).unwrap();
     let pool_out = batch.attention_with(&q, &kv, &v, d, Execution::Pool(pool)).unwrap();
     let scoped_out = batch.attention_with(&q, &kv, &v, d, Execution::Scoped).unwrap();
-    assert_eq!(pool_out, inline_out, "pool must be bit-identical to inline");
-    assert_eq!(scoped_out, inline_out, "scoped must be bit-identical to inline");
+    assert_outputs_match(&inline_out, &pool_out, Exactness::Bitwise, "pool vs inline").unwrap();
+    assert_outputs_match(&inline_out, &scoped_out, Exactness::Bitwise, "scoped vs inline").unwrap();
 
     let pooled = time_fn(1, 3, || {
         for _ in 0..steps {
@@ -371,7 +378,12 @@ fn main() {
     let v = mk1(&mut rng);
     let ref_out = Reference.attention(&q, &kv, &v, d, &pattern).unwrap();
     let blk_out = Blocked.attention(&q, &kv, &v, d, &pattern).unwrap();
-    assert_eq!(ref_out, blk_out, "blocked backend must be bit-identical to reference");
+    assert_eq!(
+        Blocked.exactness(),
+        Exactness::Bitwise,
+        "Blocked keeps the reference summation order and must declare bitwise"
+    );
+    assert_outputs_match(&ref_out, &blk_out, Blocked.exactness(), "blocked vs reference").unwrap();
     let reference = time_fn(1, 3, || {
         std::hint::black_box(Reference.attention(&q, &kv, &v, d, &pattern).unwrap());
     });
@@ -389,6 +401,34 @@ fn main() {
     assert!(
         backend_speedup >= 1.5,
         "blocked backend must be >= 1.5x over the reference kernel (got {backend_speedup:.2}x)"
+    );
+
+    // simd fast-math backend vs the scalar reference kernel over the same
+    // n = 2048, d = 64 problem: the lane-widened f32 kernel abandons the
+    // reference's f64 accumulation order, so it is held to exactly its
+    // *declared* ulps budget — never bitwise, never a silently wider
+    // tolerance — and must buy >= 3x for that trade (single-thread, so
+    // no core gate).
+    let simd_exactness = Simd.exactness();
+    assert!(
+        matches!(simd_exactness, Exactness::Ulps(_)),
+        "the fast-math tier must declare a finite ulps budget, got {simd_exactness}"
+    );
+    let simd_out = Simd.attention(&q, &kv, &v, d, &pattern).unwrap();
+    assert_outputs_match(&ref_out, &simd_out, simd_exactness, "simd vs reference").unwrap();
+    let simd = time_fn(1, 3, || {
+        std::hint::black_box(Simd.attention(&q, &kv, &v, d, &pattern).unwrap());
+    });
+    let simd_speedup = reference.mean / simd.mean;
+    println!(
+        "\nsimd vs reference backend at n={n}, d={d} ({simd_exactness}): \
+         {:.3} ms vs {:.3} ms ({simd_speedup:.2}x)",
+        simd.mean * 1e3,
+        reference.mean * 1e3
+    );
+    assert!(
+        simd_speedup >= 3.0,
+        "simd backend must be >= 3x over the reference kernel (got {simd_speedup:.2}x)"
     );
 
     // incremental spec regeneration: a one-vector online k-means step
@@ -534,11 +574,13 @@ fn main() {
             let budget = MemoryBudget::bytes(budget_bytes);
             let mut chunked = ChunkedPattern::new(spec.clone(), n, band_rows, budget.clone());
             let banded_out = chunked.attention_backend(&q, &kv, &v, d, &Reference).unwrap();
-            assert_eq!(
-                banded_out, mono_out,
-                "budgeted banded attention must be bit-identical to the monolithic path \
-                 ({family}, n={n})"
-            );
+            assert_outputs_match(
+                &mono_out,
+                &banded_out,
+                Exactness::Bitwise,
+                &format!("budgeted banded vs monolithic ({family}, n={n})"),
+            )
+            .unwrap();
             assert_eq!(chunked.nnz(), pattern.nnz(), "band nnz must sum to the monolithic nnz");
 
             let max_band = (0..n.div_ceil(band_rows))

@@ -3,16 +3,28 @@
 //!
 //! The engine's sharding/batching layers decide *which* rows run *where*
 //! (see [`super::engine`] and [`super::pool`]); a backend decides *how*
-//! one contiguous row range is evaluated.  Every backend must be
-//! **bit-identical** to [`Reference`] — same f64 accumulation order per
-//! output element — so callers can swap backends without revalidating
-//! numerics (pinned by the backend-dimension property in
-//! `tests/stateful.rs` and the unit tests below).  Three implementations
+//! one contiguous row range is evaluated.  Every backend declares its
+//! numerical contract relative to [`Reference`] via
+//! [`Backend::exactness`]:
+//!
+//! * [`Exactness::Bitwise`] — same f64 accumulation order per output
+//!   element, so outputs are bit-for-bit equal to the reference kernel.
+//! * [`Exactness::Ulps`]`(k)` — outputs may differ by at most `k` units
+//!   in the last place per element (fast-math backends that reorder or
+//!   narrow the arithmetic for speed).
+//!
+//! Verification sites (the stateful backend property, proptests,
+//! `bench_complexity` pins, serve-bench per-step checks) consume the
+//! declaration through one shared comparator, [`assert_outputs_match`],
+//! instead of hard-coding `==` — so a bitwise backend is still held to
+//! bit-exactness while a `Ulps(k)` backend is held to exactly its
+//! declared budget, never a silently widened one.  Four implementations
 //! ship:
 //!
 //! * [`Reference`] — the scalar host kernel
-//!   ([`super::engine::sparse_attention_rows`]), kept as the bit-exactness
-//!   oracle every other backend is compared against.
+//!   ([`super::engine::sparse_attention_rows`]), kept as the exactness
+//!   oracle every other backend is compared against.  `Bitwise` by
+//!   definition.
 //! * [`Blocked`] — a cache-blocked host backend: the query row is
 //!   pre-widened to f64 once into a reusable per-worker scratch buffer,
 //!   and key columns are processed in tiles of four with one independent
@@ -21,17 +33,26 @@
 //!   four chains give the CPU instruction-level parallelism the strict
 //!   single-chain f64 fold denies it — `bench_complexity` pins ≥ 1.5×
 //!   over [`Reference`] at n = 2048, d = 64.  No `unsafe`, no new
+//!   dependencies.  Declares `Bitwise`.
+//! * [`Simd`] — the fast-math tier: a portable lane-widened f32 kernel
+//!   (eight explicit accumulator lanes the autovectorizer maps onto
+//!   AVX2/NEON registers, row-blocked max, f32 softmax, in-place f32
+//!   value accumulation).  Trades the reference's f64 ordering for raw
+//!   throughput and therefore declares [`Exactness::Ulps`] with a
+//!   justified budget ([`Simd::ULPS`]); `bench_complexity` pins ≥ 3×
+//!   over [`Reference`] at n = 2048, d = 64.  No `unsafe`, no new
 //!   dependencies.
 //! * `XlaBackend` (behind the `xla` cargo feature, so not linkable from
 //!   host-only docs) — the landing slot for the PJRT/accelerator
 //!   lowering: its `stage` method exports a pattern's CSR arrays in the
 //!   i64 layout the device gather consumes; until the device kernel
-//!   lands, execution falls back to the host reference path (still
-//!   bit-identical, so the slot is safe to select).
+//!   lands, execution falls back to the host reference path (declares
+//!   `Bitwise`, so the slot is safe to select).
 //!
 //! Backends register by name in a process-wide registry ([`register`] /
-//! [`lookup`] / [`names`]); `rtx serve-bench --backend` selects from it.
-//! The sharded and batched execution paths take a backend per call via
+//! [`lookup`] / [`names`]); `rtx serve-bench --backend` and
+//! `rtx serve --backend` select from it.  The sharded and batched
+//! execution paths take a backend per call via
 //! [`super::ShardedPattern::attention_backend`] and
 //! [`super::BatchedAttention::attention_backend`] — backend choice and
 //! [`Execution`](super::pool::Execution) strategy compose freely.
@@ -46,16 +67,162 @@ use super::compiled::CompiledPattern;
 use super::engine::sparse_attention_rows;
 pub use super::engine::check_rows_args;
 
+// ------------------------------------------------------------ exactness
+
+/// The numerical contract a [`Backend`] promises relative to
+/// [`Reference`], consumed by [`assert_outputs_match`] at every
+/// verification site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exactness {
+    /// Outputs are bit-for-bit identical to the reference kernel
+    /// (`f32::to_bits` equality per element; note this distinguishes
+    /// `+0.0` from `-0.0` and is reflexive on NaN bit patterns, making
+    /// it strictly stronger than `==`).
+    Bitwise,
+    /// Each output element is within `k` units in the last place of the
+    /// reference value, with an absolute floor of `k · 2⁻²³` (one ulp of
+    /// the `[1, 2)` binade per budgeted ulp) so near-zero outputs
+    /// produced by catastrophic cancellation — where backend error is
+    /// absolute in the accumulation scale, not relative to the tiny
+    /// result — don't fail on astronomically large relative distances.
+    /// `Ulps(0)` is equivalent to [`Exactness::Bitwise`] on nonzero
+    /// finite values (at `±0.0` the ulps distance is 0 but the bits
+    /// differ).
+    Ulps(u32),
+}
+
+impl Exactness {
+    /// Combine two budgets for a comparison *between* two non-reference
+    /// backends: bitwise is the identity, and two ulps budgets add
+    /// (triangle inequality through the shared reference value).
+    pub fn join(self, other: Exactness) -> Exactness {
+        match (self, other) {
+            (Exactness::Bitwise, x) | (x, Exactness::Bitwise) => x,
+            (Exactness::Ulps(a), Exactness::Ulps(b)) => Exactness::Ulps(a.saturating_add(b)),
+        }
+    }
+}
+
+impl std::fmt::Display for Exactness {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Exactness::Bitwise => write!(f, "bitwise"),
+            Exactness::Ulps(k) => write!(f, "ulps({k})"),
+        }
+    }
+}
+
+/// Map an f32 onto the integer line such that adjacent representable
+/// floats are adjacent integers and ordering matches numeric ordering
+/// (`-0.0` and `+0.0` both map to 0).  The difference of two mapped
+/// values is the signed ulps distance.
+fn monotone(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        0x8000_0000u32 as i64 - b as i64
+    } else {
+        b as i64
+    }
+}
+
+/// Units-in-the-last-place distance between two f32 values: how many
+/// representable floats lie between them (0 for equal values and for
+/// `+0.0` vs `-0.0`; counts across the zero boundary without a gap).
+/// Only meaningful for non-NaN inputs — [`values_match`] handles NaN
+/// before consulting this.
+pub fn ulps_distance(a: f32, b: f32) -> u64 {
+    (monotone(a) - monotone(b)).unsigned_abs()
+}
+
+/// Do two scalar outputs match under an [`Exactness`] contract?
+///
+/// `Bitwise` compares `to_bits` exactly.  `Ulps(k)` treats identical
+/// bits as a match, requires NaN to pair only with NaN, requires
+/// infinities to match by `==` (no finite value is "close" to
+/// infinity), and otherwise accepts a ulps distance of at most `k` *or*
+/// an absolute difference of at most `k · 2⁻²³` (see
+/// [`Exactness::Ulps`] for why the absolute floor exists).
+pub fn values_match(a: f32, b: f32, exactness: Exactness) -> bool {
+    match exactness {
+        Exactness::Bitwise => a.to_bits() == b.to_bits(),
+        Exactness::Ulps(k) => {
+            if a.to_bits() == b.to_bits() {
+                return true;
+            }
+            if a.is_nan() || b.is_nan() {
+                return a.is_nan() && b.is_nan();
+            }
+            if a.is_infinite() || b.is_infinite() {
+                return a == b;
+            }
+            ulps_distance(a, b) <= u64::from(k)
+                || (f64::from(a) - f64::from(b)).abs() <= f64::from(k) * f64::from(f32::EPSILON)
+        }
+    }
+}
+
+/// The shared verification comparator: assert that `actual` matches
+/// `expected` element-wise under `exactness`, or return an error naming
+/// the first offending index, both values, and the observed ulps
+/// distance.  Every site that used to assert `==` on attention outputs
+/// (engine shard/batch equivalence, serve-bench per-step checks,
+/// `bench_complexity` pins, the stateful backend property, the
+/// proptest oracles) goes through here, so a backend declaring
+/// [`Exactness::Bitwise`] is still held to bit-exactness.
+pub fn assert_outputs_match(
+    expected: &[f32],
+    actual: &[f32],
+    exactness: Exactness,
+    context: &str,
+) -> Result<()> {
+    if expected.len() != actual.len() {
+        bail!(
+            "{context}: output length mismatch ({} expected vs {} actual)",
+            expected.len(),
+            actual.len()
+        );
+    }
+    for (i, (&e, &a)) in expected.iter().zip(actual).enumerate() {
+        if !values_match(e, a, exactness) {
+            match exactness {
+                Exactness::Bitwise => bail!(
+                    "{context}: outputs differ at index {i} under {exactness}: \
+                     {e:?} (bits {:#010x}) vs {a:?} (bits {:#010x})",
+                    e.to_bits(),
+                    a.to_bits()
+                ),
+                Exactness::Ulps(_) => bail!(
+                    "{context}: outputs differ at index {i} beyond {exactness}: \
+                     {e:?} vs {a:?} ({} ulps apart)",
+                    ulps_distance(e, a)
+                ),
+            }
+        }
+    }
+    Ok(())
+}
+
 /// An attention execution backend: evaluates the CSR rows of one
 /// [`CompiledPattern`] against full `[n, d]` row-major Q/K/V buffers.
 ///
-/// Implementations must be bit-identical to [`Reference`]: identical f64
-/// accumulation order per output element, fully-masked rows written as
-/// zeros, and the same shape validation errors.  `Send + Sync` because
+/// Implementations declare their numerical contract relative to
+/// [`Reference`] via [`Backend::exactness`] (default
+/// [`Exactness::Bitwise`], so a backend that doesn't opt into fast math
+/// is held to bit-exactness).  All backends must write fully-masked
+/// rows as zeros — never NaN — and produce the same shape validation
+/// errors (validate via [`check_rows_args`]).  `Send + Sync` because
 /// one backend instance is shared across pool workers.
 pub trait Backend: Send + Sync + std::fmt::Debug {
     /// Registry / display name (e.g. `"reference"`, `"blocked"`).
     fn name(&self) -> &'static str;
+
+    /// The numerical contract this backend's outputs satisfy relative
+    /// to [`Reference`].  Defaults to [`Exactness::Bitwise`] — a
+    /// backend must explicitly opt into a `Ulps(k)` budget, so nothing
+    /// weakens silently.
+    fn exactness(&self) -> Exactness {
+        Exactness::Bitwise
+    }
 
     /// Evaluate the query rows in `rows`, writing row `i`'s output at
     /// `out[(i - rows.start) * d ..]`; `out` holds exactly
@@ -96,9 +263,10 @@ pub trait Backend: Send + Sync + std::fmt::Debug {
 
 // ------------------------------------------------------------ reference
 
-/// The scalar host kernel — the bit-exactness oracle.  Delegates to
+/// The scalar host kernel — the exactness oracle.  Delegates to
 /// [`super::engine::sparse_attention_rows`] unchanged; every other
-/// backend is validated (and benchmarked) against this one.
+/// backend is validated (and benchmarked) against this one.  Declares
+/// [`Exactness::Bitwise`] by definition.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Reference;
 
@@ -139,7 +307,7 @@ const COL_TILE: usize = 4;
 /// of stalling on one serial f64 add chain.  The softmax and the value
 /// accumulation phases reuse the reference loop order unchanged (the
 /// value loop is already vectorizable: each output element owns an
-/// independent chain).
+/// independent chain).  Declares [`Exactness::Bitwise`].
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Blocked;
 
@@ -228,6 +396,150 @@ impl Backend for Blocked {
     }
 }
 
+// ----------------------------------------------------------------- simd
+
+/// Accumulator lane count for the [`Simd`] kernel: eight f32 lanes fill
+/// one AVX2 (or two NEON) registers, and the explicit lane array is what
+/// lets the autovectorizer emit packed multiply-adds on stable Rust with
+/// no `std::simd` and no new dependencies.
+const LANES: usize = 8;
+
+/// The fast-math host backend: a portable lane-widened f32 kernel.
+///
+/// Where [`Reference`]/[`Blocked`] fold every score through one (or
+/// four) strictly-ordered f64 chains, this kernel keeps the entire row
+/// in f32 and reassociates freely for throughput:
+///
+/// * **scores** — each key-column dot product runs over
+///   `LANES` (= 8) independent f32 accumulator lanes
+///   (`chunks_exact(LANES)` over the head dimension plus a scalar
+///   tail), reduced pairwise at the end — the shape the autovectorizer
+///   turns into packed f32 FMAs;
+/// * **row-blocked max** — the softmax max is found lane-parallel over
+///   the score vector in `LANES`-wide blocks, then reduced;
+/// * **softmax + values** — `exp`/normalization stay in f32 (one
+///   `1/z` multiply instead of per-weight divides) and the weighted
+///   value rows accumulate directly into the f32 output slice, which
+///   vectorizes across the head dimension.
+///
+/// The score vector is per-worker scratch reused across every row of
+/// the shard.  Fully-masked rows are written as zeros (never NaN) and
+/// shapes are validated via [`check_rows_args`], exactly like every
+/// other backend.  Declares [`Exactness::Ulps`]`(`[`Simd::ULPS`]`)` —
+/// see that constant for the error budget; `bench_complexity` pins the
+/// payoff at ≥ 3× [`Reference`] for n = 2048, d = 64.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Simd;
+
+impl Simd {
+    /// Declared ulps budget versus [`Reference`].
+    ///
+    /// Error budget: an f32 dot over d = 64 terms carries ~`d·ε` ≈ 4e-6
+    /// relative score error versus the f64 reference; `exp` converts
+    /// score error to relative weight error of the same order, and an
+    /// m-term f32 value accumulation (m up to a few hundred attended
+    /// keys) adds ~`m·ε/2` ≈ 2e-5.  Together the observed output error
+    /// stays near 1e-4 relative ≈ 1700 ulps.  4096 ulps ≈ 5e-4 relative
+    /// (with the matching absolute floor near zero) gives ~4× headroom
+    /// over that bound so the pin stays deterministic across
+    /// architectures with and without fused multiply-add.
+    pub const ULPS: u32 = 4096;
+}
+
+impl Backend for Simd {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn exactness(&self) -> Exactness {
+        Exactness::Ulps(Self::ULPS)
+    }
+
+    fn attention_rows(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        pattern: &CompiledPattern,
+        rows: Range<usize>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        check_rows_args(q, k, v, d, pattern, &rows, out)?;
+        let scale = (1.0 / (d as f64).sqrt()) as f32;
+        // per-worker scratch, reused across every row of the shard
+        let mut scores: Vec<f32> = Vec::new();
+        let start = rows.start;
+        for (i, cols, _clusters) in pattern.rows(rows) {
+            let oi = &mut out[(i - start) * d..(i - start + 1) * d];
+            oi.fill(0.0);
+            if cols.is_empty() {
+                // fully-masked row: zeros, never NaN (reference contract)
+                continue;
+            }
+            let qi = &q[i * d..(i + 1) * d];
+            // lane-widened f32 dot product per key column
+            scores.clear();
+            for &j in cols {
+                let kj = &k[j * d..(j + 1) * d];
+                let mut lanes = [0f32; LANES];
+                let mut qc = qi.chunks_exact(LANES);
+                let mut kc = kj.chunks_exact(LANES);
+                for (qs, ks) in qc.by_ref().zip(kc.by_ref()) {
+                    for ((l, &qt), &kt) in lanes.iter_mut().zip(qs).zip(ks) {
+                        *l += qt * kt;
+                    }
+                }
+                let mut tail = 0f32;
+                for (&qt, &kt) in qc.remainder().iter().zip(kc.remainder()) {
+                    tail += qt * kt;
+                }
+                // pairwise lane reduction keeps the sum shallow
+                let mut width = LANES;
+                while width > 1 {
+                    width /= 2;
+                    let (lo, hi) = lanes.split_at_mut(width);
+                    for (a, &b) in lo.iter_mut().zip(hi.iter()) {
+                        *a += b;
+                    }
+                }
+                scores.push((lanes[0] + tail) * scale);
+            }
+            // row-blocked max: lane-parallel over LANES-wide blocks
+            let mut max = f32::NEG_INFINITY;
+            let mut maxes = [f32::NEG_INFINITY; LANES];
+            let mut blocks = scores.chunks_exact(LANES);
+            for block in blocks.by_ref() {
+                for (m, &s) in maxes.iter_mut().zip(block) {
+                    *m = m.max(s);
+                }
+            }
+            for &s in blocks.remainder() {
+                max = max.max(s);
+            }
+            for &m in &maxes {
+                max = max.max(m);
+            }
+            // f32 softmax; z >= 1 because the max element contributes 1
+            let mut z = 0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - max).exp();
+                z += *s;
+            }
+            let inv_z = 1.0 / z;
+            // weighted value rows accumulate straight into the output
+            for (&e, &j) in scores.iter().zip(cols) {
+                let w = e * inv_z;
+                let vj = &v[j * d..(j + 1) * d];
+                for (o, &x) in oi.iter_mut().zip(vj) {
+                    *o += w * x;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 // ------------------------------------------------------------- xla stub
 
 /// Feature-gated landing slot for the accelerator (PJRT) lowering of a
@@ -237,8 +549,9 @@ impl Backend for Blocked {
 /// device gather kernel; [`XlaBackend::stage`] already exports them in
 /// the i64 layout that lowering consumes, so the device kernel can land
 /// behind this type without touching any call site.  Until it does,
-/// execution falls back to the host [`Reference`] path — bit-identical,
-/// so selecting `--backend xla` today is safe (just not yet faster).
+/// execution falls back to the host [`Reference`] path — bit-identical
+/// (declares [`Exactness::Bitwise`]), so selecting `--backend xla`
+/// today is safe (just not yet faster).
 #[cfg(feature = "xla")]
 #[derive(Debug, Default, Clone, Copy)]
 pub struct XlaBackend;
@@ -288,6 +601,7 @@ fn registry() -> &'static Mutex<BackendMap> {
         let mut map: BackendMap = BTreeMap::new();
         map.insert("reference".to_string(), Arc::new(Reference));
         map.insert("blocked".to_string(), Arc::new(Blocked));
+        map.insert("simd".to_string(), Arc::new(Simd));
         #[cfg(feature = "xla")]
         map.insert("xla".to_string(), Arc::new(XlaBackend));
         Mutex::new(map)
@@ -295,8 +609,8 @@ fn registry() -> &'static Mutex<BackendMap> {
 }
 
 /// Register a backend under [`Backend::name`]; errors if the name is
-/// already taken (the built-ins `reference`/`blocked` — plus `xla` with
-/// the feature — are pre-registered).
+/// already taken (the built-ins `reference`/`blocked`/`simd` — plus
+/// `xla` with the feature — are pre-registered).
 pub fn register(backend: Arc<dyn Backend>) -> Result<()> {
     let name = backend.name().to_string();
     let mut map = registry().lock().unwrap_or_else(|e| e.into_inner());
@@ -345,6 +659,80 @@ mod tests {
     }
 
     #[test]
+    fn builtins_declare_expected_exactness() {
+        assert_eq!(Reference.exactness(), Exactness::Bitwise);
+        assert_eq!(Blocked.exactness(), Exactness::Bitwise);
+        assert_eq!(Simd.exactness(), Exactness::Ulps(Simd::ULPS));
+        #[cfg(feature = "xla")]
+        assert_eq!(XlaBackend.exactness(), Exactness::Bitwise);
+    }
+
+    #[test]
+    fn exactness_join_and_display() {
+        use Exactness::*;
+        assert_eq!(Bitwise.join(Bitwise), Bitwise);
+        assert_eq!(Bitwise.join(Ulps(7)), Ulps(7));
+        assert_eq!(Ulps(7).join(Bitwise), Ulps(7));
+        assert_eq!(Ulps(3).join(Ulps(4)), Ulps(7));
+        assert_eq!(Ulps(u32::MAX).join(Ulps(1)), Ulps(u32::MAX), "saturating");
+        assert_eq!(Bitwise.to_string(), "bitwise");
+        assert_eq!(Ulps(4096).to_string(), "ulps(4096)");
+    }
+
+    #[test]
+    fn ulps_comparator_handles_special_values() {
+        use Exactness::*;
+        // NaN: matches only NaN under Ulps, bit-equal NaN under Bitwise
+        assert!(values_match(f32::NAN, f32::NAN, Ulps(0)));
+        assert!(values_match(f32::NAN, f32::NAN, Bitwise), "same NaN bits");
+        assert!(!values_match(f32::NAN, 1.0, Ulps(u32::MAX)));
+        assert!(!values_match(1.0, f32::NAN, Ulps(u32::MAX)));
+        // signed zero: 0 ulps apart but bitwise-distinct
+        assert!(values_match(0.0, -0.0, Ulps(0)));
+        assert!(!values_match(0.0, -0.0, Bitwise));
+        assert_eq!(ulps_distance(0.0, -0.0), 0);
+        // infinities match only themselves
+        assert!(values_match(f32::INFINITY, f32::INFINITY, Ulps(0)));
+        assert!(values_match(f32::NEG_INFINITY, f32::NEG_INFINITY, Ulps(0)));
+        assert!(!values_match(f32::INFINITY, f32::NEG_INFINITY, Ulps(u32::MAX)));
+        assert!(!values_match(f32::INFINITY, f32::MAX, Ulps(u32::MAX)));
+        // the distance counts across zero without a gap
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(ulps_distance(tiny, -tiny), 2);
+    }
+
+    #[test]
+    fn ulps_boundary_is_exact() {
+        // magnitude 256 so the absolute floor (k · 2⁻²³) is far below one
+        // ulp (2⁻¹⁵ here) and cannot mask the boundary
+        let k = 8u32;
+        let a = 256.0f32;
+        let pass = f32::from_bits(a.to_bits() + k);
+        let fail = f32::from_bits(a.to_bits() + k + 1);
+        assert_eq!(ulps_distance(a, pass), u64::from(k));
+        assert!(values_match(a, pass, Exactness::Ulps(k)), "exactly k ulps passes");
+        assert!(!values_match(a, fail, Exactness::Ulps(k)), "k + 1 ulps fails");
+        // and the absolute floor admits near-zero differences the
+        // relative view would reject
+        let cancel = k as f32 * f32::EPSILON;
+        assert!(ulps_distance(0.0, cancel) > u64::from(k));
+        assert!(values_match(0.0, cancel, Exactness::Ulps(k)));
+    }
+
+    #[test]
+    fn assert_outputs_match_names_first_offender() {
+        let e = [1.0f32, 2.0, 3.0];
+        let mut a = e;
+        assert_outputs_match(&e, &a, Exactness::Bitwise, "ctx").unwrap();
+        a[1] = f32::from_bits(a[1].to_bits() + 1);
+        let err = assert_outputs_match(&e, &a, Exactness::Bitwise, "ctx").unwrap_err();
+        assert!(err.to_string().contains("index 1"), "{err}");
+        assert_outputs_match(&e, &a, Exactness::Ulps(1), "ctx").unwrap();
+        let err = assert_outputs_match(&e, &a[..2], Exactness::Bitwise, "ctx").unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
+    }
+
+    #[test]
     fn blocked_is_bit_identical_to_reference() {
         let mut rng = Rng::new(77);
         for n in [0usize, 1, 2, 5, 17, 33] {
@@ -355,10 +743,63 @@ mod tests {
                     let p = spec.compile(n);
                     let a = Reference.attention(&q, &k, &v, d, &p).unwrap();
                     let b = Blocked.attention(&q, &k, &v, d, &p).unwrap();
-                    assert_eq!(a, b, "n={n} d={d} spec={spec:?}");
+                    assert_outputs_match(&a, &b, Blocked.exactness(), "blocked vs reference")
+                        .unwrap_or_else(|e| panic!("n={n} d={d} spec={spec:?}: {e}"));
                 }
             }
         }
+    }
+
+    #[test]
+    fn simd_matches_reference_within_declared_ulps() {
+        let mut rng = Rng::new(78);
+        for n in [0usize, 1, 2, 5, 17, 33] {
+            // d sweeps across the lane boundary cases (d=1, tail-only,
+            // d=8 exact, d%8 != 0, multi-chunk)
+            for d in [1usize, 3, 8, 11, 16, 24] {
+                let (q, k, v) = random_qkv(&mut rng, n, d);
+                for spec in specs(n) {
+                    let p = spec.compile(n);
+                    let a = Reference.attention(&q, &k, &v, d, &p).unwrap();
+                    let b = Simd.attention(&q, &k, &v, d, &p).unwrap();
+                    assert_outputs_match(&a, &b, Simd.exactness(), "simd vs reference")
+                        .unwrap_or_else(|e| panic!("n={n} d={d} spec={spec:?}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_masked_rows_zero_and_shapes_validate() {
+        // rows with 0..=5 columns exercise the max-block remainder too
+        let spec = AttentionSpec::routing(vec![vec![0, 1, 2, 3, 4, 5]]);
+        let p = spec.compile(8);
+        assert!(p.row(6).is_empty() && p.row(7).is_empty());
+        let mut rng = Rng::new(6);
+        let (q, k, v) = random_qkv(&mut rng, 8, 4);
+        let out = Simd.attention(&q, &k, &v, 4, &p).unwrap();
+        assert!(out[6 * 4..].iter().all(|&x| x == 0.0), "masked rows stay zero");
+        assert!(out.iter().all(|x| x.is_finite()), "no NaN/inf leaks");
+        // identical shape validation to every other backend
+        let p2 = AttentionSpec::Full.compile(2);
+        assert!(Simd.attention(&[0.0; 3], &[0.0; 4], &[0.0; 4], 2, &p2).is_err());
+        assert!(Simd.attention(&[], &[], &[], 0, &p2).is_err());
+        let mut out = [0f32; 2];
+        assert!(Simd
+            .attention_rows(&[0.0; 4], &[0.0; 4], &[0.0; 4], 2, &p2, 1..3, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn simd_is_deterministic_across_calls() {
+        // fast math relaxes the match to Reference, not run-to-run
+        // reproducibility: the same inputs must give the same bits
+        let mut rng = Rng::new(41);
+        let (q, k, v) = random_qkv(&mut rng, 33, 11);
+        let p = AttentionSpec::local(5).unwrap().compile(33);
+        let a = Simd.attention(&q, &k, &v, 11, &p).unwrap();
+        let b = Simd.attention(&q, &k, &v, 11, &p).unwrap();
+        assert_outputs_match(&a, &b, Exactness::Bitwise, "simd reruns").unwrap();
     }
 
     #[test]
@@ -391,10 +832,14 @@ mod tests {
         assert_eq!(r.name(), "reference");
         let b = lookup("blocked").expect("built-in");
         assert_eq!(b.name(), "blocked");
+        let s = lookup("simd").expect("built-in");
+        assert_eq!(s.name(), "simd");
+        assert_eq!(s.exactness(), Exactness::Ulps(Simd::ULPS));
         assert!(lookup("warp-drive").is_none());
         let names = names();
         assert!(names.contains(&"reference".to_string()));
         assert!(names.contains(&"blocked".to_string()));
+        assert!(names.contains(&"simd".to_string()));
         assert!(register(Arc::new(Reference)).is_err(), "duplicate name must be rejected");
     }
 
@@ -422,6 +867,7 @@ mod tests {
         }
         register(Arc::new(Custom)).unwrap();
         let found = lookup("custom-test-backend").expect("registered");
+        assert_eq!(found.exactness(), Exactness::Bitwise, "default contract is bitwise");
         let p = AttentionSpec::local(2).unwrap().compile(4);
         let mut rng = Rng::new(9);
         let (q, k, v) = random_qkv(&mut rng, 4, 2);

@@ -48,10 +48,15 @@
 //! 6. [`backend`] — the kernel layer: a registerable [`Backend`] trait
 //!    ("execute these CSR rows against [n, d] Q/K/V") with the scalar
 //!    [`Reference`] oracle, the cache-blocked [`Blocked`] host kernel
-//!    (bit-identical, ≥ 1.5× faster), and the `xla`-feature-gated
-//!    accelerator landing slot; selected per call via
-//!    [`ShardedPattern::attention_backend`] /
-//!    [`BatchedAttention::attention_backend`].
+//!    (bit-identical, ≥ 1.5× faster), the fast-math [`Simd`] kernel
+//!    (lane-widened f32, ≥ 3× faster within a declared ulps budget),
+//!    and the `xla`-feature-gated accelerator landing slot; selected
+//!    per call via [`ShardedPattern::attention_backend`] /
+//!    [`BatchedAttention::attention_backend`].  Every backend declares
+//!    its numerical contract via [`Backend::exactness`]
+//!    ([`Exactness::Bitwise`] or [`Exactness::Ulps`]); verification
+//!    sites compare through [`assert_outputs_match`] so bitwise
+//!    backends stay pinned to bit-exactness.
 //! 7. [`serve`] — the continuous-batching front-end: a deterministic
 //!    open-loop arrival process ([`RequestQueue`]: seeded exponential
 //!    interarrivals, Zipf content popularity), a [`Scheduler`] with
@@ -82,7 +87,10 @@ pub mod pool;
 pub mod serve;
 pub mod spec;
 
-pub use backend::{Backend, Blocked, Reference};
+pub use backend::{
+    assert_outputs_match, ulps_distance, values_match, Backend, Blocked, Exactness, Reference,
+    Simd,
+};
 pub use compiled::{CompiledPattern, MemoryBudget, PatternBand, RowIter, RowStats, NO_CLUSTER, RENDER_CLIP};
 pub use complexity::optimal_clusters;
 pub use decode::{

@@ -61,8 +61,12 @@ use crate::util::timing::StreamingHistogram;
 /// `serve` bench made it 2; the memory-bounded serving fields
 /// (`max_pattern_bytes`, `band_rows`, `peak_pattern_bytes`,
 /// `pattern_bytes_resident`, `pattern_bytes_evicted`, `band_compiles`,
-/// `gc_bytes_reclaimed`) made it 3.
-pub const JSON_SCHEMA_VERSION: u64 = 3;
+/// `gc_bytes_reclaimed`) made it 3; the exactness contract made it 4
+/// (`serve` lines document the `backend` field and add `exactness`;
+/// `serve-bench` lines add per-backend `exactness` entries and emit
+/// `sequential_rows_per_sec` only when more than one backend runs, so
+/// single-backend sweeps skip the redundant per-step oracle).
+pub const JSON_SCHEMA_VERSION: u64 = 4;
 
 // ---------------------------------------------------------------- arrivals
 
@@ -1379,6 +1383,25 @@ mod tests {
         assert_eq!(s.resolved(), 16);
         assert!(s.shed + s.rejected > 0, "overload must shed or reject, not stall");
         assert_eq!(summary.live_patterns_after_gc, 1);
+    }
+
+    #[test]
+    fn zero_step_run_reports_finite_zero_latencies() {
+        // a workload with no requests retires zero steps; the summary's
+        // p50/p99/mean must follow the documented empty-histogram
+        // convention (0.0) instead of leaking NaN into the json line
+        let opts = ServeOptions {
+            arrivals: ArrivalConfig { requests: 0, ..ArrivalConfig::default() },
+            ..ServeOptions::default()
+        };
+        let summary = run_serve(&opts, &Blocked).unwrap();
+        assert_eq!(summary.stats.submitted, 0);
+        assert_eq!(summary.step_us.count(), 0);
+        assert_eq!(summary.step_us.p50(), 0.0);
+        assert_eq!(summary.step_us.p99(), 0.0);
+        assert_eq!(summary.step_us.mean(), 0.0);
+        assert!(summary.step_us.p50().is_finite() && summary.step_us.p99().is_finite());
+        assert_eq!(summary.rows_per_sec(), 0.0, "no rows, no NaN throughput");
     }
 
     #[test]

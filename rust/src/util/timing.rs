@@ -63,6 +63,15 @@ const HIST_BUCKETS: usize = 320;
 /// clamped into `[min, max]` so the edges never drift outside the observed
 /// range. Units are whatever the caller records (the serve layer records
 /// microseconds).
+///
+/// **Empty-histogram convention:** every getter (`mean`, `min`, `max`,
+/// `quantile`/`p50`/`p99`) returns exactly `0.0` when no sample has been
+/// recorded — never NaN and never a division by zero.  Consumers render
+/// the numbers straight into `--json` lines
+/// ([`ServeSummary`](crate::attention::ServeSummary) p50/p99 among
+/// them), so a run that retires zero steps must still serialize as valid
+/// finite JSON.  Pinned by `histogram_empty_reports_zero` here and the
+/// zero-step serve regression test in `attention::serve`.
 #[derive(Debug, Clone)]
 pub struct StreamingHistogram {
     buckets: Vec<u64>,
@@ -258,13 +267,21 @@ mod tests {
 
     #[test]
     fn histogram_empty_reports_zero() {
+        // the documented empty-histogram convention: every getter is
+        // exactly 0.0 (finite, JSON-serializable), never NaN
         let h = StreamingHistogram::new();
         assert!(h.is_empty());
         assert_eq!(h.count(), 0);
-        assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.min(), 0.0);
         assert_eq!(h.max(), 0.0);
+        for i in 0..=10 {
+            let q = h.quantile(i as f64 / 10.0);
+            assert!(q.is_finite());
+            assert_eq!(q, 0.0);
+        }
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
     }
 
     #[test]

@@ -118,7 +118,7 @@ fn docs_exist_and_are_cross_linked() {
     );
     // the memory-bounded compilation layer ships with docs: the banded
     // compile path, the byte budget, the new serve flags, and the
-    // schema-3 byte-accounting fields
+    // byte-accounting fields
     assert!(
         ARCHITECTURE.contains("Memory-bounded compilation"),
         "ARCHITECTURE.md must document the banded compilation layer"
@@ -128,8 +128,22 @@ fn docs_exist_and_are_cross_linked() {
         "ARCHITECTURE.md must document the band compile entry point"
     );
     assert!(
-        ARCHITECTURE.contains("\"schema\": 3"),
-        "ARCHITECTURE.md must document the schema-3 --json line"
+        ARCHITECTURE.contains("\"schema\": 4"),
+        "ARCHITECTURE.md must document the schema-4 --json line"
+    );
+    // the exactness contract ships with docs: which backend declares
+    // what, and the simd fast-math tier that motivates the Ulps budget
+    assert!(
+        ARCHITECTURE.contains("Exactness contract"),
+        "ARCHITECTURE.md must document the exactness verification contract"
+    );
+    assert!(
+        ARCHITECTURE.contains("Ulps"),
+        "ARCHITECTURE.md must document the ulps tolerance tier"
+    );
+    assert!(
+        README.contains("simd"),
+        "README.md must document the simd fast-math backend"
     );
     assert!(
         ARCHITECTURE.contains("peak_pattern_bytes"),

@@ -19,9 +19,10 @@ use std::sync::Arc;
 
 use routing_transformer::analysis::{jsd, JSD_MAX};
 use routing_transformer::attention::{
-    dense_masked_attention, optimal_clusters, sparse_attention, sparse_attention_batch,
-    AttentionSpec, BatchedAttention, ChunkedPattern, CompiledPattern, EpochCache, MemoryBudget,
-    PatternCache, Reference, RouteSlot, ShardedPattern,
+    assert_outputs_match, dense_masked_attention, optimal_clusters, sparse_attention,
+    sparse_attention_batch, ulps_distance, values_match, AttentionSpec, Backend,
+    BatchedAttention, ChunkedPattern, CompiledPattern, EpochCache, Exactness, MemoryBudget,
+    PatternCache, Reference, RouteSlot, ShardedPattern, Simd,
 };
 #[cfg(feature = "xla")]
 use routing_transformer::coordinator::LrSchedule;
@@ -353,7 +354,13 @@ fn prop_engine_sparse_attention_matches_dense_oracle() {
             rng.range(1, 5),
         )
         .unwrap();
-        assert_eq!(sharded.attention(q, k, v, d).unwrap(), sparse);
+        assert_outputs_match(
+            &sparse,
+            &sharded.attention(q, k, v, d).unwrap(),
+            Exactness::Bitwise,
+            "sharded vs single-shot",
+        )
+        .unwrap();
     });
 }
 
@@ -387,7 +394,13 @@ fn prop_batched_attention_bit_identical_to_sequential() {
             let hi = lo + n * d;
             expect.extend(sparse_attention(&q[lo..hi], &k[lo..hi], &v[lo..hi], d, p).unwrap());
         }
-        assert_eq!(out, expect, "batched must be bit-identical to B independent calls");
+        assert_outputs_match(
+            &expect,
+            &out,
+            Exactness::Bitwise,
+            "batched must be bit-identical to B independent calls",
+        )
+        .unwrap();
         // the one-shot form plans identically
         assert_eq!(sparse_attention_batch(q, k, v, d, &patterns, workers).unwrap(), expect);
     });
@@ -539,11 +552,79 @@ fn prop_chunked_pattern_budgeted_equals_monolithic() {
         let (q, rest) = qkv.split_at(n * d);
         let (k, v) = rest.split_at(n * d);
         let banded = chunked.attention_backend(q, k, v, d, &Reference).unwrap();
-        assert_eq!(banded, sparse_attention(q, k, v, d, &p).unwrap());
+        assert_outputs_match(
+            &sparse_attention(q, k, v, d, &p).unwrap(),
+            &banded,
+            Exactness::Bitwise,
+            "banded vs monolithic",
+        )
+        .unwrap();
         // the shared meter tracks residency exactly, and drop returns it
         assert_eq!(budget.resident(), chunked.resident_bytes());
         drop(chunked);
         assert_eq!(budget.resident(), 0, "drop must release every charged byte");
+    });
+}
+
+#[test]
+fn prop_ulps_zero_equals_bitwise_on_finite() {
+    // Exactness::Ulps(0) must accept exactly what Bitwise accepts on
+    // nonzero finite values (±0.0 is the documented carve-out: 0 ulps
+    // apart but bitwise-distinct)
+    check("ulps_zero_bitwise", 200, |rng| {
+        let mut draw = |rng: &mut Rng| loop {
+            let x = (rng.normal() * 10f64.powi(rng.range(0, 7) as i32 - 3)) as f32;
+            if x != 0.0 && x.is_finite() {
+                return x;
+            }
+        };
+        let a = draw(rng);
+        // sometimes identical, sometimes a near-neighbor, sometimes far
+        let b = match rng.below(3) {
+            0 => a,
+            1 => f32::from_bits(a.to_bits().wrapping_add(rng.range(0, 3) as u32)),
+            _ => draw(rng),
+        };
+        for (x, y) in [(a, b), (b, a)] {
+            if !(x != 0.0 && y != 0.0 && x.is_finite() && y.is_finite()) {
+                continue; // the bit-neighbor draw can land on inf
+            }
+            assert_eq!(
+                values_match(x, y, Exactness::Ulps(0)),
+                values_match(x, y, Exactness::Bitwise),
+                "Ulps(0) vs Bitwise disagree on {x:?} ({:#010x}) vs {y:?} ({:#010x})",
+                x.to_bits(),
+                y.to_bits()
+            );
+            assert_eq!(ulps_distance(x, y), ulps_distance(y, x), "distance is symmetric");
+        }
+        assert_eq!(ulps_distance(a, a), 0);
+    });
+}
+
+#[test]
+fn prop_simd_backend_within_declared_ulps() {
+    // the fast-math kernel honors its declared contract on arbitrary
+    // random patterns — including fully-masked rows and lane remainders
+    check("simd_declared_ulps", 80, |rng| {
+        let n = rng.range(0, 24);
+        let d = rng.range(1, 20); // crosses the 8-lane chunk boundary
+        let spec = random_spec(rng, n, 1);
+        let pattern = spec.compile(n);
+        let qkv: Vec<f32> = (0..3 * n * d).map(|_| rng.normal() as f32).collect();
+        let (q, rest) = qkv.split_at(n * d);
+        let (k, v) = rest.split_at(n * d);
+        let oracle = Reference.attention(q, k, v, d, &pattern).unwrap();
+        let fast = Simd.attention(q, k, v, d, &pattern).unwrap();
+        assert_outputs_match(&oracle, &fast, Simd.exactness(), "Simd vs Reference")
+            .unwrap_or_else(|e| panic!("n={n} d={d} spec={spec:?}: {e}"));
+        assert!(fast.iter().all(|x| x.is_finite()), "fast math must not emit NaN/inf");
+        // fully-masked rows stay exactly zero under fast math too
+        for i in 0..n {
+            if pattern.row(i).is_empty() {
+                assert!(fast[i * d..(i + 1) * d].iter().all(|&x| x == 0.0));
+            }
+        }
     });
 }
 

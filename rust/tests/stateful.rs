@@ -11,9 +11,12 @@
 //!   model predicts from a before/after `assign()` oracle,
 //! * pool execution is bit-identical to the inline single-thread path
 //!   (and survives induced worker panics without hanging or poisoning),
-//! * every execution backend ({Reference, Blocked}, plus registry
-//!   lookups) is bit-identical across random batches — including n = 0,
-//!   n = 1, and fully-masked rows, and
+//! * every execution backend honors its declared `Exactness` contract
+//!   across random batches — {Reference, Blocked} plus registry lookups
+//!   stay bit-identical, the fast-math `Simd` backend stays within its
+//!   declared ulps budget of Reference (and bitwise against itself
+//!   across execution strategies) — including n = 0, n = 1, and
+//!   fully-masked rows, and
 //! * incremental (dirty-cluster-only) spec regeneration equals a
 //!   from-scratch `routing_spec`, with regen counters matching a
 //!   touched-cluster model exactly, and
@@ -37,10 +40,10 @@ use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use routing_transformer::attention::{
-    sparse_attention, AttentionSpec, Backend, BatchEntry, BatchedAttention, Blocked,
-    CompiledPattern, EpochCache, Execution, MemberCache, MemoryBudget, OutcomeKind, Reference,
-    RequestOutcome, Retired, RouteSlot, RoutingSession, Scheduler, ServeRequest, ServeStats,
-    ShardedPattern, Submission, WorkerPool,
+    assert_outputs_match, sparse_attention, AttentionSpec, Backend, BatchEntry, BatchedAttention,
+    Blocked, CompiledPattern, EpochCache, Exactness, Execution, MemberCache, MemoryBudget,
+    OutcomeKind, Reference, RequestOutcome, Retired, RouteSlot, RoutingSession, Scheduler,
+    ServeRequest, ServeStats, ShardedPattern, Simd, Submission, WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -454,11 +457,14 @@ fn prop_pool_survives_induced_panics() {
 // --------------------------------------------------------- property 4
 
 #[test]
-fn prop_backend_dimension_agrees_bitwise() {
-    // random batches x {Reference, Blocked} x {Inline, Scoped, Pool} must
-    // all be bit-identical — including n = 0, n = 1, and fully-masked
-    // rows — so backend choice can never change a served output.
-    check("backend_bitwise", 96, |rng| {
+fn prop_backend_dimension_agrees_within_declared_exactness() {
+    // random batches x backends x {Inline, Scoped, Pool}: every backend
+    // is held to its declared Exactness contract against the inline
+    // Reference run — {Reference, Blocked} bit-identical, Simd within
+    // its declared ulps budget — including n = 0, n = 1, and
+    // fully-masked rows, so backend choice can never change a served
+    // output beyond what the backend itself declares.
+    check("backend_exactness", 96, |rng| {
         let b = rng.range(1, 4);
         let n = rng.range(0, 10);
         let d = rng.range(1, 10); // crosses the 4-wide column-tile boundary
@@ -487,17 +493,27 @@ fn prop_backend_dimension_agrees_bitwise() {
                 reference,
                 "Blocked/{exec:?} diverged at b={b} n={n} d={d} workers={workers}"
             );
+            // the fast-math backend is held to its own declaration, and
+            // must be execution-strategy-invariant bit-for-bit
+            let simd = batch.attention_backend(q, k, v, d, exec, &Simd).unwrap();
+            assert_outputs_match(&reference, &simd, Simd.exactness(), "Simd vs Reference")
+                .unwrap_or_else(|e| {
+                    panic!("Simd/{exec:?} at b={b} n={n} d={d} workers={workers}: {e}")
+                });
+            let simd_inline =
+                batch.attention_backend(q, k, v, d, Execution::Inline, &Simd).unwrap();
+            assert_outputs_match(&simd_inline, &simd, Exactness::Bitwise, "Simd across exec")
+                .unwrap_or_else(|e| panic!("Simd not execution-invariant under {exec:?}: {e}"));
         }
-        // registry-resolved backends agree too (the serve-bench path)
-        for name in ["reference", "blocked"] {
+        // registry-resolved backends agree too (the serve-bench path),
+        // each under its own registered declaration
+        for name in ["reference", "blocked", "simd"] {
             let backend = routing_transformer::attention::backend::lookup(name).unwrap();
-            assert_eq!(
-                batch
-                    .attention_backend(q, k, v, d, Execution::Inline, backend.as_ref())
-                    .unwrap(),
-                reference,
-                "registry backend '{name}' diverged"
-            );
+            let out = batch
+                .attention_backend(q, k, v, d, Execution::Inline, backend.as_ref())
+                .unwrap();
+            assert_outputs_match(&reference, &out, backend.exactness(), "registry backend")
+                .unwrap_or_else(|e| panic!("registry backend '{name}' diverged: {e}"));
         }
         // the sharded single-sequence path gets the same guarantee
         if n > 0 {
@@ -514,9 +530,16 @@ fn prop_backend_dimension_agrees_bitwise() {
                         .unwrap(),
                     base
                 );
+                let simd = sharded
+                    .attention_backend(&q[..hi], &k[..hi], &v[..hi], d, exec, &Simd)
+                    .unwrap();
+                assert_outputs_match(&base, &simd, Simd.exactness(), "sharded Simd")
+                    .unwrap_or_else(|e| panic!("sharded Simd/{exec:?} diverged: {e}"));
             }
             // and the one-shot Backend::attention convenience
             assert_eq!(Blocked.attention(&q[..hi], &k[..hi], &v[..hi], d, &patterns[0]).unwrap(), base);
+            let simd_one = Simd.attention(&q[..hi], &k[..hi], &v[..hi], d, &patterns[0]).unwrap();
+            assert_outputs_match(&base, &simd_one, Simd.exactness(), "one-shot Simd").unwrap();
         }
     });
 }
