@@ -1,6 +1,6 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Eleven parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Twelve parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
@@ -38,15 +38,21 @@
 //! to the monolithic compile for Local and Routing specs at
 //! n ∈ {8192, 65536}, with peak resident pattern bytes bounded by
 //! budget + one band and growing sublinearly in n (n grows 8x, peak must
-//! grow <= 4x) while the monolithic footprint grows linearly.
+//! grow <= 4x) while the monolithic footprint grows linearly;
+//! (12) multi-process coordination overhead — the part-10 serve workload
+//! re-run through a 2-worker `Coordinator` over the in-memory
+//! `SimTransport` must be bit-identical (output digest + outcome ledger)
+//! with a conserved grant ledger; the protocol overhead is printed, not
+//! pinned (it is a BENCH_serve.json trajectory concern).
 
 use std::sync::Arc;
 
 use routing_transformer::attention::{
-    assert_outputs_match, optimal_clusters, run_serve, sparse_attention, ArrivalConfig,
-    AttentionSpec, Backend, BatchedAttention, Blocked, ChunkedPattern, CompiledPattern, Exactness,
-    Execution, MemberCache, MemoryBudget, PatternCache, Reference, RoutingSession, ServeOptions,
-    Simd, WorkerPool,
+    assert_outputs_match, optimal_clusters, run_serve, run_serve_coordinated, sparse_attention,
+    ArrivalConfig, AttentionSpec, Backend, BatchedAttention, Blocked, ChunkedPattern,
+    CompiledPattern, Coordinator, CoordinatorConfig, Exactness, Execution, MemberCache,
+    MemoryBudget, PatternCache, Reference, RoutingSession, ServeOptions, Simd, SimTransport,
+    WorkerPool,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -622,6 +628,53 @@ fn main() {
         );
     }
     table.print();
+
+    // multi-process coordination overhead: the same serve workload once
+    // in-process and once through a 2-worker Coordinator over the
+    // in-memory SimTransport (protocol + state-replication cost without
+    // OS pipe noise).  Informational timing only — the pin is
+    // bit-identity (output digest, outcome ledger) and a conserved grant
+    // ledger; wall-clock overhead is a trajectory concern
+    // (BENCH_serve.json), not a floor.
+    let coord_cfg = CoordinatorConfig {
+        n: opts.n,
+        d: opts.d,
+        layers: opts.layers,
+        heads: opts.heads,
+        window: opts.window,
+        clusters: opts.clusters,
+        top_w: opts.top_w,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        backend: "blocked".to_string(),
+        max_regrants: 8,
+    };
+    let mut coord = Coordinator::new(coord_cfg, SimTransport::new())
+        .expect("valid coordinator config");
+    coord.spawn_worker().expect("sim spawn");
+    coord.spawn_worker().expect("sim spawn");
+    let coordinated =
+        run_serve_coordinated(&opts, &mut coord).expect("coordinated serve must complete");
+    coord.shutdown();
+    assert_eq!(
+        coordinated.output_digest, summary.output_digest,
+        "coordinated serve must be bit-identical to in-process (digest)"
+    );
+    assert_eq!(coordinated.outcomes, summary.outcomes);
+    assert_eq!(coordinated.stats, summary.stats);
+    let co = coordinated.coord.expect("coordinated run reports its ledger");
+    assert!(co.conserved(), "grant ledger must conserve: {co:?}");
+    assert_eq!(co.crashes, 0, "no faults injected, so no crashes");
+    println!(
+        "\ncoordinated serve (2 sim workers) vs in-process: {:.3} ms vs {:.3} ms attention \
+         wall-clock ({} worker rows / {} inline, {} grants, digest {:016x})",
+        coordinated.elapsed_sec * 1e3,
+        summary.elapsed_sec * 1e3,
+        co.worker_rows,
+        co.inline_rows,
+        co.grants,
+        coordinated.output_digest
+    );
 
     println!("\nbench_complexity OK");
 }

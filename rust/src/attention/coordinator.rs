@@ -1,0 +1,1783 @@
+//! Multi-process shard coordination — one head-plan split across OS
+//! processes.
+//!
+//! A single process caps out at `available_parallelism`; this module is
+//! the horizontal-scale step the ROADMAP names.  The [`Coordinator`]
+//! owns **all** routing state — the [`RoutingSession`], the
+//! [`EpochCache`], and the per-slot [`MemberCache`]s — exactly as the
+//! in-process serve loop does, and ships workers only what they need to
+//! execute: epoch-stamped [`AttentionSpec`] installs, epoch-bump
+//! [`RouteUpdate`] deltas (the [`AssignmentDelta`] dirty-cluster
+//! machinery reused verbatim as the wire payload), and self-contained
+//! row-range grants cut with [`ShardedPattern::balanced`] so every
+//! worker gets (nearly) equal nnz, not equal rows.
+//!
+//! # Wire protocol
+//!
+//! Frames are length-prefixed JSON: a 4-byte big-endian `u32` byte
+//! length followed by that many bytes of UTF-8 JSON ([`write_frame`] /
+//! [`read_frame`]).  `f32` payloads survive the text round-trip
+//! bit-exactly: every finite `f32` widens to `f64` losslessly, the
+//! serializer prints the shortest round-trip decimal, and the parser
+//! reads it back to the identical `f64`.  Messages are type-tagged
+//! objects:
+//!
+//! | type       | direction | payload |
+//! |------------|-----------|---------|
+//! | `join`     | worker→coord | `worker`, `protocol` |
+//! | `hello`    | coord→worker | `worker`, `protocol`, `backend`, `n`, `d` |
+//! | `spec`     | coord→worker | `stream`, `epoch`, `assignment_epoch`, optional `layer`/`head`, declarative `spec` (compiled worker-side) |
+//! | `delta`    | coord→worker | `layer`, `head`, `update` ([`RouteUpdate`]) |
+//! | `evict`    | coord→worker | `stream` (retirement GC reaches workers too) |
+//! | `grant`    | coord→worker | `task`, `stream`, `epoch`, `rows [lo,hi)`, full `q`/`k`/`v` |
+//! | `result`   | worker→coord | `task`, `worker`, `stream`, `epoch`, `rows`, `out` |
+//! | `nack`     | worker→coord | `task`, `worker`, `stream`, `epoch` (unknown stream / stale install) |
+//! | `error`    | worker→coord | `task`, `worker`, `stream`, `epoch`, `msg` (kernel failure — worker is retired) |
+//! | `shutdown` | coord→worker | — |
+//!
+//! # State machine
+//!
+//! ```text
+//!  spawn ──▶ Joining ──join──▶ Ready ──grant──▶ Busy
+//!                               ▲  ▲              │result/nack/timeout
+//!                               │  └──────────────┘
+//!                            rejoin
+//!                               │
+//!            Crashed ◀──EOF/kill/crash-fault── (any state)
+//! ```
+//!
+//! Exactly-once completion is enforced coordinator-side: every grant
+//! carries a fresh task id, and a result is accepted only while its task
+//! id is outstanding.  A crashed worker's row-range is re-granted to
+//! survivors (or computed inline when none remain); the superseded
+//! grant's late result — and any duplicated or delayed copy — fails the
+//! task-id match and is counted in
+//! [`CoordStats::rejected_stale_epoch`] / [`CoordStats::rejected_duplicate`]
+//! instead of being applied.  At rest the grant ledger conserves:
+//! `grants == accepted + superseded + voided` ([`CoordStats::conserved`]).
+//!
+//! The [`Transport`] trait keeps the state machine pluggable: the same
+//! coordinator runs over [`ProcessTransport`] (real `rtx worker` child
+//! processes over stdin/stdout) and [`SimTransport`] (in-memory workers
+//! with deterministic drop / duplicate / delay / crash-on-Nth-message
+//! fault injection — the substrate `tests/coordinator.rs` drives its
+//! model-based suite on).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::backend::{self, Backend};
+use super::compiled::{CompiledPattern, MemoryBudget};
+use super::decode::{
+    EpochCache, EpochCacheStats, MemberCache, RegenStats, RouteSlot, RouteUpdate, RoutingSession,
+};
+use super::engine::{CacheStats, ShardedPattern};
+use super::spec::AttentionSpec;
+use crate::util::json::Json;
+
+/// Wire protocol version stamped into `join`/`hello`; a mismatch is a
+/// protocol error on either side.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard cap on one frame's payload (a corrupted length prefix must not
+/// allocate unbounded memory).
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// The reserved stream id of the shared static (local-window) pattern.
+pub const STATIC_STREAM: u64 = 0;
+
+/// FNV-1a offset basis — the initial accumulator for [`fold_digest`].
+pub const DIGEST_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold a slice of attention outputs into a running FNV-1a digest over
+/// the raw `f32` bit patterns (little-endian byte order).  The serve
+/// loop threads every sweep's output through this, so two runs that
+/// produced bit-identical attention — in-process or coordinated across
+/// OS workers — report the same `output_digest`.
+pub fn fold_digest(acc: u64, xs: &[f32]) -> u64 {
+    let mut h = acc;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+// ------------------------------------------------------------ frame codec
+
+/// Write one length-prefixed JSON frame: 4-byte big-endian byte length,
+/// then the UTF-8 serialization.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> io::Result<()> {
+    let text = msg.to_string();
+    let len = u32::try_from(text.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame exceeds u32 length"))?;
+    if len as usize > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME_BYTES"));
+    }
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(text.as_bytes())
+}
+
+/// Read one length-prefixed JSON frame.  `Ok(None)` is a clean EOF at a
+/// frame boundary; EOF mid-frame, an oversized length prefix, or
+/// malformed JSON are errors.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Json>> {
+    let mut len_bytes = [0u8; 4];
+    // read the first byte separately so EOF at a boundary is clean
+    loop {
+        match r.read(&mut len_bytes[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    r.read_exact(&mut len_bytes[1..])?;
+    let len = u32::from_be_bytes(len_bytes) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "frame exceeds MAX_FRAME_BYTES"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not UTF-8: {e}")))?;
+    Json::parse(text)
+        .map(Some)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("frame not JSON: {e}")))
+}
+
+// -------------------------------------------------------- message helpers
+
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn jnum(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn floats_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(f64::from(x))).collect())
+}
+
+fn floats_from_json(v: &Json) -> Result<Vec<f32>> {
+    v.as_arr()
+        .context("expected a JSON array of numbers")?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32).context("expected a number"))
+        .collect()
+}
+
+fn field<'a>(msg: &'a Json, key: &str) -> Result<&'a Json> {
+    msg.get(key).with_context(|| format!("message missing field '{key}'"))
+}
+
+fn field_u64(msg: &Json, key: &str) -> Result<u64> {
+    let v = field(msg, key)?;
+    let i = v.as_i64().with_context(|| format!("field '{key}' is not an integer"))?;
+    u64::try_from(i).map_err(|_| anyhow!("field '{key}' is negative"))
+}
+
+fn field_usize(msg: &Json, key: &str) -> Result<usize> {
+    field(msg, key)?.as_usize().with_context(|| format!("field '{key}' is not a usize"))
+}
+
+fn field_str<'a>(msg: &'a Json, key: &str) -> Result<&'a str> {
+    field(msg, key)?.as_str().with_context(|| format!("field '{key}' is not a string"))
+}
+
+fn msg_type(msg: &Json) -> Result<&str> {
+    field_str(msg, "type")
+}
+
+fn field_rows(msg: &Json) -> Result<Range<usize>> {
+    let arr = field(msg, "rows")?.as_arr().context("'rows' is not an array")?;
+    if arr.len() != 2 {
+        bail!("'rows' must be [lo, hi]");
+    }
+    let lo = arr[0].as_usize().context("'rows' lo is not a usize")?;
+    let hi = arr[1].as_usize().context("'rows' hi is not a usize")?;
+    if lo > hi {
+        bail!("'rows' range is inverted ({lo} > {hi})");
+    }
+    Ok(lo..hi)
+}
+
+// -------------------------------------------------------------- transport
+
+/// A worker's identity — assigned by the coordinator at spawn and stable
+/// across crash/rejoin (the *incarnation* changes, the id does not).
+pub type WorkerId = usize;
+
+/// One delivery from the transport to the coordinator.
+#[derive(Debug, Clone)]
+pub enum TransportEvent {
+    /// A frame from a worker.
+    Message(WorkerId, Json),
+    /// The worker's channel died (process exit, EOF, injected crash).
+    Crashed(WorkerId),
+}
+
+/// The pluggable channel layer under the [`Coordinator`] state machine.
+///
+/// Implementations deliver [`TransportEvent`]s in a deterministic order
+/// for a fixed input sequence; `send` to a crashed worker is a silent
+/// dead-letter (the crash surfaces through `poll`, never through
+/// `send`).
+pub trait Transport {
+    /// Start (or restart) the worker with this id; a `join` message is
+    /// expected to arrive via `poll` once it is up.
+    fn spawn(&mut self, worker: WorkerId) -> Result<()>;
+    /// Forcibly terminate a worker.
+    fn kill(&mut self, worker: WorkerId);
+    /// Deliver one frame to a worker (dead-letters if it is down).
+    fn send(&mut self, worker: WorkerId, msg: &Json) -> Result<()>;
+    /// Next event, if any.  `wait` allows blocking (bounded by the
+    /// implementation's timeout); `Ok(None)` means "nothing arrived" —
+    /// the coordinator treats in-flight grants as lost and re-grants.
+    fn poll(&mut self, wait: bool) -> Result<Option<TransportEvent>>;
+}
+
+// ------------------------------------------------------------ worker node
+
+struct WorkerStream {
+    /// `Some((layer, head))` for routed streams (delta targets); `None`
+    /// for the static stream.
+    plan: Option<(usize, usize)>,
+    epoch: u64,
+    pattern: Arc<CompiledPattern>,
+}
+
+/// The worker half of the protocol: compiles installed specs, applies
+/// epoch-bump deltas, and executes row-range grants with its configured
+/// backend.  [`run_worker`] wraps it in the stdin/stdout frame loop for
+/// real `rtx worker` processes; [`SimTransport`] drives the same struct
+/// in-memory, so both transports execute identical logic.
+pub struct WorkerNode {
+    id: WorkerId,
+    n: usize,
+    d: usize,
+    backend: Option<Arc<dyn Backend>>,
+    streams: HashMap<u64, WorkerStream>,
+}
+
+impl WorkerNode {
+    /// A fresh (pre-`hello`) worker.
+    pub fn new(id: WorkerId) -> WorkerNode {
+        WorkerNode { id, n: 0, d: 0, backend: None, streams: HashMap::new() }
+    }
+
+    /// The `join` frame this worker announces itself with.
+    pub fn join_msg(&self) -> Json {
+        jobj(vec![
+            ("type", Json::Str("join".to_string())),
+            ("worker", jnum(self.id as u64)),
+            ("protocol", jnum(PROTOCOL_VERSION)),
+        ])
+    }
+
+    /// Installed streams (test observability).
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Process one coordinator frame; returns the replies to send back
+    /// and whether the worker should shut down.  `Err` means a protocol
+    /// violation — a real worker exits (and the coordinator sees the
+    /// crash), a simulated one fails the test loudly.
+    pub fn handle(&mut self, msg: &Json) -> Result<(Vec<Json>, bool)> {
+        match msg_type(msg)? {
+            "hello" => {
+                let protocol = field_u64(msg, "protocol")?;
+                if protocol != PROTOCOL_VERSION {
+                    bail!("protocol mismatch: coordinator {protocol}, worker {PROTOCOL_VERSION}");
+                }
+                self.n = field_usize(msg, "n")?;
+                self.d = field_usize(msg, "d")?;
+                let name = field_str(msg, "backend")?;
+                self.backend = Some(
+                    backend::lookup(name)
+                        .with_context(|| format!("worker {}: unknown backend '{name}'", self.id))?,
+                );
+                Ok((vec![], false))
+            }
+            "spec" => {
+                let stream = field_u64(msg, "stream")?;
+                let epoch = field_u64(msg, "epoch")?;
+                let plan = match (msg.get("layer"), msg.get("head")) {
+                    (Some(l), Some(h)) => Some((
+                        l.as_usize().context("'layer' is not a usize")?,
+                        h.as_usize().context("'head' is not a usize")?,
+                    )),
+                    _ => None,
+                };
+                let spec = AttentionSpec::from_json(field(msg, "spec")?)
+                    .context("spec install failed to parse")?;
+                let pattern = Arc::new(spec.compile(self.n));
+                self.streams.insert(stream, WorkerStream { plan, epoch, pattern });
+                Ok((vec![], false))
+            }
+            "delta" => {
+                let layer = field_usize(msg, "layer")?;
+                let head = field_usize(msg, "head")?;
+                let upd = RouteUpdate::from_json(field(msg, "update")?)?;
+                if upd.delta.changed() {
+                    // assignments moved: installed compiles for this
+                    // (layer, head) are stale; the coordinator re-ships
+                    // specs before granting at the new assignment epoch
+                    self.streams.retain(|_, s| s.plan != Some((layer, head)));
+                } else {
+                    // centroid drift without movement: O(1) epoch bump,
+                    // the compile stays servable (the EpochCache
+                    // unchanged-epoch contract, applied worker-side)
+                    for s in self.streams.values_mut() {
+                        if s.plan == Some((layer, head)) {
+                            s.epoch = upd.epoch;
+                        }
+                    }
+                }
+                Ok((vec![], false))
+            }
+            "evict" => {
+                let stream = field_u64(msg, "stream")?;
+                self.streams.remove(&stream);
+                Ok((vec![], false))
+            }
+            "grant" => {
+                let task = field_u64(msg, "task")?;
+                let stream = field_u64(msg, "stream")?;
+                let epoch = field_u64(msg, "epoch")?;
+                let rows = field_rows(msg)?;
+                let echo = |kind: &str| {
+                    jobj(vec![
+                        ("type", Json::Str(kind.to_string())),
+                        ("task", jnum(task)),
+                        ("worker", jnum(self.id as u64)),
+                        ("stream", jnum(stream)),
+                        ("epoch", jnum(epoch)),
+                    ])
+                };
+                // a grant before hello (lost handshake frame) is
+                // recoverable — nack it rather than dying
+                let Some(backend) = self.backend.as_ref() else {
+                    return Ok((vec![echo("nack")], false));
+                };
+                let live = self
+                    .streams
+                    .get(&stream)
+                    .is_some_and(|s| s.epoch == epoch && s.pattern.n() == self.n);
+                if !live || rows.end > self.n {
+                    // unknown stream or stale install (e.g. a dropped
+                    // spec/delta frame): ask the coordinator to re-ship
+                    return Ok((vec![echo("nack")], false));
+                }
+                let q = floats_from_json(field(msg, "q")?)?;
+                let k = floats_from_json(field(msg, "k")?)?;
+                let v = floats_from_json(field(msg, "v")?)?;
+                let pattern = Arc::clone(&self.streams[&stream].pattern);
+                let mut out = vec![0f32; rows.len() * self.d];
+                match backend.attention_rows(&q, &k, &v, self.d, &pattern, rows.clone(), &mut out) {
+                    Ok(()) => {
+                        let mut reply = echo("result").to_map();
+                        reply.insert(
+                            "rows".to_string(),
+                            Json::Arr(vec![jnum(rows.start as u64), jnum(rows.end as u64)]),
+                        );
+                        reply.insert("out".to_string(), floats_to_json(&out));
+                        Ok((vec![Json::Obj(reply.into_iter().collect())], false))
+                    }
+                    Err(e) => {
+                        let mut reply = echo("error").to_map();
+                        reply.insert("msg".to_string(), Json::Str(format!("{e:#}")));
+                        Ok((vec![Json::Obj(reply.into_iter().collect())], false))
+                    }
+                }
+            }
+            "shutdown" => Ok((vec![], true)),
+            other => bail!("worker {}: unknown message type '{other}'", self.id),
+        }
+    }
+}
+
+/// The `rtx worker` main loop: announce `join`, then serve frames from
+/// stdin until `shutdown` or EOF.  Never meant to be invoked by hand —
+/// the coordinator spawns these with pipes on both ends.
+pub fn run_worker(id: WorkerId) -> Result<()> {
+    let mut node = WorkerNode::new(id);
+    let stdin = io::stdin();
+    let mut input = io::BufReader::new(stdin.lock());
+    let stdout = io::stdout();
+    let mut output = io::BufWriter::new(stdout.lock());
+    write_frame(&mut output, &node.join_msg())?;
+    output.flush()?;
+    while let Some(msg) = read_frame(&mut input)? {
+        let (replies, quit) = node.handle(&msg)?;
+        for reply in &replies {
+            write_frame(&mut output, reply)?;
+        }
+        output.flush()?;
+        if quit {
+            break;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------- sim transport
+
+/// Counters for the faults a [`SimTransport`] actually injected.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Coordinator→worker frames silently dropped.
+    pub dropped: u64,
+    /// Worker→coordinator replies delivered twice.
+    pub duplicated: u64,
+    /// Worker→coordinator replies re-ordered behind the queue.
+    pub delayed: u64,
+    /// Workers killed by a `crash_on_nth_message` trigger.
+    pub forced_crashes: u64,
+}
+
+struct SimNode {
+    node: WorkerNode,
+    alive: bool,
+}
+
+/// In-memory [`Transport`]: every worker is a [`WorkerNode`] executed
+/// synchronously in-process, with deterministic fault injection.  All
+/// faults are *explicitly scheduled* (by the seeded test harness), so a
+/// failing op sequence replays bit-for-bit from its seed:
+///
+/// - [`SimTransport::inject_drop_next`] — drop the next frame *to* a worker
+/// - [`SimTransport::inject_duplicate_next`] — deliver a worker's next reply twice
+/// - [`SimTransport::inject_delay_next`] — hold a worker's next reply until the
+///   event queue drains (re-ordering it behind later traffic)
+/// - [`SimTransport::crash_on_nth_message`] — kill a worker the moment its
+///   N-th subsequent frame arrives (before processing it)
+#[derive(Default)]
+pub struct SimTransport {
+    nodes: BTreeMap<WorkerId, SimNode>,
+    events: VecDeque<TransportEvent>,
+    delayed: VecDeque<TransportEvent>,
+    drop_next: BTreeSet<WorkerId>,
+    duplicate_next: BTreeSet<WorkerId>,
+    delay_next: BTreeSet<WorkerId>,
+    crash_after: BTreeMap<WorkerId, u64>,
+    faults: FaultCounters,
+}
+
+impl SimTransport {
+    /// An empty transport with no workers and no scheduled faults.
+    pub fn new() -> SimTransport {
+        SimTransport::default()
+    }
+
+    /// Drop the next coordinator→worker frame addressed to `worker`.
+    pub fn inject_drop_next(&mut self, worker: WorkerId) {
+        self.drop_next.insert(worker);
+    }
+
+    /// Deliver `worker`'s next reply twice.
+    pub fn inject_duplicate_next(&mut self, worker: WorkerId) {
+        self.duplicate_next.insert(worker);
+    }
+
+    /// Re-order `worker`'s next reply behind everything already queued
+    /// (released only when the live queue runs dry).
+    pub fn inject_delay_next(&mut self, worker: WorkerId) {
+        self.delay_next.insert(worker);
+    }
+
+    /// Kill `worker` the moment its `n`-th subsequent inbound frame
+    /// arrives (`n >= 1`), before the frame is processed.
+    pub fn crash_on_nth_message(&mut self, worker: WorkerId, n: u64) {
+        self.crash_after.insert(worker, n.max(1));
+    }
+
+    /// What faults fired so far.
+    pub fn faults(&self) -> FaultCounters {
+        self.faults
+    }
+
+    /// Is this worker's simulated process up?
+    pub fn is_alive(&self, worker: WorkerId) -> bool {
+        self.nodes.get(&worker).is_some_and(|s| s.alive)
+    }
+}
+
+impl Transport for SimTransport {
+    fn spawn(&mut self, worker: WorkerId) -> Result<()> {
+        let node = WorkerNode::new(worker);
+        self.events.push_back(TransportEvent::Message(worker, node.join_msg()));
+        self.nodes.insert(worker, SimNode { node, alive: true });
+        Ok(())
+    }
+
+    fn kill(&mut self, worker: WorkerId) {
+        if let Some(s) = self.nodes.get_mut(&worker) {
+            if s.alive {
+                s.alive = false;
+                self.events.push_back(TransportEvent::Crashed(worker));
+            }
+        }
+    }
+
+    fn send(&mut self, worker: WorkerId, msg: &Json) -> Result<()> {
+        let Some(slot) = self.nodes.get_mut(&worker) else { return Ok(()) };
+        if !slot.alive {
+            return Ok(()); // dead letter
+        }
+        if self.drop_next.remove(&worker) {
+            self.faults.dropped += 1;
+            return Ok(());
+        }
+        if let Some(left) = self.crash_after.get_mut(&worker) {
+            *left -= 1;
+            if *left == 0 {
+                self.crash_after.remove(&worker);
+                slot.alive = false;
+                self.faults.forced_crashes += 1;
+                self.events.push_back(TransportEvent::Crashed(worker));
+                return Ok(());
+            }
+        }
+        // mirror real-process semantics: a worker whose handler errors
+        // dies (run_worker propagates the error and exits; the reader
+        // thread then reports EOF as a crash)
+        let replies = match slot.node.handle(msg) {
+            Ok((replies, _)) => replies,
+            Err(_) => {
+                slot.alive = false;
+                self.events.push_back(TransportEvent::Crashed(worker));
+                return Ok(());
+            }
+        };
+        for reply in replies {
+            let ev = TransportEvent::Message(worker, reply);
+            if self.delay_next.remove(&worker) {
+                self.faults.delayed += 1;
+                self.delayed.push_back(ev);
+            } else {
+                if self.duplicate_next.remove(&worker) {
+                    self.faults.duplicated += 1;
+                    self.events.push_back(ev.clone());
+                }
+                self.events.push_back(ev);
+            }
+        }
+        Ok(())
+    }
+
+    fn poll(&mut self, _wait: bool) -> Result<Option<TransportEvent>> {
+        if self.events.is_empty() && !self.delayed.is_empty() {
+            self.events.append(&mut self.delayed);
+        }
+        Ok(self.events.pop_front())
+    }
+}
+
+// ------------------------------------------------------ process transport
+
+/// Real child-process [`Transport`]: spawns `<program> worker --id N`
+/// with piped stdin/stdout, one reader thread per child feeding a shared
+/// event channel.  EOF or a read error on a child's stdout surfaces as
+/// [`TransportEvent::Crashed`]; `send` never reports worker death
+/// directly (a broken pipe dead-letters, the crash arrives via `poll`).
+pub struct ProcessTransport {
+    program: PathBuf,
+    poll_timeout: Duration,
+    children: HashMap<WorkerId, Child>,
+    tx: mpsc::Sender<TransportEvent>,
+    rx: mpsc::Receiver<TransportEvent>,
+}
+
+impl ProcessTransport {
+    /// A transport spawning workers from an explicit binary (tests use
+    /// `env!("CARGO_BIN_EXE_rtx")`).
+    pub fn new(program: impl Into<PathBuf>) -> ProcessTransport {
+        let (tx, rx) = mpsc::channel();
+        ProcessTransport {
+            program: program.into(),
+            poll_timeout: Duration::from_secs(10),
+            children: HashMap::new(),
+            tx,
+            rx,
+        }
+    }
+
+    /// A transport re-spawning the currently running binary — what
+    /// `rtx serve --workers N` uses.
+    pub fn current_exe() -> Result<ProcessTransport> {
+        Ok(ProcessTransport::new(
+            std::env::current_exe().context("cannot locate the running executable")?,
+        ))
+    }
+
+    /// Bound on one blocking [`Transport::poll`] (default 10 s); after
+    /// it, the coordinator presumes in-flight grants lost and re-grants.
+    pub fn set_poll_timeout(&mut self, timeout: Duration) {
+        self.poll_timeout = timeout;
+    }
+}
+
+impl Transport for ProcessTransport {
+    fn spawn(&mut self, worker: WorkerId) -> Result<()> {
+        let mut child = Command::new(&self.program)
+            .arg("worker")
+            .arg("--id")
+            .arg(worker.to_string())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker {worker} from {:?}", self.program))?;
+        let stdout = child.stdout.take().context("worker stdout not piped")?;
+        let tx = self.tx.clone();
+        std::thread::spawn(move || {
+            let mut reader = io::BufReader::new(stdout);
+            loop {
+                match read_frame(&mut reader) {
+                    Ok(Some(msg)) => {
+                        if tx.send(TransportEvent::Message(worker, msg)).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(None) | Err(_) => {
+                        let _ = tx.send(TransportEvent::Crashed(worker));
+                        break;
+                    }
+                }
+            }
+        });
+        if let Some(old) = self.children.insert(worker, child) {
+            drop(old); // a rejoin replaces the dead incarnation's handle
+        }
+        Ok(())
+    }
+
+    fn kill(&mut self, worker: WorkerId) {
+        if let Some(mut child) = self.children.remove(&worker) {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    fn send(&mut self, worker: WorkerId, msg: &Json) -> Result<()> {
+        let Some(child) = self.children.get_mut(&worker) else { return Ok(()) };
+        let Some(stdin) = child.stdin.as_mut() else { return Ok(()) };
+        // a write into a dying child dead-letters; the reader thread
+        // reports the crash through poll
+        if write_frame(stdin, msg).and_then(|()| stdin.flush()).is_err() {
+            return Ok(());
+        }
+        Ok(())
+    }
+
+    fn poll(&mut self, wait: bool) -> Result<Option<TransportEvent>> {
+        if wait {
+            Ok(self.rx.recv_timeout(self.poll_timeout).ok())
+        } else {
+            Ok(self.rx.try_recv().ok())
+        }
+    }
+}
+
+impl Drop for ProcessTransport {
+    fn drop(&mut self) {
+        for (_, mut child) in self.children.drain() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+// ------------------------------------------------------------ coordinator
+
+/// Shape + head-plan parameters for a [`Coordinator`] (the same plan the
+/// serve loop runs: even heads static local window, odd heads
+/// local ∪ routed).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Sequence length of every grant.
+    pub n: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Transformer layers.
+    pub layers: usize,
+    /// Heads per layer.
+    pub heads: usize,
+    /// Local attention window (the static spec and the routed unions).
+    pub window: usize,
+    /// Routing clusters per (layer, head).
+    pub clusters: usize,
+    /// Top-w membership per cluster.
+    pub top_w: usize,
+    /// Concurrent request slots (routed stream ids span
+    /// `layers × heads × capacity`).
+    pub capacity: usize,
+    /// Routing k-means seed.
+    pub seed: u64,
+    /// Registered backend name — the coordinator's inline fallback and
+    /// every worker (via `hello`) run the same kernel, so outputs are
+    /// bit-identical regardless of who computed which rows.
+    pub backend: String,
+    /// How many times one row-range may be re-granted before the
+    /// coordinator computes it inline (bounds fault-storm livelock).
+    pub max_regrants: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n: 128,
+            d: 32,
+            layers: 2,
+            heads: 4,
+            window: 16,
+            clusters: 8,
+            top_w: 16,
+            capacity: 4,
+            seed: 0,
+            backend: "reference".to_string(),
+            max_regrants: 8,
+        }
+    }
+}
+
+/// Coordinator-side lifecycle state of one worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Spawned; its `join` has not been processed yet.
+    Joining,
+    /// Installed and idle — grantable.
+    Ready,
+    /// Holds an outstanding grant.
+    Busy,
+    /// Channel dead (crash, kill, or kernel error); may rejoin.
+    Crashed,
+}
+
+/// The coordinator's grant/membership ledger.  At rest (no outstanding
+/// grants) the conservation law holds:
+/// `grants == accepted + superseded + voided`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoordStats {
+    /// Join messages processed (first joins and rejoins alike).
+    pub joins: u64,
+    /// Crashed workers re-spawned.
+    pub rejoins: u64,
+    /// Workers observed crashed (events, kills, kernel errors).
+    pub crashes: u64,
+    /// Row-range grants issued (re-grants included).
+    pub grants: u64,
+    /// Grants whose result was accepted (exactly one per completed range).
+    pub accepted: u64,
+    /// Grants abandoned for a re-grant (lost reply, nack) — their late
+    /// results are rejected by task id.
+    pub superseded: u64,
+    /// Grants voided because their worker crashed.
+    pub voided: u64,
+    /// Re-issues of a row-range (each one supersedes or follows a void).
+    pub regrants: u64,
+    /// Results/nacks rejected because their stream epoch is stale.
+    pub rejected_stale_epoch: u64,
+    /// Results/nacks rejected as duplicates at the current epoch.
+    pub rejected_duplicate: u64,
+    /// Worker nacks received (missing/stale install → re-ship + re-grant).
+    pub nacks: u64,
+    /// Spec install broadcasts (not per-worker sends).
+    pub spec_installs: u64,
+    /// [`RouteUpdate`] delta broadcasts.
+    pub delta_broadcasts: u64,
+    /// Stream eviction broadcasts (retirement GC).
+    pub evict_broadcasts: u64,
+    /// Output rows computed by workers.
+    pub worker_rows: u64,
+    /// Output rows computed inline by the coordinator (no workers alive,
+    /// or a range exceeded `max_regrants`).
+    pub inline_rows: u64,
+}
+
+impl CoordStats {
+    /// The grant-ledger conservation law; `true` whenever no grant is
+    /// outstanding (i.e. between [`Coordinator`] calls).
+    pub fn conserved(&self) -> bool {
+        self.grants == self.accepted + self.superseded + self.voided
+    }
+}
+
+struct StreamSpec {
+    plan: Option<(usize, usize)>,
+    epoch: u64,
+    assignment_epoch: u64,
+    spec: Json,
+}
+
+struct GrantRec {
+    worker: WorkerId,
+    rows: Range<usize>,
+    regrants: u64,
+}
+
+/// The multi-process shard coordinator: owns all routing state and
+/// splits each attention call's rows across worker processes via a
+/// pluggable [`Transport`].  See the module docs for the protocol and
+/// state machine; `tests/coordinator.rs` pins its behavior against a
+/// single-process reference model under fault injection.
+pub struct Coordinator<T: Transport> {
+    cfg: CoordinatorConfig,
+    transport: T,
+    backend: Arc<dyn Backend>,
+    session: RoutingSession,
+    cache: EpochCache,
+    budget: MemoryBudget,
+    members: Vec<MemberCache>,
+    regen: RegenStats,
+    local: AttentionSpec,
+    static_pattern: Arc<CompiledPattern>,
+    workers: BTreeMap<WorkerId, WorkerState>,
+    next_worker: WorkerId,
+    next_task: u64,
+    specs: BTreeMap<u64, StreamSpec>,
+    stats: CoordStats,
+}
+
+impl<T: Transport> Coordinator<T> {
+    /// Build the coordinator: validates the config, resolves the
+    /// backend, pins the static pattern, and registers the static
+    /// stream.  Spawn workers separately with
+    /// [`Coordinator::spawn_worker`]; with none, every call falls back
+    /// to bit-identical inline execution.
+    pub fn new(cfg: CoordinatorConfig, transport: T) -> Result<Coordinator<T>> {
+        if cfg.n == 0 || cfg.d == 0 {
+            bail!("coordinator requires n >= 1 and d >= 1 (got n = {}, d = {})", cfg.n, cfg.d);
+        }
+        if cfg.layers == 0 || cfg.heads == 0 || cfg.capacity == 0 {
+            bail!(
+                "coordinator requires layers, heads, capacity >= 1 (got {}, {}, {})",
+                cfg.layers,
+                cfg.heads,
+                cfg.capacity
+            );
+        }
+        if cfg.window == 0 || cfg.clusters == 0 || cfg.top_w == 0 {
+            bail!(
+                "coordinator requires window, clusters, top_w >= 1 (got {}, {}, {})",
+                cfg.window,
+                cfg.clusters,
+                cfg.top_w
+            );
+        }
+        let backend = backend::lookup(&cfg.backend).with_context(|| {
+            format!(
+                "unknown attention backend '{}' (registered: {})",
+                cfg.backend,
+                backend::names().join(", ")
+            )
+        })?;
+        let session =
+            RoutingSession::new(cfg.layers, cfg.heads, cfg.clusters, cfg.d, 0.5, cfg.seed)?;
+        let budget = MemoryBudget::unbounded();
+        let mut cache = EpochCache::with_budget(budget.clone());
+        let local = AttentionSpec::local(cfg.window)?;
+        let static_pattern = cache.get_static(&local, cfg.n);
+        let members = (0..cfg.layers * cfg.heads * cfg.capacity)
+            .map(|_| MemberCache::with_budget(budget.clone()))
+            .collect();
+        let mut specs = BTreeMap::new();
+        specs.insert(
+            STATIC_STREAM,
+            StreamSpec { plan: None, epoch: 0, assignment_epoch: 0, spec: local.to_json() },
+        );
+        Ok(Coordinator {
+            cfg,
+            transport,
+            backend,
+            session,
+            cache,
+            budget,
+            members,
+            regen: RegenStats::default(),
+            local,
+            static_pattern,
+            workers: BTreeMap::new(),
+            next_worker: 0,
+            next_task: 0,
+            specs,
+            stats: CoordStats::default(),
+        })
+    }
+
+    // ----------------------------------------------------- worker control
+
+    /// Spawn a fresh worker; returns its id.  The worker becomes
+    /// grantable once its `join` is processed (next [`Coordinator::pump`]
+    /// or attention call).
+    pub fn spawn_worker(&mut self) -> Result<WorkerId> {
+        let id = self.next_worker;
+        self.next_worker += 1;
+        self.transport.spawn(id)?;
+        self.workers.insert(id, WorkerState::Joining);
+        Ok(id)
+    }
+
+    /// Forcibly kill a worker (test op / administrative drain); its
+    /// state moves to [`WorkerState::Crashed`] immediately.
+    pub fn kill_worker(&mut self, worker: WorkerId) {
+        if let Some(state) = self.workers.get_mut(&worker) {
+            if *state != WorkerState::Crashed {
+                *state = WorkerState::Crashed;
+                self.stats.crashes += 1;
+            }
+        }
+        self.transport.kill(worker);
+    }
+
+    /// Re-spawn a crashed worker under its old id; it re-joins with a
+    /// full install (all live stream specs at their current epochs).
+    pub fn rejoin_worker(&mut self, worker: WorkerId) -> Result<()> {
+        match self.workers.get(&worker) {
+            Some(WorkerState::Crashed) => {}
+            Some(state) => bail!("worker {worker} is {state:?}, not Crashed — cannot rejoin"),
+            None => bail!("worker {worker} was never spawned"),
+        }
+        self.transport.spawn(worker)?;
+        self.workers.insert(worker, WorkerState::Joining);
+        self.stats.rejoins += 1;
+        Ok(())
+    }
+
+    /// Drain pending transport events (joins, crash notices, late
+    /// replies) without blocking.
+    pub fn pump(&mut self) -> Result<()> {
+        while let Some(ev) = self.transport.poll(false)? {
+            match ev {
+                TransportEvent::Message(w, msg) => match msg_type(&msg)? {
+                    "join" => self.handle_join(w)?,
+                    "result" | "nack" | "error" => self.classify_reject(&msg),
+                    other => bail!("unexpected idle message type '{other}' from worker {w}"),
+                },
+                TransportEvent::Crashed(w) => self.note_crash(w),
+            }
+        }
+        Ok(())
+    }
+
+    fn note_crash(&mut self, worker: WorkerId) {
+        if let Some(state) = self.workers.get_mut(&worker) {
+            if *state != WorkerState::Crashed {
+                *state = WorkerState::Crashed;
+                self.stats.crashes += 1;
+            }
+        }
+    }
+
+    fn handle_join(&mut self, worker: WorkerId) -> Result<()> {
+        if !self.workers.contains_key(&worker) {
+            return Ok(()); // join from an id we never spawned: ignore
+        }
+        let hello = jobj(vec![
+            ("type", Json::Str("hello".to_string())),
+            ("worker", jnum(worker as u64)),
+            ("protocol", jnum(PROTOCOL_VERSION)),
+            ("backend", Json::Str(self.cfg.backend.clone())),
+            ("n", jnum(self.cfg.n as u64)),
+            ("d", jnum(self.cfg.d as u64)),
+        ]);
+        self.transport.send(worker, &hello)?;
+        let installs: Vec<Json> =
+            self.specs.iter().map(|(&sid, ss)| spec_msg(sid, ss)).collect();
+        for msg in &installs {
+            self.transport.send(worker, msg)?;
+        }
+        self.workers.insert(worker, WorkerState::Ready);
+        self.stats.joins += 1;
+        Ok(())
+    }
+
+    fn broadcast(&mut self, msg: &Json) -> Result<usize> {
+        let targets: Vec<WorkerId> = self
+            .workers
+            .iter()
+            .filter(|(_, s)| matches!(s, WorkerState::Ready | WorkerState::Busy))
+            .map(|(&w, _)| w)
+            .collect();
+        for &w in &targets {
+            self.transport.send(w, msg)?;
+        }
+        Ok(targets.len())
+    }
+
+    /// A late/duplicated reply with no outstanding grant: stale epoch or
+    /// duplicate at the current epoch.
+    fn classify_reject(&mut self, msg: &Json) {
+        let stream = msg.get("stream").and_then(Json::as_usize).map(|s| s as u64);
+        let epoch = msg.get("epoch").and_then(Json::as_usize).map(|e| e as u64);
+        let current = stream.and_then(|s| self.specs.get(&s)).map(|ss| ss.epoch);
+        if epoch.is_some() && epoch == current {
+            self.stats.rejected_duplicate += 1;
+        } else {
+            self.stats.rejected_stale_epoch += 1;
+        }
+    }
+
+    // ------------------------------------------------------- routing state
+
+    fn member_index(&self, layer: usize, head: usize, slot: usize) -> usize {
+        (layer * self.cfg.heads + head) * self.cfg.capacity + slot
+    }
+
+    fn stream_id(&self, layer: usize, head: usize, slot: usize) -> u64 {
+        1 + ((layer * self.cfg.heads + head) * self.cfg.capacity + slot) as u64
+    }
+
+    /// One online k-means update for `(layer, head)` — the identical
+    /// call the in-process serve loop makes, plus the wire side:
+    /// the [`RouteUpdate`] (carrying the [`AssignmentDelta`]) is
+    /// broadcast so workers either bump stream epochs in place
+    /// (nothing moved — the O(1)-wire analogue of the epoch-cache
+    /// unchanged-epoch hit) or drop their now-stale compiles (tokens
+    /// moved — fresh specs ship lazily before the next grant).
+    ///
+    /// [`AssignmentDelta`]: crate::kmeans::AssignmentDelta
+    pub fn update(&mut self, layer: usize, head: usize, xs: &[f32], n: usize) -> Result<RouteUpdate> {
+        if layer >= self.cfg.layers || head >= self.cfg.heads {
+            bail!("update({layer}, {head}) out of range for {}x{}", self.cfg.layers, self.cfg.heads);
+        }
+        let upd = self.session.update(layer, head, xs, n);
+        if upd.delta.assigned > 0 {
+            let msg = jobj(vec![
+                ("type", Json::Str("delta".to_string())),
+                ("layer", jnum(layer as u64)),
+                ("head", jnum(head as u64)),
+                ("update", upd.to_json()),
+            ]);
+            self.broadcast(&msg)?;
+            self.stats.delta_broadcasts += 1;
+            for slot in 0..self.cfg.capacity {
+                let sid = self.stream_id(layer, head, slot);
+                if upd.delta.changed() {
+                    // stale everywhere; re-shipped on next routed call
+                    self.specs.remove(&sid);
+                } else if let Some(ss) = self.specs.get_mut(&sid) {
+                    ss.epoch = upd.epoch;
+                }
+            }
+        }
+        Ok(upd)
+    }
+
+    /// Step-protect cache entries the coming lookups touch (identical to
+    /// the in-process loop's [`EpochCache::mark_step`]).
+    pub fn mark_step(&mut self) {
+        self.cache.mark_step();
+    }
+
+    /// Retirement GC for one request slot: forget its routed streams on
+    /// every worker, and fold + reset its [`MemberCache`]s.  The
+    /// [`EpochCache`] half happens where it always has — the serve
+    /// scheduler's `finish_step(&mut cache)` (via
+    /// [`Coordinator::cache_mut`]) or [`Coordinator::evict_slot`].
+    pub fn retire_slot(&mut self, slot: usize) -> Result<()> {
+        for layer in 0..self.cfg.layers {
+            for head in 0..self.cfg.heads {
+                let sid = self.stream_id(layer, head, slot);
+                if self.specs.remove(&sid).is_some() {
+                    let msg = jobj(vec![
+                        ("type", Json::Str("evict".to_string())),
+                        ("stream", jnum(sid)),
+                    ]);
+                    self.broadcast(&msg)?;
+                    self.stats.evict_broadcasts += 1;
+                }
+                let idx = self.member_index(layer, head, slot);
+                let budget = self.budget.clone();
+                let mc = &mut self.members[idx];
+                self.regen.merge(mc.stats());
+                *mc = MemberCache::with_budget(budget);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict one routed `(layer, head, slot)` compile from the epoch
+    /// cache *and* the wire (workers drop the stream too).  Returns the
+    /// heap bytes freed, as [`EpochCache::evict_slot`] does.
+    pub fn evict_slot(&mut self, layer: usize, head: usize, slot: usize) -> Result<Option<usize>> {
+        let bytes = self.cache.evict_slot(RouteSlot { layer, head, seq: slot });
+        let sid = self.stream_id(layer, head, slot);
+        if self.specs.remove(&sid).is_some() {
+            let msg =
+                jobj(vec![("type", Json::Str("evict".to_string())), ("stream", jnum(sid))]);
+            self.broadcast(&msg)?;
+            self.stats.evict_broadcasts += 1;
+        }
+        Ok(bytes)
+    }
+
+    // ---------------------------------------------------------- attention
+
+    /// Shared static-pattern attention for one sequence, split across
+    /// workers; returns the output and the pattern's MAC cost.
+    pub fn static_attention(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let pattern = Arc::clone(&self.static_pattern);
+        let cost = pattern.cost(self.cfg.d);
+        let out = self.execute(STATIC_STREAM, &pattern, 0, q, k, v)?;
+        Ok((out, cost))
+    }
+
+    /// Routed attention for one `(layer, head, slot)`: serves the
+    /// compile through the epoch cache exactly as the in-process loop
+    /// does (assignment-epoch keyed, dirty-cluster-only membership
+    /// regeneration), ships the spec to workers only when its stamp
+    /// moved, then splits the rows.  Returns the output and the
+    /// pattern's MAC cost.
+    #[allow(clippy::too_many_arguments)]
+    pub fn routed_attention(
+        &mut self,
+        layer: usize,
+        head: usize,
+        slot: usize,
+        xs: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<(Vec<f32>, u64)> {
+        if layer >= self.cfg.layers || head >= self.cfg.heads || slot >= self.cfg.capacity {
+            bail!(
+                "routed_attention({layer}, {head}, {slot}) out of range for {}x{}x{}",
+                self.cfg.layers,
+                self.cfg.heads,
+                self.cfg.capacity
+            );
+        }
+        let epoch = self.session.epoch(layer, head);
+        let ae = self.session.assignment_epoch(layer, head);
+        let sid = self.stream_id(layer, head, slot);
+        let idx = self.member_index(layer, head, slot);
+        let (n, top_w) = (self.cfg.n, self.cfg.top_w);
+        let mut made: Option<AttentionSpec> = None;
+        let pattern = {
+            let Coordinator { ref mut cache, ref session, ref mut members, ref local, .. } = *self;
+            let mc = &mut members[idx];
+            cache.get_routed_at(RouteSlot { layer, head, seq: slot }, epoch, ae, n, || {
+                let spec = AttentionSpec::union(vec![
+                    local.clone(),
+                    session.routing_spec_cached(layer, head, mc, xs, n, top_w),
+                ])
+                .expect("non-empty union of valid specs");
+                made = Some(spec.clone());
+                spec
+            })
+        };
+        let need_ship = match self.specs.get_mut(&sid) {
+            Some(ss) if ss.assignment_epoch == ae => {
+                ss.epoch = epoch; // workers were bumped by the delta broadcast
+                false
+            }
+            _ => true,
+        };
+        if need_ship {
+            // the stamp can only go stale through an assignment-epoch
+            // move or a retirement, and both evict the cached compile
+            // too — so the cache miss above regenerated the spec
+            let spec = made.expect("a stale spec stamp implies a cache miss");
+            let ss = StreamSpec {
+                plan: Some((layer, head)),
+                epoch,
+                assignment_epoch: ae,
+                spec: spec.to_json(),
+            };
+            let msg = spec_msg(sid, &ss);
+            self.specs.insert(sid, ss);
+            self.broadcast(&msg)?;
+            self.stats.spec_installs += 1;
+        }
+        let cost = pattern.cost(self.cfg.d);
+        let out = self.execute(sid, &pattern, epoch, q, k, v)?;
+        Ok((out, cost))
+    }
+
+    /// The grant/collect engine: split `pattern`'s rows nnz-balanced
+    /// over ready workers, grant each shard, and collect results with
+    /// exactly-once accounting.  Crashes void grants (re-granted to
+    /// survivors), quiet transports supersede them, nacks re-ship the
+    /// spec first, and a range that exceeds `max_regrants` — or a call
+    /// with no workers at all — is computed inline with the same
+    /// backend, so the output is bit-identical no matter who computed
+    /// which rows.
+    fn execute(
+        &mut self,
+        stream: u64,
+        pattern: &Arc<CompiledPattern>,
+        epoch: u64,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (n, d) = (self.cfg.n, self.cfg.d);
+        if q.len() != n * d || k.len() != n * d || v.len() != n * d {
+            bail!(
+                "execute requires [n, d] = [{n}, {d}] q/k/v (got {}, {}, {})",
+                q.len(),
+                k.len(),
+                v.len()
+            );
+        }
+        let backend = Arc::clone(&self.backend);
+        let mut out = vec![0f32; n * d];
+        self.pump()?;
+        let ready: Vec<WorkerId> = self
+            .workers
+            .iter()
+            .filter(|(_, s)| **s == WorkerState::Ready)
+            .map(|(&w, _)| w)
+            .collect();
+        if ready.is_empty() {
+            backend.attention_rows(q, k, v, d, pattern, 0..n, &mut out)?;
+            self.stats.inline_rows += n as u64;
+            return Ok(out);
+        }
+        let sharded = ShardedPattern::balanced(Arc::clone(pattern), ready.len())?;
+        let mut pending: VecDeque<(Range<usize>, u64)> = sharded
+            .shards()
+            .iter()
+            .filter(|s| s.n_rows() > 0)
+            .map(|s| (s.rows.clone(), 0u64))
+            .collect();
+        let mut outstanding: HashMap<u64, GrantRec> = HashMap::new();
+        loop {
+            // hand every queued range to a ready worker (or inline it
+            // when it has exhausted its re-grant budget)
+            while let Some((rows, regrants)) = pending.pop_front() {
+                if regrants > self.cfg.max_regrants {
+                    backend.attention_rows(
+                        q,
+                        k,
+                        v,
+                        d,
+                        pattern,
+                        rows.clone(),
+                        &mut out[rows.start * d..rows.end * d],
+                    )?;
+                    self.stats.inline_rows += rows.len() as u64;
+                    continue;
+                }
+                let Some(w) = self.first_ready() else {
+                    pending.push_front((rows, regrants));
+                    break;
+                };
+                let task = self.next_task;
+                self.next_task += 1;
+                let msg = grant_msg(task, stream, epoch, &rows, q, k, v);
+                self.transport.send(w, &msg)?;
+                self.workers.insert(w, WorkerState::Busy);
+                outstanding.insert(task, GrantRec { worker: w, rows, regrants });
+                self.stats.grants += 1;
+                if regrants > 0 {
+                    self.stats.regrants += 1;
+                }
+            }
+            if outstanding.is_empty() && pending.is_empty() {
+                break;
+            }
+            if outstanding.is_empty()
+                && !self
+                    .workers
+                    .values()
+                    .any(|s| matches!(s, WorkerState::Ready | WorkerState::Joining))
+            {
+                // nobody left to wake us: fold the queue in inline
+                for (rows, _) in pending.drain(..) {
+                    backend.attention_rows(
+                        q,
+                        k,
+                        v,
+                        d,
+                        pattern,
+                        rows.clone(),
+                        &mut out[rows.start * d..rows.end * d],
+                    )?;
+                    self.stats.inline_rows += rows.len() as u64;
+                }
+                break;
+            }
+            match self.transport.poll(true)? {
+                Some(TransportEvent::Message(w, msg)) => match msg_type(&msg)? {
+                    "join" => self.handle_join(w)?,
+                    "result" => {
+                        let task = field_u64(&msg, "task")?;
+                        match outstanding.remove(&task) {
+                            Some(g) => {
+                                let rows = field_rows(&msg)?;
+                                if rows != g.rows || field_u64(&msg, "epoch")? != epoch {
+                                    bail!("worker {w} echoed a corrupted grant for task {task}");
+                                }
+                                let vals = floats_from_json(field(&msg, "out")?)?;
+                                if vals.len() != g.rows.len() * d {
+                                    bail!(
+                                        "worker {w} returned {} values for {} rows",
+                                        vals.len(),
+                                        g.rows.len()
+                                    );
+                                }
+                                out[g.rows.start * d..g.rows.end * d].copy_from_slice(&vals);
+                                self.stats.accepted += 1;
+                                self.stats.worker_rows += g.rows.len() as u64;
+                                self.mark_idle_if_done(g.worker, &outstanding);
+                            }
+                            None => {
+                                self.classify_reject(&msg);
+                                self.mark_idle_if_done(w, &outstanding);
+                            }
+                        }
+                    }
+                    "nack" => {
+                        self.stats.nacks += 1;
+                        let task = field_u64(&msg, "task")?;
+                        match outstanding.remove(&task) {
+                            Some(g) => {
+                                // the worker lost its install (dropped
+                                // spec/delta): re-ship, then re-queue
+                                if let Some(ss) = self.specs.get(&stream) {
+                                    let reinstall = spec_msg(stream, ss);
+                                    self.transport.send(w, &reinstall)?;
+                                }
+                                self.stats.superseded += 1;
+                                self.mark_idle_if_done(g.worker, &outstanding);
+                                pending.push_back((g.rows, g.regrants + 1));
+                            }
+                            None => self.classify_reject(&msg),
+                        }
+                    }
+                    "error" => {
+                        // kernel failure: retire this worker, re-grant
+                        // its ranges to survivors
+                        self.kill_worker(w);
+                        let dead: Vec<u64> = outstanding
+                            .iter()
+                            .filter(|(_, g)| g.worker == w)
+                            .map(|(&t, _)| t)
+                            .collect();
+                        for t in dead {
+                            let g = outstanding.remove(&t).expect("task listed above");
+                            self.stats.voided += 1;
+                            pending.push_back((g.rows, g.regrants + 1));
+                        }
+                    }
+                    other => bail!("unexpected message type '{other}' from worker {w}"),
+                },
+                Some(TransportEvent::Crashed(w)) => {
+                    self.note_crash(w);
+                    let dead: Vec<u64> = outstanding
+                        .iter()
+                        .filter(|(_, g)| g.worker == w)
+                        .map(|(&t, _)| t)
+                        .collect();
+                    for t in dead {
+                        let g = outstanding.remove(&t).expect("task listed above");
+                        self.stats.voided += 1;
+                        pending.push_back((g.rows, g.regrants + 1));
+                    }
+                }
+                None => {
+                    if outstanding.is_empty() {
+                        // only Joining workers could wake us and none
+                        // did: compute the queue inline
+                        for (rows, _) in pending.drain(..) {
+                            backend.attention_rows(
+                                q,
+                                k,
+                                v,
+                                d,
+                                pattern,
+                                rows.clone(),
+                                &mut out[rows.start * d..rows.end * d],
+                            )?;
+                            self.stats.inline_rows += rows.len() as u64;
+                        }
+                    } else {
+                        // quiet transport: presume in-flight results
+                        // lost and supersede every outstanding grant
+                        let tasks: Vec<u64> = outstanding.keys().copied().collect();
+                        for t in tasks {
+                            let g = outstanding.remove(&t).expect("task listed above");
+                            self.stats.superseded += 1;
+                            self.mark_idle_if_done(g.worker, &outstanding);
+                            pending.push_back((g.rows, g.regrants + 1));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn first_ready(&self) -> Option<WorkerId> {
+        self.workers.iter().find(|(_, s)| **s == WorkerState::Ready).map(|(&w, _)| w)
+    }
+
+    /// A Busy worker with no remaining outstanding grant is Ready again.
+    fn mark_idle_if_done(&mut self, worker: WorkerId, outstanding: &HashMap<u64, GrantRec>) {
+        if self.workers.get(&worker) == Some(&WorkerState::Busy)
+            && !outstanding.values().any(|g| g.worker == worker)
+        {
+            self.workers.insert(worker, WorkerState::Ready);
+        }
+    }
+
+    // -------------------------------------------------------- observation
+
+    /// Grant/membership ledger counters.
+    pub fn stats(&self) -> CoordStats {
+        self.stats
+    }
+
+    /// Compile-cache counters (identical evolution to the in-process
+    /// serve loop's [`EpochCache`]).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Assignment-epoch hit/miss counters.
+    pub fn epoch_stats(&self) -> EpochCacheStats {
+        self.cache.epoch_stats()
+    }
+
+    /// Membership-regeneration counters: retirements already folded plus
+    /// every live [`MemberCache`].
+    pub fn regen_total(&self) -> RegenStats {
+        let mut total = self.regen;
+        for mc in &self.members {
+            total.merge(mc.stats());
+        }
+        total
+    }
+
+    /// Compiled patterns currently resident (pinned static included).
+    pub fn live_patterns(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// The shared byte meter (peak / resident / evicted).
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.budget
+    }
+
+    /// The routing session (epochs, assignment epochs, k-means state).
+    pub fn session(&self) -> &RoutingSession {
+        &self.session
+    }
+
+    /// The epoch cache — the serve scheduler's `finish_step` needs
+    /// `&mut` access for retirement GC, exactly as in-process.
+    pub fn cache_mut(&mut self) -> &mut EpochCache {
+        &mut self.cache
+    }
+
+    /// One worker's lifecycle state.
+    pub fn worker_state(&self, worker: WorkerId) -> Option<WorkerState> {
+        self.workers.get(&worker).copied()
+    }
+
+    /// Workers ever spawned (crashed ones included).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Workers currently not crashed.
+    pub fn alive_count(&self) -> usize {
+        self.workers.values().filter(|s| !matches!(s, WorkerState::Crashed)).count()
+    }
+
+    /// The configured backend's registry name.
+    pub fn backend_name(&self) -> &str {
+        &self.cfg.backend
+    }
+
+    /// Direct access to the transport — how tests schedule
+    /// [`SimTransport`] faults mid-sequence.
+    pub fn transport_mut(&mut self) -> &mut T {
+        &mut self.transport
+    }
+
+    /// Politely stop every live worker (then hard-kill their channels).
+    /// Every worker ends [`WorkerState::Crashed`]; an administrative
+    /// drain is not a fault, so [`CoordStats::crashes`] is untouched.
+    pub fn shutdown(&mut self) {
+        let msg = jobj(vec![("type", Json::Str("shutdown".to_string()))]);
+        let targets: Vec<WorkerId> = self.workers.keys().copied().collect();
+        for w in targets {
+            if !matches!(self.workers[&w], WorkerState::Crashed) {
+                let _ = self.transport.send(w, &msg);
+            }
+            self.transport.kill(w);
+            self.workers.insert(w, WorkerState::Crashed);
+        }
+    }
+}
+
+fn spec_msg(stream: u64, ss: &StreamSpec) -> Json {
+    let mut fields = vec![
+        ("type", Json::Str("spec".to_string())),
+        ("stream", jnum(stream)),
+        ("epoch", jnum(ss.epoch)),
+        ("assignment_epoch", jnum(ss.assignment_epoch)),
+    ];
+    if let Some((layer, head)) = ss.plan {
+        fields.push(("layer", jnum(layer as u64)));
+        fields.push(("head", jnum(head as u64)));
+    }
+    fields.push(("spec", ss.spec.clone()));
+    jobj(fields)
+}
+
+fn grant_msg(task: u64, stream: u64, epoch: u64, rows: &Range<usize>, q: &[f32], k: &[f32], v: &[f32]) -> Json {
+    jobj(vec![
+        ("type", Json::Str("grant".to_string())),
+        ("task", jnum(task)),
+        ("stream", jnum(stream)),
+        ("epoch", jnum(epoch)),
+        ("rows", Json::Arr(vec![jnum(rows.start as u64), jnum(rows.end as u64)])),
+        ("q", floats_to_json(q)),
+        ("k", floats_to_json(k)),
+        ("v", floats_to_json(v)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let msgs = vec![
+            jobj(vec![("type", Json::Str("join".to_string())), ("worker", jnum(3))]),
+            Json::Arr(vec![Json::Num(1.5), Json::Null, Json::Bool(true)]),
+            Json::Str("π ≠ 3".to_string()),
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let mut r = io::Cursor::new(buf.clone());
+        for m in &msgs {
+            let got = read_frame(&mut r).unwrap().expect("frame present");
+            assert_eq!(got.to_string(), m.to_string());
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at boundary");
+        // EOF mid-frame is an error, not a silent None
+        let mut truncated = io::Cursor::new(buf[..buf.len() - 1].to_vec());
+        for _ in 0..2 {
+            read_frame(&mut truncated).unwrap();
+        }
+        assert!(read_frame(&mut truncated).is_err(), "mid-frame EOF must error");
+    }
+
+    #[test]
+    fn floats_survive_wire_bit_exactly() {
+        let mut rng = Rng::new(7);
+        let xs = vecs(&mut rng, 257);
+        let text = floats_to_json(&xs).to_string();
+        let back = floats_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 -> json -> f32 must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn sim_static_attention_matches_inline() {
+        let mut rng = Rng::new(11);
+        let cfg = CoordinatorConfig {
+            n: 16,
+            d: 4,
+            layers: 1,
+            heads: 2,
+            window: 3,
+            clusters: 2,
+            top_w: 4,
+            capacity: 2,
+            ..CoordinatorConfig::default()
+        };
+        let inline = {
+            let spec = AttentionSpec::local(cfg.window).unwrap();
+            Arc::new(spec.compile(cfg.n))
+        };
+        let backend = backend::lookup("reference").unwrap();
+        let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
+        coord.spawn_worker().unwrap();
+        coord.spawn_worker().unwrap();
+        let (q, k, v) =
+            (vecs(&mut rng, 16 * 4), vecs(&mut rng, 16 * 4), vecs(&mut rng, 16 * 4));
+        let (out, cost) = coord.static_attention(&q, &k, &v).unwrap();
+        let expect = backend.attention(&q, &k, &v, 4, &inline).unwrap();
+        assert_eq!(out, expect, "coordinated static attention must be bit-identical");
+        assert_eq!(cost, inline.cost(4));
+        let st = coord.stats();
+        assert!(st.conserved(), "ledger must conserve: {st:?}");
+        assert_eq!(st.worker_rows, 16);
+        assert_eq!(st.inline_rows, 0);
+        assert_eq!(st.joins, 2);
+    }
+
+    #[test]
+    fn crash_regrants_to_survivor_and_rejoin_works() {
+        let mut rng = Rng::new(13);
+        let cfg = CoordinatorConfig {
+            n: 24,
+            d: 3,
+            layers: 1,
+            heads: 2,
+            window: 4,
+            clusters: 2,
+            top_w: 6,
+            capacity: 1,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, SimTransport::new()).unwrap();
+        let w0 = coord.spawn_worker().unwrap();
+        coord.spawn_worker().unwrap();
+        // worker 0 dies on its next inbound frame (the grant)
+        coord.transport_mut().crash_on_nth_message(w0, 1);
+        let (q, k, v) =
+            (vecs(&mut rng, 24 * 3), vecs(&mut rng, 24 * 3), vecs(&mut rng, 24 * 3));
+        // pump first so both joins are processed and w0's fault hits a grant
+        coord.pump().unwrap();
+        let (out, _) = coord.static_attention(&q, &k, &v).unwrap();
+        let backend = backend::lookup("reference").unwrap();
+        let spec = AttentionSpec::local(4).unwrap();
+        let expect = backend.attention(&q, &k, &v, 3, &Arc::new(spec.compile(24))).unwrap();
+        assert_eq!(out, expect);
+        let st = coord.stats();
+        assert!(st.conserved(), "ledger must conserve after a crash: {st:?}");
+        assert_eq!(st.crashes, 1);
+        assert_eq!(st.voided, 1, "the dead worker's grant is voided exactly once");
+        assert_eq!(coord.worker_state(w0), Some(WorkerState::Crashed));
+        // rejoin and verify the worker serves again
+        coord.rejoin_worker(w0).unwrap();
+        let (out2, _) = coord.static_attention(&q, &k, &v).unwrap();
+        assert_eq!(out2, expect);
+        assert_eq!(coord.stats().rejoins, 1);
+        assert_eq!(coord.worker_state(w0), Some(WorkerState::Ready));
+    }
+
+    #[test]
+    fn dropped_grant_is_superseded_and_duplicate_rejected() {
+        let mut rng = Rng::new(17);
+        let cfg = CoordinatorConfig {
+            n: 12,
+            d: 2,
+            layers: 1,
+            heads: 1,
+            window: 2,
+            clusters: 1,
+            top_w: 3,
+            capacity: 1,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, SimTransport::new()).unwrap();
+        let w0 = coord.spawn_worker().unwrap();
+        coord.pump().unwrap();
+        let (q, k, v) =
+            (vecs(&mut rng, 12 * 2), vecs(&mut rng, 12 * 2), vecs(&mut rng, 12 * 2));
+        // drop the grant itself: the quiet transport forces a re-grant
+        coord.transport_mut().inject_drop_next(w0);
+        let (out, _) = coord.static_attention(&q, &k, &v).unwrap();
+        let st = coord.stats();
+        assert_eq!(st.superseded, 1, "the lost grant is superseded: {st:?}");
+        assert!(st.conserved());
+        // duplicate the next result: second copy must be rejected
+        coord.transport_mut().inject_duplicate_next(w0);
+        let (out2, _) = coord.static_attention(&q, &k, &v).unwrap();
+        assert_eq!(out, out2);
+        // the duplicated copy may drain during this call or the next pump
+        coord.pump().unwrap();
+        let st = coord.stats();
+        assert_eq!(
+            st.rejected_duplicate + st.rejected_stale_epoch,
+            1,
+            "the duplicated result is rejected exactly once: {st:?}"
+        );
+        assert!(st.conserved());
+    }
+
+    #[test]
+    fn routed_attention_ships_specs_and_deltas() {
+        let mut rng = Rng::new(19);
+        let (n, d) = (16, 3);
+        let cfg = CoordinatorConfig {
+            n,
+            d,
+            layers: 1,
+            heads: 2,
+            window: 3,
+            clusters: 2,
+            top_w: 4,
+            capacity: 1,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, SimTransport::new()).unwrap();
+        coord.spawn_worker().unwrap();
+        coord.pump().unwrap();
+        let xs = vecs(&mut rng, n * d);
+        let (q, k, v) = (vecs(&mut rng, n * d), vecs(&mut rng, n * d), vecs(&mut rng, n * d));
+        let (out1, _) = coord.routed_attention(0, 1, 0, &xs, &q, &k, &v).unwrap();
+        assert_eq!(coord.stats().spec_installs, 1, "first routed call ships the spec");
+        // an update that moves nothing is a delta broadcast, not a re-ship
+        let upd = coord.update(0, 1, &xs, n).unwrap();
+        let (out2, _) = coord.routed_attention(0, 1, 0, &xs, &q, &k, &v).unwrap();
+        let st = coord.stats();
+        assert_eq!(st.delta_broadcasts, 1);
+        if !upd.delta.changed() {
+            assert_eq!(st.spec_installs, 1, "unchanged assignments must not re-ship the spec");
+            assert_eq!(out1, out2, "same assignments, same pattern, same output");
+        } else {
+            assert_eq!(st.spec_installs, 2, "moved assignments re-ship the spec");
+        }
+        assert_eq!(st.nacks, 0, "no nacks on the happy path: {st:?}");
+        assert!(st.conserved());
+        // epoch-cache counters behave exactly like the in-process loop
+        assert_eq!(coord.epoch_stats().epoch_hits + coord.epoch_stats().epoch_misses, 2);
+    }
+
+    #[test]
+    fn no_workers_falls_back_inline() {
+        let mut rng = Rng::new(23);
+        let cfg = CoordinatorConfig {
+            n: 8,
+            d: 2,
+            layers: 1,
+            heads: 1,
+            window: 2,
+            clusters: 1,
+            top_w: 2,
+            capacity: 1,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, SimTransport::new()).unwrap();
+        let (q, k, v) = (vecs(&mut rng, 16), vecs(&mut rng, 16), vecs(&mut rng, 16));
+        let (out, _) = coord.static_attention(&q, &k, &v).unwrap();
+        let backend = backend::lookup("reference").unwrap();
+        let spec = AttentionSpec::local(2).unwrap();
+        let expect = backend.attention(&q, &k, &v, 2, &Arc::new(spec.compile(8))).unwrap();
+        assert_eq!(out, expect);
+        let st = coord.stats();
+        assert_eq!(st.inline_rows, 8);
+        assert_eq!(st.grants, 0);
+    }
+}

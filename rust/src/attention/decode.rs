@@ -90,13 +90,14 @@ use std::collections::{BTreeSet, HashMap};
 use std::ops::Range;
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::compiled::{CompiledPattern, MemoryBudget};
 use super::engine::{CacheStats, PatternCache};
 use super::pool::Execution;
 use super::spec::AttentionSpec;
 use crate::kmeans::{AssignmentDelta, SphericalKMeans};
+use crate::util::json::Json;
 
 // -------------------------------------------------------------- session
 
@@ -112,7 +113,7 @@ pub struct RouteSlot {
 }
 
 /// What one [`RoutingSession::update`] did to a slot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RouteUpdate {
     /// The slot's cluster epoch after the update (bumped iff the batch
     /// was non-empty).
@@ -122,6 +123,38 @@ pub struct RouteUpdate {
     pub assignment_epoch: u64,
     /// The k-means delta: per-cluster counts plus the moved tokens.
     pub delta: AssignmentDelta,
+}
+
+impl RouteUpdate {
+    /// Wire form: `{"epoch": E, "assignment_epoch": A, "delta": {...}}` —
+    /// what the multi-process coordinator broadcasts after each k-means
+    /// update so workers can bump (or drop) their installed compiles.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("epoch".to_string(), Json::Num(self.epoch as f64)),
+            ("assignment_epoch".to_string(), Json::Num(self.assignment_epoch as f64)),
+            ("delta".to_string(), self.delta.to_json()),
+        ])
+    }
+
+    /// Parse the [`RouteUpdate::to_json`] wire form; round-trips to an
+    /// identical value (`to_json ∘ from_json ≡ id`).
+    pub fn from_json(j: &Json) -> Result<RouteUpdate> {
+        let epoch = j
+            .get("epoch")
+            .and_then(Json::as_i64)
+            .and_then(|e| u64::try_from(e).ok())
+            .context("route update missing 'epoch'")?;
+        let assignment_epoch = j
+            .get("assignment_epoch")
+            .and_then(Json::as_i64)
+            .and_then(|e| u64::try_from(e).ok())
+            .context("route update missing 'assignment_epoch'")?;
+        let delta = AssignmentDelta::from_json(
+            j.get("delta").context("route update missing 'delta'")?,
+        )?;
+        Ok(RouteUpdate { epoch, assignment_epoch, delta })
+    }
 }
 
 /// Per-layer/per-head online k-means routing state for a decode session.

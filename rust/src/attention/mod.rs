@@ -65,6 +65,16 @@
 //!    and the [`run_serve`] loop that repacks the live batch every step
 //!    and reports p50/p99 step latency from a streaming histogram —
 //!    `rtx serve` against `rtx serve-bench`'s lock-step baseline.
+//! 8. [`coordinator`] — the multi-process scale-out layer: a
+//!    [`Coordinator`] owning all routing state splits each sweep's rows
+//!    (nnz-balanced [`ShardedPattern`] ranges) across `rtx worker`
+//!    subprocesses over a length-prefixed JSON protocol, shipping
+//!    epoch-stamped spec installs and [`RouteUpdate`] deltas; an
+//!    explicit Join → Ready → Busy → Crashed/Rejoined state machine
+//!    with exactly-once grant accounting, behind a pluggable
+//!    [`Transport`] (real children via [`ProcessTransport`], seeded
+//!    fault injection via [`SimTransport`]), bit-identical to inline
+//!    execution ([`run_serve_coordinated`] vs [`run_serve`]).
 //!
 //! Consumers: the `figure1`, `serve-bench`, and `serve` CLIs, the
 //! complexity bench,
@@ -81,6 +91,7 @@
 pub mod backend;
 pub mod compiled;
 pub mod complexity;
+pub mod coordinator;
 pub mod decode;
 pub mod engine;
 pub mod pool;
@@ -93,6 +104,11 @@ pub use backend::{
 };
 pub use compiled::{CompiledPattern, MemoryBudget, PatternBand, RowIter, RowStats, NO_CLUSTER, RENDER_CLIP};
 pub use complexity::optimal_clusters;
+pub use coordinator::{
+    fold_digest, read_frame, run_worker, write_frame, CoordStats, Coordinator, CoordinatorConfig,
+    FaultCounters, ProcessTransport, SimTransport, Transport, TransportEvent, WorkerId, WorkerNode,
+    WorkerState, DIGEST_SEED, MAX_FRAME_BYTES, PROTOCOL_VERSION, STATIC_STREAM,
+};
 pub use decode::{
     sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, MemberCache,
     RegenStats, RouteSlot, RouteUpdate, RoutingSession,
@@ -103,8 +119,8 @@ pub use engine::{
 };
 pub use pool::{Execution, WorkerPool};
 pub use serve::{
-    run_serve, ArrivalConfig, BatchEntry, OutcomeKind, RequestOutcome, RequestQueue, Retired,
-    Scheduler, ServeOptions, ServeRequest, ServeStats, ServeSummary, StepFinish, StepPlan,
-    Submission, JSON_SCHEMA_VERSION,
+    run_serve, run_serve_coordinated, ArrivalConfig, BatchEntry, OutcomeKind, RequestOutcome,
+    RequestQueue, Retired, Scheduler, ServeOptions, ServeRequest, ServeStats, ServeSummary,
+    StepFinish, StepPlan, Submission, JSON_SCHEMA_VERSION,
 };
 pub use spec::{AttentionSpec, ChunkedPattern, ChunkedRowIter};

@@ -42,6 +42,16 @@
 //! resident pool).  `bench_complexity` pins pool ≥ 1.3× scoped on a
 //! decode-shaped loop (≥ 4 cores); `rtx serve-bench --pool` prints the
 //! same comparison with a row-for-row equality check.
+//!
+//! # Scope: intra-process only
+//!
+//! This pool is the **intra-process** half of the fault story — panic
+//! containment inside one address space — and is deliberately unchanged
+//! by the multi-process layer: [`coordinator`](super::coordinator)
+//! splits work across `rtx worker` OS processes (crash isolation,
+//! horizontal scale) and each worker's kernel calls still run on this
+//! pool's substrate semantics.  Thread-level parallelism and
+//! process-level sharding compose, they do not replace each other.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -45,6 +45,10 @@ use anyhow::{bail, Result};
 
 use super::backend::Backend;
 use super::compiled::MemoryBudget;
+use super::coordinator::{
+    fold_digest, CoordStats, Coordinator, CoordinatorConfig, ProcessTransport, Transport,
+    DIGEST_SEED,
+};
 use super::decode::{
     BatchedAttention, EpochCache, EpochCacheStats, MemberCache, RegenStats, RouteSlot,
     RoutingSession,
@@ -65,8 +69,12 @@ use crate::util::timing::StreamingHistogram;
 /// (`serve` lines document the `backend` field and add `exactness`;
 /// `serve-bench` lines add per-backend `exactness` entries and emit
 /// `sequential_rows_per_sec` only when more than one backend runs, so
-/// single-backend sweeps skip the redundant per-step oracle).
-pub const JSON_SCHEMA_VERSION: u64 = 4;
+/// single-backend sweeps skip the redundant per-step oracle); the
+/// multi-process coordinator made it 5 (`serve` lines add `worker_procs`,
+/// the `output_digest` hex string — the FNV-1a fold of every attention
+/// output's f32 bit patterns, the cross-process bit-identity anchor —
+/// and, when `worker_procs > 0`, the `coord` grant-ledger object).
+pub const JSON_SCHEMA_VERSION: u64 = 5;
 
 // ---------------------------------------------------------------- arrivals
 
@@ -628,6 +636,13 @@ pub struct ServeOptions {
     pub arrivals: ArrivalConfig,
     /// Seed for per-content q/k/v and routing vectors and the k-means.
     pub seed: u64,
+    /// OS worker subprocesses to split each attention call across
+    /// (`rtx serve --workers N`).  0 = in-process execution; > 0 routes
+    /// every sweep through the multi-process
+    /// [`Coordinator`](super::coordinator::Coordinator), whose output is
+    /// bit-identical to the in-process run (same `output_digest`).
+    /// Requires monolithic mode (`band_rows == 0`, unbounded budget).
+    pub worker_procs: usize,
 }
 
 impl Default for ServeOptions {
@@ -647,6 +662,7 @@ impl Default for ServeOptions {
             band_rows: 0,
             arrivals: ArrivalConfig::default(),
             seed: 0,
+            worker_procs: 0,
         }
     }
 }
@@ -694,6 +710,15 @@ pub struct ServeSummary {
     pub band_compiles: u64,
     /// Heap bytes released by retirement GC specifically.
     pub gc_bytes_reclaimed: u64,
+    /// FNV-1a 64 fold of every attention output's `f32` bit patterns, in
+    /// sweep order — the bit-identity anchor: an in-process run and a
+    /// coordinated multi-process run of the same options must report the
+    /// same digest.
+    pub output_digest: u64,
+    /// OS worker subprocesses the run executed on (0 = in-process).
+    pub worker_procs: usize,
+    /// The coordinator's grant/rejection ledger (multi-process runs only).
+    pub coord: Option<CoordStats>,
 }
 
 impl ServeSummary {
@@ -747,7 +772,43 @@ impl SlotData {
 /// between steps are the point: the per-step wall-clock distribution —
 /// not just its mean — is the serving cost, which is why the summary
 /// reports p50/p99.
+///
+/// With `worker_procs > 0` the run executes through the multi-process
+/// [`Coordinator`] instead — real `rtx worker` subprocesses spawned from
+/// the current executable — and must produce the same `output_digest`
+/// and cache/epoch/regen counters as the in-process run (pinned by
+/// `tests/coordinator.rs` and the CI smoke).
 pub fn run_serve(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSummary> {
+    if opts.worker_procs == 0 {
+        return run_serve_in_process(opts, backend);
+    }
+    let transport = ProcessTransport::current_exe()?;
+    let mut coord = Coordinator::new(coordinator_config(opts, backend), transport)?;
+    for _ in 0..opts.worker_procs {
+        coord.spawn_worker()?;
+    }
+    let result = run_serve_coordinated(opts, &mut coord);
+    coord.shutdown();
+    result
+}
+
+fn coordinator_config(opts: &ServeOptions, backend: &dyn Backend) -> CoordinatorConfig {
+    CoordinatorConfig {
+        n: opts.n,
+        d: opts.d,
+        layers: opts.layers,
+        heads: opts.heads,
+        window: opts.window,
+        clusters: opts.clusters,
+        top_w: opts.top_w,
+        capacity: opts.capacity,
+        seed: opts.seed,
+        backend: backend.name().to_string(),
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSummary> {
     if opts.n == 0 || opts.d == 0 {
         bail!("serve requires n >= 1 and d >= 1 (got n = {}, d = {})", opts.n, opts.d);
     }
@@ -815,6 +876,7 @@ pub fn run_serve(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSumm
     let mut batched_rows = 0u64;
     let mut macs = 0u64;
     let mut elapsed_sec = 0.0f64;
+    let mut digest = DIGEST_SEED;
 
     while !queue.is_empty() || !sched.is_idle() {
         if sched.is_idle() {
@@ -902,6 +964,7 @@ pub fn run_serve(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSumm
                             backend,
                         )?;
                         std::hint::black_box(&out);
+                        digest = fold_digest(digest, &out);
                         batched_rows += (b * opts.n) as u64;
                         macs += batch_att.cost(opts.d);
                     }
@@ -924,6 +987,7 @@ pub fn run_serve(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSumm
                                     backend,
                                 )?;
                                 std::hint::black_box(&out);
+                                digest = fold_digest(digest, &out);
                                 macs += chunked.cost(opts.d);
                             }
                         } else {
@@ -989,6 +1053,7 @@ pub fn run_serve(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSumm
                                     backend,
                                 )?;
                                 std::hint::black_box(&out);
+                                digest = fold_digest(digest, &out);
                                 macs += entry.chunked.cost(opts.d);
                             }
                         }
@@ -1077,6 +1142,145 @@ pub fn run_serve(opts: &ServeOptions, backend: &dyn Backend) -> Result<ServeSumm
         pattern_bytes_evicted: budget.evicted(),
         band_compiles,
         gc_bytes_reclaimed,
+        output_digest: digest,
+        worker_procs: 0,
+        coord: None,
+    })
+}
+
+/// The coordinator-backed serve loop: the same scheduler, workload, and
+/// head plan as the in-process path, with every attention sweep executed
+/// through `coord` (splitting rows across its workers, inline when none
+/// are alive).  The coordinator owns the routing state, so the
+/// cache/epoch/regen counters — and, because row-partitioned execution
+/// of one backend is bitwise, the `output_digest` — evolve identically
+/// to [`run_serve`] with `worker_procs == 0`.  Exposed generically over
+/// [`Transport`] so tests drive it on a fault-injecting
+/// [`SimTransport`](super::coordinator::SimTransport); `run_serve` wraps
+/// it over real subprocesses.
+///
+/// Long-context serving (band_rows / max_pattern_bytes) is not
+/// coordinated: bands are already the memory-bounded *single-process*
+/// mode, and a coordinated run ships whole-sequence grants.
+pub fn run_serve_coordinated<T: Transport>(
+    opts: &ServeOptions,
+    coord: &mut Coordinator<T>,
+) -> Result<ServeSummary> {
+    if opts.n == 0 || opts.d == 0 {
+        bail!("serve requires n >= 1 and d >= 1 (got n = {}, d = {})", opts.n, opts.d);
+    }
+    if opts.window == 0 || opts.clusters == 0 || opts.top_w == 0 {
+        bail!(
+            "serve requires window, clusters, top_w >= 1 (got {}, {}, {})",
+            opts.window,
+            opts.clusters,
+            opts.top_w
+        );
+    }
+    if opts.route_every == 0 {
+        bail!("serve requires route_every >= 1");
+    }
+    if opts.band_rows > 0 || opts.max_pattern_bytes > 0 {
+        bail!(
+            "coordinated serve supports monolithic mode only \
+             (got band_rows = {}, max_pattern_bytes = {})",
+            opts.band_rows,
+            opts.max_pattern_bytes
+        );
+    }
+    let mut queue = RequestQueue::generate(&opts.arrivals)?;
+    let mut sched = Scheduler::new(opts.capacity, opts.layers, opts.heads)?;
+    let mut slot_data: Vec<Option<SlotData>> = (0..opts.capacity).map(|_| None).collect();
+
+    let mut hist = StreamingHistogram::new();
+    let mut batched_rows = 0u64;
+    let mut macs = 0u64;
+    let mut elapsed_sec = 0.0f64;
+    let mut digest = DIGEST_SEED;
+    let mut gc_bytes_reclaimed = 0u64;
+
+    while !queue.is_empty() || !sched.is_idle() {
+        if sched.is_idle() {
+            if let Some(next) = queue.peek_arrival() {
+                sched.fast_forward(next);
+            }
+        }
+        for req in queue.pop_arrived(sched.now()) {
+            sched.submit(req);
+        }
+        let plan = sched.begin_step();
+        coord.mark_step();
+        for e in &plan.admitted {
+            slot_data[e.slot] = Some(SlotData::generate(opts.seed, e.content, opts.n, opts.d));
+        }
+        if !plan.batch.is_empty() {
+            let t0 = Instant::now();
+            let b = plan.batch.len();
+            if sched.now() % opts.route_every == 0 {
+                let mut all = Vec::with_capacity(b * opts.n * opts.d);
+                for e in &plan.batch {
+                    let data = slot_data[e.slot].as_ref().expect("active slot has data");
+                    all.extend_from_slice(&data.xs);
+                }
+                for layer in 0..opts.layers {
+                    for head in (1..opts.heads).step_by(2) {
+                        coord.update(layer, head, &all, b * opts.n)?;
+                    }
+                }
+            }
+            for layer in 0..opts.layers {
+                for head in 0..opts.heads {
+                    // batch order matches the in-process [B, n, d] pack,
+                    // so the per-sequence digest folds concatenate to the
+                    // same byte stream the batched sweep hashes
+                    for e in &plan.batch {
+                        let data = slot_data[e.slot].as_ref().expect("active slot has data");
+                        let (out, cost) = if head % 2 == 0 {
+                            coord.static_attention(&data.q, &data.k, &data.v)?
+                        } else {
+                            coord.routed_attention(
+                                layer, head, e.slot, &data.xs, &data.q, &data.k, &data.v,
+                            )?
+                        };
+                        std::hint::black_box(&out);
+                        digest = fold_digest(digest, &out);
+                        macs += cost;
+                    }
+                    batched_rows += (b * opts.n) as u64;
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            hist.record(dt * 1e6);
+            elapsed_sec += dt;
+        }
+        let fin = sched.finish_step(coord.cache_mut());
+        gc_bytes_reclaimed += fin.gc_bytes;
+        for r in &fin.retired {
+            slot_data[r.slot] = None;
+            coord.retire_slot(r.slot)?;
+        }
+    }
+
+    Ok(ServeSummary {
+        stats: sched.stats(),
+        outcomes: sched.outcomes().to_vec(),
+        step_us: hist,
+        batched_rows,
+        macs,
+        elapsed_sec,
+        cache: coord.cache_stats(),
+        epoch: coord.epoch_stats(),
+        regen: coord.regen_total(),
+        live_patterns_after_gc: coord.live_patterns(),
+        virtual_steps: sched.now(),
+        peak_pattern_bytes: coord.budget().peak() as u64,
+        pattern_bytes_resident: coord.budget().resident() as u64,
+        pattern_bytes_evicted: coord.budget().evicted(),
+        band_compiles: 0,
+        gc_bytes_reclaimed,
+        output_digest: digest,
+        worker_procs: coord.worker_count(),
+        coord: Some(coord.stats()),
     })
 }
 

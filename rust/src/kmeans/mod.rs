@@ -7,7 +7,10 @@
 
 #![warn(missing_docs)]
 
+use anyhow::{bail, Context, Result};
+
 use crate::attention::AttentionSpec;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Assignment bookkeeping returned by [`SphericalKMeans::update`] — the
@@ -53,6 +56,66 @@ impl AssignmentDelta {
     /// The tokens in `moved` (the per-update dirty set).
     pub fn moved_tokens(&self) -> impl Iterator<Item = usize> + '_ {
         self.moved.iter().map(|&(token, _, _)| token)
+    }
+
+    /// Wire form: `{"counts": [...], "moved": [[token, from, to], ...],
+    /// "assigned": N}` — the payload the multi-process coordinator ships
+    /// inside every delta broadcast.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "counts".to_string(),
+                Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            (
+                "moved".to_string(),
+                Json::Arr(
+                    self.moved
+                        .iter()
+                        .map(|&(token, from, to)| {
+                            Json::Arr(vec![
+                                Json::Num(token as f64),
+                                Json::Num(from as f64),
+                                Json::Num(to as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("assigned".to_string(), Json::Num(self.assigned as f64)),
+        ])
+    }
+
+    /// Parse the [`AssignmentDelta::to_json`] wire form; round-trips to
+    /// an identical value (`to_json ∘ from_json ≡ id`).
+    pub fn from_json(j: &Json) -> Result<AssignmentDelta> {
+        let counts = j
+            .get("counts")
+            .and_then(Json::as_arr)
+            .context("delta missing 'counts' array")?
+            .iter()
+            .map(|c| c.as_usize().context("'counts' entry is not a usize"))
+            .collect::<Result<Vec<usize>>>()?;
+        let moved = j
+            .get("moved")
+            .and_then(Json::as_arr)
+            .context("delta missing 'moved' array")?
+            .iter()
+            .map(|m| {
+                let triple = m.as_arr().context("'moved' entry is not an array")?;
+                if triple.len() != 3 {
+                    bail!("'moved' entry must be [token, from, to]");
+                }
+                Ok((
+                    triple[0].as_usize().context("'moved' token is not a usize")?,
+                    triple[1].as_usize().context("'moved' from is not a usize")?,
+                    triple[2].as_usize().context("'moved' to is not a usize")?,
+                ))
+            })
+            .collect::<Result<Vec<(usize, usize, usize)>>>()?;
+        let assigned =
+            j.get("assigned").and_then(Json::as_usize).context("delta missing 'assigned'")?;
+        Ok(AssignmentDelta { counts, moved, assigned })
     }
 }
 

@@ -29,10 +29,10 @@ use anyhow::{bail, Result};
 #[cfg(feature = "xla")]
 use routing_transformer::analysis;
 use routing_transformer::attention::{
-    assert_outputs_match, backend, optimal_clusters, run_serve, sparse_attention, ArrivalConfig,
-    AttentionSpec, Backend, BatchedAttention, CompiledPattern, EpochCache, Exactness, Execution,
-    MemberCache, RegenStats, RouteSlot, RoutingSession, ServeOptions, ServeSummary, WorkerPool,
-    JSON_SCHEMA_VERSION,
+    assert_outputs_match, backend, optimal_clusters, run_serve, run_worker, sparse_attention,
+    ArrivalConfig, AttentionSpec, Backend, BatchedAttention, CompiledPattern, EpochCache,
+    Exactness, Execution, MemberCache, RegenStats, RouteSlot, RoutingSession, ServeOptions,
+    ServeSummary, WorkerPool, JSON_SCHEMA_VERSION,
 };
 #[cfg(feature = "xla")]
 use routing_transformer::coordinator::{
@@ -76,6 +76,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "figure1" => cmd_figure1(args),
         "serve-bench" => cmd_serve_bench(args),
         "serve" => cmd_serve(args),
+        "worker" => cmd_worker(args),
         "help" | _ => {
             print!("{}", HELP);
             Ok(())
@@ -125,7 +126,8 @@ commands:
             and retire through per-slot epoch-cache GC — the asynchronous
             counterpart to serve-bench's lock-step sweep:
             [--n 256] [--d 64] [--heads 8] [--layers 4] [--window W]
-            [--clusters K] [--capacity 8] [--workers 4] [--route-every 4]
+            [--clusters K] [--capacity 8] [--shards 4] [--workers 0]
+            [--route-every 4]
             [--requests 64] [--rate 1.0] [--contents 64] [--zipf 1.1]
             [--work-min 4] [--work-max 16] [--slack-min 8] [--slack-max 64]
             [--backend blocked] [--seed S] [--json] [--append [FILE]]
@@ -133,20 +135,29 @@ commands:
             (--backend picks any registered kernel by name — blocked stays
              bitwise, simd trades bitwise for >= 3x throughput within its
              declared ulps budget; the backend name and exactness land in
-             the --json line; --band-rows R > 0 switches to memory-bounded
+             the --json line; --shards sets intra-process chunk parallelism
+             per batched sweep; --workers N > 0 instead splits every sweep
+             across N spawned `rtx worker` OS subprocesses via the
+             multi-process coordinator — bit-identical output_digest to
+             --workers 0, monolithic mode only; --band-rows R > 0 switches
+             to memory-bounded
              banded compilation: patterns are compiled on demand in R-row
              bands against a shared byte budget of B (--max-pattern-bytes,
              0 = unbounded) with LRU spill, bit-identical outputs, and
              peak/resident/evicted pattern bytes reported in the summary
-             and the schema-4 --json line; prints
+             and the schema-5 --json line; prints
              admitted/completed/rejected/shed counts, p50/p99 step
              latency from a streaming histogram, rows/sec, and the
              cache/epoch/regen counters; --json prints one machine-readable
              line, --append appends it to BENCH_serve.json (or FILE) so the
              perf trajectory persists across runs; schema in ARCHITECTURE.md)
+  worker    multi-process serve worker (spawned by `rtx serve --workers N`
+            over stdin/stdout length-prefixed JSON frames; not for
+            interactive use): [--id N]
 
 info/train/eval/sample/analyze need the default `xla` build; figure1,
-serve-bench, and serve also work with --no-default-features (host-only).
+serve-bench, serve, and worker also work with --no-default-features
+(host-only).
 ";
 
 #[cfg(not(feature = "xla"))]
@@ -943,7 +954,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let window = args.usize("window", (n / 8).max(1))?.max(1);
     let k = args.usize("clusters", optimal_clusters(n))?.max(1);
     let capacity = args.usize("capacity", 8)?.max(1);
-    let workers = args.usize("workers", 4)?.max(1);
+    let shards = args.usize("shards", 4)?.max(1);
+    let worker_procs = args.usize("workers", 0)?;
     let route_every = args.u64("route-every", 4)?.max(1);
     let requests = args.usize("requests", 64)?;
     let rate = args.f64("rate", 1.0)?;
@@ -982,7 +994,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         window,
         clusters: k,
         top_w: (n / k).max(1),
-        workers,
+        workers: shards,
         capacity,
         route_every,
         max_pattern_bytes,
@@ -997,13 +1009,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed,
         },
         seed,
+        worker_procs,
     };
     println!(
         "serve: n={n} d={d} heads={heads} layers={layers} window={window} clusters={k} \
-         capacity={capacity} workers={workers} route-every={route_every} requests={requests} \
-         rate={rate} contents={contents} zipf={zipf_s} work=[{work_min},{work_max}] \
-         slack=[{slack_min},{slack_max}] max-pattern-bytes={max_pattern_bytes} \
-         band-rows={band_rows} backend={} seed={seed}",
+         capacity={capacity} shards={shards} workers={worker_procs} route-every={route_every} \
+         requests={requests} rate={rate} contents={contents} zipf={zipf_s} \
+         work=[{work_min},{work_max}] slack=[{slack_min},{slack_max}] \
+         max-pattern-bytes={max_pattern_bytes} band-rows={band_rows} backend={} seed={seed}",
         be.name()
     );
     let summary = run_serve(&opts, be.as_ref())?;
@@ -1071,6 +1084,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "GC bytes reclaimed".to_string(),
         summary.gc_bytes_reclaimed.to_string(),
     ]);
+    table.row(&[
+        "output digest".to_string(),
+        format!("{:016x}", summary.output_digest),
+    ]);
+    table.row(&["worker subprocesses".to_string(), summary.worker_procs.to_string()]);
+    if let Some(co) = summary.coord {
+        table.row(&[
+            "coord grants (accepted/superseded/voided)".to_string(),
+            format!("{} ({}/{}/{})", co.grants, co.accepted, co.superseded, co.voided),
+        ]);
+        table.row(&[
+            "coord rejected (stale/duplicate)".to_string(),
+            format!("{}/{}", co.rejected_stale_epoch, co.rejected_duplicate),
+        ]);
+        table.row(&[
+            "coord rows (worker/inline)".to_string(),
+            format!("{}/{}", co.worker_rows, co.inline_rows),
+        ]);
+    }
     table.print();
 
     let line = serve_json_line(&opts, be.as_ref(), &summary);
@@ -1090,9 +1122,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// The `serve` perf-trajectory line: the PR 5 `serve-bench` schema's
 /// cache/epoch/regen sub-objects plus the request-lifecycle and step-
 /// latency fields, stamped with `"schema"`; schema 4 records the
-/// executing backend's name and declared exactness contract.  Documented
-/// in ARCHITECTURE.md; appended (JSONL) to `BENCH_serve.json` by
-/// `--append`.
+/// executing backend's name and declared exactness contract; schema 5
+/// adds `worker_procs`, `output_digest` (a 16-hex-digit string — a u64
+/// does not survive the f64 number type past 2^53), and the `coord`
+/// ledger object for multi-process runs.  Documented in ARCHITECTURE.md;
+/// appended (JSONL) to `BENCH_serve.json` by `--append`.
 fn serve_json_line(opts: &ServeOptions, be: &dyn Backend, summary: &ServeSummary) -> Json {
     let f = |key: &str, v: f64| (key.to_string(), Json::Num(v));
     let s = summary.stats;
@@ -1111,6 +1145,7 @@ fn serve_json_line(opts: &ServeOptions, be: &dyn Backend, summary: &ServeSummary
         f("clusters", opts.clusters as f64),
         f("capacity", opts.capacity as f64),
         f("workers", opts.workers as f64),
+        f("worker_procs", summary.worker_procs as f64),
         f("route_every", opts.route_every as f64),
         f("requests", opts.arrivals.requests as f64),
         f("rate", opts.arrivals.rate),
@@ -1188,7 +1223,45 @@ fn serve_json_line(opts: &ServeOptions, be: &dyn Backend, summary: &ServeSummary
         f("pattern_bytes_evicted", summary.pattern_bytes_evicted as f64),
         f("band_compiles", summary.band_compiles as f64),
         f("gc_bytes_reclaimed", summary.gc_bytes_reclaimed as f64),
-    ])
+        (
+            "output_digest".to_string(),
+            Json::Str(format!("{:016x}", summary.output_digest)),
+        ),
+    ]
+    .into_iter()
+    .chain(summary.coord.map(|co| {
+        (
+            "coord".to_string(),
+            Json::Obj(vec![
+                f("joins", co.joins as f64),
+                f("rejoins", co.rejoins as f64),
+                f("crashes", co.crashes as f64),
+                f("grants", co.grants as f64),
+                f("accepted", co.accepted as f64),
+                f("superseded", co.superseded as f64),
+                f("voided", co.voided as f64),
+                f("regrants", co.regrants as f64),
+                f("rejected_stale_epoch", co.rejected_stale_epoch as f64),
+                f("rejected_duplicate", co.rejected_duplicate as f64),
+                f("nacks", co.nacks as f64),
+                f("spec_installs", co.spec_installs as f64),
+                f("delta_broadcasts", co.delta_broadcasts as f64),
+                f("evict_broadcasts", co.evict_broadcasts as f64),
+                f("worker_rows", co.worker_rows as f64),
+                f("inline_rows", co.inline_rows as f64),
+            ]),
+        )
+    }))
+    .collect())
+}
+
+/// `rtx worker`: the multi-process serve worker loop.  Spawned by the
+/// coordinator with piped stdin/stdout; speaks the length-prefixed JSON
+/// frame protocol documented in ARCHITECTURE.md and exits on `shutdown`
+/// or EOF.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let id = args.usize("id", 0)?;
+    run_worker(id)
 }
 
 fn cmd_figure1(args: &Args) -> Result<()> {

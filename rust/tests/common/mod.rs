@@ -1,0 +1,78 @@
+//! Shared seeded property-test harness with checked-in regression seeds.
+//!
+//! The offline environment ships no `proptest`, so the property suites
+//! (`proptests.rs`, `stateful.rs`, `coordinator.rs`) roll their own
+//! seeded-case loop.  This module is that loop plus the missing
+//! proptest feature: **persisted shrink seeds**.  Each suite checks in a
+//! `proptest-regressions/<suite>.txt` file of `property 0xSEED` lines;
+//! [`check_with_regressions`] replays every matching recorded seed
+//! *before* the fresh seeded sweep, so a once-seen failure can never
+//! silently stop reproducing.  On a new failure the harness appends the
+//! seed to the suite's regression file (best-effort — CI uploads the
+//! directory as an artifact on failure) and panics with the seed.
+//!
+//! File format: one `property_name 0xHEXSEED` per line; blank lines and
+//! `#` comments ignored.  Unknown property names are fine — they belong
+//! to other tests in the suite.
+
+#![allow(dead_code)] // each test binary uses a subset of this module
+
+use routing_transformer::util::rng::Rng;
+
+/// Parse a regression file's text into `(property, seed)` pairs.
+pub fn parse_seeds(text: &str) -> Vec<(String, u64)> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (name, seed) = l.split_once(char::is_whitespace)?;
+            let seed = seed.trim();
+            let seed = seed.strip_prefix("0x").or_else(|| seed.strip_prefix("0X"))?;
+            Some((name.to_string(), u64::from_str_radix(seed, 16).ok()?))
+        })
+        .collect()
+}
+
+fn record_regression(suite: &str, name: &str, seed: u64) {
+    use std::io::Write;
+    let path = format!("{}/proptest-regressions/{suite}.txt", env!("CARGO_MANIFEST_DIR"));
+    if let Ok(mut file) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(file, "{name} {seed:#x}");
+    }
+}
+
+fn run_case<F: Fn(&mut Rng)>(suite: &str, name: &str, seed: u64, replayed: bool, f: &F) {
+    let mut rng = Rng::new(seed);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+    if let Err(e) = result {
+        if !replayed {
+            record_regression(suite, name, seed);
+        }
+        let kind = if replayed { "regression seed" } else { "seed" };
+        panic!(
+            "property '{name}' ({suite}) failed at {kind} {seed:#x} \
+             (recorded in proptest-regressions/{suite}.txt): {e:?}"
+        );
+    }
+}
+
+/// Run `f` over every recorded regression seed for `name`, then over `n`
+/// fresh seeded cases (`base_seed + case`); panic with the failing seed,
+/// appending new failures to `proptest-regressions/<suite>.txt`.
+pub fn check_with_regressions<F: Fn(&mut Rng)>(
+    suite: &str,
+    regressions: &str,
+    name: &str,
+    n: usize,
+    base_seed: u64,
+    f: F,
+) {
+    for (prop, seed) in parse_seeds(regressions) {
+        if prop == name {
+            run_case(suite, name, seed, true, &f);
+        }
+    }
+    for case in 0..n {
+        run_case(suite, name, base_seed + case as u64, false, &f);
+    }
+}

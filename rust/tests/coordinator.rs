@@ -1,0 +1,760 @@
+//! Model-based tests for the multi-process shard coordinator.
+//!
+//! Mirrors `tests/stateful.rs`: random op sequences — SpawnWorker /
+//! KillWorker / Rejoin / InjectFault / Update / Step / Retire — drive a
+//! [`Coordinator`] over the fault-injecting [`SimTransport`] against an
+//! **independent single-process reference model** (`RefModel` below: the
+//! same `RoutingSession` + `EpochCache` + `MemberCache` primitives the
+//! in-process serve loop composes, executing whole sequences inline with
+//! `Backend::attention`).  After every op the suite asserts
+//!
+//! * attention outputs are **bit-identical** to the reference, no matter
+//!   which rows which worker computed (or recomputed after a crash),
+//! * every row-range completes **exactly once** —
+//!   `worker_rows + inline_rows` equals `n ×` (attention calls), with
+//!   late/duplicated replies rejected by task id, never double-written,
+//! * the grant ledger conserves: `grants == accepted + superseded +
+//!   voided` at rest, and `regrants <= superseded + voided`,
+//! * stale-epoch/duplicate rejection counters classify exactly the
+//!   replies that arrive with no outstanding grant, and
+//! * the coordinator's routing-state counters (compile cache, epoch
+//!   cache, membership regeneration, live compiles) evolve identically
+//!   to the single-process model — the counter half of the
+//!   `--workers N` ≡ `--workers 0` bit-identity contract.
+//!
+//! Wire-level properties (frame round-trips, `AttentionSpec` /
+//! [`AssignmentDelta`] / [`RouteUpdate`] JSON round-trips) ride in the
+//! same harness, and one test drives **real** `rtx worker` subprocesses
+//! through [`ProcessTransport`] via `CARGO_BIN_EXE_rtx`.
+//!
+//! Seeds replay from `proptest-regressions/coordinator.txt` (see
+//! `tests/common/mod.rs`).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use routing_transformer::attention::backend;
+use routing_transformer::attention::{
+    read_frame, run_serve, run_serve_coordinated, write_frame, ArrivalConfig, AttentionSpec,
+    Backend, CompiledPattern, Coordinator, CoordinatorConfig, EpochCache, MemberCache,
+    MemoryBudget, ProcessTransport, RegenStats, RouteSlot, RouteUpdate, RoutingSession,
+    ServeOptions, SimTransport, WorkerId, WorkerState,
+};
+use routing_transformer::kmeans::AssignmentDelta;
+use routing_transformer::util::json::Json;
+use routing_transformer::util::rng::Rng;
+
+/// Shrink seeds persisted from previous failures; replayed before the sweep.
+const REGRESSIONS: &str = include_str!("../proptest-regressions/coordinator.txt");
+
+/// Run `f` over the recorded regression seeds, then `n` fresh seeded
+/// cases; panic with the failing seed (persisting new failures).
+fn check<F: Fn(&mut Rng)>(name: &str, n: usize, f: F) {
+    common::check_with_regressions("coordinator", REGRESSIONS, name, n, 0xC00D_0000, f);
+}
+
+fn vecs(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: output length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: value {i} differs ({g} vs {w})");
+    }
+}
+
+fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> Option<&'a T> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(&xs[rng.below(xs.len())])
+    }
+}
+
+// ----------------------------------------------- single-process reference
+
+/// The independent reference: the exact routing-state primitives the
+/// in-process serve loop composes (`RoutingSession` owning the k-means,
+/// `EpochCache` keyed on assignment epochs, one `MemberCache` per
+/// `(layer, head, slot)`), executing every attention call inline over
+/// whole sequences.  No coordinator code is involved, so agreement pins
+/// both the outputs and the counter evolution of the granted path.
+struct RefModel {
+    n: usize,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    capacity: usize,
+    top_w: usize,
+    backend: Arc<dyn Backend>,
+    session: RoutingSession,
+    cache: EpochCache,
+    budget: MemoryBudget,
+    members: Vec<MemberCache>,
+    local: AttentionSpec,
+    static_pattern: Arc<CompiledPattern>,
+    regen: RegenStats,
+}
+
+impl RefModel {
+    fn new(cfg: &CoordinatorConfig) -> RefModel {
+        let backend = backend::lookup(&cfg.backend).expect("registered backend");
+        let session =
+            RoutingSession::new(cfg.layers, cfg.heads, cfg.clusters, cfg.d, 0.5, cfg.seed)
+                .unwrap();
+        let budget = MemoryBudget::unbounded();
+        let mut cache = EpochCache::with_budget(budget.clone());
+        let local = AttentionSpec::local(cfg.window).unwrap();
+        let static_pattern = cache.get_static(&local, cfg.n);
+        let members = (0..cfg.layers * cfg.heads * cfg.capacity)
+            .map(|_| MemberCache::with_budget(budget.clone()))
+            .collect();
+        RefModel {
+            n: cfg.n,
+            d: cfg.d,
+            layers: cfg.layers,
+            heads: cfg.heads,
+            capacity: cfg.capacity,
+            top_w: cfg.top_w,
+            backend,
+            session,
+            cache,
+            budget,
+            members,
+            local,
+            static_pattern,
+            regen: RegenStats::default(),
+        }
+    }
+
+    fn update(&mut self, layer: usize, head: usize, xs: &[f32], n: usize) -> RouteUpdate {
+        self.session.update(layer, head, xs, n)
+    }
+
+    fn static_attention(&mut self, q: &[f32], k: &[f32], v: &[f32]) -> (Vec<f32>, u64) {
+        let cost = self.static_pattern.cost(self.d);
+        let out = self.backend.attention(q, k, v, self.d, &self.static_pattern).unwrap();
+        (out, cost)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn routed_attention(
+        &mut self,
+        layer: usize,
+        head: usize,
+        slot: usize,
+        xs: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, u64) {
+        let epoch = self.session.epoch(layer, head);
+        let ae = self.session.assignment_epoch(layer, head);
+        let idx = (layer * self.heads + head) * self.capacity + slot;
+        let (n, top_w) = (self.n, self.top_w);
+        let pattern = {
+            let RefModel { ref mut cache, ref session, ref mut members, ref local, .. } = *self;
+            let mc = &mut members[idx];
+            cache.get_routed_at(RouteSlot { layer, head, seq: slot }, epoch, ae, n, || {
+                AttentionSpec::union(vec![
+                    local.clone(),
+                    session.routing_spec_cached(layer, head, mc, xs, n, top_w),
+                ])
+                .expect("non-empty union of valid specs")
+            })
+        };
+        let cost = pattern.cost(self.d);
+        let out = self.backend.attention(q, k, v, self.d, &pattern).unwrap();
+        (out, cost)
+    }
+
+    fn retire(&mut self, slot: usize) {
+        for layer in 0..self.layers {
+            for head in 0..self.heads {
+                let idx = (layer * self.heads + head) * self.capacity + slot;
+                let budget = self.budget.clone();
+                let mc = &mut self.members[idx];
+                self.regen.merge(mc.stats());
+                *mc = MemberCache::with_budget(budget);
+            }
+        }
+    }
+
+    fn regen_total(&self) -> RegenStats {
+        let mut total = self.regen;
+        for mc in &self.members {
+            total.merge(mc.stats());
+        }
+        total
+    }
+}
+
+// ------------------------------------------------------ wire round-trips
+
+fn random_spec(rng: &mut Rng, depth: usize) -> AttentionSpec {
+    let kinds = if depth == 0 { 5 } else { 7 };
+    match rng.below(kinds) {
+        0 => AttentionSpec::full(),
+        1 => AttentionSpec::local(rng.range(1, 9)).unwrap(),
+        2 => AttentionSpec::block_local(rng.range(1, 9)).unwrap(),
+        3 => AttentionSpec::strided(rng.range(1, 9)).unwrap(),
+        4 => AttentionSpec::routing(
+            (0..rng.range(1, 4))
+                .map(|_| (0..rng.below(4)).map(|_| rng.below(32)).collect())
+                .collect(),
+        ),
+        n => {
+            let parts = (0..rng.range(1, 4)).map(|_| random_spec(rng, depth - 1)).collect();
+            if n == 5 {
+                AttentionSpec::union(parts).unwrap()
+            } else {
+                AttentionSpec::intersect(parts).unwrap()
+            }
+        }
+    }
+}
+
+fn random_delta(rng: &mut Rng) -> AssignmentDelta {
+    let moved = (0..rng.below(5))
+        .map(|_| (rng.below(1 << 20), rng.below(256), rng.below(256)))
+        .collect();
+    AssignmentDelta {
+        counts: (0..rng.range(1, 6)).map(|_| rng.below(1 << 20)).collect(),
+        moved,
+        assigned: rng.below(1 << 20),
+    }
+}
+
+#[test]
+fn prop_wire_spec_and_delta_roundtrip() {
+    // Every spec family (plus Union/Intersect nesting) and every
+    // AssignmentDelta/RouteUpdate survives its wire JSON form exactly —
+    // the payloads the coordinator ships in `spec` installs and `delta`
+    // broadcasts.
+    check("wire_roundtrip", 150, |rng| {
+        let spec = random_spec(rng, 1);
+        let back = AttentionSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec, "spec -> json -> spec must be identity");
+        let delta = random_delta(rng);
+        assert_eq!(AssignmentDelta::from_json(&delta.to_json()).unwrap(), delta);
+        let upd = RouteUpdate {
+            epoch: rng.next_u64() >> 12,
+            assignment_epoch: rng.next_u64() >> 12,
+            delta: random_delta(rng),
+        };
+        assert_eq!(RouteUpdate::from_json(&upd.to_json()).unwrap(), upd);
+    });
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let kinds = if depth == 0 { 4 } else { 6 };
+    match rng.below(kinds) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num(rng.normal()),
+        3 => Json::Str((0..rng.below(12)).map(|_| char::from(rng.range(32, 127) as u8)).collect()),
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_frame_roundtrip() {
+    // Arbitrary JSON values survive the length-prefixed frame layer:
+    // every frame reads back equal, a clean EOF lands exactly on the
+    // frame boundary, and a truncated tail is an error — never a
+    // silently short read.
+    check("frame_roundtrip", 100, |rng| {
+        let msgs: Vec<Json> = (0..rng.range(1, 6)).map(|_| random_json(rng, 2)).collect();
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let cut = rng.range(1, buf.len());
+        let mut r = std::io::Cursor::new(buf.clone());
+        for m in &msgs {
+            assert_eq!(read_frame(&mut r).unwrap().expect("frame present"), *m);
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at the boundary");
+        let mut truncated = std::io::Cursor::new(buf[..cut].to_vec());
+        loop {
+            match read_frame(&mut truncated) {
+                Ok(Some(_)) => continue,
+                Ok(None) => break, // cut landed exactly on a frame boundary
+                Err(_) => break,   // mid-frame EOF must error
+            }
+        }
+    });
+}
+
+// ------------------------------------------- the model-based tentpole
+
+#[test]
+fn prop_coordinator_matches_single_process_model_under_faults() {
+    // Random op sequences with scheduled faults: the coordinated path
+    // must stay bit-identical to the single-process reference and keep
+    // its ledger conserved after arbitrary crash/rejoin interleavings.
+    check("coordinator_vs_model", 40, |rng| {
+        let backends = ["reference", "blocked", "simd"];
+        let cfg = CoordinatorConfig {
+            n: rng.range(8, 25),
+            d: rng.range(2, 5),
+            layers: rng.range(1, 3),
+            heads: 2,
+            window: rng.range(2, 7),
+            clusters: rng.range(2, 5),
+            top_w: rng.range(2, 7),
+            capacity: 2,
+            seed: rng.next_u64(),
+            backend: backends[rng.below(backends.len())].to_string(),
+            max_regrants: rng.range(1, 5) as u64,
+        };
+        let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
+        let mut model = RefModel::new(&cfg);
+        let mut expected_rows = 0u64;
+        let mut spawned: Vec<WorkerId> = Vec::new();
+        for _op in 0..rng.range(12, 22) {
+            match rng.below(10) {
+                0 => {
+                    if spawned.len() < 4 {
+                        spawned.push(coord.spawn_worker().unwrap());
+                    }
+                }
+                1 => {
+                    if let Some(&w) = pick(rng, &spawned) {
+                        coord.kill_worker(w);
+                        assert_eq!(coord.worker_state(w), Some(WorkerState::Crashed));
+                    }
+                }
+                2 => {
+                    let crashed: Vec<WorkerId> = spawned
+                        .iter()
+                        .copied()
+                        .filter(|&w| coord.worker_state(w) == Some(WorkerState::Crashed))
+                        .collect();
+                    if let Some(&w) = pick(rng, &crashed) {
+                        coord.rejoin_worker(w).unwrap();
+                        assert_eq!(coord.worker_state(w), Some(WorkerState::Joining));
+                    }
+                }
+                3 => {
+                    if let Some(&w) = pick(rng, &spawned) {
+                        let nth = rng.range(1, 4) as u64;
+                        let t = coord.transport_mut();
+                        match rng.below(4) {
+                            0 => t.inject_drop_next(w),
+                            1 => t.inject_duplicate_next(w),
+                            2 => t.inject_delay_next(w),
+                            _ => t.crash_on_nth_message(w, nth),
+                        }
+                    }
+                }
+                4..=5 => {
+                    let layer = rng.below(cfg.layers);
+                    let head = rng.below(cfg.heads);
+                    let xs = vecs(rng, cfg.n * cfg.d);
+                    let got = coord.update(layer, head, &xs, cfg.n).unwrap();
+                    let want = model.update(layer, head, &xs, cfg.n);
+                    assert_eq!(got, want, "RouteUpdate parity (same seed, same batch)");
+                }
+                6..=8 => {
+                    coord.mark_step();
+                    model.cache.mark_step();
+                    for _ in 0..rng.range(1, 4) {
+                        let q = vecs(rng, cfg.n * cfg.d);
+                        let k = vecs(rng, cfg.n * cfg.d);
+                        let v = vecs(rng, cfg.n * cfg.d);
+                        if rng.chance(0.4) {
+                            let (got, gc) = coord.static_attention(&q, &k, &v).unwrap();
+                            let (want, wc) = model.static_attention(&q, &k, &v);
+                            assert_bits_eq(&got, &want, "static output under faults");
+                            assert_eq!(gc, wc, "static MAC cost");
+                        } else {
+                            let layer = rng.below(cfg.layers);
+                            let head = rng.below(cfg.heads);
+                            let slot = rng.below(cfg.capacity);
+                            let xs = vecs(rng, cfg.n * cfg.d);
+                            let (got, gc) =
+                                coord.routed_attention(layer, head, slot, &xs, &q, &k, &v).unwrap();
+                            let (want, wc) =
+                                model.routed_attention(layer, head, slot, &xs, &q, &k, &v);
+                            assert_bits_eq(&got, &want, "routed output under faults");
+                            assert_eq!(gc, wc, "routed MAC cost");
+                        }
+                        expected_rows += cfg.n as u64;
+                    }
+                }
+                _ => {
+                    let slot = rng.below(cfg.capacity);
+                    if rng.chance(0.5) {
+                        coord.retire_slot(slot).unwrap();
+                        model.retire(slot);
+                    } else {
+                        let layer = rng.below(cfg.layers);
+                        let head = rng.below(cfg.heads);
+                        let got = coord.evict_slot(layer, head, slot).unwrap();
+                        let want = model.cache.evict_slot(RouteSlot { layer, head, seq: slot });
+                        assert_eq!(got, want, "evicted-bytes parity");
+                    }
+                }
+            }
+            let st = coord.stats();
+            assert!(st.conserved(), "ledger conservation at rest: {st:?}");
+            assert_eq!(
+                st.worker_rows + st.inline_rows,
+                expected_rows,
+                "every row-range completes exactly once: {st:?}"
+            );
+        }
+        coord.pump().unwrap();
+        let st = coord.stats();
+        assert!(st.conserved(), "final conservation: {st:?}");
+        assert_eq!(st.worker_rows + st.inline_rows, expected_rows);
+        assert!(
+            st.regrants <= st.superseded + st.voided,
+            "every re-grant follows a supersession or a void: {st:?}"
+        );
+        // routing-state counter parity: the coordinator replays the
+        // in-process call sequence exactly
+        assert_eq!(coord.cache_stats(), model.cache.stats(), "compile-cache counters");
+        assert_eq!(coord.epoch_stats(), model.cache.epoch_stats(), "epoch-cache counters");
+        assert_eq!(coord.regen_total(), model.regen_total(), "membership regen counters");
+        assert_eq!(coord.live_patterns(), model.cache.len(), "live compiles");
+        for &w in &spawned {
+            assert!(coord.worker_state(w).is_some(), "spawned workers never vanish");
+        }
+        coord.shutdown();
+        for &w in &spawned {
+            assert_eq!(coord.worker_state(w), Some(WorkerState::Crashed), "shutdown kills all");
+        }
+    });
+}
+
+#[test]
+fn prop_crash_mid_grant_regrants_exactly_once_and_rejoin_restores() {
+    // The scripted core of the fault story, across random shapes: a
+    // worker that crashes on receipt of its grant gets its row-range
+    // voided exactly once and re-granted to the survivor (outputs still
+    // bit-identical); a rejoin re-runs the full install handshake; with
+    // every worker dead the coordinator computes inline.
+    check("crash_rejoin_exactly_once", 60, |rng| {
+        let cfg = CoordinatorConfig {
+            n: rng.range(8, 21),
+            d: rng.range(2, 5),
+            layers: 1,
+            heads: 2,
+            window: rng.range(2, 5),
+            clusters: 2,
+            top_w: 4,
+            capacity: 2,
+            seed: rng.next_u64(),
+            backend: "reference".to_string(),
+            max_regrants: 8,
+        };
+        let n = cfg.n;
+        let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
+        let mut model = RefModel::new(&cfg);
+        let w0 = coord.spawn_worker().unwrap();
+        let w1 = coord.spawn_worker().unwrap();
+        let q = vecs(rng, cfg.n * cfg.d);
+        let k = vecs(rng, cfg.n * cfg.d);
+        let v = vecs(rng, cfg.n * cfg.d);
+
+        // 1: both workers compute; nothing inline
+        let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+        let (want, _) = model.static_attention(&q, &k, &v);
+        assert_bits_eq(&got, &want, "two healthy workers");
+        let st = coord.stats();
+        assert_eq!(st.joins, 2);
+        assert_eq!(st.worker_rows, n as u64, "all rows computed on workers");
+        assert_eq!(st.inline_rows, 0);
+        assert!(st.conserved());
+
+        // 2: w0 crashes the moment its next grant arrives
+        coord.transport_mut().crash_on_nth_message(w0, 1);
+        let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+        assert_bits_eq(&got, &want, "crash mid-grant");
+        let st = coord.stats();
+        assert_eq!(st.crashes, 1);
+        assert_eq!(st.voided, 1, "the crashed worker's grant voided exactly once");
+        assert_eq!(st.regrants, 1, "its row-range re-granted to the survivor");
+        assert_eq!(st.worker_rows, 2 * n as u64, "the survivor picked the rows up");
+        assert_eq!(st.inline_rows, 0);
+        assert!(st.conserved());
+        assert_eq!(coord.worker_state(w0), Some(WorkerState::Crashed));
+        assert_eq!(coord.transport_mut().faults().forced_crashes, 1);
+
+        // 3: rejoin re-runs the install handshake; both grantable again
+        coord.rejoin_worker(w0).unwrap();
+        coord.pump().unwrap();
+        assert_eq!(coord.worker_state(w0), Some(WorkerState::Ready));
+        assert_eq!(coord.stats().rejoins, 1);
+        assert_eq!(coord.stats().joins, 3, "a rejoin is a fresh join handshake");
+        let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+        assert_bits_eq(&got, &want, "after rejoin");
+        let st = coord.stats();
+        assert_eq!(st.worker_rows, 3 * n as u64);
+        assert_eq!(st.inline_rows, 0);
+
+        // 4: every worker dead -> inline fallback, still bit-identical
+        coord.kill_worker(w0);
+        coord.kill_worker(w1);
+        let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+        assert_bits_eq(&got, &want, "all workers dead");
+        let st = coord.stats();
+        assert_eq!(st.inline_rows, n as u64, "orphaned call computed inline");
+        assert_eq!(st.worker_rows, 3 * n as u64);
+        assert!(st.conserved());
+        coord.shutdown();
+    });
+}
+
+#[test]
+fn prop_dropped_grant_supersedes_and_stale_replies_are_rejected() {
+    // A dropped grant leaves the transport quiet: the coordinator
+    // supersedes the outstanding grant and re-grants; a delayed reply
+    // arriving after its epoch moved is rejected as stale, and a
+    // duplicated reply at the current epoch is rejected as a duplicate —
+    // in every case rows land exactly once.
+    check("drop_delay_duplicate", 60, |rng| {
+        let cfg = CoordinatorConfig {
+            n: rng.range(8, 17),
+            d: 3,
+            layers: 1,
+            heads: 2,
+            window: 3,
+            clusters: 2,
+            top_w: 4,
+            capacity: 2,
+            seed: rng.next_u64(),
+            backend: "reference".to_string(),
+            max_regrants: 8,
+        };
+        let n = cfg.n as u64;
+        let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
+        let mut model = RefModel::new(&cfg);
+        let w0 = coord.spawn_worker().unwrap();
+        let q = vecs(rng, cfg.n * cfg.d);
+        let k = vecs(rng, cfg.n * cfg.d);
+        let v = vecs(rng, cfg.n * cfg.d);
+        coord.pump().unwrap();
+        assert_eq!(coord.worker_state(w0), Some(WorkerState::Ready));
+
+        // dropped grant: quiet transport -> supersede -> re-grant works
+        coord.transport_mut().inject_drop_next(w0);
+        let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+        let (want, _) = model.static_attention(&q, &k, &v);
+        assert_bits_eq(&got, &want, "dropped grant");
+        let st = coord.stats();
+        assert_eq!(st.superseded, 1, "the lost grant was superseded exactly once");
+        assert_eq!(st.regrants, 1);
+        assert_eq!(st.worker_rows + st.inline_rows, n, "rows land exactly once");
+        assert!(st.conserved());
+        assert_eq!(coord.transport_mut().faults().dropped, 1);
+
+        // duplicated reply: the second copy has no outstanding grant and
+        // is rejected (duplicate at the current epoch, or stale if an
+        // update moved the epoch before it surfaced)
+        coord.transport_mut().inject_duplicate_next(w0);
+        let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+        assert_bits_eq(&got, &want, "duplicated reply");
+        coord.pump().unwrap();
+        let st = coord.stats();
+        assert_eq!(
+            st.rejected_duplicate + st.rejected_stale_epoch,
+            1,
+            "the duplicate was rejected, not double-written: {st:?}"
+        );
+        assert_eq!(st.worker_rows + st.inline_rows, 2 * n, "no double-counted rows");
+        assert!(st.conserved());
+        coord.shutdown();
+    });
+}
+
+// -------------------------------------- coordinated serve ≡ in-process
+
+#[test]
+fn prop_serve_coordinated_matches_in_process_bit_for_bit() {
+    // The whole-loop contract behind `rtx serve --workers N`: the
+    // coordinator-backed serve loop produces the same output digest, the
+    // same outcome ledger, and the same cache/epoch/regen counters as
+    // the in-process loop — even with faults scheduled mid-run.
+    check("serve_coordinated", 12, |rng| {
+        let opts = ServeOptions {
+            n: rng.range(12, 21),
+            d: 3,
+            layers: rng.range(1, 3),
+            heads: 2,
+            window: 3,
+            clusters: 2,
+            top_w: 4,
+            workers: 2,
+            capacity: 2,
+            route_every: rng.range(1, 4) as u64,
+            arrivals: ArrivalConfig {
+                requests: rng.range(4, 9),
+                rate: 1.0,
+                contents: 4,
+                zipf_s: 1.1,
+                work: (1, 4),
+                slack: (4, 16),
+                seed: rng.next_u64(),
+            },
+            seed: rng.next_u64(),
+            ..ServeOptions::default()
+        };
+        let backend = backend::lookup("reference").unwrap();
+        let baseline = run_serve(&opts, &*backend).unwrap();
+
+        let cfg = CoordinatorConfig {
+            n: opts.n,
+            d: opts.d,
+            layers: opts.layers,
+            heads: opts.heads,
+            window: opts.window,
+            clusters: opts.clusters,
+            top_w: opts.top_w,
+            capacity: opts.capacity,
+            seed: opts.seed,
+            backend: "reference".to_string(),
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(cfg, SimTransport::new()).unwrap();
+        let w0 = coord.spawn_worker().unwrap();
+        let w1 = coord.spawn_worker().unwrap();
+        // schedule faults before the run: a dropped frame, a delayed
+        // reply, and a mid-run crash of one worker
+        coord.transport_mut().inject_drop_next(w0);
+        coord.transport_mut().inject_delay_next(w1);
+        coord.transport_mut().crash_on_nth_message(w1, rng.range(2, 20) as u64);
+        let got = run_serve_coordinated(&opts, &mut coord).unwrap();
+        coord.shutdown();
+
+        assert_eq!(got.output_digest, baseline.output_digest, "bit-identical attention bytes");
+        assert_eq!(got.stats, baseline.stats, "request-lifecycle counters");
+        assert_eq!(got.outcomes, baseline.outcomes, "outcome ledger, exact order");
+        assert_eq!(got.batched_rows, baseline.batched_rows);
+        assert_eq!(got.macs, baseline.macs);
+        assert_eq!(got.virtual_steps, baseline.virtual_steps);
+        assert_eq!(got.cache, baseline.cache, "compile-cache counters");
+        assert_eq!(got.epoch, baseline.epoch, "epoch-cache counters");
+        assert_eq!(got.regen, baseline.regen, "membership regen counters");
+        assert_eq!(got.live_patterns_after_gc, baseline.live_patterns_after_gc);
+        assert_eq!(got.peak_pattern_bytes, baseline.peak_pattern_bytes);
+        assert_eq!(got.pattern_bytes_resident, baseline.pattern_bytes_resident);
+        assert_eq!(got.pattern_bytes_evicted, baseline.pattern_bytes_evicted);
+        assert_eq!(got.gc_bytes_reclaimed, baseline.gc_bytes_reclaimed);
+        assert_eq!(baseline.worker_procs, 0);
+        assert_eq!(got.worker_procs, 2);
+        let co = got.coord.expect("coordinated run reports its ledger");
+        assert!(co.conserved(), "serve-loop ledger conserved: {co:?}");
+    });
+}
+
+// ----------------------------------------------- real child processes
+
+#[test]
+fn process_transport_runs_real_workers_bit_identically() {
+    // End to end over OS pipes: spawn two real `rtx worker` subprocesses
+    // (the binary under test, via CARGO_BIN_EXE_rtx), split static and
+    // routed sweeps across them, kill one child, and verify outputs stay
+    // bit-identical to the single-process reference throughout.
+    let exe = env!("CARGO_BIN_EXE_rtx");
+    let mut transport = ProcessTransport::new(exe);
+    transport.set_poll_timeout(Duration::from_secs(60));
+    let cfg = CoordinatorConfig {
+        n: 32,
+        d: 4,
+        layers: 1,
+        heads: 2,
+        window: 4,
+        clusters: 2,
+        top_w: 8,
+        capacity: 2,
+        seed: 42,
+        backend: "reference".to_string(),
+        max_regrants: 8,
+    };
+    let mut coord = Coordinator::new(cfg.clone(), transport).unwrap();
+    let mut model = RefModel::new(&cfg);
+    let w0 = coord.spawn_worker().unwrap();
+    let w1 = coord.spawn_worker().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while coord.worker_state(w0) != Some(WorkerState::Ready)
+        || coord.worker_state(w1) != Some(WorkerState::Ready)
+    {
+        coord.pump().unwrap();
+        assert!(Instant::now() < deadline, "workers failed to join within 60s");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let mut rng = Rng::new(0xFEED);
+    let q = vecs(&mut rng, cfg.n * cfg.d);
+    let k = vecs(&mut rng, cfg.n * cfg.d);
+    let v = vecs(&mut rng, cfg.n * cfg.d);
+
+    let (got, cost) = coord.static_attention(&q, &k, &v).unwrap();
+    let (want, wcost) = model.static_attention(&q, &k, &v);
+    assert_bits_eq(&got, &want, "static sweep over real subprocesses");
+    assert_eq!(cost, wcost);
+
+    let xs = vecs(&mut rng, cfg.n * cfg.d);
+    let got_u = coord.update(0, 1, &xs, cfg.n).unwrap();
+    let want_u = model.update(0, 1, &xs, cfg.n);
+    assert_eq!(got_u, want_u, "RouteUpdate parity over the wire");
+    let (got, cost) = coord.routed_attention(0, 1, 0, &xs, &q, &k, &v).unwrap();
+    let (want, wcost) = model.routed_attention(0, 1, 0, &xs, &q, &k, &v);
+    assert_bits_eq(&got, &want, "routed sweep over real subprocesses");
+    assert_eq!(cost, wcost);
+
+    let st = coord.stats();
+    assert!(st.conserved(), "{st:?}");
+    assert_eq!(st.joins, 2);
+    assert_eq!(st.worker_rows, 2 * cfg.n as u64, "both sweeps ran on the children");
+    assert_eq!(st.inline_rows, 0);
+
+    // kill one real child; the survivor (or inline fallback) covers
+    coord.kill_worker(w0);
+    let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+    let (want, _) = model.static_attention(&q, &k, &v);
+    assert_bits_eq(&got, &want, "after killing one child process");
+    let st = coord.stats();
+    assert!(st.conserved(), "{st:?}");
+    assert_eq!(st.worker_rows + st.inline_rows, 3 * cfg.n as u64, "rows land exactly once");
+    assert!(st.crashes >= 1);
+    coord.shutdown();
+}
+
+// --------------------------------------------------- harness self-check
+
+#[test]
+fn regression_seed_files_are_well_formed() {
+    // Every non-comment line in every checked-in regression file must
+    // parse as `<property> 0x<seed>` — a malformed line would silently
+    // skip replay.
+    for (file, text) in [
+        ("coordinator", REGRESSIONS),
+        ("proptests", include_str!("../proptest-regressions/proptests.txt")),
+        ("stateful", include_str!("../proptest-regressions/stateful.txt")),
+    ] {
+        let content_lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .count();
+        let parsed = common::parse_seeds(text);
+        assert_eq!(
+            parsed.len(),
+            content_lines,
+            "every non-comment line in proptest-regressions/{file}.txt must parse"
+        );
+        assert!(!parsed.is_empty(), "{file}.txt should keep its anchor seeds");
+    }
+}

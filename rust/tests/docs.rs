@@ -128,8 +128,8 @@ fn docs_exist_and_are_cross_linked() {
         "ARCHITECTURE.md must document the band compile entry point"
     );
     assert!(
-        ARCHITECTURE.contains("\"schema\": 4"),
-        "ARCHITECTURE.md must document the schema-4 --json line"
+        ARCHITECTURE.contains("\"schema\": 5"),
+        "ARCHITECTURE.md must document the schema-5 --json line"
     );
     // the exactness contract ships with docs: which backend declares
     // what, and the simd fast-math tier that motivates the Ulps budget
@@ -156,5 +156,34 @@ fn docs_exist_and_are_cross_linked() {
     assert!(
         README.contains("--render-rows"),
         "README.md must document the figure1 render clip flag"
+    );
+    // the multi-process coordinator ships with docs: the worker
+    // subcommand, the process-count flag (and its rename of the old
+    // intra-process chunking flag to --shards), the wire frame format,
+    // the worker state machine, and the fault model the coordinator
+    // suite pins
+    assert!(
+        ARCHITECTURE.contains("Multi-process coordination"),
+        "ARCHITECTURE.md must document the coordinator layer"
+    );
+    assert!(
+        ARCHITECTURE.contains("length-prefixed") && ARCHITECTURE.contains("big-endian"),
+        "ARCHITECTURE.md must document the wire frame format"
+    );
+    assert!(
+        ARCHITECTURE.contains("Joining") && ARCHITECTURE.contains("Crashed"),
+        "ARCHITECTURE.md must document the worker state machine"
+    );
+    assert!(
+        ARCHITECTURE.contains("output_digest"),
+        "ARCHITECTURE.md must document the bit-identity digest anchor"
+    );
+    assert!(
+        README.contains("rtx worker"),
+        "README.md must document the worker subcommand"
+    );
+    assert!(
+        README.contains("--workers") && README.contains("--shards"),
+        "README.md must document the process-count and shard-count flags"
     );
 }

@@ -1,8 +1,10 @@
 //! Property-based tests over the coordinator substrates.
 //!
-//! The offline environment ships no `proptest`, so this file includes a
-//! small hand-rolled property harness (`check`): each property runs over
-//! hundreds of seeded random cases and reports the failing seed for
+//! The offline environment ships no `proptest`, so this file uses the
+//! small hand-rolled property harness in `tests/common/mod.rs`: each
+//! property replays the shrink seeds checked in under
+//! `proptest-regressions/proptests.txt`, then runs over hundreds of
+//! fresh seeded cases, reporting (and persisting) the failing seed for
 //! shrink-by-hand reproduction.  Invariants covered: compiled attention
 //! patterns (agreement with a naive reference oracle on `allowed`/`nnz`,
 //! causality, row sortedness, spec JSON round-trips), routing membership,
@@ -33,16 +35,15 @@ use routing_transformer::tokenizer::{Bpe, ByteTokenizer, Tokenizer, WordVocab};
 use routing_transformer::util::json::Json;
 use routing_transformer::util::rng::Rng;
 
-/// Run `f` over `n` seeded cases; panic with the failing seed.
+mod common;
+
+/// Shrink seeds persisted from previous failures; replayed before the sweep.
+const REGRESSIONS: &str = include_str!("../proptest-regressions/proptests.txt");
+
+/// Run `f` over the recorded regression seeds, then `n` fresh seeded
+/// cases; panic with the failing seed (persisting new failures).
 fn check<F: Fn(&mut Rng)>(name: &str, n: usize, f: F) {
-    for case in 0..n {
-        let seed = 0x5EED_0000 + case as u64;
-        let mut rng = Rng::new(seed);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
-        if let Err(e) = result {
-            panic!("property '{name}' failed at seed {seed:#x}: {e:?}");
-        }
-    }
+    common::check_with_regressions("proptests", REGRESSIONS, name, n, 0x5EED_0000, f);
 }
 
 // ------------------------------------------------------------- routing

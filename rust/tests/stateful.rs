@@ -24,6 +24,10 @@
 //!   deadline sheds, retirement GC) agrees with a naive mirror on every
 //!   step's batch, every outcome, and every counter — including the
 //!   `EpochCache` evictions its retirement GC fires, and
+//! * a request whose step's attention runs through a
+//!   `Coordinator<SimTransport>` with workers crashing mid-step still
+//!   resolves exactly once, bit-identical to the inline reference, with
+//!   the coordinator's grant ledger conserved throughout, and
 //! * the byte-budgeted `EpochCache` agrees with a naive mirror of the
 //!   documented spill policy: inserts charge the shared `MemoryBudget`
 //!   and spill least-recently-used routed slots in deterministic tick
@@ -32,8 +36,12 @@
 //!   budget only while everything left is protected (the soft cap).
 //!
 //! The offline environment ships no `proptest`, so this reuses the
-//! hand-rolled seeded-case harness from `tests/proptests.rs`: every
-//! property runs ≥ 64 seeded random cases and reports the failing seed.
+//! hand-rolled seeded-case harness from `tests/common/mod.rs`: every
+//! property runs ≥ 64 seeded random cases, replays the shrink seeds
+//! checked in under `proptest-regressions/stateful.txt` first, and
+//! reports (and persists) the failing seed.
+
+mod common;
 
 use std::cell::Cell;
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
@@ -41,23 +49,21 @@ use std::sync::Arc;
 
 use routing_transformer::attention::{
     assert_outputs_match, sparse_attention, AttentionSpec, Backend, BatchEntry, BatchedAttention,
-    Blocked, CompiledPattern, EpochCache, Exactness, Execution, MemberCache, MemoryBudget,
-    OutcomeKind, Reference, RequestOutcome, Retired, RouteSlot, RoutingSession, Scheduler,
-    ServeRequest, ServeStats, ShardedPattern, Simd, Submission, WorkerPool,
+    Blocked, CompiledPattern, Coordinator, CoordinatorConfig, EpochCache, Exactness, Execution,
+    MemberCache, MemoryBudget, OutcomeKind, Reference, RequestOutcome, Retired, RouteSlot,
+    RoutingSession, Scheduler, ServeRequest, ServeStats, ShardedPattern, Simd, SimTransport,
+    Submission, WorkerPool, WorkerState,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
 
-/// Run `f` over `n` seeded cases; panic with the failing seed.
+/// Shrink seeds persisted from previous failures; replayed before the sweep.
+const REGRESSIONS: &str = include_str!("../proptest-regressions/stateful.txt");
+
+/// Run `f` over the recorded regression seeds, then `n` fresh seeded
+/// cases; panic with the failing seed (persisting new failures).
 fn check<F: Fn(&mut Rng)>(name: &str, n: usize, f: F) {
-    for case in 0..n {
-        let seed = 0x57A7_0000 + case as u64;
-        let mut rng = Rng::new(seed);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
-        if let Err(e) = result {
-            panic!("stateful property '{name}' failed at seed {seed:#x}: {e:?}");
-        }
-    }
+    common::check_with_regressions("stateful", REGRESSIONS, name, n, 0x57A7_0000, f);
 }
 
 // ------------------------------------------------------ reference model
@@ -1072,5 +1078,114 @@ fn prop_budgeted_epoch_cache_matches_lru_spill_model() {
         );
         drop(cache);
         assert_eq!(budget.resident(), 0, "dropping the cache returns every charged byte");
+    });
+}
+
+// --------------------------------------------------------- property 9
+
+#[test]
+fn prop_scheduler_crash_during_step_resolves_exactly_once() {
+    // The serve-layer crash story: decode steps run their attention
+    // through a `Coordinator<SimTransport>` whose workers die (and
+    // rejoin) mid-step.  The scheduler must still resolve every
+    // submitted request exactly once, every attention output must stay
+    // bit-identical to the inline reference, and the coordinator's grant
+    // ledger must conserve through every crash — no row computed twice,
+    // none lost.
+    check("scheduler_crash_during_step", 48, |rng| {
+        const REQUESTS: u64 = 8;
+        let cfg = CoordinatorConfig {
+            n: rng.range(8, 17),
+            d: 3,
+            layers: LAYERS,
+            heads: HEADS,
+            window: 3,
+            clusters: 2,
+            top_w: 4,
+            capacity: rng.range(1, 4),
+            seed: rng.next_u64(),
+            backend: "reference".to_string(),
+            max_regrants: 4,
+        };
+        let static_pattern = AttentionSpec::local(cfg.window).unwrap().compile(cfg.n);
+        let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
+        let workers = [coord.spawn_worker().unwrap(), coord.spawn_worker().unwrap()];
+        let mut sched = Scheduler::new(cfg.capacity, LAYERS, HEADS).unwrap();
+        let mut next_id = 0u64;
+        let mut expected_rows = 0u64;
+        let mut steps = 0u64;
+        loop {
+            if next_id < REQUESTS && (sched.is_idle() || rng.chance(0.6)) {
+                let req = ServeRequest {
+                    id: next_id,
+                    content: rng.below(4),
+                    arrival: sched.now(),
+                    work: rng.range(1, 4) as u64,
+                    deadline: sched.now() + rng.range(2, 12) as u64,
+                };
+                next_id += 1;
+                let _ = sched.submit(req);
+            }
+            if next_id >= REQUESTS && sched.is_idle() {
+                break;
+            }
+            let plan = sched.begin_step();
+            coord.mark_step();
+            if rng.chance(0.3) {
+                // schedule a mid-step crash: the next grant (or install)
+                // sent to this worker kills it before processing
+                let alive: Vec<usize> = workers
+                    .iter()
+                    .copied()
+                    .filter(|&w| coord.worker_state(w) != Some(WorkerState::Crashed))
+                    .collect();
+                if !alive.is_empty() {
+                    let w = alive[rng.below(alive.len())];
+                    let nth = rng.range(1, 3) as u64;
+                    coord.transport_mut().crash_on_nth_message(w, nth);
+                }
+            }
+            for _e in &plan.batch {
+                let q: Vec<f32> = (0..cfg.n * cfg.d).map(|_| rng.normal() as f32).collect();
+                let k: Vec<f32> = (0..cfg.n * cfg.d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..cfg.n * cfg.d).map(|_| rng.normal() as f32).collect();
+                let (got, _) = coord.static_attention(&q, &k, &v).unwrap();
+                let want = Reference.attention(&q, &k, &v, cfg.d, &static_pattern).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "value {i} differs under mid-step crashes ({g} vs {w})"
+                    );
+                }
+                expected_rows += cfg.n as u64;
+            }
+            let _fin = sched.finish_step(coord.cache_mut());
+            for &w in &workers {
+                if coord.worker_state(w) == Some(WorkerState::Crashed) && rng.chance(0.7) {
+                    coord.rejoin_worker(w).unwrap();
+                }
+            }
+            let st = coord.stats();
+            assert!(st.conserved(), "ledger conservation after step: {st:?}");
+            assert_eq!(
+                st.worker_rows + st.inline_rows,
+                expected_rows,
+                "every batch row computed exactly once: {st:?}"
+            );
+            steps += 1;
+            assert!(steps < 512, "drain must terminate");
+        }
+        assert_eq!(sched.stats().submitted, next_id);
+        assert_eq!(
+            sched.stats().resolved(),
+            next_id,
+            "every request reaches exactly one terminal state despite crashes"
+        );
+        let mut ids: Vec<u64> = sched.outcomes().iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..next_id).collect::<Vec<_>>(), "each id exactly once in the ledger");
+        coord.shutdown();
     });
 }

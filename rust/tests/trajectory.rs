@@ -1,0 +1,295 @@
+//! Schema validation for the persisted serve-perf trajectory.
+//!
+//! `BENCH_serve.json` (repository root) is a JSONL file: every CI run of
+//! the `rust-host` job appends one `rtx serve --json` line, so the file
+//! accumulates lines written by *different commits* — and therefore by
+//! different schema versions.  This suite `include_str!`s the file so
+//! the trajectory is validated at test time on every commit: each line
+//! must parse as JSON and satisfy the field contract of the schema
+//! version it declares (1 through the current version 5, per the schema
+//! history in ARCHITECTURE.md):
+//!
+//! - all versions: config echo, request ledger, time accounting, step
+//!   latency percentiles, throughput, and the `cache`/`epoch`/`regen`
+//!   sub-objects;
+//! - schema >= 3: byte accounting (`cache.bytes_resident`/`_evicted`,
+//!   `peak_pattern_bytes` family, `band_compiles`, `gc_bytes_reclaimed`);
+//! - schema >= 4: exactness contract (`backend` + `exactness` strings);
+//! - schema >= 5: multi-process fields (`worker_procs`, `output_digest`
+//!   as a 16-hex-digit string, and — iff `worker_procs > 0` — a `coord`
+//!   object whose ledger conserves: grants == accepted + superseded +
+//!   voided, regrants <= superseded + voided).
+//!
+//! The file is seeded with one zeroed schema-5 line so the parser always
+//! has at least one line to chew on (a 0-byte trajectory would make
+//! every consumer's "parse each line" loop vacuously green).
+
+use routing_transformer::util::json::Json;
+
+/// Mirrors `JSON_SCHEMA_VERSION` in `src/main.rs` (a binary-only const,
+/// so the test pins its own copy; `docs.rs` anchors the prose history).
+const MAX_SCHEMA: i64 = 5;
+
+const TRAJECTORY: &str = include_str!("../../BENCH_serve.json");
+
+/// Fetch `key` from an object, panicking with line context.
+fn field<'a>(line_no: usize, obj: &'a Json, key: &str) -> &'a Json {
+    obj.get(key)
+        .unwrap_or_else(|| panic!("line {line_no}: missing field {key:?}"))
+}
+
+fn num(line_no: usize, obj: &Json, key: &str) -> f64 {
+    field(line_no, obj, key)
+        .as_f64()
+        .unwrap_or_else(|| panic!("line {line_no}: field {key:?} is not a number"))
+}
+
+/// A counter: a number that is finite and >= 0.
+fn counter(line_no: usize, obj: &Json, key: &str) -> f64 {
+    let v = num(line_no, obj, key);
+    assert!(
+        v.is_finite() && v >= 0.0,
+        "line {line_no}: counter {key:?} = {v} is not a finite non-negative number"
+    );
+    v
+}
+
+fn str_field<'a>(line_no: usize, obj: &'a Json, key: &str) -> &'a str {
+    field(line_no, obj, key)
+        .as_str()
+        .unwrap_or_else(|| panic!("line {line_no}: field {key:?} is not a string"))
+}
+
+/// A `[lo, hi]` pair with lo <= hi.
+fn pair(line_no: usize, obj: &Json, key: &str) {
+    let arr = field(line_no, obj, key)
+        .as_arr()
+        .unwrap_or_else(|| panic!("line {line_no}: field {key:?} is not an array"));
+    assert_eq!(arr.len(), 2, "line {line_no}: {key:?} must be [lo, hi]");
+    let lo = arr[0].as_f64().expect("lo is a number");
+    let hi = arr[1].as_f64().expect("hi is a number");
+    assert!(lo <= hi, "line {line_no}: {key:?} = [{lo}, {hi}] has lo > hi");
+}
+
+/// Validate one trajectory line against the schema version it declares.
+fn check_line(line_no: usize, line: &Json) {
+    assert_eq!(
+        str_field(line_no, line, "bench"),
+        "serve",
+        "line {line_no}: trajectory lines must be `rtx serve` lines"
+    );
+    let schema = field(line_no, line, "schema")
+        .as_i64()
+        .unwrap_or_else(|| panic!("line {line_no}: schema is not an integer"));
+    assert!(
+        (1..=MAX_SCHEMA).contains(&schema),
+        "line {line_no}: schema {schema} outside 1..={MAX_SCHEMA} — bump MAX_SCHEMA \
+         (and this suite's per-version checks) together with JSON_SCHEMA_VERSION"
+    );
+
+    // Config echo (all versions).
+    for key in [
+        "n",
+        "d",
+        "heads",
+        "layers",
+        "window",
+        "clusters",
+        "capacity",
+        "workers",
+        "route_every",
+        "requests",
+        "contents",
+        "seed",
+    ] {
+        counter(line_no, line, key);
+    }
+    counter(line_no, line, "rate");
+    counter(line_no, line, "zipf_s");
+    pair(line_no, line, "work");
+    pair(line_no, line, "slack");
+
+    // Request ledger: every submitted request reaches exactly one
+    // terminal state (the `ServeStats` contract), completions were
+    // admitted first, and rejected/admitted are disjoint populations.
+    let submitted = counter(line_no, line, "submitted");
+    let admitted = counter(line_no, line, "admitted");
+    let completed = counter(line_no, line, "completed");
+    let rejected = counter(line_no, line, "rejected");
+    let shed = counter(line_no, line, "shed");
+    counter(line_no, line, "peak_active");
+    let rate = num(line_no, line, "completion_rate");
+    assert!(
+        (0.0..=1.0).contains(&rate),
+        "line {line_no}: completion_rate {rate} outside [0, 1]"
+    );
+    assert_eq!(
+        completed + rejected + shed,
+        submitted,
+        "line {line_no}: terminal states do not partition submitted"
+    );
+    assert!(
+        completed <= admitted,
+        "line {line_no}: more completions than admissions"
+    );
+    assert!(
+        admitted + rejected <= submitted,
+        "line {line_no}: admitted + rejected exceeds submitted"
+    );
+
+    // Time accounting + latency histogram + throughput (all versions).
+    for key in [
+        "virtual_steps",
+        "steps",
+        "idle_steps",
+        "fast_forwarded",
+        "p50_step_us",
+        "p99_step_us",
+        "mean_step_us",
+        "batched_rows",
+        "rows_per_sec",
+        "macs_per_sec",
+        "elapsed_sec",
+        "gc_evictions",
+        "live_patterns_after_gc",
+    ] {
+        counter(line_no, line, key);
+    }
+
+    // Sub-objects (all versions).
+    let cache = field(line_no, line, "cache");
+    for key in ["hits", "misses", "evictions"] {
+        counter(line_no, cache, key);
+    }
+    let epoch = field(line_no, line, "epoch");
+    for key in ["hits", "misses", "unchanged", "hit_rate"] {
+        counter(line_no, epoch, key);
+    }
+    let regen = field(line_no, line, "regen");
+    for key in ["regenerated", "reused", "full_rebuilds", "reuse_rate"] {
+        counter(line_no, regen, key);
+    }
+
+    // Schema 3: byte accounting.
+    if schema >= 3 {
+        counter(line_no, cache, "bytes_resident");
+        counter(line_no, cache, "bytes_evicted");
+        for key in [
+            "max_pattern_bytes",
+            "band_rows",
+            "peak_pattern_bytes",
+            "pattern_bytes_resident",
+            "pattern_bytes_evicted",
+            "band_compiles",
+            "gc_bytes_reclaimed",
+        ] {
+            counter(line_no, line, key);
+        }
+    }
+
+    // Schema 4: exactness contract.
+    if schema >= 4 {
+        assert!(
+            !str_field(line_no, line, "backend").is_empty(),
+            "line {line_no}: empty backend name"
+        );
+        let exactness = str_field(line_no, line, "exactness");
+        assert!(
+            exactness == "bitwise" || (exactness.starts_with("ulps(") && exactness.ends_with(')')),
+            "line {line_no}: exactness {exactness:?} is neither \"bitwise\" nor \"ulps(k)\""
+        );
+    }
+
+    // Schema 5: multi-process coordination.
+    if schema >= 5 {
+        let worker_procs = counter(line_no, line, "worker_procs");
+        let digest = str_field(line_no, line, "output_digest");
+        assert!(
+            digest.len() == 16 && digest.bytes().all(|b| b.is_ascii_hexdigit()),
+            "line {line_no}: output_digest {digest:?} is not 16 hex digits"
+        );
+        let coord = line.get("coord");
+        assert_eq!(
+            coord.is_some(),
+            worker_procs > 0.0,
+            "line {line_no}: `coord` must be present iff worker_procs > 0"
+        );
+        if let Some(coord) = coord {
+            for key in [
+                "joins",
+                "rejoins",
+                "crashes",
+                "rejected_stale_epoch",
+                "rejected_duplicate",
+                "nacks",
+                "spec_installs",
+                "delta_broadcasts",
+                "evict_broadcasts",
+            ] {
+                counter(line_no, coord, key);
+            }
+            let grants = counter(line_no, coord, "grants");
+            let accepted = counter(line_no, coord, "accepted");
+            let superseded = counter(line_no, coord, "superseded");
+            let voided = counter(line_no, coord, "voided");
+            let regrants = counter(line_no, coord, "regrants");
+            assert_eq!(
+                accepted + superseded + voided,
+                grants,
+                "line {line_no}: coord ledger does not conserve"
+            );
+            assert!(
+                regrants <= superseded + voided,
+                "line {line_no}: regrants exceed superseded + voided"
+            );
+            counter(line_no, coord, "worker_rows");
+            counter(line_no, coord, "inline_rows");
+        }
+    }
+}
+
+/// Every line of the trajectory parses and satisfies its declared schema.
+#[test]
+fn every_trajectory_line_matches_its_declared_schema() {
+    let mut lines = 0usize;
+    for (idx, raw) in TRAJECTORY.lines().enumerate() {
+        let line_no = idx + 1;
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(raw)
+            .unwrap_or_else(|e| panic!("line {line_no}: invalid JSON: {e:?}"));
+        check_line(line_no, &parsed);
+        lines += 1;
+    }
+    assert!(
+        lines >= 1,
+        "BENCH_serve.json must keep its seed line — a 0-byte trajectory \
+         makes every per-line consumer vacuously green"
+    );
+}
+
+/// The seed line (line 1) is current-schema so a fresh checkout's
+/// trajectory already exercises the newest field contract, including
+/// the digest anchor the coordinated-serve CI smoke compares against.
+#[test]
+fn seed_line_is_current_schema_with_zeroed_metrics() {
+    let raw = TRAJECTORY
+        .lines()
+        .find(|l| !l.trim().is_empty())
+        .expect("trajectory has a first line");
+    let line = Json::parse(raw).expect("seed line parses");
+    assert_eq!(
+        field(1, &line, "schema").as_i64(),
+        Some(MAX_SCHEMA),
+        "seed line must declare the current schema"
+    );
+    assert_eq!(num(1, &line, "requests"), 0.0, "seed line is a zero-run");
+    assert_eq!(num(1, &line, "batched_rows"), 0.0);
+    assert_eq!(num(1, &line, "worker_procs"), 0.0);
+    assert_eq!(
+        str_field(1, &line, "output_digest"),
+        "0000000000000000",
+        "the hand-written seed line uses the all-zero digest sentinel"
+    );
+}
