@@ -1,6 +1,6 @@
 //! Complexity sweep — Section 4.1's O(n^1.5 d) claim.
 //!
-//! Twelve parts: (1) the analytic `AttentionSpec::flops_estimate` model
+//! Thirteen parts: (1) the analytic `AttentionSpec::flops_estimate` model
 //! swept over sequence length, showing the full/local/routing crossovers
 //! and that k* = √n minimizes routing cost; (2) measured host-side routing
 //! cost (k-means assign + top-w membership + pattern compile, the part the
@@ -43,7 +43,13 @@
 //! re-run through a 2-worker `Coordinator` over the in-memory
 //! `SimTransport` must be bit-identical (output digest + outcome ledger)
 //! with a conserved grant ledger; the protocol overhead is printed, not
-//! pinned (it is a BENCH_serve.json trajectory concern).
+//! pinned (it is a BENCH_serve.json trajectory concern);
+//! (13) quality vs nnz across the content-based spec families — on a
+//! skewed token layout, token-choice routing, expert-choice, and the
+//! score-threshold family are compared at matched nnz (JSD against full
+//! causal attention as the support-divergence proxy), and the pin is
+//! load balance: expert-choice's per-cluster capacity bound must keep a
+//! 2-way nnz-balanced shard split no more imbalanced than routing's.
 
 use std::sync::Arc;
 
@@ -54,7 +60,8 @@ use routing_transformer::attention::{
     MemoryBudget, PatternCache, Reference, RoutingSession, ServeOptions, Simd, SimTransport,
     WorkerPool,
 };
-use routing_transformer::kmeans::SphericalKMeans;
+use routing_transformer::analysis;
+use routing_transformer::kmeans::{dot, SphericalKMeans};
 use routing_transformer::util::rng::Rng;
 use routing_transformer::util::timing::{time_fn, Table};
 
@@ -648,6 +655,7 @@ fn main() {
         seed: opts.seed,
         backend: "blocked".to_string(),
         max_regrants: 8,
+        spec_family: opts.spec_family,
     };
     let mut coord = Coordinator::new(coord_cfg, SimTransport::new())
         .expect("valid coordinator config");
@@ -674,6 +682,104 @@ fn main() {
         co.inline_rows,
         co.grants,
         coordinated.output_digest
+    );
+
+    // quality vs nnz across the content-based spec families: a skewed
+    // token layout (70% of tokens collapse onto one dominant direction)
+    // drives token-choice routing, expert-choice, and the score-threshold
+    // family, each tuned to roughly the same nnz via its own knob
+    // (top-w / capacity / floor).  mean_pattern_jsd against full causal
+    // attention is the support-divergence-per-nnz proxy; the pin is load
+    // balance — expert-choice bounds every row by its capacity, so a
+    // 2-way nnz-balanced shard split of a B=4 batch must come out no
+    // more imbalanced than routing's on the same layout.
+    let n = 256usize;
+    let dim = 16usize;
+    let k = 8usize;
+    let w = 32usize;
+    let max_knob = 48usize; // caps the balancing granularity (max row nnz)
+    let mut rng = Rng::new(59);
+    let dominant: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let mut xs = Vec::with_capacity(n * dim);
+    for i in 0..n {
+        if i % 10 < 7 {
+            xs.extend(dominant.iter().map(|&v| v + 0.05 * rng.normal() as f32));
+        } else {
+            xs.extend((0..dim).map(|_| rng.normal() as f32));
+        }
+    }
+    let mut km = SphericalKMeans::new(k, dim, 0.5, 61);
+    for _ in 0..4 {
+        km.update(&xs, n);
+    }
+    let full = Arc::new(AttentionSpec::full().compile(n));
+    let routing = Arc::new(km.routing_spec(&xs, n, w).compile(n));
+    let target = routing.nnz();
+    let expert = (1..=max_knob)
+        .map(|cap| Arc::new(km.expert_choice_spec(&xs, n, cap).compile(n)))
+        .min_by_key(|p| p.nnz().abs_diff(target))
+        .unwrap();
+    let mut scores = vec![f32::NEG_INFINITY; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            scores[i * n + j] = dot(&xs[i * dim..(i + 1) * dim], &xs[j * dim..(j + 1) * dim]);
+        }
+    }
+    // an unreachable cut turns the floor into a per-row top-k by content
+    // score — the threshold family's nnz knob
+    let threshold = (1..=max_knob)
+        .map(|floor| {
+            Arc::new(
+                AttentionSpec::threshold_from_scores(&scores, n, f32::MAX, floor)
+                    .unwrap()
+                    .compile(n),
+            )
+        })
+        .min_by_key(|p| p.nnz().abs_diff(target))
+        .unwrap();
+
+    let shard_split = |p: &Arc<CompiledPattern>| -> (usize, usize) {
+        let batch =
+            BatchedAttention::new(vec![Arc::clone(p); 4], 2).expect("2-way split of a B=4 batch");
+        let nnz = batch.worker_nnz();
+        (*nnz.iter().max().unwrap(), *nnz.iter().min().unwrap())
+    };
+    println!("\nquality vs nnz at matched budgets (skewed layout, n={n}, k={k}):");
+    let mut table = Table::new(&[
+        "family", "nnz", "density", "jsd vs full", "max shard nnz", "min shard nnz",
+        "max cluster nnz",
+    ]);
+    let mut imbalance = Vec::new();
+    for (name, p) in
+        [("routing", &routing), ("expert-choice", &expert), ("threshold", &threshold)]
+    {
+        let (max_s, min_s) = shard_split(p);
+        imbalance.push(max_s as f64 / min_s.max(1) as f64);
+        table.row(&[
+            name.to_string(),
+            p.nnz().to_string(),
+            format!("{:.4}", p.density()),
+            format!("{:.4}", analysis::mean_pattern_jsd(p, &full)),
+            max_s.to_string(),
+            min_s.to_string(),
+            p.max_cluster_nnz().to_string(),
+        ]);
+        assert!(
+            p.nnz().abs_diff(target) * 10 <= target * 3,
+            "{name} nnz {} must land within 30% of routing's {target}",
+            p.nnz()
+        );
+    }
+    table.print();
+    let (routing_imb, expert_imb) = (imbalance[0], imbalance[1]);
+    println!(
+        "\nshard imbalance (max/min nnz, 2-way balanced split of a B=4 batch): \
+         routing {routing_imb:.4}, expert-choice {expert_imb:.4}"
+    );
+    assert!(
+        expert_imb <= routing_imb + 0.15,
+        "expert-choice's capacity bound must keep the shard split no more imbalanced \
+         than routing's on a skewed layout ({expert_imb:.4} vs {routing_imb:.4})"
     );
 
     println!("\nbench_complexity OK");

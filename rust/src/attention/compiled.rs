@@ -199,6 +199,23 @@ impl CompiledPattern {
         self.nnz() as u64
     }
 
+    /// Largest per-cluster entry count: the nnz of the busiest cluster's
+    /// attention block, ignoring unrouted ([`NO_CLUSTER`]) entries; 0 for
+    /// a pattern with no routed entries.  This is the load-balance
+    /// observable behind the expert-choice family — bounded by
+    /// `capacity·(capacity+1)/2` there, unbounded for token-choice
+    /// routing — surfaced as `max_cluster_nnz` in the serve `--json`
+    /// schema.
+    pub fn max_cluster_nnz(&self) -> usize {
+        let mut counts: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+        for &c in &self.cluster_ids {
+            if c != NO_CLUSTER {
+                *counts.entry(c).or_insert(0) += 1;
+            }
+        }
+        counts.into_values().max().unwrap_or(0)
+    }
+
     /// Every admitted key is causal (j <= i).  True by construction; kept
     /// as a checkable invariant for tests.
     pub fn is_causal(&self) -> bool {
@@ -602,6 +619,22 @@ mod tests {
         assert_eq!(p.cluster_of(7, 3), Some(1));
         assert_eq!(p.cluster_of(5, 3), None);
         assert!(p.is_causal());
+    }
+
+    #[test]
+    fn max_cluster_nnz_counts_the_busiest_cluster() {
+        // cluster 0 has 3 members (6 causal pairs), cluster 1 has 2 (3 pairs)
+        let p = AttentionSpec::routing(vec![vec![0, 2, 5], vec![1, 3]]).compile(8);
+        assert_eq!(p.max_cluster_nnz(), 6);
+        // unrouted patterns report 0 (every entry is NO_CLUSTER)
+        assert_eq!(AttentionSpec::Full.compile(8).max_cluster_nnz(), 0);
+        assert_eq!(AttentionSpec::Full.compile(0).max_cluster_nnz(), 0);
+        // expert-choice blocks are bounded by capacity*(capacity+1)/2
+        let p = AttentionSpec::expert_choice(vec![vec![0, 1, 4], vec![2, 3]], 3)
+            .unwrap()
+            .compile(8);
+        assert_eq!(p.max_cluster_nnz(), 6);
+        assert!(p.max_cluster_nnz() <= 3 * 4 / 2);
     }
 
     #[test]

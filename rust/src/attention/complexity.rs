@@ -43,6 +43,19 @@ impl AttentionSpec {
                     clusters.iter().map(|m| 2 * (m.len() as u64).pow(2) * dd).sum();
                 nn * k * dd + attend
             }
+            // same routing-shaped model, but |c| <= capacity by
+            // construction, so the attend term is bounded by 2·k·cap²·d
+            AttentionSpec::ExpertChoice { clusters, .. } => {
+                let k = clusters.len() as u64;
+                let attend: u64 =
+                    clusters.iter().map(|m| 2 * (m.len() as u64).pow(2) * dd).sum();
+                nn * k * dd + attend
+            }
+            // n·d proxy scoring + the exact stored attend-set sizes
+            AttentionSpec::Threshold { rows } => {
+                let attend: u64 = rows.iter().map(|r| 2 * r.len() as u64 * dd).sum();
+                nn * dd + attend
+            }
             AttentionSpec::Union(parts) => {
                 parts.iter().map(|p| p.flops_estimate(n, d)).sum()
             }
@@ -62,9 +75,11 @@ impl AttentionSpec {
             AttentionSpec::Strided { stride } => {
                 nn * (nn / (*stride).max(1) as u64).max(1)
             }
-            AttentionSpec::Routing { clusters } => {
+            AttentionSpec::Routing { clusters }
+            | AttentionSpec::ExpertChoice { clusters, .. } => {
                 clusters.iter().map(|m| (m.len() as u64).pow(2)).sum()
             }
+            AttentionSpec::Threshold { rows } => rows.iter().map(|r| r.len() as u64).sum(),
             AttentionSpec::Union(parts) => {
                 parts.iter().map(|p| p.memory_estimate(n)).sum()
             }
@@ -154,6 +169,21 @@ mod tests {
             mixed.flops_estimate(n, d),
             local.flops_estimate(n, d) + r.flops_estimate(n, d)
         );
+    }
+
+    #[test]
+    fn expert_choice_attend_term_bounded_by_capacity() {
+        let (n, d, k, cap) = (1024usize, 64usize, 32usize, 8usize);
+        let clusters: Vec<Vec<usize>> =
+            (0..k).map(|c| (c * cap..(c + 1) * cap).collect()).collect();
+        let spec = AttentionSpec::expert_choice(clusters, cap).unwrap();
+        let bound = (n * k * d + 2 * k * cap * cap * d) as u64;
+        assert!(spec.flops_estimate(n, d) <= bound);
+        assert!(spec.memory_estimate(n) <= (k * cap * cap) as u64);
+        // threshold model is exact in the stored sets
+        let t = AttentionSpec::threshold(vec![vec![0], vec![0, 1], vec![2]]).unwrap();
+        assert_eq!(t.flops_estimate(3, d), (3 * d + 2 * 4 * d) as u64);
+        assert_eq!(t.memory_estimate(3), 4);
     }
 
     #[test]

@@ -76,7 +76,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::backend::{self, Backend};
 use super::compiled::{CompiledPattern, MemoryBudget};
 use super::decode::{
-    EpochCache, EpochCacheStats, MemberCache, RegenStats, RouteSlot, RouteUpdate, RoutingSession,
+    routed_family_spec, EpochCache, EpochCacheStats, MemberCache, RegenStats, RouteSlot,
+    RouteUpdate, RoutingSession, SpecFamily,
 };
 use super::engine::{CacheStats, ShardedPattern};
 use super::spec::AttentionSpec;
@@ -719,8 +720,13 @@ pub struct CoordinatorConfig {
     pub window: usize,
     /// Routing clusters per (layer, head).
     pub clusters: usize,
-    /// Top-w membership per cluster.
+    /// Top-w membership per cluster (per-cluster capacity when
+    /// `spec_family` is [`SpecFamily::ExpertChoice`]).
     pub top_w: usize,
+    /// The content-based family the odd heads' routed component uses —
+    /// must match the serve options driving this coordinator so the
+    /// in-process and coordinated digests stay bit-identical.
+    pub spec_family: SpecFamily,
     /// Concurrent request slots (routed stream ids span
     /// `layers × heads × capacity`).
     pub capacity: usize,
@@ -745,6 +751,7 @@ impl Default for CoordinatorConfig {
             window: 16,
             clusters: 8,
             top_w: 16,
+            spec_family: SpecFamily::Routing,
             capacity: 4,
             seed: 0,
             backend: "reference".to_string(),
@@ -1165,6 +1172,7 @@ impl<T: Transport> Coordinator<T> {
         let sid = self.stream_id(layer, head, slot);
         let idx = self.member_index(layer, head, slot);
         let (n, top_w) = (self.cfg.n, self.cfg.top_w);
+        let family = self.cfg.spec_family;
         let mut made: Option<AttentionSpec> = None;
         let pattern = {
             let Coordinator { ref mut cache, ref session, ref mut members, ref local, .. } = *self;
@@ -1172,7 +1180,7 @@ impl<T: Transport> Coordinator<T> {
             cache.get_routed_at(RouteSlot { layer, head, seq: slot }, epoch, ae, n, || {
                 let spec = AttentionSpec::union(vec![
                     local.clone(),
-                    session.routing_spec_cached(layer, head, mc, xs, n, top_w),
+                    routed_family_spec(family, session, layer, head, mc, xs, n, top_w),
                 ])
                 .expect("non-empty union of valid specs");
                 made = Some(spec.clone());

@@ -454,6 +454,141 @@ impl RoutingSession {
             || self.routing_spec_cached(slot.layer, slot.head, members, xs, n, w),
         )
     }
+
+    /// Expert-choice spec for a slot over the routing vectors `xs`
+    /// (row-major [n, dim]) — the capacity-bounded MoSA-style counterpart
+    /// of [`RoutingSession::routing_spec`]: the slot's clusters pick
+    /// their top-`capacity` argmax-assigned tokens.
+    pub fn expert_choice_spec(
+        &self,
+        layer: usize,
+        head: usize,
+        xs: &[f32],
+        n: usize,
+        capacity: usize,
+    ) -> AttentionSpec {
+        self.kms[self.slot(layer, head)].expert_choice_spec(xs, n, capacity)
+    }
+
+    /// Incremental expert-choice spec: equal to
+    /// [`RoutingSession::expert_choice_spec`] for the same arguments, but
+    /// served through `members` so untouched clusters' selections are
+    /// reused.  Reuse is stricter than the routing rule — see
+    /// [`MemberCache`]: expert membership is an argmax over *all*
+    /// centroids, so a cluster is reused only when its own version is
+    /// unchanged **and** its recomputed bucket is identical (when no
+    /// version moved at all, the assignment pass itself is skipped).  A
+    /// capacity change is a shape change: full rebuild, never stale
+    /// reuse.
+    pub fn expert_choice_spec_cached(
+        &self,
+        layer: usize,
+        head: usize,
+        members: &mut MemberCache,
+        xs: &[f32],
+        n: usize,
+        capacity: usize,
+    ) -> AttentionSpec {
+        let s = self.slot(layer, head);
+        let km = &self.kms[s];
+        let versions = &self.cluster_versions[s];
+        members.regenerate_expert((self.nonce, layer, head), km, versions, xs, n, capacity);
+        AttentionSpec::expert_choice(members.members.clone(), capacity)
+            .expect("cached expert-choice lists are capacity-bounded by construction")
+    }
+}
+
+// ------------------------------------------------------- spec families
+
+/// Which content-based family serves the routed (odd) heads of a serve
+/// plan — selected by `rtx serve --spec` and carried by both the
+/// in-process loop and the multi-process coordinator so the two stay
+/// bit-identical per family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpecFamily {
+    /// Balanced top-w token-choice routing (the paper's Algorithm 1).
+    #[default]
+    Routing,
+    /// MoSA-style expert-choice: clusters pick their top-capacity
+    /// argmax-assigned tokens, bounding per-cluster nnz by construction.
+    ExpertChoice,
+    /// Condensate-style calibrated score-threshold attend-sets over the
+    /// routing vectors' pairwise scores (content-only: uses neither the
+    /// k-means state nor the member cache).
+    Threshold,
+}
+
+impl SpecFamily {
+    /// Parse a `--spec` flag value / `spec_family` JSON field.
+    pub fn parse(name: &str) -> Result<SpecFamily> {
+        match name {
+            "routing" => Ok(SpecFamily::Routing),
+            "expert-choice" => Ok(SpecFamily::ExpertChoice),
+            "threshold" => Ok(SpecFamily::Threshold),
+            other => bail!(
+                "unknown spec family '{other}' (expected routing | expert-choice | threshold)"
+            ),
+        }
+    }
+
+    /// The canonical spelling (the `--spec` flag value and the
+    /// `spec_family` field of the serve `--json` schema).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecFamily::Routing => "routing",
+            SpecFamily::ExpertChoice => "expert-choice",
+            SpecFamily::Threshold => "threshold",
+        }
+    }
+}
+
+/// Build one routed slot's content-based spec under `family` — the single
+/// construction the in-process serve loop and the multi-process
+/// coordinator both call, which is what keeps their outputs bit-identical
+/// per family.  `w` doubles as the routing top-w and the expert-choice
+/// capacity; [`SpecFamily::Threshold`] ignores the session and member
+/// cache entirely and cuts the content scores via
+/// [`threshold_content_spec`].
+#[allow(clippy::too_many_arguments)]
+pub fn routed_family_spec(
+    family: SpecFamily,
+    session: &RoutingSession,
+    layer: usize,
+    head: usize,
+    members: &mut MemberCache,
+    xs: &[f32],
+    n: usize,
+    w: usize,
+) -> AttentionSpec {
+    match family {
+        SpecFamily::Routing => session.routing_spec_cached(layer, head, members, xs, n, w),
+        SpecFamily::ExpertChoice => {
+            session.expert_choice_spec_cached(layer, head, members, xs, n, w)
+        }
+        SpecFamily::Threshold => threshold_content_spec(xs, n),
+    }
+}
+
+/// The serve plan's threshold family: pairwise dot-product scores of the
+/// routing vectors (`xs` row-major [n, dim]), cut at 0.0 with a per-row
+/// floor of 1 — self-similarity is a non-negative dot, so every
+/// finite-vector row keeps at least itself, and NaN-poisoned rows are
+/// quarantined by [`AttentionSpec::threshold_from_scores`].  The score
+/// matrix is materialized at O(n²), which confines this family to
+/// moderate `n` (or precomputed scores via `threshold_from_scores`
+/// directly).
+pub fn threshold_content_spec(xs: &[f32], n: usize) -> AttentionSpec {
+    let dim = if n == 0 { 0 } else { xs.len() / n };
+    debug_assert_eq!(dim * n, xs.len(), "xs must be row-major [n, dim]");
+    let mut scores = vec![f32::NEG_INFINITY; n * n];
+    for i in 0..n {
+        let xi = &xs[i * dim..(i + 1) * dim];
+        for j in 0..=i {
+            scores[i * n + j] = crate::kmeans::dot(xi, &xs[j * dim..(j + 1) * dim]);
+        }
+    }
+    AttentionSpec::threshold_from_scores(&scores, n, 0.0, 1)
+        .expect("cut 0.0 is finite and the score matrix is [n, n]")
 }
 
 // ------------------------------------------------------- member cache
@@ -467,9 +602,11 @@ pub struct RegenStats {
     /// Cluster membership lists served unchanged from the cache.
     pub reused: u64,
     /// Calls that rebuilt every list because the cache shape was stale
-    /// (first use, different `xs`/`n`/`w`, or another slot's snapshot).
+    /// (first use, different `xs`/`n`/`w`/capacity, a family switch, or
+    /// another slot's snapshot).
     pub full_rebuilds: u64,
-    /// Total [`RoutingSession::routing_spec_cached`] calls.
+    /// Total [`RoutingSession::routing_spec_cached`] +
+    /// [`RoutingSession::expert_choice_spec_cached`] calls.
     pub calls: u64,
     /// Heap bytes of membership state (lists, routing-vector snapshot,
     /// version vector) resident in the cache these counters were read
@@ -506,19 +643,22 @@ impl RegenStats {
     }
 }
 
-/// Caller-owned cache of one routed stream's balanced top-w membership
-/// lists, enabling dirty-cluster-only spec regeneration.
+/// Caller-owned cache of one routed stream's membership lists — balanced
+/// top-w ([`RoutingSession::routing_spec_cached`]) or expert-choice
+/// ([`RoutingSession::expert_choice_spec_cached`]) — enabling
+/// dirty-cluster-only spec regeneration.
 ///
 /// One `MemberCache` belongs to one consumer of one slot's centroids
 /// (e.g. one `(layer, head, sequence)` routed stream): it remembers the
-/// routing vectors, shape, membership lists, and the per-cluster version
-/// snapshot they were built at.  On the next
-/// [`RoutingSession::routing_spec_cached`] call with the same vectors and
-/// shape, only clusters whose session version advanced (their centroid
-/// EMA-moved since) are re-ranked; everything else is reused, exactly.
-/// Any mismatch — including NaN-poisoned vectors, which never compare
-/// equal — falls back to a full rebuild, so the cache can be wrong only
-/// in cost, never in content.
+/// routing vectors, shape, selection family, membership lists, and the
+/// per-cluster version snapshot they were built at.  On the next call
+/// with the same vectors, shape, and family, only stale clusters are
+/// re-ranked — version-moved ones for routing top-w; version-moved or
+/// bucket-changed ones for expert-choice — and everything else is
+/// reused, exactly.  Any mismatch — including NaN-poisoned vectors,
+/// which never compare equal, and a capacity or family change — falls
+/// back to a full rebuild, so the cache can be wrong only in cost, never
+/// in content.
 #[derive(Debug, Default)]
 pub struct MemberCache {
     /// (session nonce, layer, head) the snapshot was taken against — a
@@ -529,9 +669,20 @@ pub struct MemberCache {
     versions: Vec<u64>,
     xs: Vec<f32>,
     n: usize,
-    /// Effective membership width (`w.min(n)`), so `w = 5, n = 3` and
-    /// `w = 9, n = 3` share one cache entry (identical lists).
+    /// Effective membership width (`w.min(n)` for routing top-w,
+    /// `capacity.min(n)` for expert-choice), so `w = 5, n = 3` and
+    /// `w = 9, n = 3` share one cache entry (identical lists).  A
+    /// capacity change is a width change: it forces a full rebuild.
     w: usize,
+    /// Selection rule the snapshot was built under — routing top-w and
+    /// expert-choice lists are never interchangeable, even at equal `w`.
+    family: MemberFamily,
+    /// Expert-choice only: the argmax bucket partition the selections
+    /// were ranked from.  Expert membership is global (a moved centroid
+    /// can pull tokens out of an *untouched* cluster's bucket), so a
+    /// cluster's cached list is reusable only when its version **and**
+    /// its bucket are unchanged.
+    buckets: Vec<Vec<usize>>,
     members: Vec<Vec<usize>>,
     valid: bool,
     stats: RegenStats,
@@ -556,6 +707,8 @@ impl Clone for MemberCache {
             xs: self.xs.clone(),
             n: self.n,
             w: self.w,
+            family: self.family,
+            buckets: self.buckets.clone(),
             members: self.members.clone(),
             valid: self.valid,
             stats: self.stats,
@@ -563,6 +716,15 @@ impl Clone for MemberCache {
             charged: self.charged,
         }
     }
+}
+
+/// Which selection rule a [`MemberCache`] snapshot holds; see
+/// [`MemberCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+enum MemberFamily {
+    #[default]
+    Routing,
+    ExpertChoice,
 }
 
 impl Drop for MemberCache {
@@ -591,7 +753,9 @@ impl MemberCache {
     /// routing-vector and version-vector copies shape checks compare.
     pub fn heap_bytes(&self) -> usize {
         let members: usize = self.members.iter().map(|m| std::mem::size_of_val(m.as_slice())).sum();
+        let buckets: usize = self.buckets.iter().map(|b| std::mem::size_of_val(b.as_slice())).sum();
         members
+            + buckets
             + std::mem::size_of_val(self.versions.as_slice())
             + std::mem::size_of_val(self.xs.as_slice())
     }
@@ -636,6 +800,7 @@ impl MemberCache {
         self.stats.calls += 1;
         let shape_ok = self.valid
             && self.slot == slot
+            && self.family == MemberFamily::Routing
             && self.members.len() == km.k
             && self.versions.len() == km.k
             && self.n == n
@@ -645,10 +810,12 @@ impl MemberCache {
             self.stats.full_rebuilds += 1;
             self.stats.regenerated += km.k as u64;
             self.members = km.top_w_members(xs, n, w);
+            self.buckets = Vec::new();
             self.versions = versions.to_vec();
             self.xs = xs.to_vec();
             self.n = n;
             self.w = w_eff;
+            self.family = MemberFamily::Routing;
             self.slot = slot;
             self.valid = true;
             self.recharge();
@@ -663,6 +830,73 @@ impl MemberCache {
                 self.stats.regenerated += 1;
             }
         }
+        self.recharge();
+    }
+
+    /// Bring the cached lists up to date under the expert-choice rule; see
+    /// [`RoutingSession::expert_choice_spec_cached`].
+    ///
+    /// Unlike routing top-w — where a cluster's list depends only on its
+    /// own centroid — an expert-choice selection is ranked over the
+    /// cluster's argmax *bucket*, and the bucket partition is global: one
+    /// moved centroid can pull tokens out of any cluster's bucket.  So
+    /// when any version moved, the partition is recomputed once and a
+    /// cluster is reused only if its version (centroid bits) **and** its
+    /// bucket (membership set) both held still; when no version moved at
+    /// all, every centroid is bit-unchanged and the assignment pass is
+    /// skipped entirely.
+    fn regenerate_expert(
+        &mut self,
+        slot: (u64, usize, usize),
+        km: &SphericalKMeans,
+        versions: &[u64],
+        xs: &[f32],
+        n: usize,
+        capacity: usize,
+    ) {
+        let cap_eff = capacity.min(n);
+        self.stats.calls += 1;
+        let shape_ok = self.valid
+            && self.slot == slot
+            && self.family == MemberFamily::ExpertChoice
+            && self.members.len() == km.k
+            && self.versions.len() == km.k
+            && self.buckets.len() == km.k
+            && self.n == n
+            && self.w == cap_eff
+            && self.xs == xs;
+        if !shape_ok {
+            self.stats.full_rebuilds += 1;
+            self.stats.regenerated += km.k as u64;
+            self.buckets = km.assigned_buckets(xs, n);
+            self.members = (0..km.k)
+                .map(|c| km.top_capacity_of(c, &self.buckets[c], xs, n, capacity))
+                .collect();
+            self.versions = versions.to_vec();
+            self.xs = xs.to_vec();
+            self.n = n;
+            self.w = cap_eff;
+            self.family = MemberFamily::ExpertChoice;
+            self.slot = slot;
+            self.valid = true;
+            self.recharge();
+            return;
+        }
+        if self.versions == versions {
+            self.stats.reused += km.k as u64;
+            return;
+        }
+        let buckets = km.assigned_buckets(xs, n);
+        for c in 0..km.k {
+            if self.versions[c] == versions[c] && self.buckets[c] == buckets[c] {
+                self.stats.reused += 1;
+            } else {
+                self.members[c] = km.top_capacity_of(c, &buckets[c], xs, n, capacity);
+                self.versions[c] = versions[c];
+                self.stats.regenerated += 1;
+            }
+        }
+        self.buckets = buckets;
         self.recharge();
     }
 }
@@ -1156,6 +1390,23 @@ impl BatchedAttention {
             .collect()
     }
 
+    /// Pattern entries (nnz) assigned to each worker — the shard-balance
+    /// observable behind the serve-bench `max/min shard nnz` report; sums
+    /// to the batch's total nnz.
+    pub fn worker_nnz(&self) -> Vec<usize> {
+        self.plan
+            .iter()
+            .map(|runs| {
+                runs.iter()
+                    .map(|r| {
+                        let off = self.patterns[r.seq].offsets();
+                        off[r.rows.end] - off[r.rows.start]
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn run_chunk(
         &self,
@@ -1539,6 +1790,93 @@ mod tests {
     }
 
     #[test]
+    fn expert_regen_equals_from_scratch_and_never_reuses_across_shapes() {
+        let mut s = RoutingSession::new(1, 1, 4, 4, 0.5, 9).unwrap();
+        let mut members = MemberCache::new();
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = (0..16 * 4).map(|_| rng.normal() as f32).collect();
+        let spec0 = s.expert_choice_spec_cached(0, 0, &mut members, &xs, 16, 3);
+        assert_eq!(spec0, s.expert_choice_spec(0, 0, &xs, 16, 3));
+        assert_eq!(members.stats().full_rebuilds, 1, "first use is a full rebuild");
+        assert_eq!(members.stats().regenerated, 4);
+        match &spec0 {
+            AttentionSpec::ExpertChoice { clusters, capacity } => {
+                assert!(clusters.iter().all(|m| m.len() <= *capacity));
+            }
+            _ => unreachable!(),
+        }
+        // no update in between: every list reused, no assignment pass
+        let spec1 = s.expert_choice_spec_cached(0, 0, &mut members, &xs, 16, 3);
+        assert_eq!(spec1, spec0);
+        assert_eq!(members.stats().reused, 4);
+        // a one-vector update EMA-moves one centroid, but expert buckets
+        // are global: incremental must equal from-scratch regardless of
+        // how many buckets that one moved centroid perturbed
+        s.update(0, 0, &xs[0..4], 1);
+        let before = members.stats();
+        let spec2 = s.expert_choice_spec_cached(0, 0, &mut members, &xs, 16, 3);
+        assert_eq!(spec2, s.expert_choice_spec(0, 0, &xs, 16, 3), "incremental == from-scratch");
+        let after = members.stats();
+        assert_eq!(after.regenerated + after.reused - before.regenerated - before.reused, 4);
+        assert!(after.regenerated > before.regenerated, "the moved cluster re-ranks");
+        assert_eq!(after.full_rebuilds, 1, "no spurious full rebuild");
+        // full-batch drift steps stay exact too
+        for step in 0..4 {
+            s.update(0, 0, &xs, 16);
+            let spec = s.expert_choice_spec_cached(0, 0, &mut members, &xs, 16, 3);
+            assert_eq!(spec, s.expert_choice_spec(0, 0, &xs, 16, 3), "step {step}");
+        }
+        assert_eq!(members.stats().full_rebuilds, 1, "same shape: still incremental");
+        // a capacity change is a shape change: full rebuild, never stale reuse
+        let spec = s.expert_choice_spec_cached(0, 0, &mut members, &xs, 16, 2);
+        assert_eq!(spec, s.expert_choice_spec(0, 0, &xs, 16, 2));
+        assert_eq!(members.stats().full_rebuilds, 2);
+        // so is a family switch — routing-w2 and expert-cap2 never alias
+        s.routing_spec_cached(0, 0, &mut members, &xs, 16, 2);
+        assert_eq!(members.stats().full_rebuilds, 3);
+        let spec = s.expert_choice_spec_cached(0, 0, &mut members, &xs, 16, 2);
+        assert_eq!(spec, s.expert_choice_spec(0, 0, &xs, 16, 2));
+        assert_eq!(members.stats().full_rebuilds, 4);
+    }
+
+    #[test]
+    fn threshold_content_spec_is_causal_and_never_empty() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..12 * 4).map(|_| rng.normal() as f32).collect();
+        let spec = threshold_content_spec(&xs, 12);
+        let p = spec.compile(12);
+        assert!(p.is_causal());
+        for i in 0..12 {
+            assert!(p.row(i).contains(&i), "row {i}: self-similarity clears the 0 cut");
+        }
+        // poisoned rows are quarantined but the floor keeps finite ones alive
+        let mut bad = xs.clone();
+        bad[5 * 4] = f32::NAN;
+        let p = threshold_content_spec(&bad, 12).compile(12);
+        assert!(p.is_causal());
+        assert!(!p.row(5).contains(&5), "NaN self-score is never admitted");
+        assert_eq!(threshold_content_spec(&[], 0).compile(0).nnz(), 0);
+        // the family dispatcher routes to the same construction
+        let s = RoutingSession::new(1, 1, 2, 4, 0.5, 5).unwrap();
+        let mut mc = MemberCache::new();
+        assert_eq!(
+            routed_family_spec(SpecFamily::Threshold, &s, 0, 0, &mut mc, &xs, 12, 3),
+            spec
+        );
+        assert_eq!(
+            routed_family_spec(SpecFamily::Routing, &s, 0, 0, &mut mc, &xs, 12, 3),
+            s.routing_spec(0, 0, &xs, 12, 3)
+        );
+        assert_eq!(
+            routed_family_spec(SpecFamily::ExpertChoice, &s, 0, 0, &mut mc, &xs, 12, 3),
+            s.expert_choice_spec(0, 0, &xs, 12, 3)
+        );
+        assert!(SpecFamily::parse("expert-choice").is_ok());
+        assert!(SpecFamily::parse("warp").is_err());
+        assert_eq!(SpecFamily::parse("threshold").unwrap().name(), "threshold");
+    }
+
+    #[test]
     fn member_cache_rebuilds_for_a_replaced_session() {
         // same shape, same xs, but a *new* session (fresh centroids):
         // the surviving cache must full-rebuild, never trust the old
@@ -1699,6 +2037,11 @@ mod tests {
             assert_eq!(batch.batch(), b);
             assert_eq!(batch.num_workers(), workers);
             assert_eq!(batch.worker_rows().iter().sum::<usize>(), b * n);
+            assert_eq!(
+                batch.worker_nnz().iter().sum::<usize>(),
+                patterns.iter().map(|p| p.nnz()).sum::<usize>(),
+                "per-worker nnz partitions the batch total"
+            );
             let out = batch.attention(&q, &k, &v, d).unwrap();
             let mut expect = Vec::with_capacity(b * n * d);
             for (s, p) in patterns.iter().enumerate() {

@@ -7,7 +7,9 @@
 //! 1. [`AttentionSpec`] — a declarative, serializable description of a
 //!    scheme: causal full attention, (blocked) local attention, strided
 //!    attention (Child et al. 2019), cluster-routed attention
-//!    (Algorithm 1), plus `Union`/`Intersect` composition for the mixed
+//!    (Algorithm 1), expert-choice routing (per-cluster capacity-bounded
+//!    top-k over disjoint argmax buckets), calibrated score-threshold
+//!    attend sets, plus `Union`/`Intersect` composition for the mixed
 //!    local+routing head plans of Sec. 4.2.  Constructors validate
 //!    degenerate parameters; `flops_estimate`/`memory_estimate` keep the
 //!    closed-form Section-4.1 cost model (`O(nkd + n²d/k)`, minimized at
@@ -32,7 +34,9 @@
 //!    [`sparse_attention`] reference kernel validated against a dense
 //!    masked-softmax oracle.
 //! 4. [`decode`] — the decode-loop layer: [`RoutingSession`] owns
-//!    per-layer/per-head online k-means state with a cluster **epoch**,
+//!    per-layer/per-head online k-means state (serving classic routing
+//!    and the expert-choice / threshold families via [`SpecFamily`] and
+//!    the shared [`routed_family_spec`] builder) with a cluster **epoch**,
 //!    an **assignment epoch** (advanced only when an update actually
 //!    moved tokens between clusters), and a per-slot **dirty set**;
 //!    [`EpochCache`] evicts compiled routing patterns only when their
@@ -110,8 +114,9 @@ pub use coordinator::{
     WorkerState, DIGEST_SEED, MAX_FRAME_BYTES, PROTOCOL_VERSION, STATIC_STREAM,
 };
 pub use decode::{
-    sparse_attention_batch, BatchedAttention, EpochCache, EpochCacheStats, MemberCache,
-    RegenStats, RouteSlot, RouteUpdate, RoutingSession,
+    routed_family_spec, sparse_attention_batch, threshold_content_spec, BatchedAttention,
+    EpochCache, EpochCacheStats, MemberCache, RegenStats, RouteSlot, RouteUpdate,
+    RoutingSession, SpecFamily,
 };
 pub use engine::{
     dense_masked_attention, sparse_attention, sparse_attention_rows, CacheStats, Freed,

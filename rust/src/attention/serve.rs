@@ -50,8 +50,8 @@ use super::coordinator::{
     DIGEST_SEED,
 };
 use super::decode::{
-    BatchedAttention, EpochCache, EpochCacheStats, MemberCache, RegenStats, RouteSlot,
-    RoutingSession,
+    routed_family_spec, BatchedAttention, EpochCache, EpochCacheStats, MemberCache, RegenStats,
+    RouteSlot, RoutingSession, SpecFamily,
 };
 use super::engine::CacheStats;
 use super::pool::{Execution, WorkerPool};
@@ -73,8 +73,14 @@ use crate::util::timing::StreamingHistogram;
 /// multi-process coordinator made it 5 (`serve` lines add `worker_procs`,
 /// the `output_digest` hex string — the FNV-1a fold of every attention
 /// output's f32 bit patterns, the cross-process bit-identity anchor —
-/// and, when `worker_procs > 0`, the `coord` grant-ledger object).
-pub const JSON_SCHEMA_VERSION: u64 = 5;
+/// and, when `worker_procs > 0`, the `coord` grant-ledger object); the
+/// content-based spec families made it 6 (`serve` lines add
+/// `spec_family` — `"routing"` | `"expert-choice"` | `"threshold"` —
+/// plus the load-balance observables `max_cluster_nnz` and
+/// `max_shard_nnz`/`min_shard_nnz`; the shard-nnz pair is reported by
+/// the in-process batched path and 0 in banded/coordinated modes, whose
+/// execution does not sweep through [`BatchedAttention`]).
+pub const JSON_SCHEMA_VERSION: u64 = 6;
 
 // ---------------------------------------------------------------- arrivals
 
@@ -614,8 +620,13 @@ pub struct ServeOptions {
     pub window: usize,
     /// Routing clusters per (layer, head).
     pub clusters: usize,
-    /// Top-w membership per cluster.
+    /// Top-w membership per cluster (doubles as the per-cluster capacity
+    /// when `spec_family` is [`SpecFamily::ExpertChoice`]).
     pub top_w: usize,
+    /// Which content-based family the odd heads' routed component uses:
+    /// classic overlapping routing (default), capacity-bounded
+    /// expert-choice routing, or the score-threshold attend set.
+    pub spec_family: SpecFamily,
     /// Worker chunks per batched sweep (also the pool's parallelism cap).
     pub workers: usize,
     /// Concurrent request slots.
@@ -655,6 +666,7 @@ impl Default for ServeOptions {
             window: 16,
             clusters: 8,
             top_w: 16,
+            spec_family: SpecFamily::Routing,
             workers: 4,
             capacity: 4,
             route_every: 4,
@@ -719,6 +731,20 @@ pub struct ServeSummary {
     pub worker_procs: usize,
     /// The coordinator's grant/rejection ledger (multi-process runs only).
     pub coord: Option<CoordStats>,
+    /// The content-based family the odd heads routed through.
+    pub spec_family: SpecFamily,
+    /// Largest per-cluster nnz observed across every routed compile of
+    /// the run — the load-balance observable expert-choice exists to
+    /// bound (≤ capacity·(capacity+1)/2 by construction there).  0 in
+    /// banded mode, where routed compiles stream band-by-band.
+    pub max_cluster_nnz: usize,
+    /// Largest per-worker nnz of any batched sweep (in-process monolithic
+    /// runs only; 0 in banded and coordinated modes).
+    pub max_shard_nnz: usize,
+    /// Smallest per-worker nnz of any batched sweep (companion bound;
+    /// `max - min` is the shard imbalance the nnz-balanced packer
+    /// minimizes).  0 in banded and coordinated modes.
+    pub min_shard_nnz: usize,
 }
 
 impl ServeSummary {
@@ -801,6 +827,7 @@ fn coordinator_config(opts: &ServeOptions, backend: &dyn Backend) -> Coordinator
         window: opts.window,
         clusters: opts.clusters,
         top_w: opts.top_w,
+        spec_family: opts.spec_family,
         capacity: opts.capacity,
         seed: opts.seed,
         backend: backend.name().to_string(),
@@ -877,6 +904,9 @@ fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<Se
     let mut macs = 0u64;
     let mut elapsed_sec = 0.0f64;
     let mut digest = DIGEST_SEED;
+    let mut max_cluster_nnz = 0usize;
+    let mut max_shard_nnz = 0usize;
+    let mut min_shard_nnz = usize::MAX;
 
     while !queue.is_empty() || !sched.is_idle() {
         if sched.is_idle() {
@@ -930,7 +960,7 @@ fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<Se
                         } else {
                             let epoch = session.epoch(layer, head);
                             let ae = session.assignment_epoch(layer, head);
-                            let patterns = plan
+                            let patterns: Vec<_> = plan
                                 .batch
                                 .iter()
                                 .map(|e| {
@@ -944,8 +974,15 @@ fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<Se
                                         || {
                                             AttentionSpec::union(vec![
                                                 local.clone(),
-                                                session.routing_spec_cached(
-                                                    layer, head, mc, &data.xs, opts.n, opts.top_w,
+                                                routed_family_spec(
+                                                    opts.spec_family,
+                                                    &session,
+                                                    layer,
+                                                    head,
+                                                    mc,
+                                                    &data.xs,
+                                                    opts.n,
+                                                    opts.top_w,
                                                 ),
                                             ])
                                             .expect("non-empty union of valid specs")
@@ -953,8 +990,15 @@ fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<Se
                                     )
                                 })
                                 .collect();
+                            for p in &patterns {
+                                max_cluster_nnz = max_cluster_nnz.max(p.max_cluster_nnz());
+                            }
                             BatchedAttention::new(patterns, opts.workers)?
                         };
+                        for nnz in batch_att.worker_nnz() {
+                            max_shard_nnz = max_shard_nnz.max(nnz);
+                            min_shard_nnz = min_shard_nnz.min(nnz);
+                        }
                         let out = batch_att.attention_backend(
                             &q,
                             &k,
@@ -1023,8 +1067,15 @@ fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<Se
                                     let mc = &mut members[member_idx(layer, head, e.slot)];
                                     let spec = AttentionSpec::union(vec![
                                         local.clone(),
-                                        session.routing_spec_cached(
-                                            layer, head, mc, &data.xs, opts.n, opts.top_w,
+                                        routed_family_spec(
+                                            opts.spec_family,
+                                            &session,
+                                            layer,
+                                            head,
+                                            mc,
+                                            &data.xs,
+                                            opts.n,
+                                            opts.top_w,
                                         ),
                                     ])
                                     .expect("non-empty union of valid specs");
@@ -1145,6 +1196,10 @@ fn run_serve_in_process(opts: &ServeOptions, backend: &dyn Backend) -> Result<Se
         output_digest: digest,
         worker_procs: 0,
         coord: None,
+        spec_family: opts.spec_family,
+        max_cluster_nnz,
+        max_shard_nnz,
+        min_shard_nnz: if min_shard_nnz == usize::MAX { 0 } else { min_shard_nnz },
     })
 }
 
@@ -1281,6 +1336,13 @@ pub fn run_serve_coordinated<T: Transport>(
         output_digest: digest,
         worker_procs: coord.worker_count(),
         coord: Some(coord.stats()),
+        spec_family: opts.spec_family,
+        // the coordinated path ships whole-sequence grants and splits rows
+        // worker-side, so the in-process shard/cluster observables are
+        // reported as 0 (CI strips them from the bit-identity compare)
+        max_cluster_nnz: 0,
+        max_shard_nnz: 0,
+        min_shard_nnz: 0,
     })
 }
 
@@ -1675,6 +1737,80 @@ mod tests {
         assert_eq!(again.macs, sum.macs);
         assert_eq!(again.band_compiles, sum.band_compiles);
         assert_eq!(again.peak_pattern_bytes, sum.peak_pattern_bytes);
+    }
+
+    #[test]
+    fn spec_families_share_the_serve_lifecycle() {
+        let base = ServeOptions {
+            n: 32,
+            d: 8,
+            layers: 2,
+            heads: 2,
+            window: 8,
+            clusters: 4,
+            top_w: 8,
+            workers: 2,
+            capacity: 2,
+            route_every: 2,
+            arrivals: ArrivalConfig {
+                requests: 12,
+                rate: 1.5,
+                contents: 6,
+                zipf_s: 1.1,
+                work: (1, 4),
+                slack: (0, 6),
+                seed: 13,
+            },
+            seed: 13,
+            ..ServeOptions::default()
+        };
+        let routing = run_serve(&base, &Blocked).unwrap();
+        assert_eq!(routing.spec_family, SpecFamily::Routing);
+        // the batched sweeps populate the shard-nnz observables
+        assert!(routing.max_shard_nnz > 0);
+        assert!(routing.min_shard_nnz <= routing.max_shard_nnz);
+        for family in [SpecFamily::ExpertChoice, SpecFamily::Threshold] {
+            let opts = ServeOptions { spec_family: family, ..base.clone() };
+            let sum = run_serve(&opts, &Blocked).unwrap();
+            assert_eq!(sum.spec_family, family);
+            // scheduling is spec-content-independent: identical lifecycle
+            assert_eq!(sum.outcomes, routing.outcomes, "{family:?}");
+            assert_eq!(sum.stats, routing.stats, "{family:?}");
+            assert_eq!(sum.batched_rows, routing.batched_rows);
+            assert_eq!(sum.live_patterns_after_gc, 1);
+            assert!(sum.max_shard_nnz > 0);
+            if family == SpecFamily::ExpertChoice {
+                // the capacity bound: every cluster keeps <= top_w tokens,
+                // so its causal pair count is <= cap*(cap+1)/2
+                let cap = opts.top_w;
+                assert!(
+                    sum.max_cluster_nnz <= cap * (cap + 1) / 2,
+                    "max_cluster_nnz {} over bound for capacity {cap}",
+                    sum.max_cluster_nnz
+                );
+                assert!(sum.max_cluster_nnz > 0, "routed compiles were observed");
+            }
+            // deterministic replay per family (digest pins the outputs)
+            let again = run_serve(&opts, &Blocked).unwrap();
+            assert_eq!(again.output_digest, sum.output_digest, "{family:?}");
+            assert_eq!(again.macs, sum.macs);
+            assert_eq!(again.max_cluster_nnz, sum.max_cluster_nnz);
+            assert_eq!(again.max_shard_nnz, sum.max_shard_nnz);
+            assert_eq!(again.min_shard_nnz, sum.min_shard_nnz);
+            // banded streaming attends the exact same nnz for every family
+            let banded = ServeOptions { band_rows: 8, ..opts.clone() };
+            let bsum = run_serve(&banded, &Blocked).unwrap();
+            assert_eq!(bsum.macs, sum.macs, "{family:?} band == monolithic nnz");
+            assert_eq!(bsum.outcomes, sum.outcomes);
+            assert_eq!(bsum.max_shard_nnz, 0, "banded mode has no batched shards");
+            assert_eq!(bsum.max_cluster_nnz, 0);
+        }
+        // families genuinely differ: expert-choice prunes the overlapping
+        // routed sets, so its attended nnz (macs) must not match routing's
+        let expert =
+            run_serve(&ServeOptions { spec_family: SpecFamily::ExpertChoice, ..base.clone() }, &Blocked)
+                .unwrap();
+        assert_ne!(expert.macs, routing.macs, "expert-choice must change the attend sets");
     }
 
     #[test]

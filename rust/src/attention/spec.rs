@@ -4,7 +4,10 @@
 //! An [`AttentionSpec`] describes *which* scheme restricts each query's
 //! key set S_i (Sec. 3 of the paper), without fixing a sequence length:
 //! causal full attention, (blocked) local attention, strided attention
-//! (Child et al. 2019), content-routed attention (Algorithm 1), and
+//! (Child et al. 2019), content-routed attention (Algorithm 1), the
+//! newer content-based families — expert-choice routing (`ExpertChoice`,
+//! capacity-bounded by construction, MoSA-style) and calibrated
+//! score-threshold attend-sets (`Threshold`, Condensate-style) — and
 //! `Union`/`Intersect` composition for the mixed head plans of Sec. 4.2
 //! (the paper's best models mix local and routing heads).  Constructors
 //! validate degenerate parameters (zero windows/strides used to mean
@@ -49,6 +52,20 @@ pub enum AttentionSpec {
     /// Cluster routing (Algorithm 1): token i attends to j <= i iff some
     /// cluster selected both i and j.  Member lists are sorted + deduped.
     Routing { clusters: Vec<Vec<usize>> },
+    /// Expert-choice routing (MoSA-style): clusters pick their
+    /// top-`capacity` member tokens instead of tokens picking clusters,
+    /// so every member list — and hence every cluster's per-row nnz
+    /// contribution — is bounded by `capacity` *by construction*.
+    /// Admission is otherwise routing-shaped: token i attends to j <= i
+    /// iff some cluster selected both.  Member lists are sorted + deduped.
+    ExpertChoice { clusters: Vec<Vec<usize>>, capacity: usize },
+    /// Calibrated score-threshold attention (Condensate-style): row i's
+    /// attend-set is whatever cleared the score cut (plus a per-row
+    /// floor), stored explicitly so the spec stays `Eq + Hash` — see
+    /// [`AttentionSpec::threshold_from_scores`] for the calibrated
+    /// builder.  Rows are sorted + deduped, entries causal (`j <= i`);
+    /// query rows beyond the stored length compile empty.
+    Threshold { rows: Vec<Vec<usize>> },
     /// Mixed head plan: a key is admitted if any part admits it.
     Union(Vec<AttentionSpec>),
     /// A key is admitted only if every part admits it.
@@ -123,6 +140,102 @@ impl AttentionSpec {
             .map(|c| (c * w..((c + 1) * w).min(n)).collect())
             .collect();
         Ok(AttentionSpec::routing(clusters))
+    }
+
+    /// Expert-choice routing from explicit per-cluster selections.
+    /// Member lists are normalized (sorted ascending, deduped); any
+    /// cluster still longer than `capacity` after dedup is rejected, so
+    /// the capacity bound is an invariant of the value, not a compile-time
+    /// clamp.  `capacity == 0` therefore requires every cluster to be
+    /// empty.
+    ///
+    /// ```
+    /// use routing_transformer::attention::AttentionSpec;
+    /// let spec = AttentionSpec::expert_choice(vec![vec![4, 1], vec![]], 2).unwrap();
+    /// assert_eq!(spec.compile(8).row(4), &[1, 4]);
+    /// assert!(AttentionSpec::expert_choice(vec![vec![0, 1, 2]], 2).is_err());
+    /// ```
+    pub fn expert_choice(clusters: Vec<Vec<usize>>, capacity: usize) -> Result<AttentionSpec> {
+        let clusters: Vec<Vec<usize>> = clusters
+            .into_iter()
+            .map(|mut m| {
+                m.sort_unstable();
+                m.dedup();
+                m
+            })
+            .collect();
+        for (c, m) in clusters.iter().enumerate() {
+            if m.len() > capacity {
+                bail!(
+                    "expert-choice cluster {c} selected {} tokens, over capacity {capacity}",
+                    m.len()
+                );
+            }
+        }
+        Ok(AttentionSpec::ExpertChoice { clusters, capacity })
+    }
+
+    /// Score-threshold attention from explicit per-row attend-sets (the
+    /// JSON decode path; [`AttentionSpec::threshold_from_scores`] is the
+    /// calibrated builder).  Rows are normalized (sorted ascending,
+    /// deduped); an acausal entry `j > i` is rejected.
+    pub fn threshold(rows: Vec<Vec<usize>>) -> Result<AttentionSpec> {
+        let rows: Vec<Vec<usize>> = rows
+            .into_iter()
+            .map(|mut r| {
+                r.sort_unstable();
+                r.dedup();
+                r
+            })
+            .collect();
+        for (i, r) in rows.iter().enumerate() {
+            if let Some(&j) = r.last() {
+                if j > i {
+                    bail!("threshold row {i} admits acausal key {j}");
+                }
+            }
+        }
+        Ok(AttentionSpec::Threshold { rows })
+    }
+
+    /// Calibrated score-threshold attention: for each query row i of the
+    /// row-major `[n, n]` score matrix, admit key `j <= i` iff
+    /// `scores[i*n + j]` is finite and `>= cut`; if fewer than `floor`
+    /// keys cleared the cut, top up with the highest-scoring finite keys
+    /// below it (score-descending, index-ascending tie-break) so no query
+    /// row is empty unless every causal score is non-finite.  NaN and
+    /// ±inf scores are quarantined — never admitted, by the cut or by the
+    /// floor.  Rejects a non-finite `cut` and a wrong-sized matrix.
+    pub fn threshold_from_scores(
+        scores: &[f32],
+        n: usize,
+        cut: f32,
+        floor: usize,
+    ) -> Result<AttentionSpec> {
+        if !cut.is_finite() {
+            bail!("threshold cut must be finite (got {cut})");
+        }
+        if scores.len() != n * n {
+            bail!("threshold scores must be [n, n] = {} values (got {})", n * n, scores.len());
+        }
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut scored: Vec<(f32, usize)> = (0..=i)
+                .filter_map(|j| {
+                    let s = scores[i * n + j];
+                    s.is_finite().then_some((s, j))
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            // finite scores sort descending, so the cut keeps a prefix;
+            // the floor widens that prefix (never past the finite set)
+            let above = scored.partition_point(|&(s, _)| s >= cut);
+            let keep = above.max(floor.min(scored.len()));
+            let mut row: Vec<usize> = scored[..keep].iter().map(|&(_, j)| j).collect();
+            row.sort_unstable();
+            rows.push(row);
+        }
+        Ok(AttentionSpec::Threshold { rows })
     }
 
     /// Mixed head plan: union of the parts' index sets.
@@ -200,6 +313,34 @@ impl AttentionSpec {
                     ),
                 ),
             ]),
+            AttentionSpec::ExpertChoice { clusters, capacity } => Json::Obj(vec![
+                kind("expert_choice"),
+                (
+                    "clusters".to_string(),
+                    Json::Arr(
+                        clusters
+                            .iter()
+                            .map(|m| {
+                                Json::Arr(m.iter().map(|&i| Json::Num(i as f64)).collect())
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("capacity".to_string(), Json::Num(*capacity as f64)),
+            ]),
+            AttentionSpec::Threshold { rows } => Json::Obj(vec![
+                kind("threshold"),
+                (
+                    "rows".to_string(),
+                    Json::Arr(
+                        rows.iter()
+                            .map(|r| {
+                                Json::Arr(r.iter().map(|&j| Json::Num(j as f64)).collect())
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
             AttentionSpec::Union(parts) => Json::Obj(vec![
                 kind("union"),
                 ("parts".to_string(), Json::Arr(parts.iter().map(|p| p.to_json()).collect())),
@@ -230,31 +371,32 @@ impl AttentionSpec {
                 .map(AttentionSpec::from_json)
                 .collect()
         };
+        let lists = |name: &str| -> Result<Vec<Vec<usize>>> {
+            j.get(name)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("spec '{kind}' missing array '{name}'"))?
+                .iter()
+                .map(|m| {
+                    m.as_arr()
+                        .ok_or_else(|| anyhow!("spec '{kind}' '{name}' entry must be an array"))?
+                        .iter()
+                        .map(|v| {
+                            v.as_usize().ok_or_else(|| {
+                                anyhow!("spec '{kind}' '{name}' member must be an integer")
+                            })
+                        })
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect()
+        };
         match kind {
             "full" => Ok(AttentionSpec::Full),
             "local" => AttentionSpec::local(field("window")?),
             "block_local" => AttentionSpec::block_local(field("window")?),
             "strided" => AttentionSpec::strided(field("stride")?),
-            "routing" => {
-                let arr = j
-                    .get("clusters")
-                    .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("routing spec missing array 'clusters'"))?;
-                let clusters = arr
-                    .iter()
-                    .map(|m| {
-                        m.as_arr()
-                            .ok_or_else(|| anyhow!("routing cluster must be an array"))?
-                            .iter()
-                            .map(|v| {
-                                v.as_usize()
-                                    .ok_or_else(|| anyhow!("cluster member must be an integer"))
-                            })
-                            .collect::<Result<Vec<usize>>>()
-                    })
-                    .collect::<Result<Vec<Vec<usize>>>>()?;
-                Ok(AttentionSpec::routing(clusters))
-            }
+            "routing" => Ok(AttentionSpec::routing(lists("clusters")?)),
+            "expert_choice" => AttentionSpec::expert_choice(lists("clusters")?, field("capacity")?),
+            "threshold" => AttentionSpec::threshold(lists("rows")?),
             "union" => AttentionSpec::union(parts("parts")?),
             "intersect" => AttentionSpec::intersect(parts("parts")?),
             other => bail!("unknown attention spec kind '{other}'"),
@@ -332,6 +474,50 @@ fn build_rows_range(
             }
             rows
         }
+        AttentionSpec::ExpertChoice { clusters, capacity } => {
+            let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); range.len()];
+            for (c, members) in clusters.iter().enumerate() {
+                // constructors normalize and enforce the capacity bound,
+                // but hand-built enums may not — renormalize and truncate
+                // defensively (keyed only on n, so bands stay identical)
+                let mut ms: Vec<usize> = members.iter().copied().filter(|&i| i < n).collect();
+                ms.sort_unstable();
+                ms.dedup();
+                ms.truncate(*capacity);
+                for (idx, &i) in ms.iter().enumerate() {
+                    if !range.contains(&i) {
+                        continue;
+                    }
+                    for &j in &ms[..=idx] {
+                        rows[i - range.start].push((j, c as u32));
+                    }
+                }
+            }
+            for row in &mut rows {
+                row.sort_unstable();
+                row.dedup_by_key(|e| e.0);
+            }
+            rows
+        }
+        AttentionSpec::Threshold { rows: sets } => range
+            .map(|i| {
+                // constructors normalize (sorted, deduped, causal), but
+                // hand-built enums may not — refilter per absolute row
+                let mut row: Vec<(usize, u32)> = sets
+                    .get(i)
+                    .map(|r| {
+                        r.iter()
+                            .copied()
+                            .filter(|&j| j <= i && j < n)
+                            .map(|j| (j, NO_CLUSTER))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                row.sort_unstable();
+                row.dedup_by_key(|e| e.0);
+                row
+            })
+            .collect(),
         AttentionSpec::Union(parts) => {
             let mut rows: Vec<Vec<(usize, u32)>> = vec![Vec::new(); range.len()];
             for part in parts {
@@ -724,10 +910,82 @@ mod tests {
     }
 
     #[test]
+    fn expert_choice_normalizes_and_enforces_capacity() {
+        let spec = AttentionSpec::expert_choice(vec![vec![5, 2, 2, 0], vec![]], 3).unwrap();
+        match &spec {
+            AttentionSpec::ExpertChoice { clusters, capacity } => {
+                assert_eq!(clusters[0], vec![0, 2, 5]);
+                assert_eq!(clusters[1], Vec::<usize>::new());
+                assert_eq!(*capacity, 3);
+            }
+            _ => unreachable!(),
+        }
+        // dedup can rescue an over-long list; a genuinely over-capacity one fails
+        assert!(AttentionSpec::expert_choice(vec![vec![1, 1, 1, 1]], 1).is_ok());
+        assert!(AttentionSpec::expert_choice(vec![vec![0, 1]], 1).is_err());
+        assert!(AttentionSpec::expert_choice(vec![vec![7]], 0).is_err());
+        assert!(AttentionSpec::expert_choice(vec![vec![], vec![]], 0).is_ok());
+        // compiles routing-shaped: row of the latest member covers the cluster
+        let p = spec.compile(8);
+        assert_eq!(p.row(5), &[0, 2, 5]);
+        assert_eq!(p.row(2), &[0, 2]);
+        assert_eq!(p.row(1), &[] as &[usize]);
+    }
+
+    #[test]
+    fn hand_built_expert_choice_clamps_to_capacity() {
+        // direct enum construction bypasses validation; compile truncates
+        let p = AttentionSpec::ExpertChoice { clusters: vec![vec![0, 1, 2, 3]], capacity: 2 }
+            .compile(8);
+        assert_eq!(p.row(1), &[0, 1]);
+        assert_eq!(p.row(3), &[] as &[usize], "members past capacity are dropped");
+    }
+
+    #[test]
+    fn threshold_from_scores_cut_floor_and_quarantine() {
+        let n = 4;
+        let mut scores = vec![0f32; n * n];
+        // row 2: j=0 clears the cut, j=1 doesn't, j=2 (self) is NaN
+        scores[2 * n] = 1.0;
+        scores[2 * n + 1] = 0.2;
+        scores[2 * n + 2] = f32::NAN;
+        // row 3: nothing clears the cut; floor rescues the best finite keys
+        scores[3 * n] = 0.3;
+        scores[3 * n + 1] = f32::INFINITY;
+        scores[3 * n + 2] = 0.1;
+        scores[3 * n + 3] = f32::NEG_INFINITY;
+        let spec = AttentionSpec::threshold_from_scores(&scores, n, 0.5, 2).unwrap();
+        let p = spec.compile(n);
+        assert_eq!(p.row(0), &[0], "zero score meets the floor");
+        assert_eq!(p.row(2), &[0, 1], "floor tops up below-cut keys; NaN never admitted");
+        assert_eq!(p.row(3), &[0, 2], "±inf quarantined even when the floor is hungry");
+
+        assert!(AttentionSpec::threshold_from_scores(&scores, n, f32::NAN, 1).is_err());
+        assert!(AttentionSpec::threshold_from_scores(&scores, 3, 0.0, 1).is_err());
+        // all-non-finite rows stay empty: no finite candidate to rescue
+        let bad = vec![f32::NAN; 4];
+        let spec = AttentionSpec::threshold_from_scores(&bad, 2, 0.0, 5).unwrap();
+        assert_eq!(spec.compile(2).nnz(), 0);
+        // explicit rows reject acausal entries
+        assert!(AttentionSpec::threshold(vec![vec![0], vec![2]]).is_err());
+        assert!(AttentionSpec::threshold(vec![vec![0], vec![1, 0]]).is_ok());
+    }
+
+    #[test]
+    fn threshold_floor_breaks_score_ties_by_index() {
+        // three equal scores, floor 2: the two lowest indices win
+        let scores = vec![0.5f32; 9];
+        let spec = AttentionSpec::threshold_from_scores(&scores, 3, 1.0, 2).unwrap();
+        assert_eq!(spec.compile(3).row(2), &[0, 1]);
+    }
+
+    #[test]
     fn json_roundtrip_nested() {
         let spec = AttentionSpec::union(vec![
             AttentionSpec::local(8).unwrap(),
             AttentionSpec::routing(vec![vec![0, 3, 9], vec![1, 2]]),
+            AttentionSpec::expert_choice(vec![vec![4, 7], vec![5]], 2).unwrap(),
+            AttentionSpec::threshold(vec![vec![0], vec![0, 1], vec![2]]).unwrap(),
             AttentionSpec::intersect(vec![
                 AttentionSpec::Full,
                 AttentionSpec::strided(4).unwrap(),
@@ -745,6 +1003,9 @@ mod tests {
         let spec = AttentionSpec::union(vec![
             AttentionSpec::block_local(3).unwrap(),
             AttentionSpec::routing(vec![vec![0, 4, 9, 13], vec![2, 6, 11]]),
+            AttentionSpec::expert_choice(vec![vec![1, 8, 14], vec![3, 10]], 3).unwrap(),
+            AttentionSpec::threshold(vec![vec![0], vec![], vec![0, 2], vec![1, 3], vec![0, 4]])
+                .unwrap(),
         ])
         .unwrap();
         let n = 17;
@@ -856,6 +1117,15 @@ mod tests {
             r#"{"kind":"block_local","window":1e30}"#,
             r#"{"kind":"routing","clusters":[[0,1.5]]}"#,
             r#"{"kind":"routing","clusters":[[-2,1]]}"#,
+            // expert-choice: capacity is mandatory and a hard bound
+            r#"{"kind":"expert_choice","clusters":[[0,1]]}"#,
+            r#"{"kind":"expert_choice","clusters":[[0,1,2]],"capacity":2}"#,
+            r#"{"kind":"expert_choice","clusters":[[0,1]],"capacity":2.5}"#,
+            r#"{"kind":"expert_choice","clusters":[[0,-1]],"capacity":2}"#,
+            // threshold: rows must be causal integer sets
+            r#"{"kind":"threshold"}"#,
+            r#"{"kind":"threshold","rows":[[0],[3]]}"#,
+            r#"{"kind":"threshold","rows":[[0.5]]}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(AttentionSpec::from_json(&j).is_err(), "accepted {bad}");

@@ -295,6 +295,81 @@ impl SphericalKMeans {
         AttentionSpec::routing(self.top_w_members(xs, n, w))
     }
 
+    /// Hard argmax assignment buckets: for each cluster, the sorted
+    /// indices of the tokens whose best centroid it is (first-index-wins
+    /// on score ties, matching [`SphericalKMeans::assign`]).  Unlike the
+    /// overlapping top-w memberships of [`SphericalKMeans::top_w_members`],
+    /// buckets are **disjoint**.  Non-finite vectors are quarantined
+    /// (assigned to no bucket), mirroring [`SphericalKMeans::update`].
+    pub fn assigned_buckets(&self, xs: &[f32], n: usize) -> Vec<Vec<usize>> {
+        assert_eq!(xs.len(), n * self.dim);
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.k];
+        for i in 0..n {
+            let x = &xs[i * self.dim..(i + 1) * self.dim];
+            if x.iter().any(|v| !v.is_finite()) {
+                continue;
+            }
+            buckets[self.assign(x)].push(i);
+        }
+        buckets
+    }
+
+    /// One cluster's expert-choice selection: rank the tokens of its
+    /// `bucket` by routing score against centroid `c` (NaN-last
+    /// total-order sort, ties by ascending index — the
+    /// [`SphericalKMeans::top_w_of`] comparator) and keep the first
+    /// `capacity`, indices sorted ascending.  The single-cluster unit of
+    /// [`SphericalKMeans::top_capacity_tokens`], exposed so an
+    /// incremental re-router can re-rank only the clusters an update
+    /// actually touched (see `attention::decode::MemberCache`).
+    pub fn top_capacity_of(
+        &self,
+        c: usize,
+        bucket: &[usize],
+        xs: &[f32],
+        n: usize,
+        capacity: usize,
+    ) -> Vec<usize> {
+        assert_eq!(xs.len(), n * self.dim);
+        assert!(c < self.k, "cluster {c} out of bounds for k = {}", self.k);
+        let mu = self.centroid(c);
+        let mut scored: Vec<(f32, usize)> = bucket
+            .iter()
+            .map(|&i| (dot(mu, &xs[i * self.dim..(i + 1) * self.dim]), i))
+            .collect();
+        scored.sort_by(|a, b| match (a.0.is_nan(), b.0.is_nan()) {
+            (false, false) => b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)),
+            (true, true) => a.1.cmp(&b.1),
+            // NaN scores sort last, after every finite score
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+        });
+        scored.truncate(capacity);
+        let mut idx: Vec<usize> = scored.into_iter().map(|(_, i)| i).collect();
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Expert-choice membership (MoSA-style): hard-assign every finite
+    /// token to its argmax centroid, then each cluster keeps only its
+    /// top-`capacity` assigned tokens by routing score.  The dual of
+    /// [`SphericalKMeans::top_w_members`] — *clusters pick tokens* from
+    /// disjoint buckets instead of every cluster ranking all tokens — so
+    /// per-cluster membership (and hence per-cluster compiled nnz) is
+    /// bounded by `capacity` by construction.
+    pub fn top_capacity_tokens(&self, xs: &[f32], n: usize, capacity: usize) -> Vec<Vec<usize>> {
+        let buckets = self.assigned_buckets(xs, n);
+        (0..self.k).map(|c| self.top_capacity_of(c, &buckets[c], xs, n, capacity)).collect()
+    }
+
+    /// Package expert-choice membership as an
+    /// [`AttentionSpec::ExpertChoice`] — the capacity-bounded counterpart
+    /// of [`SphericalKMeans::routing_spec`].
+    pub fn expert_choice_spec(&self, xs: &[f32], n: usize, capacity: usize) -> AttentionSpec {
+        AttentionSpec::expert_choice(self.top_capacity_tokens(xs, n, capacity), capacity)
+            .expect("top_capacity_tokens bounds every cluster by capacity")
+    }
+
     /// Mean within-cluster dot product (clustering quality metric).
     pub fn cohesion(&self, xs: &[f32], n: usize) -> f32 {
         let mut total = 0.0;
@@ -435,6 +510,65 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn top_capacity_buckets_are_disjoint_and_capacity_bounded() {
+        let km = SphericalKMeans::new(3, 8, 0.5, 7);
+        let xs = clustered_data(30, 8, 3, 8);
+        let buckets = km.assigned_buckets(&xs, 30);
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), 30, "buckets partition tokens");
+        for cap in [0usize, 1, 4, 100] {
+            let members = km.top_capacity_tokens(&xs, 30, cap);
+            assert_eq!(members.len(), 3);
+            let mut seen = std::collections::HashSet::new();
+            for (c, m) in members.iter().enumerate() {
+                assert!(m.len() <= cap, "cluster {c} over capacity {cap}");
+                assert!(m.len() <= buckets[c].len(), "selection stays inside the bucket");
+                assert!(m.windows(2).all(|p| p[0] < p[1]), "sorted unique");
+                for &i in m {
+                    assert!(seen.insert(i), "token {i} selected by two clusters");
+                    assert_eq!(km.assign(&xs[i * 8..(i + 1) * 8]), c, "selection ⊆ bucket");
+                }
+            }
+        }
+        // capacity >= every bucket: selection IS the bucket
+        assert_eq!(km.top_capacity_tokens(&xs, 30, 30), buckets);
+        // the spec wrapper upholds the constructor's capacity invariant
+        let spec = km.expert_choice_spec(&xs, 30, 4);
+        match &spec {
+            AttentionSpec::ExpertChoice { clusters, capacity } => {
+                assert_eq!(*capacity, 4);
+                assert!(clusters.iter().all(|m| m.len() <= 4));
+            }
+            _ => unreachable!(),
+        }
+        assert!(spec.compile(30).is_causal());
+    }
+
+    #[test]
+    fn top_capacity_quarantines_non_finite_and_breaks_ties_by_index() {
+        let km = SphericalKMeans::new(2, 4, 0.5, 11);
+        let mut xs = clustered_data(8, 4, 2, 12);
+        xs[3 * 4] = f32::NAN;
+        let buckets = km.assigned_buckets(&xs, 8);
+        assert!(buckets.iter().all(|b| !b.contains(&3)), "poisoned token assigned nowhere");
+        assert_eq!(buckets.iter().map(Vec::len).sum::<usize>(), 7);
+        let members = km.top_capacity_tokens(&xs, 8, 8);
+        assert!(members.iter().all(|m| !m.contains(&3)));
+        // duplicate-score ranking is deterministic: equal scores keep the
+        // lowest indices (same comparator as top_w_of)
+        let mut dup = SphericalKMeans::new(1, 2, 0.5, 1);
+        dup.centroids = vec![1.0, 0.0];
+        let xs = vec![0.5, 0.5, 0.5, -0.5, 0.5, 0.0];
+        assert_eq!(dup.top_capacity_of(0, &[0, 1, 2], &xs, 3, 2), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn top_capacity_of_rejects_bad_cluster() {
+        let km = SphericalKMeans::new(2, 4, 0.5, 1);
+        km.top_capacity_of(2, &[], &[0.0; 8], 2, 1);
     }
 
     #[test]

@@ -30,9 +30,9 @@ use anyhow::{bail, Result};
 use routing_transformer::analysis;
 use routing_transformer::attention::{
     assert_outputs_match, backend, optimal_clusters, run_serve, run_worker, sparse_attention,
-    ArrivalConfig, AttentionSpec, Backend, BatchedAttention, CompiledPattern, EpochCache,
-    Exactness, Execution, MemberCache, RegenStats, RouteSlot, RoutingSession, ServeOptions,
-    ServeSummary, WorkerPool, JSON_SCHEMA_VERSION,
+    threshold_content_spec, ArrivalConfig, AttentionSpec, Backend, BatchedAttention,
+    CompiledPattern, EpochCache, Exactness, Execution, MemberCache, RegenStats, RouteSlot,
+    RoutingSession, ServeOptions, ServeSummary, SpecFamily, WorkerPool, JSON_SCHEMA_VERSION,
 };
 #[cfg(feature = "xla")]
 use routing_transformer::coordinator::{
@@ -96,7 +96,8 @@ commands:
   eval      evaluate: --variant NAME [--ckpt CKPT] [--data D] [--batches N] [--unit ppl|bits]
   sample    generate: --variant NAME [--ckpt CKPT] [--tokens N] [--top-p P] [--temp T] [--seed S]
   analyze   Table-6 JSD study: [--variant analysis] [--ckpt CKPT] [--runs 10] [--data needle]
-  figure1   render Figure-1 attention patterns: [--n 64] [--window 8] [--stride 8] [--clusters 8]
+  figure1   render Figure-1 attention patterns (local, strided, routing, mixed,
+            expert-choice, score-threshold): [--n 64] [--window 8] [--stride 8] [--clusters 8]
             [--stats] (nnz/density/row-size table per scheme) [--csv FILE] [--seed S]
             [--render-rows 128] (clip ASCII/CSV renders to the first R rows so
              large --n stays printable; a truncation marker notes clipped rows)
@@ -132,7 +133,16 @@ commands:
             [--work-min 4] [--work-max 16] [--slack-min 8] [--slack-max 64]
             [--backend blocked] [--seed S] [--json] [--append [FILE]]
             [--max-pattern-bytes B] [--band-rows R]
-            (--backend picks any registered kernel by name — blocked stays
+            [--spec routing|expert-choice|threshold]
+            (--spec picks the content-based family the odd heads route
+             through: classic overlapping top-w routing (default),
+             capacity-bounded expert-choice routing — disjoint argmax
+             buckets, each cluster keeps its top-capacity members, so
+             per-cluster nnz is bounded by construction — or the
+             calibrated score-threshold attend set; the family name and
+             the max_cluster_nnz / max_shard_nnz / min_shard_nnz
+             load-balance observables land in the schema-6 --json line;
+             --backend picks any registered kernel by name — blocked stays
              bitwise, simd trades bitwise for >= 3x throughput within its
              declared ulps budget; the backend name and exactness land in
              the --json line; --shards sets intra-process chunk parallelism
@@ -548,6 +558,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut sequential_dt = 0f64;
     let mut scoped_dt = 0f64;
     let mut moved_tokens = 0u64;
+    // run-wide per-worker nnz extremes: how (im)balanced the nnz-balanced
+    // row packer actually left the shards
+    let mut max_shard_nnz = 0usize;
+    let mut min_shard_nnz = usize::MAX;
     // per-step latency of the canonical (first) backend's batched sweeps —
     // the same histogram the `serve` loop uses, so p50/p99 come from one
     // shared implementation
@@ -600,6 +614,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     }
                     &routed_batches[si].as_ref().expect("planned above").1
                 };
+                for nnz in batch.worker_nnz() {
+                    max_shard_nnz = max_shard_nnz.max(nnz);
+                    min_shard_nnz = min_shard_nnz.min(nnz);
+                }
                 let mut canonical: Option<Vec<f32>> = None;
                 for (bi, be) in backends.iter().enumerate() {
                     let t0 = std::time::Instant::now();
@@ -697,6 +715,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // the first requested backend is the canonical timing baseline
     let batched_dt = backend_dt[0].max(1e-9);
     let sequential_dt = sequential_dt.max(1e-9);
+    let min_shard_nnz = if min_shard_nnz == usize::MAX { 0 } else { min_shard_nnz };
 
     let cs = cache.stats();
     let es = cache.epoch_stats();
@@ -795,6 +814,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         ]);
     }
     table.row(&["attention MACs/sec (batched)".to_string(), format!("{:.3e}", macs as f64 / batched_dt)]);
+    table.row(&[
+        "max/min shard nnz (all sweeps)".to_string(),
+        format!("{max_shard_nnz}/{min_shard_nnz}"),
+    ]);
     if pool_cmp {
         // the batched path above ran on the resident pool (the default
         // execution); these rows compare it against per-call scoped
@@ -835,13 +858,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             batch.batch(),
             batch.num_workers()
         );
-        let mut table = Table::new(&["worker", "rows", "row share"]);
+        let mut table = Table::new(&["worker", "rows", "row share", "nnz", "nnz share"]);
         let total_rows = (batch.batch() * n).max(1);
-        for (w, rows) in batch.worker_rows().iter().enumerate() {
+        let worker_nnz = batch.worker_nnz();
+        let total_nnz: usize = worker_nnz.iter().sum::<usize>().max(1);
+        for (w, (rows, nnz)) in batch.worker_rows().iter().zip(&worker_nnz).enumerate() {
             table.row(&[
                 w.to_string(),
                 rows.to_string(),
                 format!("{:.1}%", 100.0 * *rows as f64 / total_rows as f64),
+                nnz.to_string(),
+                format!("{:.1}%", 100.0 * *nnz as f64 / total_nnz as f64),
             ]);
         }
         table.print();
@@ -916,6 +943,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ]),
             ),
             f("moved_tokens", moved_tokens as f64),
+            f("max_shard_nnz", max_shard_nnz as f64),
+            f("min_shard_nnz", min_shard_nnz as f64),
             f("dirty_tokens_pending", dirty_pending as f64),
             f("dirty_clusters_drained", dirty_clusters_drained as f64),
             f("retired_slots", retired as f64),
@@ -969,6 +998,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let band_rows = args.usize("band-rows", 0)?;
     let seed = args.u64("seed", 0)?;
     let json_out = args.bool("json", false)?;
+    let spec_family = SpecFamily::parse(&args.str("spec", "routing"))?;
     let backend_name = args.str("backend", "blocked");
     let be = match backend::lookup(&backend_name) {
         Some(be) => be,
@@ -994,6 +1024,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         window,
         clusters: k,
         top_w: (n / k).max(1),
+        spec_family,
         workers: shards,
         capacity,
         route_every,
@@ -1016,7 +1047,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
          capacity={capacity} shards={shards} workers={worker_procs} route-every={route_every} \
          requests={requests} rate={rate} contents={contents} zipf={zipf_s} \
          work=[{work_min},{work_max}] slack=[{slack_min},{slack_max}] \
-         max-pattern-bytes={max_pattern_bytes} band-rows={band_rows} backend={} seed={seed}",
+         max-pattern-bytes={max_pattern_bytes} band-rows={band_rows} spec={} backend={} \
+         seed={seed}",
+        spec_family.name(),
         be.name()
     );
     let summary = run_serve(&opts, be.as_ref())?;
@@ -1084,6 +1117,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "GC bytes reclaimed".to_string(),
         summary.gc_bytes_reclaimed.to_string(),
     ]);
+    table.row(&["spec family".to_string(), summary.spec_family.name().to_string()]);
+    table.row(&["max cluster nnz".to_string(), summary.max_cluster_nnz.to_string()]);
+    table.row(&[
+        "max/min shard nnz".to_string(),
+        format!("{}/{}", summary.max_shard_nnz, summary.min_shard_nnz),
+    ]);
     table.row(&[
         "output digest".to_string(),
         format!("{:016x}", summary.output_digest),
@@ -1125,8 +1164,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// executing backend's name and declared exactness contract; schema 5
 /// adds `worker_procs`, `output_digest` (a 16-hex-digit string — a u64
 /// does not survive the f64 number type past 2^53), and the `coord`
-/// ledger object for multi-process runs.  Documented in ARCHITECTURE.md;
-/// appended (JSONL) to `BENCH_serve.json` by `--append`.
+/// ledger object for multi-process runs; schema 6 adds `spec_family`
+/// (`"routing"` | `"expert-choice"` | `"threshold"`) and the
+/// `max_cluster_nnz` / `max_shard_nnz` / `min_shard_nnz` load-balance
+/// observables (0 in banded/coordinated modes).  Documented in
+/// ARCHITECTURE.md; appended (JSONL) to `BENCH_serve.json` by `--append`.
 fn serve_json_line(opts: &ServeOptions, be: &dyn Backend, summary: &ServeSummary) -> Json {
     let f = |key: &str, v: f64| (key.to_string(), Json::Num(v));
     let s = summary.stats;
@@ -1168,6 +1210,10 @@ fn serve_json_line(opts: &ServeOptions, be: &dyn Backend, summary: &ServeSummary
         f("seed", opts.seed as f64),
         f("max_pattern_bytes", opts.max_pattern_bytes as f64),
         f("band_rows", opts.band_rows as f64),
+        ("spec_family".to_string(), Json::Str(summary.spec_family.name().to_string())),
+        f("max_cluster_nnz", summary.max_cluster_nnz as f64),
+        f("max_shard_nnz", summary.max_shard_nnz as f64),
+        f("min_shard_nnz", summary.min_shard_nnz as f64),
         ("backend".to_string(), Json::Str(be.name().to_string())),
         ("exactness".to_string(), Json::Str(be.exactness().to_string())),
         f("submitted", s.submitted as f64),
@@ -1292,11 +1338,18 @@ fn cmd_figure1(args: &Args) -> Result<()> {
     let strided = AttentionSpec::strided(stride)?;
     let routing = km.routing_spec(&xs, n, n / k);
     let mixed = AttentionSpec::union(vec![local.clone(), routing.clone()])?;
+    let expert = km.expert_choice_spec(&xs, n, (n / k).max(1));
+    let threshold = threshold_content_spec(&xs, n);
     let schemes = [
         (format!("local attention (window {window})"), local.compile(n)),
         (format!("strided attention (stride {stride})"), strided.compile(n)),
         (format!("routing attention (k = {k} clusters, letters = clusters)"), routing.compile(n)),
         ("mixed local+routing head plan (union)".to_string(), mixed.compile(n)),
+        (
+            format!("expert-choice routing (k = {k} clusters, capacity {})", (n / k).max(1)),
+            expert.compile(n),
+        ),
+        ("score-threshold attend set (cut 0, floor 1)".to_string(), threshold.compile(n)),
     ];
 
     println!("Figure 1 — 2-D attention schemes (rows = outputs, cols = inputs)\n");
@@ -1305,11 +1358,14 @@ fn cmd_figure1(args: &Args) -> Result<()> {
         println!("{}", pattern.render_ascii_clipped(render_rows));
     }
     println!(
-        "densities: local {:.3}, strided {:.3}, routing {:.3}, mixed {:.3} (full = 1.0)",
+        "densities: local {:.3}, strided {:.3}, routing {:.3}, mixed {:.3}, \
+         expert-choice {:.3}, threshold {:.3} (full = 1.0)",
         schemes[0].1.density(),
         schemes[1].1.density(),
         schemes[2].1.density(),
-        schemes[3].1.density()
+        schemes[3].1.density(),
+        schemes[4].1.density(),
+        schemes[5].1.density()
     );
     if args.bool("stats", false)? {
         println!("\npattern statistics (compiled CSR index sets, d = 64 for MACs):");

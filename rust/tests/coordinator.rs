@@ -37,10 +37,10 @@ use std::time::{Duration, Instant};
 
 use routing_transformer::attention::backend;
 use routing_transformer::attention::{
-    read_frame, run_serve, run_serve_coordinated, write_frame, ArrivalConfig, AttentionSpec,
-    Backend, CompiledPattern, Coordinator, CoordinatorConfig, EpochCache, MemberCache,
-    MemoryBudget, ProcessTransport, RegenStats, RouteSlot, RouteUpdate, RoutingSession,
-    ServeOptions, SimTransport, WorkerId, WorkerState,
+    read_frame, routed_family_spec, run_serve, run_serve_coordinated, write_frame, ArrivalConfig,
+    AttentionSpec, Backend, CompiledPattern, Coordinator, CoordinatorConfig, EpochCache,
+    MemberCache, MemoryBudget, ProcessTransport, RegenStats, RouteSlot, RouteUpdate,
+    RoutingSession, ServeOptions, SimTransport, SpecFamily, WorkerId, WorkerState,
 };
 use routing_transformer::kmeans::AssignmentDelta;
 use routing_transformer::util::json::Json;
@@ -89,6 +89,7 @@ struct RefModel {
     heads: usize,
     capacity: usize,
     top_w: usize,
+    family: SpecFamily,
     backend: Arc<dyn Backend>,
     session: RoutingSession,
     cache: EpochCache,
@@ -119,6 +120,7 @@ impl RefModel {
             heads: cfg.heads,
             capacity: cfg.capacity,
             top_w: cfg.top_w,
+            family: cfg.spec_family,
             backend,
             session,
             cache,
@@ -155,13 +157,14 @@ impl RefModel {
         let ae = self.session.assignment_epoch(layer, head);
         let idx = (layer * self.heads + head) * self.capacity + slot;
         let (n, top_w) = (self.n, self.top_w);
+        let family = self.family;
         let pattern = {
             let RefModel { ref mut cache, ref session, ref mut members, ref local, .. } = *self;
             let mc = &mut members[idx];
             cache.get_routed_at(RouteSlot { layer, head, seq: slot }, epoch, ae, n, || {
                 AttentionSpec::union(vec![
                     local.clone(),
-                    session.routing_spec_cached(layer, head, mc, xs, n, top_w),
+                    routed_family_spec(family, session, layer, head, mc, xs, n, top_w),
                 ])
                 .expect("non-empty union of valid specs")
             })
@@ -195,7 +198,7 @@ impl RefModel {
 // ------------------------------------------------------ wire round-trips
 
 fn random_spec(rng: &mut Rng, depth: usize) -> AttentionSpec {
-    let kinds = if depth == 0 { 5 } else { 7 };
+    let kinds = if depth == 0 { 7 } else { 9 };
     match rng.below(kinds) {
         0 => AttentionSpec::full(),
         1 => AttentionSpec::local(rng.range(1, 9)).unwrap(),
@@ -206,9 +209,30 @@ fn random_spec(rng: &mut Rng, depth: usize) -> AttentionSpec {
                 .map(|_| (0..rng.below(4)).map(|_| rng.below(32)).collect())
                 .collect(),
         ),
+        5 => {
+            let capacity = rng.range(0, 6);
+            AttentionSpec::expert_choice(
+                (0..rng.range(1, 4))
+                    .map(|_| {
+                        let mut m: Vec<usize> =
+                            (0..rng.below(4)).map(|_| rng.below(32)).collect();
+                        m.sort_unstable();
+                        m.dedup();
+                        m.truncate(capacity);
+                        m
+                    })
+                    .collect(),
+                capacity,
+            )
+            .unwrap()
+        }
+        6 => AttentionSpec::threshold(
+            (0..rng.below(6)).map(|i| (0..=i).filter(|_| rng.chance(0.4)).collect()).collect(),
+        )
+        .unwrap(),
         n => {
             let parts = (0..rng.range(1, 4)).map(|_| random_spec(rng, depth - 1)).collect();
-            if n == 5 {
+            if n == 7 {
                 AttentionSpec::union(parts).unwrap()
             } else {
                 AttentionSpec::intersect(parts).unwrap()
@@ -300,9 +324,11 @@ fn prop_frame_roundtrip() {
 fn prop_coordinator_matches_single_process_model_under_faults() {
     // Random op sequences with scheduled faults: the coordinated path
     // must stay bit-identical to the single-process reference and keep
-    // its ledger conserved after arbitrary crash/rejoin interleavings.
+    // its ledger conserved after arbitrary crash/rejoin interleavings —
+    // under every spec family (routing, expert-choice, threshold).
     check("coordinator_vs_model", 40, |rng| {
         let backends = ["reference", "blocked", "simd"];
+        let families = [SpecFamily::Routing, SpecFamily::ExpertChoice, SpecFamily::Threshold];
         let cfg = CoordinatorConfig {
             n: rng.range(8, 25),
             d: rng.range(2, 5),
@@ -315,6 +341,7 @@ fn prop_coordinator_matches_single_process_model_under_faults() {
             seed: rng.next_u64(),
             backend: backends[rng.below(backends.len())].to_string(),
             max_regrants: rng.range(1, 5) as u64,
+            spec_family: families[rng.below(families.len())],
         };
         let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
         let mut model = RefModel::new(&cfg);
@@ -457,6 +484,7 @@ fn prop_crash_mid_grant_regrants_exactly_once_and_rejoin_restores() {
             seed: rng.next_u64(),
             backend: "reference".to_string(),
             max_regrants: 8,
+            spec_family: SpecFamily::Routing,
         };
         let n = cfg.n;
         let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
@@ -536,6 +564,7 @@ fn prop_dropped_grant_supersedes_and_stale_replies_are_rejected() {
             seed: rng.next_u64(),
             backend: "reference".to_string(),
             max_regrants: 8,
+            spec_family: SpecFamily::Routing,
         };
         let n = cfg.n as u64;
         let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();
@@ -585,10 +614,13 @@ fn prop_serve_coordinated_matches_in_process_bit_for_bit() {
     // The whole-loop contract behind `rtx serve --workers N`: the
     // coordinator-backed serve loop produces the same output digest, the
     // same outcome ledger, and the same cache/epoch/regen counters as
-    // the in-process loop — even with faults scheduled mid-run.
+    // the in-process loop — even with faults scheduled mid-run, for
+    // every `--spec` family.
     check("serve_coordinated", 12, |rng| {
+        let families = [SpecFamily::Routing, SpecFamily::ExpertChoice, SpecFamily::Threshold];
         let opts = ServeOptions {
             n: rng.range(12, 21),
+            spec_family: families[rng.below(families.len())],
             d: 3,
             layers: rng.range(1, 3),
             heads: 2,
@@ -624,6 +656,7 @@ fn prop_serve_coordinated_matches_in_process_bit_for_bit() {
             capacity: opts.capacity,
             seed: opts.seed,
             backend: "reference".to_string(),
+            spec_family: opts.spec_family,
             ..CoordinatorConfig::default()
         };
         let mut coord = Coordinator::new(cfg, SimTransport::new()).unwrap();
@@ -681,6 +714,7 @@ fn process_transport_runs_real_workers_bit_identically() {
         seed: 42,
         backend: "reference".to_string(),
         max_regrants: 8,
+        spec_family: SpecFamily::Routing,
     };
     let mut coord = Coordinator::new(cfg.clone(), transport).unwrap();
     let mut model = RefModel::new(&cfg);

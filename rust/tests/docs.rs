@@ -128,8 +128,8 @@ fn docs_exist_and_are_cross_linked() {
         "ARCHITECTURE.md must document the band compile entry point"
     );
     assert!(
-        ARCHITECTURE.contains("\"schema\": 5"),
-        "ARCHITECTURE.md must document the schema-5 --json line"
+        ARCHITECTURE.contains("\"schema\": 6"),
+        "ARCHITECTURE.md must document the current schema-6 --json line"
     );
     // the exactness contract ships with docs: which backend declares
     // what, and the simd fast-math tier that motivates the Ulps budget
@@ -185,5 +185,23 @@ fn docs_exist_and_are_cross_linked() {
     assert!(
         README.contains("--workers") && README.contains("--shards"),
         "README.md must document the process-count and shard-count flags"
+    );
+    // the content-based spec families ship with docs: the family table
+    // and its invariants, the schema-6 observables, and the serve flag
+    assert!(
+        ARCHITECTURE.contains("Content-based spec families"),
+        "ARCHITECTURE.md must document the spec-family layer"
+    );
+    assert!(
+        ARCHITECTURE.contains("spec_family") && ARCHITECTURE.contains("max_cluster_nnz"),
+        "ARCHITECTURE.md must document the schema-6 spec-family fields"
+    );
+    assert!(
+        ARCHITECTURE.contains("max_shard_nnz"),
+        "ARCHITECTURE.md must document the shard load-balance observables"
+    );
+    assert!(
+        README.contains("--spec") && README.contains("expert-choice") && README.contains("threshold"),
+        "README.md must document the --spec family selector"
     );
 }

@@ -8,6 +8,10 @@
 //! shrink-by-hand reproduction.  Invariants covered: compiled attention
 //! patterns (agreement with a naive reference oracle on `allowed`/`nnz`,
 //! causality, row sortedness, spec JSON round-trips), routing membership,
+//! expert-choice selection (disjoint argmax buckets, per-cluster
+//! top-capacity vs a naive oracle, capacity-bounded nnz on every
+//! compile), score-threshold attend sets (dense-score oracle with
+//! NaN/±inf quarantine and floor top-up),
 //! engine (shard partition, cache == fresh compile, kernel == oracle,
 //! batched == B independent calls bit-for-bit, epoch-cache staleness +
 //! eviction accounting, banded compilation == monolithic row slices,
@@ -97,6 +101,137 @@ fn prop_top_w_contains_argmax_member() {
     });
 }
 
+#[test]
+fn prop_expert_choice_matches_per_cluster_top_capacity_oracle() {
+    check("expert_choice_oracle", 150, |rng| {
+        let k = rng.range(1, 6);
+        let dim = rng.range(2, 9);
+        // n = 0 and n = 1 in range; capacity 0 and >= n in range
+        let n = rng.range(0, 33);
+        let capacity = rng.range(0, n + 4);
+        let mut xs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        // duplicated vectors force duplicate scores (index tie-break);
+        // non-finite vectors must be quarantined, never selected
+        for i in 1..n {
+            if rng.chance(0.2) {
+                let src = rng.below(i);
+                let (a, b) = xs.split_at_mut(i * dim);
+                b[..dim].copy_from_slice(&a[src * dim..src * dim + dim]);
+            }
+        }
+        if n > 0 && rng.chance(0.3) {
+            let t = rng.below(n);
+            xs[t * dim] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY][rng.below(3)];
+        }
+        let km = SphericalKMeans::new(k, dim, 0.5, rng.next_u64());
+        let got = km.top_capacity_tokens(&xs, n, capacity);
+        assert_eq!(got.len(), k);
+
+        // naive oracle: disjoint argmax buckets (first centroid wins
+        // ties, non-finite vectors quarantined), each cluster keeping its
+        // top-capacity members by (score desc, index asc), sorted asc
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for i in 0..n {
+            let x = &xs[i * dim..(i + 1) * dim];
+            if x.iter().any(|v| !v.is_finite()) {
+                continue;
+            }
+            let mut best = 0;
+            let mut best_dot = f32::NEG_INFINITY;
+            for c in 0..k {
+                let d = dot(km.centroid(c), x);
+                if d > best_dot {
+                    best_dot = d;
+                    best = c;
+                }
+            }
+            buckets[best].push(i);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (c, m) in got.iter().enumerate() {
+            // bucket scores are finite (quarantine upstream), so the
+            // plain total-order comparator is the selection order
+            let mut scored: Vec<(f32, usize)> = buckets[c]
+                .iter()
+                .map(|&i| (dot(km.centroid(c), &xs[i * dim..(i + 1) * dim]), i))
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut expect: Vec<usize> =
+                scored.into_iter().take(capacity).map(|(_, i)| i).collect();
+            expect.sort_unstable();
+            assert_eq!(m, &expect, "cluster {c} disagrees with the naive oracle");
+            assert!(m.len() <= capacity, "cluster {c} over capacity");
+            for &i in m {
+                assert!(seen.insert(i), "token {i} selected by two clusters");
+            }
+        }
+
+        // the capacity-bound invariant holds on every compile, and the
+        // compiled rows agree with the membership-pair oracle
+        let spec = km.expert_choice_spec(&xs, n, capacity);
+        let p = spec.compile(n);
+        assert!(p.is_causal() && p.rows_sorted());
+        assert!(
+            p.max_cluster_nnz() <= capacity * (capacity + 1) / 2,
+            "per-cluster nnz {} over the capacity-{capacity} bound",
+            p.max_cluster_nnz()
+        );
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(p.allowed(i, j), oracle_allowed(&spec, n, i, j), "i={i} j={j}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_threshold_matches_dense_score_oracle() {
+    check("threshold_oracle", 150, |rng| {
+        // n = 0 and n = 1 in range; scores include NaN/±inf poison that
+        // must be quarantined (never admitted, never floor-topped)
+        let n = rng.range(0, 25);
+        let cut = (rng.normal() * 0.5) as f32;
+        let floor = rng.range(0, n + 3);
+        let mut scores: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32).collect();
+        for s in scores.iter_mut() {
+            if rng.chance(0.3) {
+                *s = (*s).signum() * 0.5; // duplicate scores: index tie-break
+            }
+            if rng.chance(0.08) {
+                *s = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY][rng.below(3)];
+            }
+        }
+        let spec = AttentionSpec::threshold_from_scores(&scores, n, cut, floor).unwrap();
+        let p = spec.compile(n);
+        assert!(p.is_causal() && p.rows_sorted());
+        for i in 0..n {
+            // dense oracle: the finite causal scores sorted (desc, index
+            // asc); admit those >= cut, then top up to the floor
+            let mut fin: Vec<(f32, usize)> = (0..=i)
+                .filter_map(|j| {
+                    let s = scores[i * n + j];
+                    s.is_finite().then_some((s, j))
+                })
+                .collect();
+            fin.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            let above = fin.iter().filter(|&&(s, _)| s >= cut).count();
+            let keep = above.max(floor.min(fin.len()));
+            let mut expect: Vec<usize> = fin[..keep].iter().map(|&(_, j)| j).collect();
+            expect.sort_unstable();
+            assert_eq!(p.row(i), &expect[..], "row {i} disagrees with the dense oracle");
+            for &j in p.row(i) {
+                assert!(scores[i * n + j].is_finite(), "non-finite score admitted");
+            }
+            assert!(p.row(i).len() >= floor.min(fin.len()), "floor not honored at row {i}");
+        }
+        // non-finite cuts and wrong-sized matrices are rejected
+        assert!(AttentionSpec::threshold_from_scores(&scores, n, f32::NAN, 0).is_err());
+        if n > 0 {
+            assert!(AttentionSpec::threshold_from_scores(&scores[1..], n, cut, 0).is_err());
+        }
+    });
+}
+
 /// Naive reference oracle: the paper's definitions evaluated directly per
 /// (i, j) pair, including composition — the semantics `compile` must match.
 fn oracle_allowed(spec: &AttentionSpec, n: usize, i: usize, j: usize) -> bool {
@@ -114,6 +249,19 @@ fn oracle_allowed(spec: &AttentionSpec, n: usize, i: usize, j: usize) -> bool {
         AttentionSpec::Routing { clusters } => {
             clusters.iter().any(|m| m.contains(&i) && m.contains(&j))
         }
+        // same membership-pair semantics as Routing, after the compile's
+        // defensive normalization: filter to < n, sort, dedup, then clamp
+        // to capacity (a no-op for constructor-built specs)
+        AttentionSpec::ExpertChoice { clusters, capacity } => clusters.iter().any(|m| {
+            let mut ms: Vec<usize> = m.iter().copied().filter(|&t| t < n).collect();
+            ms.sort_unstable();
+            ms.dedup();
+            ms.truncate(*capacity);
+            ms.contains(&i) && ms.contains(&j)
+        }),
+        AttentionSpec::Threshold { rows } => {
+            rows.get(i).is_some_and(|r| r.contains(&j))
+        }
         AttentionSpec::Union(parts) => parts.iter().any(|p| oracle_allowed(p, n, i, j)),
         AttentionSpec::Intersect(parts) => parts.iter().all(|p| oracle_allowed(p, n, i, j)),
     }
@@ -122,7 +270,7 @@ fn oracle_allowed(spec: &AttentionSpec, n: usize, i: usize, j: usize) -> bool {
 /// Random spec over positions < `bound`, with nested composition.
 fn random_spec(rng: &mut Rng, bound: usize, depth: usize) -> AttentionSpec {
     let b = bound.max(2);
-    match rng.below(if depth == 0 { 5 } else { 7 }) {
+    match rng.below(if depth == 0 { 7 } else { 9 }) {
         0 => AttentionSpec::Full,
         1 => AttentionSpec::local(rng.range(1, b + 1)).unwrap(),
         2 => AttentionSpec::block_local(rng.range(1, b + 1)).unwrap(),
@@ -133,10 +281,31 @@ fn random_spec(rng: &mut Rng, bound: usize, depth: usize) -> AttentionSpec {
                 (0..k).map(|_| (0..b).filter(|_| rng.chance(0.3)).collect()).collect();
             AttentionSpec::routing(clusters)
         }
+        5 => {
+            // capacity 0 and capacity >= cluster size are both in range
+            let k = rng.range(1, 5);
+            let capacity = rng.range(0, b + 2);
+            let clusters: Vec<Vec<usize>> = (0..k)
+                .map(|_| {
+                    let mut m: Vec<usize> = (0..b).filter(|_| rng.chance(0.3)).collect();
+                    m.truncate(capacity);
+                    m
+                })
+                .collect();
+            AttentionSpec::expert_choice(clusters, capacity).unwrap()
+        }
+        6 => {
+            // per-row causal attend sets, possibly covering fewer rows
+            // than the compile's n (missing rows compile empty)
+            let rows: Vec<Vec<usize>> = (0..rng.range(0, b + 1))
+                .map(|i| (0..=i).filter(|_| rng.chance(0.3)).collect())
+                .collect();
+            AttentionSpec::threshold(rows).unwrap()
+        }
         op => {
             let parts: Vec<AttentionSpec> =
                 (0..rng.range(1, 4)).map(|_| random_spec(rng, bound, depth - 1)).collect();
-            if op == 5 {
+            if op == 7 {
                 AttentionSpec::union(parts).unwrap()
             } else {
                 AttentionSpec::intersect(parts).unwrap()

@@ -52,7 +52,7 @@ use routing_transformer::attention::{
     Blocked, CompiledPattern, Coordinator, CoordinatorConfig, EpochCache, Exactness, Execution,
     MemberCache, MemoryBudget, OutcomeKind, Reference, RequestOutcome, Retired, RouteSlot,
     RoutingSession, Scheduler, ServeRequest, ServeStats, ShardedPattern, Simd, SimTransport,
-    Submission, WorkerPool, WorkerState,
+    SpecFamily, Submission, WorkerPool, WorkerState,
 };
 use routing_transformer::kmeans::SphericalKMeans;
 use routing_transformer::util::rng::Rng;
@@ -650,6 +650,228 @@ fn prop_incremental_regen_equals_from_scratch_with_exact_counters() {
     });
 }
 
+// -------------------------------------------------------- property 5b
+
+#[test]
+fn prop_mixed_family_slots_share_caches_with_exact_counters() {
+    // Random op sequences mixing an expert-choice slot with a classic
+    // routing slot over ONE RoutingSession, both served through the same
+    // EpochCache plus per-slot MemberCaches: every epoch-cache
+    // hit/miss/eviction/unchanged counter and every member regen counter
+    // must match an independent model (k-means mirror; the expert side
+    // uses the stricter version-AND-bucket reuse rule), and a capacity
+    // change must force a full member rebuild — never stale reuse.
+    check("mixed_family_slots", 64, |rng| {
+        let k = rng.range(1, 5);
+        let n = rng.range(1, 12);
+        let mut session = RoutingSession::new(1, 1, k, DIM, 0.3, rng.next_u64()).unwrap();
+        let mut mirror = session.kmeans(0, 0).clone();
+        let mut cache = EpochCache::new();
+        let mut mc_route = MemberCache::new();
+        let mut mc_expert = MemberCache::new();
+        let route_slot = RouteSlot { layer: 0, head: 0, seq: 0 };
+        let expert_slot = RouteSlot { layer: 0, head: 0, seq: 1 };
+        let mut xs = random_xs(rng, n);
+        let mut w = rng.range(1, n + 1);
+        let mut capacity = rng.range(0, n + 2);
+        let mut model_versions = vec![0u64; k];
+        // member-cache keying models: routing keys on (versions, xs,
+        // w_eff); expert keys on (versions, buckets, xs, cap_eff)
+        let mut cached_r: Option<(Vec<u64>, Vec<f32>, usize)> = None;
+        let mut cached_e: Option<(Vec<u64>, Vec<Vec<usize>>, Vec<f32>, usize)> = None;
+        // epoch-cache entry models: (cluster epoch, assignment epoch)
+        let mut entry_r: Option<(u64, u64)> = None;
+        let mut entry_e: Option<(u64, u64)> = None;
+        let mut want = cache.epoch_stats();
+        let mut evictions = 0u64;
+
+        // apply the routing member model to a regen that just ran
+        let route_regen = |cached_r: &mut Option<(Vec<u64>, Vec<f32>, usize)>,
+                           model_versions: &Vec<u64>,
+                           xs: &Vec<f32>,
+                           w_eff: usize,
+                           before: routing_transformer::attention::RegenStats,
+                           after: routing_transformer::attention::RegenStats| {
+            let full = match cached_r {
+                None => true,
+                Some((_, cxs, cw)) => cxs != xs || *cw != w_eff,
+            };
+            if full {
+                assert_eq!(after.full_rebuilds, before.full_rebuilds + 1);
+                assert_eq!(after.regenerated, before.regenerated + model_versions.len() as u64);
+                assert_eq!(after.reused, before.reused);
+            } else {
+                let (cv, _, _) = cached_r.as_ref().unwrap();
+                let stale = cv.iter().zip(model_versions).filter(|(a, b)| a != b).count();
+                assert_eq!(after.full_rebuilds, before.full_rebuilds);
+                assert_eq!(after.regenerated, before.regenerated + stale as u64);
+                assert_eq!(
+                    after.reused,
+                    before.reused + (model_versions.len() - stale) as u64
+                );
+            }
+            *cached_r = Some((model_versions.clone(), xs.clone(), w_eff));
+        };
+
+        for _op in 0..rng.range(10, 24) {
+            match rng.below(8) {
+                0 | 1 => {
+                    // k-means step over a random (possibly empty) batch
+                    let m = rng.range(0, 8);
+                    let batch = random_xs(rng, m);
+                    let delta = mirror.update(&batch, m);
+                    session.update(0, 0, &batch, m);
+                    if m > 0 {
+                        for (c, &count) in delta.counts.iter().enumerate() {
+                            if count > 0 {
+                                model_versions[c] += 1;
+                            }
+                        }
+                    }
+                    assert_eq!(session.cluster_versions(0, 0), model_versions.as_slice());
+                }
+                2 => xs = random_xs(rng, n),
+                3 => w = rng.range(1, n + 1),
+                4 => capacity = rng.range(0, n + 2),
+                5 => {
+                    // routing slot through the shared EpochCache
+                    let epoch = session.epoch(0, 0);
+                    let ae = session.assignment_epoch(0, 0);
+                    let before = mc_route.stats();
+                    let hit = entry_r.is_some_and(|(_, cae)| cae == ae);
+                    cache.get_routed_at(route_slot, epoch, ae, n, || {
+                        session.routing_spec_cached(0, 0, &mut mc_route, &xs, n, w)
+                    });
+                    if hit {
+                        want.epoch_hits += 1;
+                        if entry_r.unwrap().0 != epoch {
+                            want.unchanged_epochs += 1;
+                        }
+                        assert_eq!(mc_route.stats(), before, "a hit never regenerates");
+                    } else {
+                        want.epoch_misses += 1;
+                        if entry_r.is_some() {
+                            evictions += 1; // stale entry replaced
+                        }
+                        route_regen(
+                            &mut cached_r,
+                            &model_versions,
+                            &xs,
+                            w.min(n),
+                            before,
+                            mc_route.stats(),
+                        );
+                    }
+                    entry_r = Some((epoch, ae));
+                }
+                6 => {
+                    // expert slot through the shared EpochCache
+                    let epoch = session.epoch(0, 0);
+                    let ae = session.assignment_epoch(0, 0);
+                    let before = mc_expert.stats();
+                    let hit = entry_e.is_some_and(|(_, cae)| cae == ae);
+                    let mut made: Option<AttentionSpec> = None;
+                    cache.get_routed_at(expert_slot, epoch, ae, n, || {
+                        let spec =
+                            session.expert_choice_spec_cached(0, 0, &mut mc_expert, &xs, n, capacity);
+                        made = Some(spec.clone());
+                        spec
+                    });
+                    if hit {
+                        want.epoch_hits += 1;
+                        if entry_e.unwrap().0 != epoch {
+                            want.unchanged_epochs += 1;
+                        }
+                        assert_eq!(mc_expert.stats(), before, "a hit never regenerates");
+                    } else {
+                        want.epoch_misses += 1;
+                        if entry_e.is_some() {
+                            evictions += 1;
+                        }
+                        let spec = made.expect("a miss regenerates");
+                        assert_eq!(
+                            spec,
+                            session.expert_choice_spec(0, 0, &xs, n, capacity),
+                            "incremental expert spec must equal from-scratch"
+                        );
+                        let AttentionSpec::ExpertChoice { clusters, capacity: cap } = &spec
+                        else {
+                            panic!("expert family must produce an ExpertChoice spec")
+                        };
+                        assert_eq!(*cap, capacity);
+                        for m in clusters {
+                            assert!(m.len() <= capacity, "capacity bound on every regen");
+                        }
+                        // stricter reuse model: full rebuild on any shape
+                        // change (content or capacity), else per-cluster
+                        // version AND bucket equality
+                        let cap_eff = capacity.min(n);
+                        let after = mc_expert.stats();
+                        let full = match &cached_e {
+                            None => true,
+                            Some((_, _, cxs, ccap)) => cxs != &xs || *ccap != cap_eff,
+                        };
+                        if full {
+                            assert_eq!(
+                                after.full_rebuilds,
+                                before.full_rebuilds + 1,
+                                "shape change (content/capacity) is a full rebuild"
+                            );
+                            assert_eq!(after.regenerated, before.regenerated + k as u64);
+                            assert_eq!(after.reused, before.reused);
+                            let buckets = mirror.assigned_buckets(&xs, n);
+                            cached_e =
+                                Some((model_versions.clone(), buckets, xs.clone(), cap_eff));
+                        } else if cached_e.as_ref().unwrap().0 == model_versions {
+                            // no centroid moved: the assignment pass is
+                            // skipped and every cluster is reused
+                            assert_eq!(after.full_rebuilds, before.full_rebuilds);
+                            assert_eq!(after.regenerated, before.regenerated);
+                            assert_eq!(after.reused, before.reused + k as u64);
+                        } else {
+                            let buckets = mirror.assigned_buckets(&xs, n);
+                            let (cv, cb, _, _) = cached_e.as_ref().unwrap();
+                            let stale = (0..k)
+                                .filter(|&c| {
+                                    cv[c] != model_versions[c] || cb[c] != buckets[c]
+                                })
+                                .count();
+                            assert_eq!(after.full_rebuilds, before.full_rebuilds);
+                            assert_eq!(after.regenerated, before.regenerated + stale as u64);
+                            assert_eq!(after.reused, before.reused + (k - stale) as u64);
+                            cached_e =
+                                Some((model_versions.clone(), buckets, xs.clone(), cap_eff));
+                        }
+                    }
+                    entry_e = Some((epoch, ae));
+                }
+                _ => {
+                    // evict one slot: freed bytes iff the model says the
+                    // entry was resident
+                    let (slot, entry) = if rng.chance(0.5) {
+                        (route_slot, &mut entry_r)
+                    } else {
+                        (expert_slot, &mut entry_e)
+                    };
+                    let freed = cache.evict_slot(slot);
+                    assert_eq!(freed.is_some(), entry.is_some(), "eviction parity");
+                    if entry.take().is_some() {
+                        evictions += 1;
+                    }
+                }
+            }
+            let got = cache.epoch_stats();
+            assert_eq!(got.epoch_hits, want.epoch_hits, "epoch hits");
+            assert_eq!(got.epoch_misses, want.epoch_misses, "epoch misses");
+            assert_eq!(got.unchanged_epochs, want.unchanged_epochs, "unchanged epochs");
+            let cs = cache.stats();
+            assert_eq!(cs.hits, want.epoch_hits, "compile-cache hits mirror");
+            assert_eq!(cs.misses, want.epoch_misses, "compile-cache misses mirror");
+            assert_eq!(cs.evictions, evictions, "exact eviction count");
+        }
+    });
+}
+
 // --------------------------------------------------------- property 6
 
 #[test]
@@ -1106,6 +1328,7 @@ fn prop_scheduler_crash_during_step_resolves_exactly_once() {
             seed: rng.next_u64(),
             backend: "reference".to_string(),
             max_regrants: 4,
+            spec_family: SpecFamily::Routing,
         };
         let static_pattern = AttentionSpec::local(cfg.window).unwrap().compile(cfg.n);
         let mut coord = Coordinator::new(cfg.clone(), SimTransport::new()).unwrap();

@@ -6,7 +6,7 @@
 //! different schema versions.  This suite `include_str!`s the file so
 //! the trajectory is validated at test time on every commit: each line
 //! must parse as JSON and satisfy the field contract of the schema
-//! version it declares (1 through the current version 5, per the schema
+//! version it declares (1 through the current version 6, per the schema
 //! history in ARCHITECTURE.md):
 //!
 //! - all versions: config echo, request ledger, time accounting, step
@@ -18,9 +18,13 @@
 //! - schema >= 5: multi-process fields (`worker_procs`, `output_digest`
 //!   as a 16-hex-digit string, and — iff `worker_procs > 0` — a `coord`
 //!   object whose ledger conserves: grants == accepted + superseded +
-//!   voided, regrants <= superseded + voided).
+//!   voided, regrants <= superseded + voided);
+//! - schema >= 6: content-based spec families (`spec_family` naming one
+//!   of the `--spec` values, plus the load-balance observables
+//!   `max_cluster_nnz` and `max_shard_nnz`/`min_shard_nnz` with
+//!   min <= max).
 //!
-//! The file is seeded with one zeroed schema-5 line so the parser always
+//! The file is seeded with one zeroed schema-6 line so the parser always
 //! has at least one line to chew on (a 0-byte trajectory would make
 //! every consumer's "parse each line" loop vacuously green).
 
@@ -28,7 +32,7 @@ use routing_transformer::util::json::Json;
 
 /// Mirrors `JSON_SCHEMA_VERSION` in `src/main.rs` (a binary-only const,
 /// so the test pins its own copy; `docs.rs` anchors the prose history).
-const MAX_SCHEMA: i64 = 5;
+const MAX_SCHEMA: i64 = 6;
 
 const TRAJECTORY: &str = include_str!("../../BENCH_serve.json");
 
@@ -245,6 +249,22 @@ fn check_line(line_no: usize, line: &Json) {
             counter(line_no, coord, "worker_rows");
             counter(line_no, coord, "inline_rows");
         }
+    }
+
+    // Schema 6: content-based spec families + load-balance observables.
+    if schema >= 6 {
+        let family = str_field(line_no, line, "spec_family");
+        assert!(
+            ["routing", "expert-choice", "threshold"].contains(&family),
+            "line {line_no}: spec_family {family:?} is not a `--spec` value"
+        );
+        counter(line_no, line, "max_cluster_nnz");
+        let max_shard = counter(line_no, line, "max_shard_nnz");
+        let min_shard = counter(line_no, line, "min_shard_nnz");
+        assert!(
+            min_shard <= max_shard,
+            "line {line_no}: min_shard_nnz {min_shard} exceeds max_shard_nnz {max_shard}"
+        );
     }
 }
 
